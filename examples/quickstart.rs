@@ -1,0 +1,77 @@
+//! Quickstart: the muonbp public API in one file.
+//!
+//!   cargo run --release --example quickstart
+//!
+//! Loads the AOT artifacts, trains the `tiny` Llama-style model for a few
+//! steps with MuonBP (P=5) on the synthetic corpus, then shows the
+//! distributed coordinator and the analytic throughput model.
+
+use std::sync::Arc;
+
+use muonbp::coordinator::DistMuonBuilder;
+use muonbp::costmodel::throughput::{throughput_tflops, HwPreset, Method};
+use muonbp::costmodel::ModelDims;
+use muonbp::data::CorpusCfg;
+use muonbp::mesh::Mesh;
+use muonbp::metrics::ppl;
+use muonbp::optim::muon::{Muon, Period};
+use muonbp::optim::Schedule;
+use muonbp::runtime::{NsEngine, Runtime};
+use muonbp::train::{TrainCfg, Trainer};
+
+fn main() -> anyhow::Result<()> {
+    // 1. Open the PJRT runtime over the AOT artifacts (L2 model + L1 NS
+    //    kernels compiled from python once, never again at runtime).
+    let runtime = Arc::new(Runtime::open_default()?);
+    println!("PJRT platform: {}", runtime.client().platform_name());
+
+    // 2. Train the tiny config for 30 steps with single-process MuonBP.
+    let mut trainer =
+        Trainer::new(Arc::clone(&runtime), "tiny", CorpusCfg::default(), 42)?;
+    let metas = trainer.state.metas.clone();
+    let mut opt = Muon::block_periodic(&metas, /*tp=*/ 4, /*P=*/ 5);
+    let cfg = TrainCfg {
+        steps: 30,
+        lr: 0.02,
+        schedule: Schedule::Constant,
+        eval_every: 10,
+        ..Default::default()
+    };
+    let rec = trainer.run(&mut opt, &cfg)?;
+    let loss = rec.get("train_loss").unwrap();
+    println!(
+        "MuonBP(P=5): loss {:.3} -> {:.3} (val ppl {:.1})",
+        loss.values[0],
+        loss.last().unwrap(),
+        ppl(rec.get("val_loss").unwrap().min()),
+    );
+
+    // 3. Same thing on the real thread-per-rank cluster (DP=2 x TP=2) with
+    //    actual gather/scatter collectives and byte accounting.
+    let mut trainer2 =
+        Trainer::new(Arc::clone(&runtime), "tiny", CorpusCfg::default(), 42)?;
+    let ns = Arc::new(NsEngine::new(Some(Arc::clone(&runtime))));
+    let mut dist = DistMuonBuilder::new(Mesh::new(2, 2)?, Period::Every(5))
+        .ns_engine(ns)
+        .build(&metas);
+    let rec2 = trainer2.run(&mut dist, &cfg)?;
+    let (tp_stats, dp_stats) = dist.comm_stats();
+    println!(
+        "distributed run: loss -> {:.3}",
+        rec2.get("train_loss").unwrap().last().unwrap()
+    );
+    println!("TP (optimizer) traffic:\n{}", tp_stats.summary());
+    println!("DP (grad sync) traffic:\n{}", dp_stats.summary());
+
+    // 4. Analytic throughput at the paper's true 8B scale (Table 4).
+    let dims = ModelDims::paper_8b();
+    let hw = HwPreset::a100();
+    for m in [Method::Muon, Method::MuonBP { period: 5 }, Method::Adam] {
+        println!(
+            "8B {:<14} {:>7.2} TFLOP/s/GPU",
+            m.name(),
+            throughput_tflops(&dims, m, &hw)
+        );
+    }
+    Ok(())
+}

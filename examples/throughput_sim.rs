@@ -1,0 +1,98 @@
+//! Throughput what-if explorer: sweep period, TP degree, and fabric speed
+//! at the paper's true model scales with the analytic cost model (the same
+//! machinery behind the Table 4 bench), plus the measured-bytes view from a
+//! real simulated-cluster step.
+//!
+//!   cargo run --release --example throughput_sim -- [--model 8b|1.2b|960m]
+
+use muonbp::costmodel::netmodel::NetModel;
+use muonbp::costmodel::throughput::{
+    step_breakdown, throughput_tflops, HwPreset, Method,
+};
+use muonbp::costmodel::ModelDims;
+use muonbp::metrics::render_table;
+use muonbp::utils::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env()?;
+    let dims = match args.get_or("model", "8b").as_str() {
+        "960m" => ModelDims::paper_960m(),
+        "1.2b" => ModelDims::paper_1_2b(),
+        _ => ModelDims::paper_8b(),
+    };
+    let hw = HwPreset::a100();
+    println!(
+        "model {} ({:.2}B params, dp={} tp={}, {} tokens/step)\n",
+        dims.name,
+        dims.n_params() as f64 / 1e9,
+        dims.dp,
+        dims.tp,
+        dims.tokens_per_step()
+    );
+
+    // 1. Period sweep: where does MuonBP's throughput saturate?
+    let mut rows = Vec::new();
+    for p in [1usize, 2, 3, 5, 8, 16, 64] {
+        let b = step_breakdown(&dims, Method::MuonBP { period: p }, &hw);
+        rows.push(vec![
+            format!("P={p}"),
+            format!("{:.2}", throughput_tflops(&dims, Method::MuonBP { period: p }, &hw)),
+            format!("{:.1}", b.opt_comm * 1e3),
+            format!("{:.1}", b.orth_compute * 1e3),
+        ]);
+    }
+    let block = step_breakdown(&dims, Method::BlockMuon, &hw);
+    rows.push(vec![
+        "P=inf (BlockMuon)".into(),
+        format!("{:.2}", throughput_tflops(&dims, Method::BlockMuon, &hw)),
+        format!("{:.1}", block.opt_comm * 1e3),
+        format!("{:.1}", block.orth_compute * 1e3),
+    ]);
+    println!(
+        "{}",
+        render_table(
+            "MuonBP period sweep",
+            &["period", "TFLOP/s/GPU", "opt_comm ms", "orth ms"],
+            &rows
+        )
+    );
+
+    // 2. Fabric sensitivity: NVLink vs IB vs infinite for the TP gathers.
+    let mut rows = Vec::new();
+    for (name, net) in [
+        ("NVLink 300GB/s", NetModel::a100_nvlink()),
+        ("IB 25GB/s", NetModel::ib_hdr()),
+        ("infinite", NetModel::infinite()),
+    ] {
+        let hw2 = HwPreset { tp_net: net, ..hw };
+        rows.push(vec![
+            name.to_string(),
+            format!("{:.2}", throughput_tflops(&dims, Method::Muon, &hw2)),
+            format!(
+                "{:.2}",
+                throughput_tflops(&dims, Method::MuonBP { period: 5 }, &hw2)
+            ),
+            format!("{:.2}", throughput_tflops(&dims, Method::Adam, &hw2)),
+        ]);
+    }
+    println!(
+        "{}",
+        render_table(
+            "TP-fabric sensitivity",
+            &["fabric", "Muon", "MuonBP(P=5)", "Adam"],
+            &rows
+        )
+    );
+
+    // 3. The paper's headline: relative gain of MuonBP over Muon.
+    let muon = throughput_tflops(&dims, Method::Muon, &hw);
+    let bp = throughput_tflops(&dims, Method::MuonBP { period: 5 }, &hw);
+    let adam = throughput_tflops(&dims, Method::Adam, &hw);
+    println!(
+        "MuonBP vs Muon: {:+.1}%   |   Muon vs Adam: {:+.1}%   |   MuonBP vs Adam: {:+.1}%",
+        (bp / muon - 1.0) * 100.0,
+        (muon / adam - 1.0) * 100.0,
+        (bp / adam - 1.0) * 100.0
+    );
+    Ok(())
+}

@@ -1,0 +1,118 @@
+//! End-to-end validation driver (EXPERIMENTS.md §E2E): train the `e2e`
+//! Llama-style transformer (GQA + RoPE + SwiGLU, the paper's architecture
+//! at CPU-budget scale) for a few hundred steps through the FULL stack:
+//!
+//!   AOT'd jax fwd/bwd on PJRT  ->  DP gradient all-reduce on the
+//!   thread-per-rank cluster  ->  distributed MuonBP optimizer step
+//!   (block-local NS via the XLA executable cache / Pallas artifacts,
+//!   periodic gather -> full NS -> scatter)  ->  metrics.
+//!
+//!   cargo run --release --example train_e2e -- [--steps N] [--model e2e]
+//!       [--optimizer muonbp|muon|blockmuon|adamw] [--period P]
+//!       [--dp N] [--tp N] [--lr F] [--out results/e2e.csv]
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use muonbp::coordinator::DistMuonBuilder;
+use muonbp::data::CorpusCfg;
+use muonbp::mesh::Mesh;
+use muonbp::metrics::ppl;
+use muonbp::optim::muon::Period;
+use muonbp::optim::{by_name, Optimizer, Schedule};
+use muonbp::runtime::{NsEngine, Runtime};
+use muonbp::train::{TrainCfg, Trainer};
+use muonbp::utils::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env()?;
+    let model = args.get_or("model", "e2e");
+    let steps = args.get_usize("steps", 300)?;
+    let optimizer = args.get_or("optimizer", "muonbp");
+    let period = args.get_usize("period", 5)?;
+    let dp = args.get_usize("dp", 2)?;
+    let tp = args.get_usize("tp", 4)?;
+    let lr = args.get_f64("lr", 0.02)?;
+    let out = args.get_or("out", "results/e2e_loss_curve.csv");
+
+    let runtime = Arc::new(Runtime::open_default()?);
+    let entry = runtime.manifest.config(&model)?.clone();
+    println!(
+        "e2e: model={model} ({:.1}M params, d={}, L={}, seq={}, batch={})",
+        entry.n_params as f64 / 1e6,
+        entry.d_model,
+        entry.n_layers,
+        entry.seq_len,
+        entry.batch
+    );
+    println!(
+        "     optimizer={optimizer} period={period} mesh=dp{dp}xtp{tp} lr={lr} steps={steps}"
+    );
+
+    let corpus = CorpusCfg { bytes: 1 << 21, ..Default::default() };
+    let mut trainer =
+        Trainer::new(Arc::clone(&runtime), &model, corpus, 1234)?;
+    let metas = trainer.state.metas.clone();
+
+    // Distributed coordinator for the Muon family; reference optimizer
+    // otherwise (adamw baseline).
+    let ns = Arc::new(NsEngine::new(Some(Arc::clone(&runtime))));
+    let mut opt: Box<dyn Optimizer> = match optimizer.as_str() {
+        "muonbp" | "muon" | "blockmuon" => {
+            let p = match optimizer.as_str() {
+                "muon" => Period::Every(1),
+                "blockmuon" => Period::Never,
+                _ => Period::Every(period),
+            };
+            Box::new(
+                DistMuonBuilder::new(Mesh::new(dp, tp)?, p)
+                    .ns_engine(Arc::clone(&ns))
+                    .build(&metas),
+            )
+        }
+        other => by_name(other, &metas, tp)?,
+    };
+
+    let t0 = Instant::now();
+    let cfg = TrainCfg {
+        steps,
+        lr,
+        schedule: Schedule::paper_wsd(),
+        eval_every: (steps / 10).max(1),
+        eval_batches: 2,
+        grad_clip: 1.0,
+        seed: 1234,
+        log_param_norm: true,
+    };
+    let rec = trainer.run(opt.as_mut(), &cfg)?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    let train = rec.get("train_loss").unwrap();
+    let val = rec.get("val_loss").unwrap();
+    println!("\n== e2e loss curve ({}) ==", opt.name());
+    for (i, (&s, &v)) in
+        train.steps.iter().zip(&train.values).enumerate()
+    {
+        if i % (steps / 20).max(1) == 0 || i + 1 == train.values.len() {
+            println!("  step {s:>5}  train_loss {v:.4}  wall {:.1}s", train.wall[i]);
+        }
+    }
+    println!(
+        "\nfinal: train {:.4} (ppl {:.2}) | val {:.4} (ppl {:.2}) | {:.1}s total, {:.2}s/step",
+        train.last().unwrap(),
+        ppl(train.last().unwrap()),
+        val.last().unwrap(),
+        ppl(val.last().unwrap()),
+        wall,
+        wall / steps as f64
+    );
+    let (hits, misses) = ns.cache_stats();
+    println!("ns executable cache: {hits} hits / {misses} misses");
+    let comm = rec.get("opt_comm_bytes").unwrap();
+    let total_comm: f64 = comm.values.iter().sum();
+    println!("optimizer TP traffic: {:.1} MiB total", total_comm / (1 << 20) as f64);
+
+    rec.save_csv(&out)?;
+    println!("wrote {out}");
+    Ok(())
+}

@@ -1,0 +1,5 @@
+"""Build-time-only python package: L2 jax model + L1 pallas kernels + AOT.
+
+Never imported at runtime — `make artifacts` lowers everything to HLO text
+under artifacts/ and the rust binary is self-contained afterwards.
+"""

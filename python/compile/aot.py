@@ -1,0 +1,122 @@
+"""AOT lowering: jax/pallas -> HLO TEXT artifacts + manifest.json.
+
+Interchange format is HLO *text*, not serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the xla crate's bundled
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Lowered with return_tuple=True; the rust side unwraps with `to_tuple()`.
+
+Usage (from python/):  python -m compile.aot --out-dir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .model import CONFIGS, ModelConfig, param_specs
+
+# Newton–Schulz artifacts: full-matrix and shard shapes covering the bench &
+# e2e configs under the TP degrees the experiments use (2, 4, 8). Anything
+# not listed falls back to the rust runtime's XlaBuilder NS.
+NS_STEPS = 5
+NS_SHAPES: List[Tuple[int, int]] = [
+    (128, 128), (128, 352), (352, 128),
+    (64, 128), (128, 176), (176, 128), (128, 88),
+    (384, 384), (384, 1024), (1024, 384), (384, 128),
+    (96, 384), (384, 256), (256, 384),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_model(cfg: ModelConfig, out_dir: str) -> dict:
+    specs = param_specs(cfg)
+    arg_specs = [jax.ShapeDtypeStruct(s.shape, jnp.float32) for s in specs]
+    tok_spec = jax.ShapeDtypeStruct((cfg.batch, cfg.seq_len + 1), jnp.int32)
+
+    entries = {}
+    for kind, fn in (
+        ("train", model.make_train_step(cfg)),
+        ("eval", model.make_eval_step(cfg)),
+    ):
+        lowered = jax.jit(fn).lower(*arg_specs, tok_spec)
+        text = to_hlo_text(lowered)
+        fname = f"{kind}_{cfg.name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        entries[f"{kind}_hlo"] = fname
+        print(f"  {fname}: {len(text)} chars")
+
+    n_params = sum(int(jnp.prod(jnp.array(s.shape))) for s in specs)
+    return {
+        "config": model.config_dict(cfg),
+        "n_params": n_params,
+        "params": [
+            {
+                "name": s.name,
+                "shape": list(s.shape),
+                "kind": s.kind,
+                "init_scale": s.init_scale,
+            }
+            for s in specs
+        ],
+        **entries,
+    }
+
+
+def lower_ns(shape: Tuple[int, int], out_dir: str) -> dict:
+    spec = jax.ShapeDtypeStruct(shape, jnp.float32)
+    lowered = jax.jit(model.make_ns_step(shape, NS_STEPS)).lower(spec)
+    text = to_hlo_text(lowered)
+    fname = f"ns_{shape[0]}x{shape[1]}.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(text)
+    print(f"  {fname}: {len(text)} chars")
+    return {"shape": list(shape), "steps": NS_STEPS, "hlo": fname}
+
+
+def main(argv: Sequence[str] | None = None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--configs", default=",".join(CONFIGS),
+        help="comma-separated model configs to lower",
+    )
+    ap.add_argument("--skip-ns", action="store_true")
+    args = ap.parse_args(argv)
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {"format": "hlo-text", "ns_steps": NS_STEPS, "configs": {},
+                "ns_kernels": []}
+    for name in args.configs.split(","):
+        cfg = CONFIGS[name]
+        print(f"lowering model config '{name}' ...")
+        manifest["configs"][name] = lower_model(cfg, args.out_dir)
+    if not args.skip_ns:
+        print("lowering pallas NS kernels ...")
+        for shape in NS_SHAPES:
+            manifest["ns_kernels"].append(lower_ns(shape, args.out_dir))
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {os.path.join(args.out_dir, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""L1 — Pallas kernels for the MuonBP compute hot-spot (Newton–Schulz GEMMs).
+
+`newton_schulz` is the production kernel (tiled Pallas matmul + NS loop);
+`ref` is the pure-jnp oracle pytest pins it against.
+"""
+
+from . import newton_schulz, ref  # noqa: F401

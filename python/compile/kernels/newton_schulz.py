@@ -1,0 +1,148 @@
+"""L1 — Pallas Newton–Schulz orthogonalization kernel.
+
+The compute hot-spot of the Muon/MuonBP optimizer family is the Newton–Schulz
+(NS) iteration that approximately orthogonalizes a (momentum) matrix:
+
+    X <- G / (||G||_F + eps)
+    repeat K times:  A = X X^T ;  B = b A + c A^2 ;  X = a X + B X
+
+Every step is a GEMM, so the kernel here is a tiled Pallas matmul written for
+the TPU MXU: operands are staged HBM->VMEM in (bm x bk) / (bk x bn) tiles via
+BlockSpec, partial products accumulate in an f32 VMEM scratch across the K grid
+axis, and the output tile is written once on the last K step.  This is the
+TPU re-think of the paper's GPU threadblock tiling (DESIGN.md
+§Hardware-Adaptation): BlockSpec expresses the HBM<->VMEM schedule that CUDA
+expressed with shared-memory threadblocks, and `jnp.dot` inside the kernel
+targets the systolic MXU.
+
+MUST run with interpret=True on CPU: real TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute.  Correctness is pinned against
+the pure-jnp oracle in `ref.py` by `python/tests/test_kernels.py`.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# Newton–Schulz coefficient sets.
+#   PAPER  — Algorithm 2 of MuonBP (classic cubic-ish NS, converges to the
+#            polar factor; needs more steps but is a contraction to 1).
+#   JORDAN — Keller Jordan's tuned quintic used by production Muon
+#            (oscillates in a band around 1; 5 steps suffice for training).
+PAPER_COEFFS: Tuple[float, float, float] = (2.0, -1.5, 0.5)
+JORDAN_COEFFS: Tuple[float, float, float] = (3.4445, -4.7750, 2.0315)
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref, acc_ref, *, nk: int):
+    """One (bm, bn) output tile; accumulates over the k grid axis in VMEM."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # MXU matmul on the current (bm, bk) x (bk, bn) tile pair. f32 accumulate.
+    acc_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _store():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def matmul(
+    x: jax.Array,
+    y: jax.Array,
+    *,
+    bm: int = 64,
+    bn: int = 64,
+    bk: int = 64,
+    interpret: bool = True,
+) -> jax.Array:
+    """Tiled Pallas matmul `x @ y` with zero-padding to tile multiples.
+
+    Padding keeps the BlockSpec grid exact for arbitrary shapes (hypothesis
+    sweeps odd shapes in the tests); zeros do not perturb the product.
+    """
+    if x.ndim != 2 or y.ndim != 2 or x.shape[1] != y.shape[0]:
+        raise ValueError(f"matmul shape mismatch: {x.shape} @ {y.shape}")
+    m, k = x.shape
+    _, n = y.shape
+    dtype = jnp.promote_types(x.dtype, y.dtype)
+
+    bm = min(bm, _round_up(m, 8))
+    bn = min(bn, _round_up(n, 8))
+    bk = min(bk, _round_up(k, 8))
+    mp, kp, np_ = _round_up(m, bm), _round_up(k, bk), _round_up(n, bn)
+    xp = jnp.pad(x.astype(dtype), ((0, mp - m), (0, kp - k)))
+    yp = jnp.pad(y.astype(dtype), ((0, kp - k), (0, np_ - n)))
+    nk = kp // bk
+
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, nk=nk),
+        grid=(mp // bm, np_ // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), dtype),
+        # f32 VMEM accumulator tile — the TPU analogue of the CUDA
+        # shared-memory accumulator in the paper's GPU kernels.
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(xp, yp)
+    return out[:m, :n]
+
+
+def _ns_body(
+    x: jax.Array,
+    coeffs: Tuple[float, float, float],
+    mm: Callable[[jax.Array, jax.Array], jax.Array],
+) -> jax.Array:
+    a, b, c = coeffs
+    gram = mm(x, x.T)  # A = X X^T       (m x m)
+    poly = b * gram + c * mm(gram, gram)  # B = bA + cA^2
+    return a * x + mm(poly, x)
+
+
+def ns_orthogonalize(
+    g: jax.Array,
+    *,
+    steps: int = 5,
+    coeffs: Tuple[float, float, float] = JORDAN_COEFFS,
+    eps: float = 1e-7,
+    use_pallas: bool = True,
+    block: Sequence[int] = (64, 64, 64),
+) -> jax.Array:
+    """Approximate polar factor Orth(G) = (G G^T)^{-1/2} G via Newton–Schulz.
+
+    Transposes tall matrices so the Gram matrix is formed on the smaller side
+    (the paper's FLOP accounting in §2.2 assumes m <= n), normalizes by the
+    Frobenius norm so all singular values are <= 1 (NS convergence region),
+    then runs `steps` iterations where each GEMM is the Pallas kernel above.
+    """
+    if g.ndim != 2:
+        raise ValueError(f"ns_orthogonalize expects a matrix, got {g.shape}")
+    m, n = g.shape
+    transpose = m > n
+    x = g.T if transpose else g
+    x = x / (jnp.linalg.norm(x) + eps)
+    if use_pallas:
+        bm, bn, bk = block
+        mm = functools.partial(matmul, bm=bm, bn=bn, bk=bk)
+    else:
+        mm = jnp.matmul
+    for _ in range(steps):
+        x = _ns_body(x, coeffs, mm)
+    return x.T if transpose else x

@@ -1,0 +1,46 @@
+"""Pure-jnp oracle for the Pallas kernels (build-time correctness signal).
+
+`ref_matmul` / `ref_ns_orthogonalize` implement exactly the math of
+`newton_schulz.py` with plain jnp ops; `polar_orthogonalize` is the exact
+answer via SVD, used to check that Newton–Schulz converges to the right
+object on well-conditioned inputs.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .newton_schulz import JORDAN_COEFFS, PAPER_COEFFS  # noqa: F401 (re-export)
+
+
+def ref_matmul(x: jax.Array, y: jax.Array) -> jax.Array:
+    return jnp.matmul(x, y)
+
+
+def ref_ns_orthogonalize(
+    g: jax.Array,
+    *,
+    steps: int = 5,
+    coeffs: Tuple[float, float, float] = JORDAN_COEFFS,
+    eps: float = 1e-7,
+) -> jax.Array:
+    """Reference Newton–Schulz — same algorithm, jnp matmuls."""
+    m, n = g.shape
+    transpose = m > n
+    x = g.T if transpose else g
+    x = x / (jnp.linalg.norm(x) + eps)
+    a, b, c = coeffs
+    for _ in range(steps):
+        gram = x @ x.T
+        poly = b * gram + c * (gram @ gram)
+        x = a * x + poly @ x
+    return x.T if transpose else x
+
+
+def polar_orthogonalize(g: jax.Array) -> jax.Array:
+    """Exact polar factor U V^T via SVD: the fixed point NS approximates."""
+    u, _, vt = jnp.linalg.svd(g, full_matrices=False)
+    return u @ vt

@@ -1,0 +1,231 @@
+"""L2 — Llama-style transformer forward/backward in JAX (build-time only).
+
+Matches the paper's experimental architecture (§4.2): RMSNorm, RoPE, SwiGLU,
+GQA, untied LM head, byte-level vocab for the synthetic corpus.  `train_step`
+returns (loss, *grads) and is lowered once by `aot.py` to HLO text that the
+rust runtime executes through PJRT; python never runs on the step path.
+
+The parameter list is flattened in sorted-name order; `param_specs(cfg)` is
+the single source of truth for that ordering and is serialized into
+artifacts/manifest.json so the rust side constructs argument lists
+identically.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field, asdict
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.newton_schulz import ns_orthogonalize  # L1 kernel entry point
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str = "tiny"
+    vocab: int = 256           # byte-level tokenizer
+    d_model: int = 64
+    n_layers: int = 2
+    n_heads: int = 4
+    n_kv_heads: int = 2        # GQA query groups
+    d_ff: int = 176            # SwiGLU hidden (~8/3 * d, rounded to 16)
+    seq_len: int = 64
+    batch: int = 4
+    rope_theta: float = 10000.0
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+
+# Configurations lowered to artifacts. `tiny` drives unit/integration tests,
+# `bench` drives the table/figure proxy runs, `e2e` is the end-to-end example
+# (largest model the single-core CPU PJRT budget allows; the paper's 960M-8B
+# dims live analytically in rust costmodel presets — see DESIGN.md §1).
+CONFIGS: Dict[str, ModelConfig] = {
+    "tiny": ModelConfig(name="tiny"),
+    "bench": ModelConfig(
+        name="bench", d_model=128, n_layers=2, n_heads=4, n_kv_heads=2,
+        d_ff=352, seq_len=64, batch=8,
+    ),
+    "e2e": ModelConfig(
+        name="e2e", d_model=384, n_layers=6, n_heads=6, n_kv_heads=2,
+        d_ff=1024, seq_len=128, batch=8,
+    ),
+}
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    name: str
+    shape: Tuple[int, ...]
+    # "matrix"  -> 2D hidden weight, optimized by the Muon family
+    # "embed"   -> embedding / lm head, optimized by AdamW (paper §4.1)
+    # "vector"  -> 1D norm gains etc., optimized by AdamW
+    kind: str
+    init_scale: float
+
+
+def param_specs(cfg: ModelConfig) -> List[ParamSpec]:
+    """Flat parameter list in the canonical (sorted-name) order."""
+    out_scale = 0.02 / max(1.0, (2 * cfg.n_layers) ** 0.5)
+    specs: List[ParamSpec] = [
+        ParamSpec("embed.weight", (cfg.vocab, cfg.d_model), "embed", 0.02),
+        ParamSpec("final_norm.gain", (cfg.d_model,), "vector", 1.0),
+        ParamSpec("lm_head.weight", (cfg.d_model, cfg.vocab), "embed", 0.02),
+    ]
+    for i in range(cfg.n_layers):
+        p = f"layers.{i:02d}."
+        specs += [
+            ParamSpec(p + "attn.wq", (cfg.d_model, cfg.d_model), "matrix", 0.02),
+            ParamSpec(p + "attn.wk", (cfg.d_model, cfg.kv_dim), "matrix", 0.02),
+            ParamSpec(p + "attn.wv", (cfg.d_model, cfg.kv_dim), "matrix", 0.02),
+            ParamSpec(p + "attn.wo", (cfg.d_model, cfg.d_model), "matrix", out_scale),
+            ParamSpec(p + "mlp.w_down", (cfg.d_ff, cfg.d_model), "matrix", out_scale),
+            ParamSpec(p + "mlp.w_gate", (cfg.d_model, cfg.d_ff), "matrix", 0.02),
+            ParamSpec(p + "mlp.w_up", (cfg.d_model, cfg.d_ff), "matrix", 0.02),
+            ParamSpec(p + "norm1.gain", (cfg.d_model,), "vector", 1.0),
+            ParamSpec(p + "norm2.gain", (cfg.d_model,), "vector", 1.0),
+        ]
+    specs.sort(key=lambda s: s.name)
+    return specs
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> List[jax.Array]:
+    """Reference initializer (tests only — the rust side owns real init)."""
+    params = []
+    for spec in param_specs(cfg):
+        key, sub = jax.random.split(key)
+        if spec.kind == "vector":
+            params.append(jnp.ones(spec.shape, jnp.float32))
+        else:
+            params.append(
+                spec.init_scale
+                * jax.random.normal(sub, spec.shape, jnp.float32)
+            )
+    return params
+
+
+def _rms_norm(x: jax.Array, gain: jax.Array, eps: float = 1e-5) -> jax.Array:
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * gain
+
+
+def _rope(x: jax.Array, theta: float) -> jax.Array:
+    """Rotary position embedding over [..., seq, heads, head_dim]."""
+    seq = x.shape[-3]
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = jnp.arange(seq, dtype=jnp.float32)[:, None] * freqs[None, :]
+    cos = jnp.cos(ang)[None, :, None, :]  # [1, S, 1, half]
+    sin = jnp.sin(ang)[None, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _attention(cfg: ModelConfig, x, wq, wk, wv, wo):
+    b, s, d = x.shape
+    hd, nh, nkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    q = (x @ wq).reshape(b, s, nh, hd)
+    k = (x @ wk).reshape(b, s, nkv, hd)
+    v = (x @ wv).reshape(b, s, nkv, hd)
+    q, k = _rope(q, cfg.rope_theta), _rope(k, cfg.rope_theta)
+    # GQA: repeat kv heads across each query group.
+    rep = nh // nkv
+    k = jnp.repeat(k, rep, axis=2)
+    v = jnp.repeat(v, rep, axis=2)
+    q = q.transpose(0, 2, 1, 3)  # [B, H, S, hd]
+    k = k.transpose(0, 2, 1, 3)
+    v = v.transpose(0, 2, 1, 3)
+    scores = (q @ k.transpose(0, 1, 3, 2)) / jnp.sqrt(jnp.float32(hd))
+    mask = jnp.tril(jnp.ones((s, s), jnp.bool_))
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = (probs @ v).transpose(0, 2, 1, 3).reshape(b, s, d)
+    return ctx @ wo
+
+
+def _mlp(x, w_gate, w_up, w_down):
+    return (jax.nn.silu(x @ w_gate) * (x @ w_up)) @ w_down
+
+
+def forward(cfg: ModelConfig, params: List[jax.Array], tokens: jax.Array):
+    """Logits [B, S, V] for input tokens [B, S] (int32)."""
+    specs = param_specs(cfg)
+    p = {spec.name: arr for spec, arr in zip(specs, params)}
+    x = p["embed.weight"][tokens]
+    for i in range(cfg.n_layers):
+        pre = f"layers.{i:02d}."
+        h = _rms_norm(x, p[pre + "norm1.gain"])
+        x = x + _attention(
+            cfg, h, p[pre + "attn.wq"], p[pre + "attn.wk"],
+            p[pre + "attn.wv"], p[pre + "attn.wo"],
+        )
+        h = _rms_norm(x, p[pre + "norm2.gain"])
+        x = x + _mlp(
+            h, p[pre + "mlp.w_gate"], p[pre + "mlp.w_up"], p[pre + "mlp.w_down"]
+        )
+    x = _rms_norm(x, p["final_norm.gain"])
+    return x @ p["lm_head.weight"]
+
+
+def loss_fn(cfg: ModelConfig, params: List[jax.Array], tokens: jax.Array):
+    """Mean next-token cross-entropy over tokens [B, S+1]."""
+    inputs, targets = tokens[:, :-1], tokens[:, 1:]
+    logits = forward(cfg, params, inputs)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+def make_train_step(cfg: ModelConfig):
+    """(params..., tokens) -> (loss, *grads) — the artifact rust executes."""
+
+    def train_step(*args):
+        params = list(args[:-1])
+        tokens = args[-1]
+        loss, grads = jax.value_and_grad(
+            lambda ps: loss_fn(cfg, ps, tokens)
+        )(params)
+        return (loss, *grads)
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig):
+    """(params..., tokens) -> (loss,) — validation artifact."""
+
+    def eval_step(*args):
+        params = list(args[:-1])
+        tokens = args[-1]
+        return (loss_fn(cfg, params, tokens),)
+
+    return eval_step
+
+
+def make_ns_step(shape: Tuple[int, int], steps: int, use_pallas: bool = True):
+    """(g,) -> (orth(g),) — the L1 Pallas NS kernel lowered standalone.
+
+    These per-shape artifacts are what the rust coordinator executes on its
+    optimizer hot path for the shapes listed in the manifest; arbitrary shard
+    shapes fall back to the runtime XlaBuilder NS (rust/src/runtime).
+    """
+
+    def ns_step(g):
+        return (ns_orthogonalize(g, steps=steps, use_pallas=use_pallas),)
+
+    return ns_step
+
+
+def config_dict(cfg: ModelConfig) -> dict:
+    d = asdict(cfg)
+    d["head_dim"] = cfg.head_dim
+    d["kv_dim"] = cfg.kv_dim
+    return d

@@ -1,0 +1,141 @@
+"""L1 correctness: Pallas kernel vs pure-jnp oracle (the CORE signal).
+
+Hypothesis sweeps shapes/dtypes of the tiled matmul and the Newton–Schulz
+orthogonalizer against ref.py, plus analytic properties of the NS fixed
+point (orthogonality, polar-factor agreement, sign/scale invariances).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import newton_schulz as nsk
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+DIMS = st.integers(min_value=1, max_value=96)
+BLOCKS = st.sampled_from([8, 16, 32, 64])
+
+
+def _rand(shape, seed, dtype=np.float32):
+    return jnp.asarray(np.random.RandomState(seed).randn(*shape), dtype)
+
+
+# ---------------------------------------------------------------- matmul ---
+
+@settings(max_examples=40, deadline=None)
+@given(m=DIMS, k=DIMS, n=DIMS, bm=BLOCKS, bn=BLOCKS, bk=BLOCKS,
+       seed=st.integers(0, 2**31 - 1))
+def test_matmul_matches_ref_f32(m, k, n, bm, bn, bk, seed):
+    x = _rand((m, k), seed)
+    y = _rand((k, n), seed + 1)
+    got = nsk.matmul(x, y, bm=bm, bn=bn, bk=bk)
+    want = ref.ref_matmul(x, y)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(m=DIMS, k=DIMS, n=DIMS, seed=st.integers(0, 2**31 - 1))
+def test_matmul_matches_ref_bf16(m, k, n, seed):
+    x = _rand((m, k), seed, np.float32).astype(jnp.bfloat16)
+    y = _rand((k, n), seed + 1, np.float32).astype(jnp.bfloat16)
+    got = nsk.matmul(x, y).astype(jnp.float32)
+    want = ref.ref_matmul(
+        x.astype(jnp.float32), y.astype(jnp.float32)
+    )
+    # bf16 inputs, f32 accumulate: tolerance dominated by input rounding.
+    np.testing.assert_allclose(got, want, rtol=5e-2, atol=5e-1)
+
+
+def test_matmul_rejects_bad_shapes():
+    with pytest.raises(ValueError):
+        nsk.matmul(jnp.zeros((3, 4)), jnp.zeros((5, 6)))
+    with pytest.raises(ValueError):
+        nsk.matmul(jnp.zeros((3,)), jnp.zeros((3, 2)))
+
+
+def test_matmul_zero_and_identity():
+    x = _rand((17, 17), 0)
+    eye = jnp.eye(17, dtype=jnp.float32)
+    np.testing.assert_allclose(nsk.matmul(x, eye), x, rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(
+        nsk.matmul(x, jnp.zeros_like(x)), jnp.zeros_like(x), atol=0
+    )
+
+
+# ------------------------------------------------------------ NS kernel ---
+
+@settings(max_examples=25, deadline=None)
+@given(m=st.integers(2, 64), n=st.integers(2, 64),
+       steps=st.integers(1, 6), seed=st.integers(0, 2**31 - 1),
+       coeffs=st.sampled_from([nsk.JORDAN_COEFFS, nsk.PAPER_COEFFS]))
+def test_ns_matches_ref(m, n, steps, seed, coeffs):
+    g = _rand((m, n), seed)
+    got = nsk.ns_orthogonalize(g, steps=steps, coeffs=coeffs)
+    want = ref.ref_ns_orthogonalize(g, steps=steps, coeffs=coeffs)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("shape", [(16, 48), (48, 16), (32, 32), (5, 40)])
+def test_ns_converges_to_polar_paper_coeffs(shape):
+    # Well-conditioned input (singular values pushed away from 0) so the
+    # classical NS (paper Alg. 2) contracts to the exact polar factor.
+    g = _rand(shape, 7)
+    m, n = shape
+    k = min(m, n)
+    u, s, vt = np.linalg.svd(np.asarray(g), full_matrices=False)
+    g = jnp.asarray(u @ np.diag(0.5 + 0.5 * s / s.max()) @ vt)
+    got = nsk.ns_orthogonalize(g, steps=25, coeffs=nsk.PAPER_COEFFS)
+    want = ref.polar_orthogonalize(g)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+    gram = got @ got.T if m <= n else got.T @ got
+    np.testing.assert_allclose(gram, np.eye(k), atol=1e-3)
+
+
+def test_ns_jordan_approx_orthogonal():
+    # Jordan coefficients push singular values into a band around 1.
+    g = _rand((24, 64), 3)
+    out = nsk.ns_orthogonalize(g, steps=5, coeffs=nsk.JORDAN_COEFFS)
+    s = np.linalg.svd(np.asarray(out), compute_uv=False)
+    assert s.max() < 1.35 and s.min() > 0.3, s
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), scale=st.floats(0.1, 100.0))
+def test_ns_scale_invariant(seed, scale):
+    # Frobenius pre-normalization makes Orth(cG) == Orth(G) for c > 0.
+    g = _rand((12, 20), seed)
+    a = nsk.ns_orthogonalize(g)
+    b = nsk.ns_orthogonalize(scale * g)
+    np.testing.assert_allclose(a, b, rtol=1e-3, atol=1e-4)
+
+
+def test_ns_sign_equivariant():
+    g = _rand((12, 20), 11)
+    a = nsk.ns_orthogonalize(g)
+    b = nsk.ns_orthogonalize(-g)
+    np.testing.assert_allclose(a, -b, rtol=1e-5, atol=1e-5)
+
+
+def test_ns_transpose_consistency():
+    # Orth(G^T) == Orth(G)^T — the tall-matrix transposition path.
+    g = _rand((40, 12), 13)
+    a = nsk.ns_orthogonalize(g)
+    b = nsk.ns_orthogonalize(g.T)
+    np.testing.assert_allclose(a, b.T, rtol=1e-4, atol=1e-4)
+
+
+def test_blockwise_equals_per_block():
+    # The MuonBP block step: orthogonalizing a TP shard independently must
+    # equal slicing the shard out and orthogonalizing it alone.
+    g = _rand((32, 64), 5)
+    c = 4  # column-parallel TP degree
+    shard_w = 64 // c
+    for j in range(c):
+        shard = g[:, j * shard_w:(j + 1) * shard_w]
+        a = nsk.ns_orthogonalize(shard)
+        b = ref.ref_ns_orthogonalize(shard)
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)

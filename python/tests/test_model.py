@@ -1,0 +1,115 @@
+"""L2 correctness: model shapes, gradients, loss behaviour."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.model import CONFIGS, ModelConfig, param_specs
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = CONFIGS["tiny"]
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params(CFG, jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def tokens():
+    rs = np.random.RandomState(0)
+    return jnp.asarray(
+        rs.randint(0, CFG.vocab, (CFG.batch, CFG.seq_len + 1)), jnp.int32
+    )
+
+
+def test_param_specs_sorted_and_unique():
+    specs = param_specs(CFG)
+    names = [s.name for s in specs]
+    assert names == sorted(names)
+    assert len(set(names)) == len(names)
+
+
+def test_param_specs_kinds():
+    specs = param_specs(CFG)
+    kinds = {s.kind for s in specs}
+    assert kinds == {"matrix", "embed", "vector"}
+    for s in specs:
+        if s.kind == "vector":
+            assert len(s.shape) == 1
+        else:
+            assert len(s.shape) == 2
+
+
+def test_forward_shape(params, tokens):
+    logits = model.forward(CFG, params, tokens[:, :-1])
+    assert logits.shape == (CFG.batch, CFG.seq_len, CFG.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_initial_loss_near_uniform(params, tokens):
+    loss = model.loss_fn(CFG, params, tokens)
+    assert abs(float(loss) - np.log(CFG.vocab)) < 0.25
+
+
+def test_train_step_returns_loss_and_all_grads(params, tokens):
+    out = jax.jit(model.make_train_step(CFG))(*params, tokens)
+    assert len(out) == len(params) + 1
+    for g, p in zip(out[1:], params):
+        assert g.shape == p.shape
+        assert bool(jnp.all(jnp.isfinite(g)))
+
+
+def test_grads_match_finite_difference(params, tokens):
+    # Numerically check d(loss)/d(theta) on a few coordinates of one matrix.
+    step = jax.jit(model.make_train_step(CFG))
+    out = step(*params, tokens)
+    specs = param_specs(CFG)
+    idx = next(i for i, s in enumerate(specs) if s.kind == "matrix")
+    grad = np.asarray(out[1 + idx])
+    eps = 1e-3
+    for (r, c) in [(0, 0), (1, 3), (5, 7)]:
+        bumped = [p for p in params]
+        delta = np.zeros(specs[idx].shape, np.float32)
+        delta[r, c] = eps
+        bumped[idx] = params[idx] + delta
+        lp = float(model.loss_fn(CFG, bumped, tokens))
+        bumped[idx] = params[idx] - delta
+        lm = float(model.loss_fn(CFG, bumped, tokens))
+        fd = (lp - lm) / (2 * eps)
+        assert abs(fd - grad[r, c]) < 5e-3, (fd, grad[r, c])
+
+
+def test_causality(params):
+    # Changing a future token must not change past logits.
+    rs = np.random.RandomState(1)
+    toks = rs.randint(0, CFG.vocab, (1, CFG.seq_len))
+    a = model.forward(CFG, params, jnp.asarray(toks, jnp.int32))
+    toks2 = toks.copy()
+    toks2[0, -1] = (toks2[0, -1] + 1) % CFG.vocab
+    b = model.forward(CFG, params, jnp.asarray(toks2, jnp.int32))
+    np.testing.assert_allclose(a[0, :-1], b[0, :-1], atol=1e-5)
+    assert not np.allclose(a[0, -1], b[0, -1])
+
+
+def test_loss_decreases_under_sgd(params, tokens):
+    step = jax.jit(model.make_train_step(CFG))
+    ps = list(params)
+    losses = []
+    for _ in range(8):
+        out = step(*ps, tokens)
+        losses.append(float(out[0]))
+        ps = [p - 0.5 * g for p, g in zip(ps, out[1:])]
+    assert losses[-1] < losses[0] - 0.05, losses
+
+
+def test_all_configs_construct():
+    for name, cfg in CONFIGS.items():
+        assert cfg.d_model % cfg.n_heads == 0, name
+        assert cfg.n_heads % cfg.n_kv_heads == 0, name
+        specs = param_specs(cfg)
+        n = sum(int(np.prod(s.shape)) for s in specs)
+        assert n > 0

@@ -1,0 +1,68 @@
+//! Shared helpers for the bench harness binaries (each bench is its own
+//! crate with `harness = false`; include with `#[path = "common.rs"]`).
+
+#![allow(dead_code)]
+
+use std::sync::Arc;
+
+use muonbp::data::CorpusCfg;
+use muonbp::metrics::Recorder;
+use muonbp::optim::{Optimizer, Schedule};
+use muonbp::runtime::Runtime;
+use muonbp::train::{TrainCfg, Trainer};
+
+/// Step-count override: MUONBP_BENCH_STEPS=N scales every training bench.
+pub fn bench_steps(default: usize) -> usize {
+    std::env::var("MUONBP_BENCH_STEPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+}
+
+/// Open the artifact runtime or exit gracefully (benches must not fail the
+/// suite when artifacts are absent — print the instruction instead).
+pub fn runtime_or_exit() -> Arc<Runtime> {
+    match Runtime::open_default() {
+        Ok(rt) => Arc::new(rt),
+        Err(e) => {
+            eprintln!("SKIP: {e}");
+            std::process::exit(0);
+        }
+    }
+}
+
+/// Train `model` with `opt` for `steps`; returns the recorder.
+pub fn train_run(
+    runtime: &Arc<Runtime>,
+    model: &str,
+    opt: &mut dyn Optimizer,
+    steps: usize,
+    lr: f64,
+    seed: u64,
+) -> Recorder {
+    let mut trainer = Trainer::new(
+        Arc::clone(runtime),
+        model,
+        CorpusCfg::default(),
+        seed,
+    )
+    .expect("trainer");
+    let cfg = TrainCfg {
+        steps,
+        lr,
+        schedule: Schedule::paper_wsd(),
+        eval_every: (steps / 5).max(1),
+        eval_batches: 2,
+        grad_clip: 1.0,
+        seed,
+        log_param_norm: true,
+    };
+    trainer.run(opt, &cfg).expect("train run")
+}
+
+/// Save a recorder under results/<name>.csv and report.
+pub fn save(rec: &Recorder, name: &str) {
+    let path = muonbp::bench_util::results_dir().join(format!("{name}.csv"));
+    rec.save_csv(&path).expect("save csv");
+    println!("  -> {}", path.display());
+}

@@ -1,0 +1,68 @@
+//! Paper Fig 2 / Fig 8 (+ Table 6 right column) — mean parameter norm vs
+//! iteration for Muon / BlockMuon / MuonBP. The paper's observation:
+//! BlockMuon's parameter norms grow well beyond Muon/MuonBP's (even with
+//! block-dims RMS matching), a symptom of its instability at scale.
+
+#[path = "common.rs"]
+mod common;
+
+use muonbp::bench_util::banner;
+use muonbp::metrics::{render_table, Recorder};
+use muonbp::optim::muon::Muon;
+use muonbp::optim::Optimizer;
+
+fn main() {
+    banner("Fig 2/8: parameter norm growth per method");
+    let runtime = common::runtime_or_exit();
+    let steps = common::bench_steps(150);
+    let tp = 4;
+    let lr = 0.06; // elevated lr accentuates the divergence (paper 8B regime)
+
+    let metas = {
+        let t = muonbp::train::Trainer::new(
+            std::sync::Arc::clone(&runtime),
+            "bench",
+            muonbp::data::CorpusCfg::default(),
+            17,
+        )
+        .unwrap();
+        t.state.metas.clone()
+    };
+
+    let methods: Vec<(&str, Box<dyn Optimizer>)> = vec![
+        ("Muon", Box::new(Muon::full(&metas, tp))),
+        ("BlockMuon", Box::new(Muon::block(&metas, tp))),
+        ("MuonBP", Box::new(Muon::block_periodic(&metas, tp, 5))),
+    ];
+
+    let mut all = Recorder::new();
+    let mut rows = Vec::new();
+    for (name, mut opt) in methods {
+        let rec =
+            common::train_run(&runtime, "bench", opt.as_mut(), steps, lr, 17);
+        let norms = rec.get("param_norm").unwrap();
+        for (&s, &v) in norms.steps.iter().zip(&norms.values) {
+            all.push(name, s, v);
+        }
+        rows.push(vec![
+            name.to_string(),
+            format!("{:.3}", norms.values[0]),
+            format!("{:.3}", norms.values[norms.values.len() / 2]),
+            format!("{:.3}", norms.last().unwrap()),
+            format!(
+                "{:.2}x",
+                norms.last().unwrap() / norms.values[0]
+            ),
+        ]);
+    }
+    common::save(&all, "fig2_param_norms");
+    println!(
+        "{}",
+        render_table(
+            &format!("mean matrix param norm over {steps} steps (lr {lr})"),
+            &["Method", "start", "mid", "final", "growth"],
+            &rows
+        )
+    );
+    println!("paper shape: BlockMuon grows ~2x more than Muon/MuonBP (Table 6).");
+}

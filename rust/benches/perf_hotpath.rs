@@ -1,0 +1,127 @@
+//! §Perf harness — micro-benchmarks of every hot path the optimizer step
+//! touches, used to drive the EXPERIMENTS.md §Perf iteration log:
+//!   - host blocked matmul GFLOP/s across shapes,
+//!   - Newton–Schulz: host vs XLA (artifact + runtime JIT),
+//!   - full PJRT train step (fwd/bwd) per config,
+//!   - collective rendezvous overhead of the simulated cluster,
+//!   - end-to-end optimizer step (reference vs distributed).
+
+#[path = "common.rs"]
+mod common;
+
+use std::sync::Arc;
+
+use muonbp::bench_util::{banner, time_it};
+use muonbp::coordinator::DistMuonBuilder;
+use muonbp::costmodel::netmodel::NetModel;
+use muonbp::linalg::matmul::matmul;
+use muonbp::linalg::newton_schulz::{newton_schulz, NsCoeffs};
+use muonbp::mesh::Mesh;
+use muonbp::optim::muon::{Muon, Period};
+use muonbp::optim::Optimizer;
+use muonbp::runtime::NsEngine;
+use muonbp::tensor::Tensor;
+use muonbp::utils::rng::Rng;
+
+fn main() {
+    banner("perf: hot-path microbenchmarks");
+    let mut rng = Rng::new(0xBE);
+
+    // 1. Host matmul roofline.
+    for (m, k, n) in [(128, 128, 128), (256, 256, 256), (128, 352, 352)] {
+        let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+        let b = Tensor::randn(&[k, n], 1.0, &mut rng);
+        let flops = 2.0 * m as f64 * k as f64 * n as f64;
+        let r = time_it(&format!("host matmul {m}x{k}x{n}"), 2, 8, || {
+            std::hint::black_box(matmul(&a, &b));
+        });
+        println!("    -> {:.2} GFLOP/s", flops / r.mean_s / 1e9);
+    }
+
+    // 2. NS backends.
+    let g = Tensor::randn(&[128, 352], 1.0, &mut rng);
+    time_it("NS host 128x352 K=5", 2, 8, || {
+        std::hint::black_box(newton_schulz(&g, 5, NsCoeffs::jordan()));
+    });
+    let runtime = common::runtime_or_exit();
+    let ns = Arc::new(NsEngine::new(Some(Arc::clone(&runtime))));
+    ns.orthogonalize(&g).unwrap(); // compile outside timing
+    time_it("NS xla-artifact 128x352 K=5", 2, 8, || {
+        std::hint::black_box(ns.orthogonalize(&g).unwrap());
+    });
+    let g2 = Tensor::randn(&[96, 352], 1.0, &mut rng);
+    ns.orthogonalize(&g2).unwrap();
+    time_it("NS xla-jit 96x352 K=5", 2, 8, || {
+        std::hint::black_box(ns.orthogonalize(&g2).unwrap());
+    });
+
+    // 3. PJRT train step per config.
+    for model in ["tiny", "bench"] {
+        let trainer = muonbp::train::Trainer::new(
+            Arc::clone(&runtime),
+            model,
+            muonbp::data::CorpusCfg::default(),
+            1,
+        )
+        .unwrap();
+        let entry = runtime.manifest.config(model).unwrap();
+        let tokens: Vec<i32> = (0..(entry.batch * (entry.seq_len + 1)))
+            .map(|i| (i % 64) as i32)
+            .collect();
+        let r = time_it(&format!("pjrt train step ({model})"), 1, 5, || {
+            std::hint::black_box(trainer.forward_backward(&tokens).unwrap());
+        });
+        let flops = 6.0
+            * entry.n_params as f64
+            * (entry.batch * entry.seq_len) as f64;
+        println!("    -> {:.2} GFLOP/s effective", flops / r.mean_s / 1e9);
+    }
+
+    // 4. Collective rendezvous overhead (4 ranks, 1 KiB payload).
+    let comm =
+        muonbp::comm::Communicator::new(4, NetModel::a100_nvlink());
+    time_it("all_reduce x4 ranks (1KiB)", 2, 20, || {
+        crossbeam_utils::thread::scope(|s| {
+            for r in 0..4 {
+                let c = comm.clone();
+                s.spawn(move |_| {
+                    c.all_reduce_mean(r, Tensor::zeros(&[16, 16]))
+                });
+            }
+        })
+        .unwrap();
+    });
+
+    // 5. End-to-end optimizer step, reference vs distributed.
+    let trainer = muonbp::train::Trainer::new(
+        Arc::clone(&runtime),
+        "bench",
+        muonbp::data::CorpusCfg::default(),
+        1,
+    )
+    .unwrap();
+    let metas = trainer.state.metas.clone();
+    let grads: Vec<Tensor> =
+        metas.iter().map(|m| Tensor::randn(&m.shape, 0.01, &mut rng)).collect();
+
+    let mut reference = Muon::block_periodic(&metas, 4, 5);
+    let mut params: Vec<Tensor> =
+        metas.iter().map(|m| Tensor::zeros(&m.shape)).collect();
+    time_it("optimizer step: reference MuonBP (bench)", 1, 8, || {
+        reference.step(&mut params, &grads, 0.01);
+    });
+
+    let mut dist = DistMuonBuilder::new(
+        Mesh::new(2, 4).unwrap(),
+        Period::Every(5),
+    )
+    .ns_engine(Arc::clone(&ns))
+    .build(&metas);
+    let mut params2: Vec<Tensor> =
+        metas.iter().map(|m| Tensor::zeros(&m.shape)).collect();
+    time_it("optimizer step: DistMuonBP dp2xtp4 (bench)", 1, 8, || {
+        dist.step(&mut params2, &grads, 0.01);
+    });
+    let (hits, misses) = ns.cache_stats();
+    println!("ns cache: {hits} hits / {misses} misses");
+}

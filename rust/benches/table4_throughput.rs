@@ -1,0 +1,125 @@
+//! Paper Table 4 — average throughput (TFLOP/s/GPU) per method and model
+//! scale, from the analytic cost model at the TRUE paper dimensions
+//! (Table 5 configs), cross-checked against measured collective bytes from
+//! one real simulated-cluster step on the bench config.
+
+#[path = "common.rs"]
+mod common;
+
+use std::sync::Arc;
+
+use muonbp::bench_util::banner;
+use muonbp::comm::CollectiveKind;
+use muonbp::coordinator::DistMuonBuilder;
+use muonbp::costmodel::throughput::{
+    step_breakdown, throughput_tflops, HwPreset, Method,
+};
+use muonbp::costmodel::ModelDims;
+use muonbp::mesh::Mesh;
+use muonbp::metrics::render_table;
+use muonbp::optim::muon::Period;
+use muonbp::optim::Optimizer;
+
+fn main() {
+    banner("Table 4: throughput (TFLOP/s/GPU) per method x scale");
+    let hw = HwPreset::a100();
+    let dims = [
+        ModelDims::paper_960m(),
+        ModelDims::paper_1_2b(),
+        ModelDims::paper_8b(),
+    ];
+    // Paper Table 4 values for side-by-side comparison.
+    let paper: &[(&str, [f64; 3])] = &[
+        ("Muon", [112.97, 118.29, 105.09]),
+        ("BlockMuon", [115.43, 120.14, 114.75]),
+        ("MuonBP", [113.54, 119.79, 113.37]),
+        ("Adam", [117.21, 120.20, 117.30]),
+    ];
+    let methods = [
+        ("Muon", Method::Muon),
+        ("BlockMuon", Method::BlockMuon),
+        ("MuonBP", Method::MuonBP { period: 5 }),
+        ("Adam", Method::Adam),
+    ];
+    let mut rows = Vec::new();
+    for (name, m) in methods {
+        let p = paper.iter().find(|x| x.0 == name).unwrap();
+        let mut row = vec![name.to_string()];
+        for (i, d) in dims.iter().enumerate() {
+            row.push(format!(
+                "{:.2} ({:.2})",
+                throughput_tflops(d, m, &hw),
+                p.1[i]
+            ));
+        }
+        rows.push(row);
+    }
+    println!(
+        "{}",
+        render_table(
+            "ours (paper) TFLOP/s/GPU",
+            &["Method", "960M", "1.2B", "8B"],
+            &rows
+        )
+    );
+
+    // Headline ratios.
+    let d8 = &dims[2];
+    let muon = throughput_tflops(d8, Method::Muon, &hw);
+    let bp = throughput_tflops(d8, Method::MuonBP { period: 5 }, &hw);
+    println!(
+        "8B MuonBP vs Muon: {:+.1}% (paper: +7.9%)\n",
+        (bp / muon - 1.0) * 100.0
+    );
+    for d in &dims {
+        let b = step_breakdown(d, Method::Muon, &hw);
+        println!(
+            "{:>5}: compute {:.0} ms, Muon opt_comm {:.1} ms, orth {:.1} ms / step",
+            d.name,
+            b.compute * 1e3,
+            b.opt_comm * 1e3,
+            b.orth_compute * 1e3
+        );
+    }
+
+    // Measured-bytes cross-check: one full + four block steps on the real
+    // simulated cluster must show the 1/P optimizer-traffic reduction.
+    let runtime = common::runtime_or_exit();
+    let trainer = muonbp::train::Trainer::new(
+        Arc::clone(&runtime),
+        "bench",
+        muonbp::data::CorpusCfg::default(),
+        3,
+    )
+    .unwrap();
+    let metas = trainer.state.metas.clone();
+    let mut dist =
+        DistMuonBuilder::new(Mesh::new(1, 4).unwrap(), Period::Every(5))
+            .build(&metas);
+    let mut muon_ref =
+        DistMuonBuilder::new(Mesh::new(1, 4).unwrap(), Period::Every(1))
+            .build(&metas);
+    let quad_params: Vec<_> = metas
+        .iter()
+        .map(|m| muonbp::tensor::Tensor::zeros(&m.shape))
+        .collect();
+    let grads = quad_params.clone();
+    let mut p1 = quad_params.clone();
+    let mut p2 = quad_params.clone();
+    for _ in 0..5 {
+        dist.step(&mut p1, &grads, 0.01);
+        muon_ref.step(&mut p2, &grads, 0.01);
+    }
+    let (tp_bp, _) = dist.comm_stats();
+    let (tp_muon, _) = muon_ref.comm_stats();
+    let b_bp = tp_bp.bytes(CollectiveKind::Gather)
+        + tp_bp.bytes(CollectiveKind::Scatter);
+    let b_muon = tp_muon.bytes(CollectiveKind::Gather)
+        + tp_muon.bytes(CollectiveKind::Scatter);
+    println!(
+        "\nmeasured optimizer bytes over 5 steps (bench config, TP=4):\n  Muon {:>12} B   MuonBP(P=5) {:>12} B   ratio {:.2} (expect ~5)",
+        b_muon,
+        b_bp,
+        b_muon as f64 / b_bp.max(1) as f64
+    );
+}

@@ -1,0 +1,92 @@
+//! Statistical bench harness (criterion is unavailable offline): warmup +
+//! N timed samples, mean/p50/p95 reporting, and shared result-dir helpers
+//! used by every `rust/benches/*.rs` (all `harness = false`).
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use crate::utils::stats::Stats;
+
+/// Result of one timed benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub samples: usize,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<40} mean {:>10.6}s  p50 {:>10.6}s  p95 {:>10.6}s  (n={})",
+            self.name, self.mean_s, self.p50_s, self.p95_s, self.samples
+        )
+    }
+}
+
+/// Time `f` with `warmup` untimed and `iters` timed runs.
+pub fn time_it<F: FnMut()>(
+    name: &str,
+    warmup: usize,
+    iters: usize,
+    mut f: F,
+) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut stats = Stats::new();
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        f();
+        stats.push(t0.elapsed().as_secs_f64());
+    }
+    let r = BenchResult {
+        name: name.to_string(),
+        mean_s: stats.mean(),
+        p50_s: stats.percentile(50.0),
+        p95_s: stats.percentile(95.0),
+        samples: stats.len(),
+    };
+    println!("{}", r.report());
+    r
+}
+
+/// Directory where benches drop CSV/JSON artifacts.
+pub fn results_dir() -> PathBuf {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("results");
+    let _ = std::fs::create_dir_all(&dir);
+    dir
+}
+
+/// Banner helper so bench output maps 1:1 to the paper artifact.
+pub fn banner(what: &str) {
+    println!("\n================================================================");
+    println!("  {what}");
+    println!("================================================================");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_is_positive_and_counted() {
+        let r = time_it("spin", 1, 5, || {
+            let mut x = 0u64;
+            for i in 0..1000 {
+                x = x.wrapping_add(i);
+            }
+            std::hint::black_box(x);
+        });
+        assert_eq!(r.samples, 5);
+        assert!(r.mean_s >= 0.0);
+        assert!(r.p95_s >= r.p50_s);
+    }
+
+    #[test]
+    fn results_dir_exists() {
+        assert!(results_dir().is_dir());
+    }
+}

@@ -1,0 +1,453 @@
+//! Simulated collectives over a thread-per-rank logical cluster.
+//!
+//! The paper's contribution is a *communication schedule* (block steps move
+//! no optimizer bytes; every P-th step gathers/scatters shards), so the
+//! substrate must give (a) real rendezvous semantics — every rank blocks
+//! until the group participates, exactly like NCCL — and (b) exact byte
+//! accounting per collective, fed into the α–β network model for simulated
+//! wall-clock. Numerics are bit-identical to a real cluster because the
+//! exchanged payloads are the actual tensors.
+//!
+//! `Communicator::exchange` is the single rendezvous primitive (an
+//! all-gather of arbitrary payloads); every collective is built on it and
+//! charged with the ring-algorithm volume a real implementation would move.
+
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::costmodel::netmodel::NetModel;
+use crate::tensor::Tensor;
+
+pub mod stats;
+
+pub use stats::{CollectiveKind, CommStats};
+
+/// Rendezvous state machine: Fill (deposit) -> Drain (read) -> Fill ...
+struct State<T> {
+    filling: bool,
+    arrived: usize,
+    readers_left: usize,
+    slots: Vec<Option<T>>,
+    published: Arc<Vec<T>>,
+}
+
+struct Inner<T> {
+    state: Mutex<State<T>>,
+    cond: Condvar,
+}
+
+/// A communicator over `n` ranks. Clone one handle per rank thread.
+pub struct Communicator {
+    n: usize,
+    tensors: Arc<Inner<Tensor>>,
+    stats: Arc<Mutex<CommStats>>,
+    net: NetModel,
+}
+
+impl Clone for Communicator {
+    fn clone(&self) -> Self {
+        Communicator {
+            n: self.n,
+            tensors: Arc::clone(&self.tensors),
+            stats: Arc::clone(&self.stats),
+            net: self.net,
+        }
+    }
+}
+
+impl Communicator {
+    pub fn new(n: usize, net: NetModel) -> Communicator {
+        assert!(n >= 1);
+        Communicator {
+            n,
+            tensors: Arc::new(Inner {
+                state: Mutex::new(State {
+                    filling: true,
+                    arrived: 0,
+                    readers_left: 0,
+                    slots: (0..n).map(|_| None).collect(),
+                    published: Arc::new(Vec::new()),
+                }),
+                cond: Condvar::new(),
+            }),
+            stats: Arc::new(Mutex::new(CommStats::default())),
+            net,
+        }
+    }
+
+    pub fn world(&self) -> usize {
+        self.n
+    }
+
+    pub fn stats(&self) -> CommStats {
+        self.stats.lock().unwrap().clone()
+    }
+
+    pub fn reset_stats(&self) {
+        *self.stats.lock().unwrap() = CommStats::default();
+    }
+
+    /// The rendezvous primitive: every rank deposits `value`; all ranks
+    /// block until the group is complete and receive the full slot vector.
+    fn exchange(&self, rank: usize, value: Tensor) -> Arc<Vec<Tensor>> {
+        assert!(rank < self.n);
+        let inner = &self.tensors;
+        let mut st = inner.state.lock().unwrap();
+        // Wait for the previous round's drain to finish.
+        while !st.filling {
+            st = inner.cond.wait(st).unwrap();
+        }
+        assert!(st.slots[rank].is_none(), "rank {rank} double deposit");
+        st.slots[rank] = Some(value);
+        st.arrived += 1;
+        if st.arrived == self.n {
+            let gathered: Vec<Tensor> =
+                st.slots.iter_mut().map(|s| s.take().unwrap()).collect();
+            st.published = Arc::new(gathered);
+            st.filling = false;
+            st.readers_left = self.n;
+            inner.cond.notify_all();
+        } else {
+            while st.filling {
+                st = inner.cond.wait(st).unwrap();
+            }
+        }
+        let out = Arc::clone(&st.published);
+        st.readers_left -= 1;
+        if st.readers_left == 0 {
+            st.filling = true;
+            st.arrived = 0;
+            inner.cond.notify_all();
+        }
+        out
+    }
+
+    fn charge(&self, rank: usize, kind: CollectiveKind, payload_bytes: usize) {
+        // Account once per collective (rank 0 reports for the group).
+        if rank == 0 {
+            let time = self.net.collective_time(kind, payload_bytes, self.n);
+            self.stats.lock().unwrap().record(kind, payload_bytes, time);
+        }
+    }
+
+    // -- collectives ---------------------------------------------------------
+
+    /// Synchronization only; moves no payload (charged α only).
+    pub fn barrier(&self, rank: usize) {
+        self.exchange(rank, Tensor::scalar(0.0));
+        self.charge(rank, CollectiveKind::Barrier, 0);
+    }
+
+    /// Every rank contributes a tensor; all receive the full list, ordered
+    /// by rank. Payload = full gathered size.
+    pub fn all_gather(&self, rank: usize, t: Tensor) -> Vec<Tensor> {
+        let bytes: usize = t.numel() * 4 * self.n;
+        let out = self.exchange(rank, t);
+        self.charge(rank, CollectiveKind::AllGather, bytes);
+        out.as_ref().clone()
+    }
+
+    /// Element-wise mean across ranks (the DP gradient sync).
+    pub fn all_reduce_mean(&self, rank: usize, t: Tensor) -> Tensor {
+        let bytes = t.numel() * 4;
+        let shape = t.shape().to_vec();
+        let parts = self.exchange(rank, t);
+        self.charge(rank, CollectiveKind::AllReduce, bytes);
+        let mut acc = Tensor::zeros(&shape);
+        for p in parts.iter() {
+            acc.axpy(1.0, p);
+        }
+        acc.scale(1.0 / self.n as f32);
+        acc
+    }
+
+    /// Element-wise sum across ranks.
+    pub fn all_reduce_sum(&self, rank: usize, t: Tensor) -> Tensor {
+        let mut out = self.all_reduce_mean(rank, t);
+        out.scale(self.n as f32);
+        out
+    }
+
+    /// Root receives all tensors (rank order); others get None. Charged
+    /// with the exact logical payload (sum of all shards); the ring
+    /// discount lives in `NetModel`.
+    pub fn gather_to(
+        &self,
+        rank: usize,
+        root: usize,
+        t: Tensor,
+    ) -> Option<Vec<Tensor>> {
+        let out = self.exchange(rank, t);
+        let bytes: usize = out.iter().map(|t| t.numel() * 4).sum();
+        self.charge(rank, CollectiveKind::Gather, bytes);
+        if rank == root {
+            Some(out.as_ref().clone())
+        } else {
+            None
+        }
+    }
+
+    /// Root distributes one tensor per rank; each rank receives its own.
+    /// Non-root ranks pass a placeholder (their payload is dropped).
+    pub fn scatter_from(
+        &self,
+        rank: usize,
+        root: usize,
+        parts: Option<Vec<Tensor>>,
+    ) -> Tensor {
+        // Rendezvous in two phases: root broadcasts the whole list (payload
+        // accounting below reflects a true scatter, not the broadcast).
+        let payload = match parts {
+            Some(v) => {
+                assert_eq!(v.len(), self.n, "scatter arity");
+                pack(&v)
+            }
+            None => Tensor::scalar(0.0),
+        };
+        let all = self.exchange(rank, payload);
+        let unpacked = unpack(&all[root]);
+        let bytes: usize =
+            unpacked.iter().map(|t| t.numel() * 4).sum::<usize>();
+        self.charge(rank, CollectiveKind::Scatter, bytes);
+        unpacked[rank].clone()
+    }
+
+    /// Broadcast `t` from root to every rank.
+    pub fn broadcast(
+        &self,
+        rank: usize,
+        root: usize,
+        t: Option<Tensor>,
+    ) -> Tensor {
+        let payload = t.unwrap_or_else(|| Tensor::scalar(0.0));
+        let all = self.exchange(rank, payload);
+        let out = all[root].clone();
+        self.charge(rank, CollectiveKind::Broadcast, out.numel() * 4);
+        out
+    }
+
+    /// Reduce-scatter: sum across ranks, each rank keeps its `rank`-th even
+    /// row-chunk. Semantics built on exchange; charged ring RS volume.
+    pub fn reduce_scatter_rows(&self, rank: usize, t: Tensor) -> Tensor {
+        let bytes = t.numel() * 4;
+        let m = t.m();
+        let n = t.n();
+        let parts = self.exchange(rank, t);
+        self.charge(rank, CollectiveKind::ReduceScatter, bytes);
+        let mut acc = Tensor::zeros(&[m, n]);
+        for p in parts.iter() {
+            acc.axpy(1.0, p);
+        }
+        let (r0, r1) = crate::shard::shard_range(m, self.n, rank);
+        acc.block(r0, r1, 0, n)
+    }
+
+    /// All-to-all: rank i sends parts[j] to rank j; receives one from each.
+    pub fn all_to_all(&self, rank: usize, parts: Vec<Tensor>) -> Vec<Tensor> {
+        assert_eq!(parts.len(), self.n, "all_to_all arity");
+        let bytes: usize = parts.iter().map(|t| t.numel() * 4).sum();
+        let all = self.exchange(rank, pack(&parts));
+        self.charge(rank, CollectiveKind::AllToAll, bytes * self.n);
+        all.iter().map(|packed| unpack(packed)[rank].clone()).collect()
+    }
+}
+
+/// Pack a list of tensors into one payload tensor (length-prefixed floats).
+fn pack(parts: &[Tensor]) -> Tensor {
+    let mut data = Vec::new();
+    data.push(parts.len() as f32);
+    for t in parts {
+        data.push(t.rank() as f32);
+        for &d in t.shape() {
+            data.push(d as f32);
+        }
+        data.extend_from_slice(t.data());
+    }
+    let len = data.len();
+    Tensor::from_vec(&[len], data).unwrap()
+}
+
+fn unpack(t: &Tensor) -> Vec<Tensor> {
+    let d = t.data();
+    let count = d[0] as usize;
+    let mut pos = 1;
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        let rank = d[pos] as usize;
+        pos += 1;
+        let shape: Vec<usize> =
+            d[pos..pos + rank].iter().map(|&x| x as usize).collect();
+        pos += rank;
+        let numel: usize = shape.iter().product();
+        out.push(
+            Tensor::from_vec(&shape, d[pos..pos + numel].to_vec()).unwrap(),
+        );
+        pos += numel;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::costmodel::netmodel::NetModel;
+    use crossbeam_utils::thread;
+
+    fn run_ranks<F>(n: usize, f: F) -> Vec<Tensor>
+    where
+        F: Fn(usize, Communicator) -> Tensor + Sync,
+    {
+        let comm = Communicator::new(n, NetModel::a100_nvlink());
+        thread::scope(|s| {
+            let handles: Vec<_> = (0..n)
+                .map(|r| {
+                    let c = comm.clone();
+                    let f = &f;
+                    s.spawn(move |_| f(r, c))
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn all_gather_orders_by_rank() {
+        let outs = run_ranks(4, |rank, c| {
+            let t = Tensor::scalar(rank as f32);
+            let all = c.all_gather(rank, t);
+            Tensor::from_vec(
+                &[4],
+                all.iter().map(|t| t.data()[0]).collect(),
+            )
+            .unwrap()
+        });
+        for o in outs {
+            assert_eq!(o.data(), &[0.0, 1.0, 2.0, 3.0]);
+        }
+    }
+
+    #[test]
+    fn all_reduce_mean_is_mean() {
+        let outs = run_ranks(3, |rank, c| {
+            let t = Tensor::from_vec(&[2], vec![rank as f32, 1.0]).unwrap();
+            c.all_reduce_mean(rank, t)
+        });
+        for o in outs {
+            assert_eq!(o.data(), &[1.0, 1.0]);
+        }
+    }
+
+    #[test]
+    fn repeated_collectives_reuse_state() {
+        // Exercise the Fill/Drain cycle many times to catch rendezvous bugs.
+        let outs = run_ranks(4, |rank, c| {
+            let mut acc = 0.0;
+            for round in 0..50 {
+                let t = Tensor::scalar((rank * round) as f32);
+                let m = c.all_reduce_mean(rank, t);
+                acc += m.data()[0];
+            }
+            Tensor::scalar(acc)
+        });
+        let want: f32 = (0..50).map(|r| (0 + 1 + 2 + 3) as f32 * r as f32 / 4.0).sum();
+        for o in outs {
+            assert_eq!(o.data()[0], want);
+        }
+    }
+
+    #[test]
+    fn gather_scatter_roundtrip() {
+        let outs = run_ranks(4, |rank, c| {
+            let t = Tensor::scalar(rank as f32 + 10.0);
+            let gathered = c.gather_to(rank, 0, t);
+            // Root doubles every piece, scatters back.
+            let parts = gathered.map(|v| {
+                v.into_iter()
+                    .map(|mut t| {
+                        t.scale(2.0);
+                        t
+                    })
+                    .collect::<Vec<_>>()
+            });
+            c.scatter_from(rank, 0, parts)
+        });
+        for (rank, o) in outs.iter().enumerate() {
+            assert_eq!(o.data()[0], (rank as f32 + 10.0) * 2.0);
+        }
+    }
+
+    #[test]
+    fn broadcast_from_nonzero_root() {
+        let outs = run_ranks(3, |rank, c| {
+            let payload =
+                if rank == 2 { Some(Tensor::scalar(7.5)) } else { None };
+            c.broadcast(rank, 2, payload)
+        });
+        for o in outs {
+            assert_eq!(o.data()[0], 7.5);
+        }
+    }
+
+    #[test]
+    fn reduce_scatter_rows_sums_and_slices() {
+        let outs = run_ranks(2, |rank, c| {
+            let t = Tensor::from_vec(
+                &[4, 2],
+                (0..8).map(|x| (x as f32) * (rank as f32 + 1.0)).collect(),
+            )
+            .unwrap();
+            c.reduce_scatter_rows(rank, t)
+        });
+        // Sum over ranks = x * 3; rank 0 gets rows 0..2, rank 1 rows 2..4.
+        assert_eq!(outs[0].data(), &[0.0, 3.0, 6.0, 9.0]);
+        assert_eq!(outs[1].data(), &[12.0, 15.0, 18.0, 21.0]);
+    }
+
+    #[test]
+    fn all_to_all_transposes() {
+        let outs = run_ranks(3, |rank, c| {
+            let parts: Vec<Tensor> = (0..3)
+                .map(|j| Tensor::scalar((rank * 10 + j) as f32))
+                .collect();
+            let recv = c.all_to_all(rank, parts);
+            Tensor::from_vec(&[3], recv.iter().map(|t| t.data()[0]).collect())
+                .unwrap()
+        });
+        // rank r receives {sender*10 + r}
+        assert_eq!(outs[0].data(), &[0.0, 10.0, 20.0]);
+        assert_eq!(outs[1].data(), &[1.0, 11.0, 21.0]);
+        assert_eq!(outs[2].data(), &[2.0, 12.0, 22.0]);
+    }
+
+    #[test]
+    fn stats_accumulate() {
+        let comm = Communicator::new(2, NetModel::a100_nvlink());
+        thread::scope(|s| {
+            for r in 0..2 {
+                let c = comm.clone();
+                s.spawn(move |_| {
+                    let t = Tensor::zeros(&[8, 8]);
+                    c.all_reduce_mean(r, t.clone());
+                    c.all_gather(r, t);
+                });
+            }
+        })
+        .unwrap();
+        let stats = comm.stats();
+        assert_eq!(stats.calls(CollectiveKind::AllReduce), 1);
+        assert_eq!(stats.bytes(CollectiveKind::AllReduce), 8 * 8 * 4);
+        assert_eq!(stats.calls(CollectiveKind::AllGather), 1);
+        assert_eq!(stats.bytes(CollectiveKind::AllGather), 8 * 8 * 4 * 2);
+        assert!(stats.total_sim_time() > 0.0);
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let a = Tensor::from_vec(&[2, 2], vec![1., 2., 3., 4.]).unwrap();
+        let b = Tensor::from_vec(&[3], vec![5., 6., 7.]).unwrap();
+        let packed = pack(&[a.clone(), b.clone()]);
+        let out = unpack(&packed);
+        assert_eq!(out[0], a);
+        assert_eq!(out[1], b);
+    }
+}

@@ -1,0 +1,158 @@
+//! Per-collective accounting: calls, payload bytes, simulated α–β time.
+//!
+//! These counters are the measured side of the paper's communication-volume
+//! claims: MuonBP's optimizer traffic is `O(mn/P)` per step vs Muon's
+//! `O(mn)` (Appendix C), and Table 4's throughput deltas derive from them.
+
+/// Collective operation kinds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CollectiveKind {
+    Barrier,
+    AllReduce,
+    AllGather,
+    ReduceScatter,
+    Gather,
+    Scatter,
+    Broadcast,
+    AllToAll,
+}
+
+pub const ALL_KINDS: [CollectiveKind; 8] = [
+    CollectiveKind::Barrier,
+    CollectiveKind::AllReduce,
+    CollectiveKind::AllGather,
+    CollectiveKind::ReduceScatter,
+    CollectiveKind::Gather,
+    CollectiveKind::Scatter,
+    CollectiveKind::Broadcast,
+    CollectiveKind::AllToAll,
+];
+
+impl CollectiveKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            CollectiveKind::Barrier => "barrier",
+            CollectiveKind::AllReduce => "all_reduce",
+            CollectiveKind::AllGather => "all_gather",
+            CollectiveKind::ReduceScatter => "reduce_scatter",
+            CollectiveKind::Gather => "gather",
+            CollectiveKind::Scatter => "scatter",
+            CollectiveKind::Broadcast => "broadcast",
+            CollectiveKind::AllToAll => "all_to_all",
+        }
+    }
+
+    fn index(&self) -> usize {
+        ALL_KINDS.iter().position(|k| k == self).unwrap()
+    }
+}
+
+#[derive(Debug, Clone, Copy, Default)]
+struct Entry {
+    calls: u64,
+    bytes: u64,
+    sim_time: f64,
+}
+
+/// Accumulated communication statistics for one communicator.
+#[derive(Debug, Clone, Default)]
+pub struct CommStats {
+    entries: [Entry; 8],
+}
+
+impl CommStats {
+    pub fn record(&mut self, kind: CollectiveKind, bytes: usize, time: f64) {
+        let e = &mut self.entries[kind.index()];
+        e.calls += 1;
+        e.bytes += bytes as u64;
+        e.sim_time += time;
+    }
+
+    pub fn calls(&self, kind: CollectiveKind) -> u64 {
+        self.entries[kind.index()].calls
+    }
+
+    pub fn bytes(&self, kind: CollectiveKind) -> u64 {
+        self.entries[kind.index()].bytes
+    }
+
+    pub fn sim_time(&self, kind: CollectiveKind) -> f64 {
+        self.entries[kind.index()].sim_time
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.entries.iter().map(|e| e.bytes).sum()
+    }
+
+    pub fn total_sim_time(&self) -> f64 {
+        self.entries.iter().map(|e| e.sim_time).sum()
+    }
+
+    /// Merge another stats block into this one.
+    pub fn merge(&mut self, other: &CommStats) {
+        for (a, b) in self.entries.iter_mut().zip(&other.entries) {
+            a.calls += b.calls;
+            a.bytes += b.bytes;
+            a.sim_time += b.sim_time;
+        }
+    }
+
+    /// Human-readable summary table.
+    pub fn summary(&self) -> String {
+        let mut out = String::from(
+            "collective        calls        bytes     sim_time_s\n",
+        );
+        for kind in ALL_KINDS {
+            let e = self.entries[kind.index()];
+            if e.calls == 0 {
+                continue;
+            }
+            out.push_str(&format!(
+                "{:<16} {:>6} {:>12} {:>14.6}\n",
+                kind.name(),
+                e.calls,
+                e.bytes,
+                e.sim_time
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_and_query() {
+        let mut s = CommStats::default();
+        s.record(CollectiveKind::AllReduce, 1000, 0.5);
+        s.record(CollectiveKind::AllReduce, 500, 0.25);
+        s.record(CollectiveKind::AllGather, 200, 0.1);
+        assert_eq!(s.calls(CollectiveKind::AllReduce), 2);
+        assert_eq!(s.bytes(CollectiveKind::AllReduce), 1500);
+        assert_eq!(s.total_bytes(), 1700);
+        assert!((s.total_sim_time() - 0.85).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge() {
+        let mut a = CommStats::default();
+        a.record(CollectiveKind::Gather, 10, 0.1);
+        let mut b = CommStats::default();
+        b.record(CollectiveKind::Gather, 20, 0.2);
+        b.record(CollectiveKind::Scatter, 5, 0.05);
+        a.merge(&b);
+        assert_eq!(a.bytes(CollectiveKind::Gather), 30);
+        assert_eq!(a.calls(CollectiveKind::Scatter), 1);
+    }
+
+    #[test]
+    fn summary_contains_used_kinds() {
+        let mut s = CommStats::default();
+        s.record(CollectiveKind::AllToAll, 64, 0.0);
+        let txt = s.summary();
+        assert!(txt.contains("all_to_all"));
+        assert!(!txt.contains("broadcast"));
+    }
+}

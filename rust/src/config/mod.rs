@@ -1,0 +1,181 @@
+//! Run configuration: JSON files + CLI overrides -> one `RunConfig` that
+//! the launcher (`main.rs`) and examples share.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::mesh::Layout;
+use crate::optim::Schedule;
+use crate::utils::cli::Args;
+use crate::utils::json::Json;
+
+/// Everything needed to launch one training run.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    /// Model config name from the artifact manifest (tiny | bench | e2e).
+    pub model: String,
+    /// Optimizer: adamw | lion | sgdm | muon | blockmuon | muonbp | dion.
+    pub optimizer: String,
+    pub steps: usize,
+    pub lr: f64,
+    pub schedule: Schedule,
+    /// Orthogonalization period P (muonbp only).
+    pub period: usize,
+    /// η_block / η_full ratio.
+    pub eta_block_ratio: f64,
+    pub dp: usize,
+    pub tp: usize,
+    pub layout: Layout,
+    /// Run the real thread-per-rank cluster instead of the single-process
+    /// reference optimizer.
+    pub distributed: bool,
+    pub seed: u64,
+    pub eval_every: usize,
+    /// Output CSV path ("" = don't write).
+    pub out: String,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            model: "bench".into(),
+            optimizer: "muonbp".into(),
+            steps: 100,
+            lr: 0.02,
+            schedule: Schedule::paper_wsd(),
+            period: 5,
+            eta_block_ratio: 1.0,
+            dp: 2,
+            tp: 4,
+            layout: Layout::TpColumn,
+            distributed: false,
+            seed: 0,
+            eval_every: 20,
+            out: String::new(),
+        }
+    }
+}
+
+impl RunConfig {
+    /// Load from a JSON file (all fields optional, defaults above).
+    pub fn from_json_file(path: impl AsRef<Path>) -> Result<RunConfig> {
+        let text = std::fs::read_to_string(path)?;
+        RunConfig::from_json(&Json::parse(&text)?)
+    }
+
+    pub fn from_json(j: &Json) -> Result<RunConfig> {
+        let mut c = RunConfig::default();
+        if let Some(v) = j.get("model") {
+            c.model = v.as_str()?.to_string();
+        }
+        if let Some(v) = j.get("optimizer") {
+            c.optimizer = v.as_str()?.to_string();
+        }
+        if let Some(v) = j.get("steps") {
+            c.steps = v.as_usize()?;
+        }
+        if let Some(v) = j.get("lr") {
+            c.lr = v.as_f64()?;
+        }
+        if let Some(v) = j.get("schedule") {
+            c.schedule = Schedule::parse(v.as_str()?)?;
+        }
+        if let Some(v) = j.get("period") {
+            c.period = v.as_usize()?;
+        }
+        if let Some(v) = j.get("eta_block_ratio") {
+            c.eta_block_ratio = v.as_f64()?;
+        }
+        if let Some(v) = j.get("dp") {
+            c.dp = v.as_usize()?;
+        }
+        if let Some(v) = j.get("tp") {
+            c.tp = v.as_usize()?;
+        }
+        if let Some(v) = j.get("layout") {
+            c.layout = Layout::parse(v.as_str()?)?;
+        }
+        if let Some(v) = j.get("distributed") {
+            c.distributed = v.as_bool()?;
+        }
+        if let Some(v) = j.get("seed") {
+            c.seed = v.as_f64()? as u64;
+        }
+        if let Some(v) = j.get("eval_every") {
+            c.eval_every = v.as_usize()?;
+        }
+        if let Some(v) = j.get("out") {
+            c.out = v.as_str()?.to_string();
+        }
+        Ok(c)
+    }
+
+    /// Apply `--key value` CLI overrides on top.
+    pub fn apply_args(&mut self, args: &Args) -> Result<()> {
+        if let Some(v) = args.get("model") {
+            self.model = v.to_string();
+        }
+        if let Some(v) = args.get("optimizer") {
+            self.optimizer = v.to_string();
+        }
+        self.steps = args.get_usize("steps", self.steps)?;
+        self.lr = args.get_f64("lr", self.lr)?;
+        if let Some(v) = args.get("schedule") {
+            self.schedule = Schedule::parse(v)?;
+        }
+        self.period = args.get_usize("period", self.period)?;
+        self.eta_block_ratio =
+            args.get_f64("eta-block-ratio", self.eta_block_ratio)?;
+        self.dp = args.get_usize("dp", self.dp)?;
+        self.tp = args.get_usize("tp", self.tp)?;
+        if let Some(v) = args.get("layout") {
+            self.layout = Layout::parse(v)?;
+        }
+        if args.flag("distributed") {
+            self.distributed = true;
+        }
+        self.seed = args.get_usize("seed", self.seed as usize)? as u64;
+        self.eval_every = args.get_usize("eval-every", self.eval_every)?;
+        if let Some(v) = args.get("out") {
+            self.out = v.to_string();
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_then_json_then_cli() {
+        let j = Json::parse(
+            r#"{"model":"tiny","steps":50,"lr":0.01,"tp":8,"layout":"tp-row"}"#,
+        )
+        .unwrap();
+        let mut c = RunConfig::from_json(&j).unwrap();
+        assert_eq!(c.model, "tiny");
+        assert_eq!(c.steps, 50);
+        assert_eq!(c.tp, 8);
+        assert_eq!(c.layout, Layout::TpRow);
+        // CLI overrides win.
+        let args = Args::parse(
+            ["--steps", "7", "--distributed", "--optimizer", "muon"]
+                .iter()
+                .map(|s| s.to_string()),
+        )
+        .unwrap();
+        c.apply_args(&args).unwrap();
+        assert_eq!(c.steps, 7);
+        assert!(c.distributed);
+        assert_eq!(c.optimizer, "muon");
+        assert_eq!(c.lr, 0.01); // untouched
+    }
+
+    #[test]
+    fn bad_values_rejected() {
+        let j = Json::parse(r#"{"layout":"bogus"}"#).unwrap();
+        assert!(RunConfig::from_json(&j).is_err());
+    }
+}

@@ -1,0 +1,462 @@
+//! DistMuon: the distributed MuonBP coordinator (see module docs in mod.rs).
+
+use std::sync::Arc;
+
+use crossbeam_utils::thread;
+
+use crate::comm::{CommStats, Communicator};
+use crate::costmodel::netmodel::NetModel;
+use crate::mesh::{Layout, Mesh};
+use crate::optim::adamw::AdamW;
+use crate::optim::muon::{MuonCfg, OrthFn, Period};
+use crate::optim::scaling::rms_match_scale;
+use crate::optim::{Optimizer, ParamKind, ParamMeta};
+use crate::runtime::NsEngine;
+use crate::shard::{shard, unshard, ShardSpec};
+use crate::tensor::Tensor;
+
+/// Builder for the distributed coordinator.
+pub struct DistMuonBuilder {
+    pub mesh: Mesh,
+    pub cfg: MuonCfg,
+    pub tp_net: NetModel,
+    pub dp_net: NetModel,
+    pub ns: Option<Arc<NsEngine>>,
+}
+
+impl DistMuonBuilder {
+    pub fn new(mesh: Mesh, period: Period) -> DistMuonBuilder {
+        let mut cfg = MuonCfg::default_with(period, mesh.tp);
+        cfg.layout = Layout::TpColumn;
+        DistMuonBuilder {
+            mesh,
+            cfg,
+            tp_net: NetModel::a100_nvlink(),
+            dp_net: NetModel::ib_hdr(),
+            ns: None,
+        }
+    }
+
+    pub fn layout(mut self, layout: Layout) -> Self {
+        self.cfg.layout = layout;
+        self
+    }
+
+    pub fn ns_engine(mut self, ns: Arc<NsEngine>) -> Self {
+        self.ns = Some(ns);
+        self
+    }
+
+    pub fn cfg(mut self, f: impl FnOnce(&mut MuonCfg)) -> Self {
+        f(&mut self.cfg);
+        self
+    }
+
+    pub fn build(self, metas: &[ParamMeta]) -> DistMuon {
+        let specs: Vec<Option<ShardSpec>> = metas
+            .iter()
+            .map(|p| {
+                (p.kind == ParamKind::Matrix).then(|| {
+                    ShardSpec::new(
+                        self.cfg.layout,
+                        self.mesh.tp,
+                        p.shape[0],
+                        p.shape[1],
+                    )
+                })
+            })
+            .collect();
+        // Momentum shards per TP rank, aligned with the matrix params.
+        // With TpColumn/TpRow layouts the block grid is 1 x tp (or tp x 1),
+        // so block id == tp rank. For grids, rank j owns block j.
+        let rank_momenta: Vec<Vec<Tensor>> = (0..self.mesh.tp)
+            .map(|j| {
+                specs
+                    .iter()
+                    .filter_map(|s| s.as_ref())
+                    .map(|spec| {
+                        let (bm, bn) =
+                            spec.block_shape(j.min(spec.num_blocks() - 1));
+                        Tensor::zeros(&[bm, bn])
+                    })
+                    .collect()
+            })
+            .collect();
+        let orth: OrthFn = match &self.ns {
+            Some(ns) => ns.as_orth_fn(),
+            None => {
+                let steps = self.cfg.ns_steps;
+                let coeffs = self.cfg.coeffs;
+                Arc::new(move |g: &Tensor| {
+                    crate::linalg::newton_schulz(g, steps, coeffs)
+                })
+            }
+        };
+        DistMuon {
+            mesh: self.mesh,
+            tp_comm: Communicator::new(self.mesh.tp, self.tp_net),
+            dp_comm: Communicator::new(self.mesh.dp, self.dp_net),
+            cfg: self.cfg,
+            metas: metas.to_vec(),
+            specs,
+            rank_momenta,
+            adam: AdamW::new(metas),
+            orth,
+            t: 0,
+            last_opt_bytes: 0,
+        }
+    }
+}
+
+/// Distributed MuonBP over a simulated DP x TP cluster.
+pub struct DistMuon {
+    mesh: Mesh,
+    tp_comm: Communicator,
+    dp_comm: Communicator,
+    cfg: MuonCfg,
+    metas: Vec<ParamMeta>,
+    specs: Vec<Option<ShardSpec>>,
+    /// [tp_rank][matrix_ordinal] momentum shard.
+    rank_momenta: Vec<Vec<Tensor>>,
+    adam: AdamW,
+    orth: OrthFn,
+    t: u64,
+    last_opt_bytes: u64,
+}
+
+impl DistMuon {
+    pub fn mesh(&self) -> Mesh {
+        self.mesh
+    }
+
+    pub fn cfg(&self) -> &MuonCfg {
+        &self.cfg
+    }
+
+    pub fn cfg_mut(&mut self) -> &mut MuonCfg {
+        &mut self.cfg
+    }
+
+    /// Accumulated communication stats (TP = optimizer traffic, DP = grad
+    /// sync that any optimizer pays).
+    pub fn comm_stats(&self) -> (CommStats, CommStats) {
+        (self.tp_comm.stats(), self.dp_comm.stats())
+    }
+
+    /// Gradient all-reduce across the DP group (phase 1). Every DP rank
+    /// holds the same replica here (batch-split grads average to exactly
+    /// the full-batch grad — see DESIGN.md §1), so payloads are real and
+    /// results bit-identical.
+    fn dp_allreduce(&self, grads: &[Tensor]) -> Vec<Tensor> {
+        if self.mesh.dp <= 1 {
+            return grads.to_vec();
+        }
+        let comm = &self.dp_comm;
+        let dp = self.mesh.dp;
+        let mut out: Vec<Option<Vec<Tensor>>> = (0..dp).map(|_| None).collect();
+        thread::scope(|s| {
+            let handles: Vec<_> = (0..dp)
+                .map(|r| {
+                    let comm = comm.clone();
+                    let grads = &grads;
+                    s.spawn(move |_| {
+                        grads
+                            .iter()
+                            .map(|g| comm.all_reduce_mean(r, g.clone()))
+                            .collect::<Vec<_>>()
+                    })
+                })
+                .collect();
+            for (r, h) in handles.into_iter().enumerate() {
+                out[r] = Some(h.join().unwrap());
+            }
+        })
+        .unwrap();
+        out[0].take().unwrap()
+    }
+
+    /// TP optimizer phase (phase 2): returns the per-matrix update deltas
+    /// (already RMS-matched and ready for `param -= eta * delta`).
+    fn tp_phase(
+        &mut self,
+        grads: &[Tensor],
+        full: bool,
+    ) -> Vec<Option<Tensor>> {
+        let tp = self.mesh.tp;
+        let comm = &self.tp_comm;
+        let specs = &self.specs;
+        let metas = &self.metas;
+        let orth = &self.orth;
+        let mu = self.cfg.momentum as f32;
+        let rms_beta = self.cfg.rms_beta;
+        // Matrix ordinal -> param index map.
+        let matrix_idx: Vec<usize> = metas
+            .iter()
+            .enumerate()
+            .filter(|(_, m)| m.kind == ParamKind::Matrix)
+            .map(|(i, _)| i)
+            .collect();
+
+        let rank_updates: Vec<Vec<Tensor>> = thread::scope(|s| {
+            let handles: Vec<_> = self
+                .rank_momenta
+                .iter_mut()
+                .enumerate()
+                .map(|(rank, momenta)| {
+                    let comm = comm.clone();
+                    let matrix_idx = &matrix_idx;
+                    let orth = Arc::clone(orth);
+                    let grads = &grads;
+                    let specs = &specs;
+                    s.spawn(move |_| {
+                        let mut updates = Vec::with_capacity(momenta.len());
+                        for (ord, &pidx) in matrix_idx.iter().enumerate() {
+                            let spec = specs[pidx].as_ref().unwrap();
+                            let block_id = rank.min(spec.num_blocks() - 1);
+                            // M_t^(m) = μ M_{t-1}^(m) + G_t^(m)
+                            let g_shard = shard(&grads[pidx], spec, block_id);
+                            momenta[ord].scale_add(mu, 1.0, &g_shard);
+                            let upd = if full && spec.num_blocks() > 1 {
+                                // Gather momentum shards -> leader orth ->
+                                // scatter update shards (Alg. 1 lines 6-9).
+                                let gathered = comm.gather_to(
+                                    rank,
+                                    0,
+                                    momenta[ord].clone(),
+                                );
+                                let parts = gathered.map(|mut shards| {
+                                    // Ranks beyond the block count hold
+                                    // replicas (dim < tp clamp); drop them.
+                                    shards.truncate(spec.num_blocks());
+                                    let m_full = unshard(&shards, spec);
+                                    let mut u = orth(&m_full);
+                                    u.scale(rms_match_scale(
+                                        m_full.m(),
+                                        m_full.n(),
+                                        rms_beta,
+                                    )
+                                        as f32);
+                                    let mut parts =
+                                        crate::shard::shard_all(&u, spec);
+                                    while parts.len() < comm.world() {
+                                        parts.push(
+                                            parts.last().unwrap().clone(),
+                                        );
+                                    }
+                                    parts
+                                });
+                                comm.scatter_from(rank, 0, parts)
+                            } else {
+                                // Local block orthogonalization (lines 11-13).
+                                let mut u = orth(&momenta[ord]);
+                                u.scale(rms_match_scale(
+                                    momenta[ord].m(),
+                                    momenta[ord].n(),
+                                    rms_beta,
+                                ) as f32);
+                                u
+                            };
+                            updates.push(upd);
+                        }
+                        updates
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        })
+        .unwrap();
+
+        // Reassemble per-param full update deltas from rank shards.
+        let mut out: Vec<Option<Tensor>> = vec![None; metas.len()];
+        for (ord, &pidx) in matrix_idx.iter().enumerate() {
+            let spec = self.specs[pidx].as_ref().unwrap();
+            let blocks: Vec<Tensor> = (0..spec.num_blocks())
+                .map(|b| rank_updates[b.min(tp - 1)][ord].clone())
+                .collect();
+            out[pidx] = Some(unshard(&blocks, spec));
+        }
+        out
+    }
+}
+
+impl Optimizer for DistMuon {
+    fn step(&mut self, params: &mut [Tensor], grads: &[Tensor], lr: f64) {
+        self.t += 1;
+        let full = self.cfg.period.is_full_step(self.t - 1);
+        let eta =
+            if full { lr } else { lr * self.cfg.eta_block_ratio };
+
+        let tp_before = self.tp_comm.stats().total_bytes();
+        let grads = self.dp_allreduce(grads);
+        let deltas = self.tp_phase(&grads, full);
+
+        for i in 0..params.len() {
+            match &deltas[i] {
+                Some(u) => {
+                    let decay =
+                        (1.0 - eta * self.cfg.weight_decay) as f32;
+                    params[i].scale(decay);
+                    params[i].axpy(-(eta as f32), u);
+                }
+                None => {
+                    let t = self.t;
+                    self.adam.step_param(
+                        i,
+                        &mut params[i],
+                        &grads[i],
+                        lr * self.cfg.adam_lr_ratio,
+                        t,
+                    );
+                }
+            }
+        }
+        self.last_opt_bytes =
+            self.tp_comm.stats().total_bytes() - tp_before;
+    }
+
+    fn name(&self) -> String {
+        let base = match self.cfg.period {
+            Period::Every(1) => "Muon".to_string(),
+            Period::Every(p) => format!("MuonBP(P={p})"),
+            Period::Never => "BlockMuon".to_string(),
+        };
+        format!("Dist{base}[dp={},tp={}]", self.mesh.dp, self.mesh.tp)
+    }
+
+    fn last_comm_bytes(&self) -> u64 {
+        self.last_opt_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::CollectiveKind;
+    use crate::optim::muon::Muon;
+    use crate::optim::testutil::Quad;
+    use crate::utils::prop;
+
+    fn builder(dp: usize, tp: usize, period: Period) -> DistMuonBuilder {
+        DistMuonBuilder::new(Mesh::new(dp, tp).unwrap(), period)
+    }
+
+    /// The central equivalence: the distributed coordinator must produce
+    /// *identical* parameters to the single-process reference optimizer.
+    #[test]
+    fn matches_reference_muon_exactly() {
+        for period in [Period::Every(1), Period::Every(3), Period::Never] {
+            let quad = Quad::new(11);
+            let mut dist = builder(2, 4, period).build(&quad.metas);
+            let mut refr = Muon::new(
+                &quad.metas,
+                MuonCfg::default_with(period, 4),
+            );
+            let mut p_dist = quad.init(3);
+            let mut p_ref = quad.init(3);
+            for step in 0..7 {
+                let g = quad.grads(&p_dist);
+                dist.step(&mut p_dist, &g, 0.02);
+                let g2 = quad.grads(&p_ref);
+                refr.step(&mut p_ref, &g2, 0.02);
+                for (a, b) in p_dist.iter().zip(&p_ref) {
+                    for (x, y) in a.data().iter().zip(b.data()) {
+                        assert!(
+                            (x - y).abs() < 1e-5,
+                            "{period:?} step {step}: {x} vs {y}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn block_steps_move_zero_optimizer_bytes() {
+        let quad = Quad::new(3);
+        let mut dist = builder(1, 4, Period::Every(4)).build(&quad.metas);
+        let mut params = quad.init(1);
+        let mut per_step = Vec::new();
+        for _ in 0..8 {
+            let g = quad.grads(&params);
+            dist.step(&mut params, &g, 0.01);
+            per_step.push(dist.last_comm_bytes());
+        }
+        // Steps 0 and 4 are full (gather+scatter > 0); the rest are free.
+        assert!(per_step[0] > 0 && per_step[4] > 0, "{per_step:?}");
+        for i in [1, 2, 3, 5, 6, 7] {
+            assert_eq!(per_step[i], 0, "{per_step:?}");
+        }
+        // 5x reduction claim: total optimizer bytes over the period vs P=1.
+        let total_bp: u64 = per_step.iter().sum();
+        let mut muon = builder(1, 4, Period::Every(1)).build(&quad.metas);
+        let mut params2 = quad.init(1);
+        let mut total_muon = 0;
+        for _ in 0..8 {
+            let g = quad.grads(&params2);
+            muon.step(&mut params2, &g, 0.01);
+            total_muon += muon.last_comm_bytes();
+        }
+        assert_eq!(total_muon, 4 * total_bp);
+    }
+
+    #[test]
+    fn dp_allreduce_always_runs() {
+        let quad = Quad::new(5);
+        let mut dist = builder(2, 2, Period::Never).build(&quad.metas);
+        let mut params = quad.init(2);
+        let g = quad.grads(&params);
+        dist.step(&mut params, &g, 0.01);
+        let (tp, dp) = dist.comm_stats();
+        assert_eq!(tp.calls(CollectiveKind::Gather), 0); // BlockMuon
+        assert_eq!(
+            dp.calls(CollectiveKind::AllReduce) as usize,
+            quad.metas.len()
+        );
+        assert!(dp.total_sim_time() > 0.0);
+    }
+
+    #[test]
+    fn property_periodic_comm_pattern() {
+        // For random periods/meshes, optimizer bytes are nonzero exactly on
+        // multiples of P (the paper's "off-period steps are Adam-free").
+        prop::check("periodic-comm", 6, |rng| {
+            let p = rng.gen_range(2, 6);
+            let tp = [2, 4][rng.gen_range(0, 2)];
+            let quad = Quad::new(rng.next_u64());
+            let mut dist =
+                builder(1, tp, Period::Every(p)).build(&quad.metas);
+            let mut params = quad.init(rng.next_u64());
+            for step in 0..(2 * p + 1) {
+                let g = quad.grads(&params);
+                dist.step(&mut params, &g, 0.01);
+                let is_full = step % p == 0;
+                let bytes = dist.last_comm_bytes();
+                if is_full && bytes == 0 {
+                    return Err(format!("step {step}: full but 0 bytes"));
+                }
+                if !is_full && bytes != 0 {
+                    return Err(format!(
+                        "step {step}: block but {bytes} bytes"
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn gather_bytes_match_matrix_sizes() {
+        // One full step's TP traffic = gather(momentum) + scatter(update)
+        // per matrix ~ 2 x total matrix bytes (ring-effective accounting is
+        // inside NetModel; payload accounting is exact).
+        let quad = Quad::new(4);
+        let mut dist = builder(1, 4, Period::Every(1)).build(&quad.metas);
+        let mut params = quad.init(1);
+        let g = quad.grads(&params);
+        dist.step(&mut params, &g, 0.01);
+        let (tp, _) = dist.comm_stats();
+        let matrix_bytes: u64 = 2 * 128 * 4; // w1 8x16 + w2 16x8, f32
+        assert_eq!(tp.bytes(CollectiveKind::Gather), matrix_bytes);
+        assert_eq!(tp.bytes(CollectiveKind::Scatter), matrix_bytes);
+    }
+}

@@ -1,0 +1,25 @@
+//! The paper's system contribution, distributed for real: a thread-per-rank
+//! DP x TP cluster running MuonBP's block-periodic schedule with actual
+//! collectives (rendezvous + byte accounting, `comm/`).
+//!
+//! Step anatomy (Alg. 1 + §3.2 "Communication cost of MuonBP"):
+//! 1. DP phase — gradient all-reduce across the DP group (always present,
+//!    charged to the training stack, not the optimizer).
+//! 2. TP phase — per hidden matrix, each TP rank owns a momentum *shard*
+//!    (exactly its model-parallel block):
+//!      block step: update shard momentum, orthogonalize locally (NsEngine),
+//!                  RMS-match with the block dims, apply with η_block.
+//!                  ZERO optimizer bytes on the wire.
+//!      full step:  gather momentum shards to the TP leader, orthogonalize
+//!                  the full matrix, RMS-match with full dims, scatter the
+//!                  update shards, apply with η_full.
+//! 3. Non-matrix params — AdamW on the leader (replicated, coordinate-wise,
+//!    no model-parallel traffic).
+//!
+//! `DistMuon` implements `Optimizer`, so the `Trainer` drives it exactly
+//! like the single-process reference — and an integration test pins the two
+//! to identical numerics.
+
+pub mod cluster;
+
+pub use cluster::{DistMuon, DistMuonBuilder};

@@ -1,0 +1,14 @@
+//! Analytic cost model: FLOP counts (paper §2.2/§3 formulas), α–β network
+//! model, and the per-method throughput estimator behind Table 4 / Fig 3.
+//!
+//! The paper's testbed (A100 nodes) is unavailable; throughput claims are
+//! *ratios* between methods, which derive from communication volume and
+//! overlap structure — exactly what this model captures (DESIGN.md §1).
+
+pub mod flops;
+pub mod netmodel;
+pub mod throughput;
+
+pub use flops::{adam_flops, block_ns_flops, train_flops_per_step, ModelDims};
+pub use netmodel::NetModel;
+pub use throughput::{step_breakdown, throughput_tflops, Method, StepBreakdown};

@@ -1,0 +1,117 @@
+//! α–β collective timing: time = α·steps(kind, n) + bytes/bandwidth.
+//!
+//! Ring-algorithm step counts and effective volumes follow the standard
+//! NCCL analysis. Presets model A100 NVLink (intra-node) and InfiniBand
+//! HDR (inter-node) fabrics.
+
+use crate::comm::stats::CollectiveKind;
+
+/// Simple α–β link model.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NetModel {
+    /// Per-message latency in seconds.
+    pub alpha: f64,
+    /// Effective bandwidth in bytes/second.
+    pub beta_bw: f64,
+}
+
+impl NetModel {
+    /// A100 NVLink 3 (intra-node): ~300 GB/s effective bus, ~4 µs launch.
+    pub fn a100_nvlink() -> NetModel {
+        NetModel { alpha: 4e-6, beta_bw: 300e9 }
+    }
+
+    /// InfiniBand HDR inter-node: ~25 GB/s per GPU, ~10 µs.
+    pub fn ib_hdr() -> NetModel {
+        NetModel { alpha: 10e-6, beta_bw: 25e9 }
+    }
+
+    /// Idealized infinitely fast network (ablations).
+    pub fn infinite() -> NetModel {
+        NetModel { alpha: 0.0, beta_bw: f64::INFINITY }
+    }
+
+    /// Time for one collective moving `payload_bytes` logical payload over
+    /// `n` ranks, using ring-algorithm effective wire volume.
+    pub fn collective_time(
+        &self,
+        kind: CollectiveKind,
+        payload_bytes: usize,
+        n: usize,
+    ) -> f64 {
+        if n <= 1 {
+            return 0.0;
+        }
+        let s = payload_bytes as f64;
+        let nf = n as f64;
+        let (steps, wire_bytes) = match kind {
+            CollectiveKind::Barrier => (nf - 1.0, 0.0),
+            // Ring all-reduce: 2(n-1)/n of the buffer over 2(n-1) steps.
+            CollectiveKind::AllReduce => {
+                (2.0 * (nf - 1.0), 2.0 * s * (nf - 1.0) / nf)
+            }
+            // All-gather of total size s: each rank receives (n-1)/n of s.
+            CollectiveKind::AllGather => ((nf - 1.0), s * (nf - 1.0) / nf),
+            CollectiveKind::ReduceScatter => {
+                ((nf - 1.0), s * (nf - 1.0) / nf)
+            }
+            // Root-rooted trees.
+            CollectiveKind::Gather => ((nf - 1.0), s * (nf - 1.0) / nf),
+            CollectiveKind::Scatter => ((nf - 1.0), s * (nf - 1.0) / nf),
+            CollectiveKind::Broadcast => ((nf).log2().ceil(), s),
+            CollectiveKind::AllToAll => ((nf - 1.0), s * (nf - 1.0) / nf),
+        };
+        self.alpha * steps + wire_bytes / self.beta_bw
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_ranks_is_free() {
+        let m = NetModel::a100_nvlink();
+        assert_eq!(
+            m.collective_time(CollectiveKind::AllReduce, 1 << 20, 1),
+            0.0
+        );
+    }
+
+    #[test]
+    fn allreduce_scales_with_bytes() {
+        // In the bandwidth-dominated regime time scales ~linearly.
+        let m = NetModel::a100_nvlink();
+        let t1 = m.collective_time(CollectiveKind::AllReduce, 1 << 26, 8);
+        let t2 = m.collective_time(CollectiveKind::AllReduce, 1 << 30, 8);
+        assert!(t2 > t1 * 10.0, "{t1} vs {t2}");
+        // Small messages are latency-dominated: sublinear scaling.
+        let s1 = m.collective_time(CollectiveKind::AllReduce, 64, 8);
+        let s2 = m.collective_time(CollectiveKind::AllReduce, 64 * 16, 8);
+        assert!(s2 < s1 * 2.0, "{s1} vs {s2}");
+    }
+
+    #[test]
+    fn latency_dominates_small_messages() {
+        let m = NetModel::ib_hdr();
+        let t = m.collective_time(CollectiveKind::AllReduce, 64, 8);
+        // 14 steps x 10us >> 64 bytes / 25GB/s
+        assert!(t > 1e-4 && t < 2e-4, "{t}");
+    }
+
+    #[test]
+    fn infinite_network_is_free() {
+        let m = NetModel::infinite();
+        assert_eq!(
+            m.collective_time(CollectiveKind::AllGather, 1 << 30, 64),
+            0.0
+        );
+    }
+
+    #[test]
+    fn barrier_moves_no_bytes() {
+        let m = NetModel::a100_nvlink();
+        let t = m.collective_time(CollectiveKind::Barrier, 0, 4);
+        assert!((t - 3.0 * 4e-6).abs() < 1e-12);
+    }
+}

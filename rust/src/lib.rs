@@ -1,0 +1,40 @@
+//! # muonbp — MuonBP: Faster Muon via Block-Periodic Orthogonalization
+//!
+//! Full-system reproduction of the paper (Khaled et al., 2025): a
+//! distributed-training framework whose Layer-3 coordinator implements the
+//! paper's contribution — Muon with block-periodic orthogonalization across
+//! model-parallel shards — on top of AOT-compiled JAX/Pallas compute
+//! artifacts executed through the PJRT C API (`xla` crate).
+//!
+//! Architecture (see DESIGN.md):
+//! - L1: Pallas Newton–Schulz kernel (python, build-time, `artifacts/ns_*`)
+//! - L2: Llama-style transformer fwd/bwd (python, build-time,
+//!   `artifacts/{train,eval}_*`)
+//! - L3: this crate — mesh/sharding, simulated collectives with byte
+//!   accounting, optimizer zoo (AdamW / Lion / Muon / BlockMuon / MuonBP /
+//!   Dion), α–β cost model, theory (Theorem 2), trainer and the
+//!   block-periodic coordinator.
+//!
+//! Python never runs on the step path: `make artifacts` once, then the rust
+//! binary is self-contained.
+
+pub mod bench_util;
+pub mod comm;
+pub mod config;
+pub mod coordinator;
+pub mod costmodel;
+pub mod data;
+pub mod linalg;
+pub mod mesh;
+pub mod metrics;
+pub mod model;
+pub mod optim;
+pub mod runtime;
+pub mod shard;
+pub mod tensor;
+pub mod theory;
+pub mod train;
+pub mod utils;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

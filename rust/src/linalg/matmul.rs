@@ -1,0 +1,211 @@
+//! Cache-blocked single-threaded matmul kernels (f32, f64 accumulation off
+//! the hot path is unnecessary: NS is self-correcting and pre-normalized).
+//!
+//! The i-k-j loop order streams the B panel row-wise so the inner loop is a
+//! contiguous FMA the compiler auto-vectorizes; `MC`/`KC` tiles keep the
+//! working set in L1/L2. This is the fallback / small-shape path — large
+//! orthogonalizations go through the XLA executable cache in `runtime`.
+
+use crate::tensor::Tensor;
+
+const MC: usize = 64;
+const KC: usize = 256;
+
+/// C = A (m x k) · B (k x n).
+pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, k) = (a.m(), a.n());
+    let (kb, n) = (b.m(), b.n());
+    assert_eq!(k, kb, "matmul inner-dim mismatch: {k} vs {kb}");
+    let mut c = Tensor::zeros(&[m, n]);
+    let (ad, bd) = (a.data(), b.data());
+    let cd = c.data_mut();
+    for i0 in (0..m).step_by(MC) {
+        let i1 = (i0 + MC).min(m);
+        for k0 in (0..k).step_by(KC) {
+            let k1 = (k0 + KC).min(k);
+            for i in i0..i1 {
+                let crow = &mut cd[i * n..(i + 1) * n];
+                for kk in k0..k1 {
+                    let aik = ad[i * k + kk];
+                    if aik == 0.0 {
+                        continue;
+                    }
+                    let brow = &bd[kk * n..(kk + 1) * n];
+                    for (cj, bj) in crow.iter_mut().zip(brow) {
+                        *cj += aik * bj;
+                    }
+                }
+            }
+        }
+    }
+    c
+}
+
+/// C = A (m x k) · Bᵀ where B is (n x k) — the Gram-matrix building block
+/// (X Xᵀ = matmul_nt(X, X)) with both operands streamed row-contiguously.
+pub fn matmul_nt(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, k) = (a.m(), a.n());
+    let (n, kb) = (b.m(), b.n());
+    assert_eq!(k, kb, "matmul_nt inner-dim mismatch: {k} vs {kb}");
+    let mut c = Tensor::zeros(&[m, n]);
+    let (ad, bd) = (a.data(), b.data());
+    let cd = c.data_mut();
+    for i in 0..m {
+        let arow = &ad[i * k..(i + 1) * k];
+        for j in 0..n {
+            let brow = &bd[j * k..(j + 1) * k];
+            let mut acc = 0.0f32;
+            for (x, y) in arow.iter().zip(brow) {
+                acc += x * y;
+            }
+            cd[i * n + j] = acc;
+        }
+    }
+    c
+}
+
+/// C = Aᵀ (k x m)ᵀ · B (k x n) — i.e. A is stored (k x m).
+pub fn matmul_tn(a: &Tensor, b: &Tensor) -> Tensor {
+    let (k, m) = (a.m(), a.n());
+    let (kb, n) = (b.m(), b.n());
+    assert_eq!(k, kb, "matmul_tn inner-dim mismatch: {k} vs {kb}");
+    let mut c = Tensor::zeros(&[m, n]);
+    let (ad, bd) = (a.data(), b.data());
+    let cd = c.data_mut();
+    // Stream over k: rank-1 update per k keeps both reads contiguous.
+    for kk in 0..k {
+        let arow = &ad[kk * m..(kk + 1) * m];
+        let brow = &bd[kk * n..(kk + 1) * n];
+        for i in 0..m {
+            let aik = arow[i];
+            if aik == 0.0 {
+                continue;
+            }
+            let crow = &mut cd[i * n..(i + 1) * n];
+            for (cj, bj) in crow.iter_mut().zip(brow) {
+                *cj += aik * bj;
+            }
+        }
+    }
+    c
+}
+
+/// y = M (m x n) · x (n)
+pub fn matvec(mt: &Tensor, x: &[f32]) -> Vec<f32> {
+    let (m, n) = (mt.m(), mt.n());
+    assert_eq!(n, x.len());
+    let d = mt.data();
+    (0..m)
+        .map(|i| {
+            d[i * n..(i + 1) * n]
+                .iter()
+                .zip(x)
+                .map(|(a, b)| a * b)
+                .sum::<f32>()
+        })
+        .collect()
+}
+
+/// y = Mᵀ · x (m)
+pub fn matvec_t(mt: &Tensor, x: &[f32]) -> Vec<f32> {
+    let (m, n) = (mt.m(), mt.n());
+    assert_eq!(m, x.len());
+    let d = mt.data();
+    let mut out = vec![0.0f32; n];
+    for i in 0..m {
+        let xi = x[i];
+        for (o, a) in out.iter_mut().zip(&d[i * n..(i + 1) * n]) {
+            *o += xi * a;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::utils::prop;
+    use crate::utils::rng::Rng;
+
+    fn naive(a: &Tensor, b: &Tensor) -> Tensor {
+        let (m, k, n) = (a.m(), a.n(), b.n());
+        let mut c = Tensor::zeros(&[m, n]);
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0;
+                for kk in 0..k {
+                    acc += a.at(i, kk) * b.at(kk, j);
+                }
+                c.set(i, j, acc);
+            }
+        }
+        c
+    }
+
+    fn assert_close(a: &Tensor, b: &Tensor, tol: f32) {
+        assert_eq!(a.shape(), b.shape());
+        for (x, y) in a.data().iter().zip(b.data()) {
+            assert!((x - y).abs() <= tol * (1.0 + x.abs()), "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn matmul_matches_naive_property() {
+        prop::check("matmul==naive", 25, |rng| {
+            let m = rng.gen_range(1, 40);
+            let k = rng.gen_range(1, 40);
+            let n = rng.gen_range(1, 40);
+            let a = Tensor::randn(&[m, k], 1.0, rng);
+            let b = Tensor::randn(&[k, n], 1.0, rng);
+            let got = matmul(&a, &b);
+            let want = naive(&a, &b);
+            for (x, y) in got.data().iter().zip(want.data()) {
+                if (x - y).abs() > 1e-4 * (1.0 + x.abs()) {
+                    return Err(format!("({m},{k},{n}): {x} vs {y}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn nt_and_tn_match_explicit_transpose() {
+        let mut rng = Rng::new(5);
+        let a = Tensor::randn(&[13, 7], 1.0, &mut rng);
+        let b = Tensor::randn(&[11, 7], 1.0, &mut rng);
+        assert_close(&matmul_nt(&a, &b), &matmul(&a, &b.transpose()), 1e-5);
+        let c = Tensor::randn(&[7, 13], 1.0, &mut rng);
+        let d = Tensor::randn(&[7, 11], 1.0, &mut rng);
+        assert_close(&matmul_tn(&c, &d), &matmul(&c.transpose(), &d), 1e-5);
+    }
+
+    #[test]
+    fn identity_is_neutral() {
+        let mut rng = Rng::new(2);
+        let a = Tensor::randn(&[9, 9], 1.0, &mut rng);
+        let mut eye = Tensor::zeros(&[9, 9]);
+        for i in 0..9 {
+            eye.set(i, i, 1.0);
+        }
+        assert_close(&matmul(&a, &eye), &a, 1e-6);
+        assert_close(&matmul(&eye, &a), &a, 1e-6);
+    }
+
+    #[test]
+    fn matvec_consistency() {
+        let mut rng = Rng::new(3);
+        let a = Tensor::randn(&[6, 4], 1.0, &mut rng);
+        let x: Vec<f32> = (0..4).map(|i| i as f32 + 1.0).collect();
+        let y = matvec(&a, &x);
+        let xt = Tensor::from_vec(&[4, 1], x.clone()).unwrap();
+        let want = matmul(&a, &xt);
+        for (a, b) in y.iter().zip(want.data()) {
+            assert!((a - b).abs() < 1e-5);
+        }
+        let z = matvec_t(&a, &y);
+        let want2 = matmul_tn(&a, &want);
+        for (a, b) in z.iter().zip(want2.data()) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+}

@@ -1,0 +1,16 @@
+//! Host linear algebra for the optimizer layer.
+//!
+//! The model fwd/bwd runs inside XLA; these routines serve the optimizer
+//! math (Newton–Schulz orthogonalization, norms for the theory module, QR /
+//! power iteration for Dion) and the pure-rust fallback path when a shard
+//! shape has no AOT artifact and runtime XLA JIT is disabled.
+
+pub mod matmul;
+pub mod newton_schulz;
+pub mod norms;
+pub mod qr;
+
+pub use matmul::{matmul, matmul_nt, matmul_tn};
+pub use newton_schulz::{newton_schulz, NsCoeffs};
+pub use norms::{block_spectral_norm, nuclear_norm, op_norm};
+pub use qr::qr_thin;

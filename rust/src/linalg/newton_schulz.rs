@@ -1,0 +1,227 @@
+//! Newton–Schulz orthogonalization — host mirror of the L1 Pallas kernel.
+//!
+//! Identical math to `python/compile/kernels/newton_schulz.py` (the numbers
+//! must agree so distributed runs are artifact/host interchangeable):
+//!   X <- G / (||G||_F + eps);  K times: A = XXᵀ; B = bA + cA²; X = aX + BX.
+//! Tall inputs are transposed so the Gram matrix forms on the short side
+//! (the paper's §2.2 FLOP model assumes m <= n).
+
+use crate::linalg::matmul::{matmul, matmul_nt};
+use crate::tensor::Tensor;
+
+/// Newton–Schulz polynomial coefficients (a, b, c).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NsCoeffs {
+    pub a: f32,
+    pub b: f32,
+    pub c: f32,
+}
+
+impl NsCoeffs {
+    /// Paper Algorithm 2: contracts singular values to exactly 1 (use with
+    /// larger K). f(s) = 2s - 1.5s³ + 0.5s⁵.
+    pub fn paper() -> NsCoeffs {
+        NsCoeffs { a: 2.0, b: -1.5, c: 0.5 }
+    }
+
+    /// Keller Jordan's tuned quintic used by production Muon: fast entry
+    /// into a band around 1; 5 steps suffice for training updates.
+    pub fn jordan() -> NsCoeffs {
+        NsCoeffs { a: 3.4445, b: -4.7750, c: 2.0315 }
+    }
+
+    /// The NS scalar polynomial f(s) = a·s + b·s³ + c·s⁵ (each iteration
+    /// maps every singular value through this).
+    pub fn poly(&self, s: f64) -> f64 {
+        self.a as f64 * s + self.b as f64 * s.powi(3) + self.c as f64 * s.powi(5)
+    }
+}
+
+impl Default for NsCoeffs {
+    fn default() -> Self {
+        NsCoeffs::jordan()
+    }
+}
+
+/// Orthogonalize `g` approximately: returns ≈ (G Gᵀ)^{-1/2} G.
+pub fn newton_schulz(g: &Tensor, steps: usize, coeffs: NsCoeffs) -> Tensor {
+    assert_eq!(g.rank(), 2, "newton_schulz expects a matrix");
+    let transpose = g.m() > g.n();
+    let mut x = if transpose { g.transpose() } else { g.clone() };
+    let norm = x.frobenius() + 1e-7;
+    x.scale(1.0 / norm);
+    for _ in 0..steps {
+        x = ns_iteration(&x, coeffs);
+    }
+    if transpose {
+        x.transpose()
+    } else {
+        x
+    }
+}
+
+/// One NS iteration on a pre-normalized wide matrix (m <= n).
+pub fn ns_iteration(x: &Tensor, coeffs: NsCoeffs) -> Tensor {
+    let gram = matmul_nt(x, x); // A = X Xᵀ  (m x m)
+    let gram2 = matmul(&gram, &gram); // A²
+    // B = b·A + c·A²
+    let mut poly = gram;
+    poly.scale(coeffs.b);
+    poly.axpy(coeffs.c, &gram2);
+    // X' = a·X + B·X
+    let mut out = matmul(&poly, x);
+    out.axpy(coeffs.a, x);
+    // axpy computes out += a*x after out = B·X, i.e. out = B·X + a·X. ✓
+    out
+}
+
+/// FLOPs of one full NS orthogonalization per the paper §2.2:
+/// `2mn + 2K(2 n m² + m³)` with m = min(dims), n = max(dims).
+pub fn ns_flops(m: usize, n: usize, steps: usize) -> f64 {
+    let (m, n) = if m <= n { (m, n) } else { (n, m) };
+    let (mf, nf, kf) = (m as f64, n as f64, steps as f64);
+    2.0 * mf * nf + 2.0 * kf * (2.0 * nf * mf * mf + mf * mf * mf)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matmul::matmul_nt;
+    use crate::utils::prop;
+    use crate::utils::rng::Rng;
+
+    fn singular_values(t: &Tensor) -> Vec<f64> {
+        // Jacobi eigenvalues of the (small) Gram matrix.
+        let wide = if t.m() <= t.n() { t.clone() } else { t.transpose() };
+        let mut a: Vec<Vec<f64>> = {
+            let g = matmul_nt(&wide, &wide);
+            (0..g.m())
+                .map(|i| (0..g.n()).map(|j| g.at(i, j) as f64).collect())
+                .collect()
+        };
+        let n = a.len();
+        for _ in 0..60 {
+            let mut off = 0.0;
+            for p in 0..n {
+                for q in (p + 1)..n {
+                    off += a[p][q] * a[p][q];
+                    if a[p][q].abs() < 1e-12 {
+                        continue;
+                    }
+                    let theta = 0.5
+                        * (2.0 * a[p][q]).atan2(a[q][q] - a[p][p]);
+                    let (c, s) = (theta.cos(), theta.sin());
+                    for k in 0..n {
+                        let (apk, aqk) = (a[p][k], a[q][k]);
+                        a[p][k] = c * apk - s * aqk;
+                        a[q][k] = s * apk + c * aqk;
+                    }
+                    for k in 0..n {
+                        let (akp, akq) = (a[k][p], a[k][q]);
+                        a[k][p] = c * akp - s * akq;
+                        a[k][q] = s * akp + c * akq;
+                    }
+                }
+            }
+            if off < 1e-18 {
+                break;
+            }
+        }
+        let mut s: Vec<f64> =
+            (0..n).map(|i| a[i][i].max(0.0).sqrt()).collect();
+        s.sort_by(|x, y| y.partial_cmp(x).unwrap());
+        s
+    }
+
+    #[test]
+    fn paper_coeffs_reach_orthogonality() {
+        let mut rng = Rng::new(0);
+        // Well-conditioned input: identity + small noise.
+        let mut g = Tensor::randn(&[8, 16], 0.05, &mut rng);
+        for i in 0..8 {
+            g.set(i, i, 1.0 + g.at(i, i));
+        }
+        let u = newton_schulz(&g, 30, NsCoeffs::paper());
+        let gram = matmul_nt(&u, &u);
+        for i in 0..8 {
+            for j in 0..8 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!(
+                    (gram.at(i, j) - want).abs() < 1e-3,
+                    "gram[{i}][{j}] = {}",
+                    gram.at(i, j)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn jordan_coeffs_band_property() {
+        prop::check("jordan-ns-band", 10, |rng| {
+            let m = rng.gen_range(4, 24);
+            let n = rng.gen_range(m, 48);
+            let g = Tensor::randn(&[m, n], 1.0, rng);
+            let u = newton_schulz(&g, 5, NsCoeffs::jordan());
+            let s = singular_values(&u);
+            if s[0] > 1.4 {
+                return Err(format!("max sv {}", s[0]));
+            }
+            // The quintic pushes all but pathologically-small svs up.
+            if s[s.len() / 2] < 0.2 {
+                return Err(format!("median sv {}", s[s.len() / 2]));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn scale_invariance() {
+        let mut rng = Rng::new(3);
+        let g = Tensor::randn(&[6, 10], 1.0, &mut rng);
+        let mut g2 = g.clone();
+        g2.scale(37.5);
+        let a = newton_schulz(&g, 5, NsCoeffs::jordan());
+        let b = newton_schulz(&g2, 5, NsCoeffs::jordan());
+        for (x, y) in a.data().iter().zip(b.data()) {
+            assert!((x - y).abs() < 1e-4, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn transpose_consistency() {
+        let mut rng = Rng::new(4);
+        let g = Tensor::randn(&[20, 7], 1.0, &mut rng);
+        let a = newton_schulz(&g, 5, NsCoeffs::jordan());
+        let b = newton_schulz(&g.transpose(), 5, NsCoeffs::jordan());
+        for (x, y) in a.data().iter().zip(b.transpose().data()) {
+            assert!((x - y).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn poly_fixed_point_at_one() {
+        // Paper coeffs: exact fixed point at 1 with zero derivative
+        // (quadratic contraction of singular values to 1).
+        let c = NsCoeffs::paper();
+        assert!((c.poly(1.0) - 1.0).abs() < 1e-9, "{:?}", c);
+        let d = (c.poly(1.0 + 1e-5) - c.poly(1.0 - 1e-5)) / 2e-5;
+        assert!(d.abs() < 1e-3, "{d}");
+        // Jordan coeffs trade the exact fixed point for fast expansion of
+        // small singular values: f(s) >> s near 0, and the band [0.3, 1.2]
+        // maps into itself (the "quintic band" production Muon relies on).
+        let j = NsCoeffs::jordan();
+        assert!(j.poly(0.1) > 0.3, "{}", j.poly(0.1));
+        for s in [0.3, 0.5, 0.7, 0.9, 1.0, 1.1, 1.2] {
+            let y = j.poly(s);
+            assert!((0.25..=1.25).contains(&y), "f({s}) = {y}");
+        }
+    }
+
+    #[test]
+    fn flops_formula() {
+        // m=n=k: 2n² + 2K(2n³ + n³) = 2n² + 6Kn³
+        assert_eq!(ns_flops(4, 4, 1), 2.0 * 16.0 + 2.0 * (2.0 * 64.0 + 64.0));
+        // symmetric in m,n
+        assert_eq!(ns_flops(8, 4, 3), ns_flops(4, 8, 3));
+    }
+}

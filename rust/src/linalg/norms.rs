@@ -1,0 +1,163 @@
+//! Matrix norms used by the analysis (§3, Appendix A): operator (spectral)
+//! norm, nuclear norm (its dual), and the block-spectral norm
+//! B(X) = max_{i,j} ||X_{ij}||_op with dual B*(X) = Σ ||X_{ij}||_*
+//! (Lemma 1 / Lemma 2).
+
+use crate::linalg::matmul::{matvec, matvec_t};
+use crate::linalg::newton_schulz::{newton_schulz, NsCoeffs};
+use crate::tensor::Tensor;
+use crate::utils::rng::Rng;
+
+/// Largest singular value via power iteration on GᵀG.
+pub fn op_norm(g: &Tensor) -> f64 {
+    assert_eq!(g.rank(), 2);
+    let n = g.n();
+    if g.numel() == 0 {
+        return 0.0;
+    }
+    let mut rng = Rng::new(0x0b_5EC7);
+    let mut v: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+    let mut sigma = 0.0f64;
+    for _ in 0..100 {
+        let u = matvec(g, &v); // G v
+        let w = matvec_t(g, &u); // Gᵀ G v
+        let norm = w.iter().map(|x| (*x as f64).powi(2)).sum::<f64>().sqrt();
+        if norm < 1e-30 {
+            return 0.0;
+        }
+        let new_sigma = norm.sqrt();
+        for x in w.iter().zip(v.iter_mut()) {
+            *x.1 = (*x.0 as f64 / norm) as f32;
+        }
+        if (new_sigma - sigma).abs() < 1e-9 * new_sigma.max(1.0) {
+            sigma = new_sigma;
+            break;
+        }
+        sigma = new_sigma;
+    }
+    sigma
+}
+
+/// Nuclear norm ||G||_* = Σ σ_i via the polar-factor identity
+/// ⟨G, Orth(G)⟩ = tr(Σ) (Lemma 2's optimality certificate): we compute
+/// Orth(G) with a long classical Newton–Schulz run and take the inner
+/// product. Exact up to NS convergence for non-degenerate G.
+pub fn nuclear_norm(g: &Tensor) -> f64 {
+    assert_eq!(g.rank(), 2);
+    let fro = g.frobenius() as f64;
+    if fro < 1e-30 {
+        return 0.0;
+    }
+    let u = newton_schulz(g, 40, NsCoeffs::paper());
+    g.data()
+        .iter()
+        .zip(u.data())
+        .map(|(a, b)| *a as f64 * *b as f64)
+        .sum::<f64>()
+}
+
+/// Block-spectral norm B(X) = max over an r x c partition of block op norms.
+pub fn block_spectral_norm(g: &Tensor, r: usize, c: usize) -> f64 {
+    let blocks = partition(g, r, c);
+    blocks.iter().map(|b| op_norm(b)).fold(0.0, f64::max)
+}
+
+/// Dual of the block-spectral norm: B*(X) = Σ_{ij} ||X_{ij}||_*.
+pub fn block_nuclear_norm(g: &Tensor, r: usize, c: usize) -> f64 {
+    partition(g, r, c).iter().map(|b| nuclear_norm(b)).sum()
+}
+
+/// Even r x c partition of a matrix into blocks (trailing blocks absorb the
+/// remainder), matching `shard::shard_range`.
+pub fn partition(g: &Tensor, r: usize, c: usize) -> Vec<Tensor> {
+    let (m, n) = (g.m(), g.n());
+    assert!(r >= 1 && c >= 1 && r <= m && c <= n, "bad partition {r}x{c} of {m}x{n}");
+    let mut out = Vec::with_capacity(r * c);
+    for i in 0..r {
+        let (r0, r1) = crate::shard::shard_range(m, r, i);
+        for j in 0..c {
+            let (c0, c1) = crate::shard::shard_range(n, c, j);
+            out.push(g.block(r0, r1, c0, c1));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::utils::prop;
+
+    #[test]
+    fn op_norm_diagonal() {
+        let mut t = Tensor::zeros(&[3, 5]);
+        t.set(0, 0, 2.0);
+        t.set(1, 1, -7.0);
+        t.set(2, 2, 3.0);
+        assert!((op_norm(&t) - 7.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn nuclear_norm_diagonal() {
+        let mut t = Tensor::zeros(&[3, 3]);
+        t.set(0, 0, 2.0);
+        t.set(1, 1, 1.0);
+        t.set(2, 2, 0.5);
+        assert!((nuclear_norm(&t) - 3.5).abs() < 1e-2, "{}", nuclear_norm(&t));
+    }
+
+    #[test]
+    fn norm_sandwich_property() {
+        // Lemma 4: B(G) <= ||G||_op <= sqrt(rc) B(G)
+        // and ||G||_op,* <= B*(G) <= sqrt(rc) ||G||_op,*.
+        prop::check("norm-equivalence", 8, |rng| {
+            let m = 2 * rng.gen_range(2, 7);
+            let n = 2 * rng.gen_range(2, 7);
+            let g = Tensor::randn(&[m, n], 1.0, rng);
+            let (r, c) = (2, 2);
+            let b = block_spectral_norm(&g, r, c);
+            let op = op_norm(&g);
+            let factor = ((r * c) as f64).sqrt();
+            if !(b <= op * 1.001) {
+                return Err(format!("B {b} > op {op}"));
+            }
+            if !(op <= factor * b * 1.001) {
+                return Err(format!("op {op} > sqrt(rc) B {}", factor * b));
+            }
+            let bn = block_nuclear_norm(&g, r, c);
+            let nn = nuclear_norm(&g);
+            if !(nn <= bn * 1.02) {
+                return Err(format!("nuc {nn} > Bnuc {bn}"));
+            }
+            if !(bn <= factor * nn * 1.02) {
+                return Err(format!("Bnuc {bn} > sqrt(rc) nuc {}", factor * nn));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn frobenius_dominates_op_norm() {
+        // Lemma 3: rho = 1 for both norms (||X||_op <= ||X||_F and B <= F).
+        prop::check("rho-is-one", 8, |rng| {
+            let g = Tensor::randn(&[6, 8], 1.0, rng);
+            let f = g.frobenius() as f64;
+            if op_norm(&g) > f * 1.001 {
+                return Err("op > fro".into());
+            }
+            if block_spectral_norm(&g, 2, 2) > f * 1.001 {
+                return Err("block > fro".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn partition_shapes() {
+        let g = Tensor::zeros(&[10, 9]);
+        let blocks = partition(&g, 3, 2);
+        assert_eq!(blocks.len(), 6);
+        let total: usize = blocks.iter().map(|b| b.numel()).sum();
+        assert_eq!(total, 90);
+    }
+}

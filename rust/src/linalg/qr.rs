@@ -1,0 +1,110 @@
+//! Thin QR via modified Gram–Schmidt — the orthonormalization primitive of
+//! Dion's amortized power iteration (Ahn et al. 2025, cf. paper Appendix C).
+
+use crate::tensor::Tensor;
+
+/// Thin QR of A (m x r, r <= m): returns Q (m x r, orthonormal columns).
+/// Rank-deficient columns are replaced by zeros (Dion re-seeds them).
+pub fn qr_thin(a: &Tensor) -> Tensor {
+    let (m, r) = (a.m(), a.n());
+    assert!(r <= m, "qr_thin expects tall matrix, got {m}x{r}");
+    // Column-major working copy for contiguous column ops.
+    let mut cols: Vec<Vec<f64>> = (0..r)
+        .map(|j| (0..m).map(|i| a.at(i, j) as f64).collect())
+        .collect();
+    for j in 0..r {
+        // Two rounds of MGS projection for numerical robustness.
+        for _ in 0..2 {
+            for k in 0..j {
+                let dot: f64 =
+                    cols[j].iter().zip(&cols[k]).map(|(x, y)| x * y).sum();
+                let (a, b) = {
+                    let (lo, hi) = cols.split_at_mut(j);
+                    (&lo[k], &mut hi[0])
+                };
+                for (x, y) in b.iter_mut().zip(a) {
+                    *x -= dot * y;
+                }
+            }
+        }
+        let norm: f64 = cols[j].iter().map(|x| x * x).sum::<f64>().sqrt();
+        if norm > 1e-12 {
+            for x in cols[j].iter_mut() {
+                *x /= norm;
+            }
+        } else {
+            for x in cols[j].iter_mut() {
+                *x = 0.0;
+            }
+        }
+    }
+    let mut q = Tensor::zeros(&[m, r]);
+    for j in 0..r {
+        for i in 0..m {
+            q.set(i, j, cols[j][i] as f32);
+        }
+    }
+    q
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matmul::matmul_tn;
+    use crate::utils::prop;
+
+    #[test]
+    fn columns_orthonormal() {
+        prop::check("qr-orthonormal", 12, |rng| {
+            let r = rng.gen_range(1, 8);
+            let m = rng.gen_range(r, 24);
+            let a = Tensor::randn(&[m, r], 1.0, rng);
+            let q = qr_thin(&a);
+            let gram = matmul_tn(&q, &q); // QᵀQ
+            for i in 0..r {
+                for j in 0..r {
+                    let want = if i == j { 1.0 } else { 0.0 };
+                    if (gram.at(i, j) - want).abs() > 1e-4 {
+                        return Err(format!(
+                            "gram[{i}][{j}] = {}",
+                            gram.at(i, j)
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn preserves_span() {
+        // Q R-combination should reconstruct A's column space: residual of
+        // projecting A onto Q must vanish.
+        prop::check("qr-span", 8, |rng| {
+            let a = Tensor::randn(&[12, 4], 1.0, rng);
+            let q = qr_thin(&a);
+            let coef = matmul_tn(&q, &a); // QᵀA (r x r)
+            let recon = crate::linalg::matmul::matmul(&q, &coef);
+            for (x, y) in recon.data().iter().zip(a.data()) {
+                if (x - y).abs() > 1e-3 {
+                    return Err(format!("{x} vs {y}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn handles_rank_deficiency() {
+        let mut a = Tensor::zeros(&[6, 3]);
+        for i in 0..6 {
+            a.set(i, 0, 1.0);
+            a.set(i, 1, 2.0); // parallel to col 0
+            a.set(i, 2, i as f32);
+        }
+        let q = qr_thin(&a);
+        // Col 1 collapses to zero; cols 0 and 2 orthonormal.
+        let norm1: f32 = (0..6).map(|i| q.at(i, 1) * q.at(i, 1)).sum();
+        assert!(norm1 < 1e-8);
+    }
+}

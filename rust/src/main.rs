@@ -1,0 +1,182 @@
+//! muonbp launcher.
+//!
+//! Subcommands:
+//!   train        run a training job (see --help text below)
+//!   throughput   print the Table-4-style analytic throughput matrix
+//!   info         print artifact manifest / environment summary
+//!
+//! Examples:
+//!   muonbp train --model bench --optimizer muonbp --period 5 --steps 200 \
+//!                --distributed --dp 2 --tp 4 --out results/run.csv
+//!   muonbp throughput
+//!   muonbp info
+
+use std::sync::Arc;
+
+use anyhow::Result;
+use muonbp::config::RunConfig;
+use muonbp::coordinator::DistMuonBuilder;
+use muonbp::costmodel::throughput::{throughput_tflops, HwPreset, Method};
+use muonbp::costmodel::ModelDims;
+use muonbp::data::CorpusCfg;
+use muonbp::mesh::Mesh;
+use muonbp::metrics::{ppl, render_table};
+use muonbp::optim::muon::Period;
+use muonbp::optim::{by_name, Optimizer};
+use muonbp::runtime::{NsEngine, Runtime};
+use muonbp::train::{TrainCfg, Trainer};
+use muonbp::utils::cli::Args;
+
+const USAGE: &str = "usage: muonbp <train|throughput|info> [--key value ...]
+  train options: --model tiny|bench|e2e  --optimizer adamw|muon|blockmuon|muonbp|dion
+                 --steps N --lr F --period P --dp N --tp N --distributed
+                 --schedule constant|cosine|wsd --seed N --out results/run.csv
+                 --config path.json (JSON file, CLI overrides win)";
+
+fn main() -> Result<()> {
+    let args = Args::from_env()?;
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("train") => cmd_train(&args),
+        Some("throughput") => cmd_throughput(),
+        Some("info") => cmd_info(),
+        _ => {
+            println!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let mut cfg = match args.get("config") {
+        Some(path) => RunConfig::from_json_file(path)?,
+        None => RunConfig::default(),
+    };
+    cfg.apply_args(args)?;
+
+    let runtime = Arc::new(Runtime::open_default()?);
+    let entry = runtime.manifest.config(&cfg.model)?.clone();
+    println!(
+        "model={} ({} params)  optimizer={}  steps={}  lr={}  dp={} tp={} distributed={}",
+        cfg.model,
+        entry.n_params,
+        cfg.optimizer,
+        cfg.steps,
+        cfg.lr,
+        cfg.dp,
+        cfg.tp,
+        cfg.distributed
+    );
+
+    let mut trainer =
+        Trainer::new(Arc::clone(&runtime), &cfg.model, CorpusCfg::default(), cfg.seed)?;
+    let metas = trainer.state.metas.clone();
+
+    let mut opt: Box<dyn Optimizer> = if cfg.distributed {
+        let ns = Arc::new(NsEngine::new(Some(Arc::clone(&runtime))));
+        let period = match cfg.optimizer.as_str() {
+            "muon" => Period::Every(1),
+            "blockmuon" => Period::Never,
+            _ => Period::Every(cfg.period),
+        };
+        Box::new(
+            DistMuonBuilder::new(Mesh::new(cfg.dp, cfg.tp)?, period)
+                .layout(cfg.layout)
+                .ns_engine(ns)
+                .cfg(|c| c.eta_block_ratio = cfg.eta_block_ratio)
+                .build(&metas),
+        )
+    } else {
+        by_name(&cfg.optimizer, &metas, cfg.tp)?
+    };
+
+    let tcfg = TrainCfg {
+        steps: cfg.steps,
+        lr: cfg.lr,
+        schedule: cfg.schedule,
+        eval_every: cfg.eval_every,
+        eval_batches: 2,
+        grad_clip: 1.0,
+        seed: cfg.seed,
+        log_param_norm: true,
+    };
+    let rec = trainer.run(opt.as_mut(), &tcfg)?;
+
+    let train = rec.get("train_loss").unwrap();
+    let val = rec.get("val_loss");
+    println!(
+        "final: train_loss {:.4} (min {:.4}, ppl {:.2})",
+        train.last().unwrap_or(f64::NAN),
+        train.min(),
+        ppl(train.min())
+    );
+    if let Some(v) = val {
+        println!(
+            "       val_loss   {:.4} (min {:.4}, ppl {:.2})",
+            v.last().unwrap_or(f64::NAN),
+            v.min(),
+            ppl(v.min())
+        );
+    }
+    if !cfg.out.is_empty() {
+        rec.save_csv(&cfg.out)?;
+        println!("wrote {}", cfg.out);
+    }
+    Ok(())
+}
+
+fn cmd_throughput() -> Result<()> {
+    let hw = HwPreset::a100();
+    let methods = [
+        Method::Muon,
+        Method::BlockMuon,
+        Method::MuonBP { period: 5 },
+        Method::Adam,
+    ];
+    let dims =
+        [ModelDims::paper_960m(), ModelDims::paper_1_2b(), ModelDims::paper_8b()];
+    let rows: Vec<Vec<String>> = methods
+        .iter()
+        .map(|m| {
+            let mut row = vec![m.name()];
+            for d in &dims {
+                row.push(format!("{:.2}", throughput_tflops(d, *m, &hw)));
+            }
+            row
+        })
+        .collect();
+    println!(
+        "{}",
+        render_table(
+            "Analytic throughput (TFLOP/s/GPU), cf. paper Table 4",
+            &["Method", "960M", "1.2B", "8B"],
+            &rows
+        )
+    );
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    let runtime = Runtime::open_default()?;
+    println!("platform: {}", runtime.client().platform_name());
+    println!("configs:");
+    for c in &runtime.manifest.configs {
+        println!(
+            "  {:<6} d={} L={} heads={}/{} ff={} seq={} batch={}  ({} params, {} tensors)",
+            c.name,
+            c.d_model,
+            c.n_layers,
+            c.n_heads,
+            c.n_kv_heads,
+            c.d_ff,
+            c.seq_len,
+            c.batch,
+            c.n_params,
+            c.params.len()
+        );
+    }
+    println!(
+        "ns kernels: {} shapes (pallas artifacts)",
+        runtime.manifest.ns_kernels.len()
+    );
+    Ok(())
+}

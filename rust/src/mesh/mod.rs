@@ -1,0 +1,180 @@
+//! Device mesh and model-parallel layouts (paper Table 1 + §3 "How blocks
+//! align with model-parallel shards").
+//!
+//! A `Mesh` is a DP x TP grid of logical ranks. A `Layout` describes how a
+//! parameter tensor is partitioned across the TP group (and, orthogonally,
+//! how optimizer state is owned under ZeRO/FSDP). `block_grid` maps a layout
+//! to the (r, c) block partition of the paper's block-spectral norm: a block
+//! is *exactly* the shard a device owns, so block orthogonalization never
+//! requires cross-device traffic.
+
+use anyhow::{bail, Result};
+
+/// DP x TP mesh of logical ranks. Rank id = dp_idx * tp + tp_idx.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Mesh {
+    pub dp: usize,
+    pub tp: usize,
+}
+
+impl Mesh {
+    pub fn new(dp: usize, tp: usize) -> Result<Mesh> {
+        if dp == 0 || tp == 0 {
+            bail!("mesh degrees must be positive, got dp={dp} tp={tp}");
+        }
+        Ok(Mesh { dp, tp })
+    }
+
+    pub fn world(&self) -> usize {
+        self.dp * self.tp
+    }
+
+    pub fn dp_index(&self, rank: usize) -> usize {
+        rank / self.tp
+    }
+
+    pub fn tp_index(&self, rank: usize) -> usize {
+        rank % self.tp
+    }
+
+    pub fn rank(&self, dp_idx: usize, tp_idx: usize) -> usize {
+        debug_assert!(dp_idx < self.dp && tp_idx < self.tp);
+        dp_idx * self.tp + tp_idx
+    }
+
+    /// Ranks in the same TP group as `rank` (share one model replica).
+    pub fn tp_group(&self, rank: usize) -> Vec<usize> {
+        let d = self.dp_index(rank);
+        (0..self.tp).map(|t| self.rank(d, t)).collect()
+    }
+
+    /// Ranks with the same TP index across DP groups (gradient all-reduce).
+    pub fn dp_group(&self, rank: usize) -> Vec<usize> {
+        let t = self.tp_index(rank);
+        (0..self.dp).map(|d| self.rank(d, t)).collect()
+    }
+}
+
+/// How a matrix parameter is sharded across the TP group (Table 1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Layout {
+    /// No sharding (small params, ZeRO-1 replicated compute).
+    Replicated,
+    /// Megatron column-parallel: W (m x n) split into (m x n/c) shards.
+    TpColumn,
+    /// Megatron row-parallel: W split into (m/r x n) shards.
+    TpRow,
+    /// Hybrid 2D TP: r x c grid of (m/r x n/c) shards.
+    TpGrid { rows: usize, cols: usize },
+    /// FSDP2 / dim-0 sharding: contiguous slice along the first dim.
+    Fsdp2Dim0,
+    /// ZeRO layer-wise: each whole tensor owned by one rank; blocks never
+    /// split the matrix, so block-orthogonalization == full for this param
+    /// (the paper's §2.2 "ZeRO helps greatly" case).
+    ZeroLayer,
+}
+
+impl Layout {
+    pub fn parse(s: &str) -> Result<Layout> {
+        Ok(match s {
+            "replicated" => Layout::Replicated,
+            "tp-column" => Layout::TpColumn,
+            "tp-row" => Layout::TpRow,
+            "fsdp2" => Layout::Fsdp2Dim0,
+            "zero-layer" => Layout::ZeroLayer,
+            other => {
+                if let Some(dims) = other.strip_prefix("tp-grid:") {
+                    let (r, c) = dims
+                        .split_once('x')
+                        .ok_or_else(|| anyhow::anyhow!("bad grid '{other}'"))?;
+                    Layout::TpGrid { rows: r.parse()?, cols: c.parse()? }
+                } else {
+                    bail!("unknown layout '{other}'")
+                }
+            }
+        })
+    }
+
+    /// Block partition (r, c) of an (m, n) matrix under this layout at TP
+    /// degree `tp`. This is the (r, c) of the paper's block-spectral norm.
+    pub fn block_grid(&self, tp: usize, m: usize, n: usize) -> (usize, usize) {
+        match *self {
+            Layout::Replicated | Layout::ZeroLayer => (1, 1),
+            Layout::TpColumn => (1, tp.min(n)),
+            Layout::TpRow => (tp.min(m), 1),
+            Layout::TpGrid { rows, cols } => {
+                assert_eq!(rows * cols, tp, "grid {rows}x{cols} != tp {tp}");
+                (rows.min(m), cols.min(n))
+            }
+            Layout::Fsdp2Dim0 => (tp.min(m), 1),
+        }
+    }
+
+    /// Does the optimizer need a gather across the TP group to see the full
+    /// matrix? (Everything except replicated/ZeRO-layer.)
+    pub fn needs_gather(&self) -> bool {
+        !matches!(self, Layout::Replicated | Layout::ZeroLayer)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mesh_indexing() {
+        let m = Mesh::new(2, 4).unwrap();
+        assert_eq!(m.world(), 8);
+        assert_eq!(m.rank(1, 2), 6);
+        assert_eq!(m.dp_index(6), 1);
+        assert_eq!(m.tp_index(6), 2);
+        assert_eq!(m.tp_group(5), vec![4, 5, 6, 7]);
+        assert_eq!(m.dp_group(5), vec![1, 5]);
+        assert!(Mesh::new(0, 2).is_err());
+    }
+
+    #[test]
+    fn groups_partition_world() {
+        let m = Mesh::new(3, 2).unwrap();
+        let mut seen = vec![false; m.world()];
+        for d in 0..m.dp {
+            for r in m.tp_group(m.rank(d, 0)) {
+                assert!(!seen[r]);
+                seen[r] = true;
+            }
+        }
+        assert!(seen.iter().all(|&x| x));
+    }
+
+    #[test]
+    fn block_grids() {
+        assert_eq!(Layout::TpColumn.block_grid(4, 128, 512), (1, 4));
+        assert_eq!(Layout::TpRow.block_grid(4, 128, 512), (4, 1));
+        assert_eq!(
+            Layout::TpGrid { rows: 2, cols: 4 }.block_grid(8, 64, 64),
+            (2, 4)
+        );
+        assert_eq!(Layout::Fsdp2Dim0.block_grid(8, 128, 64), (8, 1));
+        assert_eq!(Layout::ZeroLayer.block_grid(8, 128, 64), (1, 1));
+        // degree larger than dim clamps
+        assert_eq!(Layout::TpColumn.block_grid(16, 4, 8), (1, 8));
+    }
+
+    #[test]
+    fn parse_layouts() {
+        assert_eq!(Layout::parse("tp-column").unwrap(), Layout::TpColumn);
+        assert_eq!(
+            Layout::parse("tp-grid:2x4").unwrap(),
+            Layout::TpGrid { rows: 2, cols: 4 }
+        );
+        assert!(Layout::parse("nope").is_err());
+    }
+
+    #[test]
+    fn gather_requirements() {
+        assert!(Layout::TpColumn.needs_gather());
+        assert!(Layout::Fsdp2Dim0.needs_gather());
+        assert!(!Layout::ZeroLayer.needs_gather());
+        assert!(!Layout::Replicated.needs_gather());
+    }
+}

@@ -1,0 +1,244 @@
+//! Experiment metrics: named series, CSV/JSON export, loss/ppl summaries.
+//!
+//! Every bench emits its table/figure through this module so the artifacts
+//! under `results/` are uniform and EXPERIMENTS.md can quote them.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::utils::json::Json;
+
+/// One (step, value) series plus optional wall-clock per point.
+#[derive(Debug, Clone, Default)]
+pub struct Series {
+    pub steps: Vec<usize>,
+    pub values: Vec<f64>,
+    pub wall: Vec<f64>,
+}
+
+impl Series {
+    pub fn push(&mut self, step: usize, value: f64) {
+        self.steps.push(step);
+        self.values.push(value);
+    }
+
+    pub fn push_timed(&mut self, step: usize, value: f64, wall: f64) {
+        self.push(step, value);
+        self.wall.push(wall);
+    }
+
+    pub fn min(&self) -> f64 {
+        self.values.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn last(&self) -> Option<f64> {
+        self.values.last().copied()
+    }
+
+    /// First wall-clock time at which the series dips below `target`
+    /// (the paper's "time to reach a target ppl" metric in Fig 3).
+    pub fn time_to_reach(&self, target: f64) -> Option<f64> {
+        self.values
+            .iter()
+            .zip(&self.wall)
+            .find(|(v, _)| **v <= target)
+            .map(|(_, w)| *w)
+    }
+}
+
+/// A recorder holding named series for one experiment run.
+#[derive(Debug, Clone, Default)]
+pub struct Recorder {
+    pub series: BTreeMap<String, Series>,
+}
+
+impl Recorder {
+    pub fn new() -> Recorder {
+        Recorder::default()
+    }
+
+    pub fn push(&mut self, name: &str, step: usize, value: f64) {
+        self.series.entry(name.to_string()).or_default().push(step, value);
+    }
+
+    pub fn push_timed(&mut self, name: &str, step: usize, value: f64, wall: f64) {
+        self.series
+            .entry(name.to_string())
+            .or_default()
+            .push_timed(step, value, wall);
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Series> {
+        self.series.get(name)
+    }
+
+    /// CSV with one row per (series, step).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("series,step,value,wall_time\n");
+        for (name, s) in &self.series {
+            for (i, (&step, &v)) in
+                s.steps.iter().zip(&s.values).enumerate()
+            {
+                let w = s
+                    .wall
+                    .get(i)
+                    .map(|w| format!("{w}"))
+                    .unwrap_or_default();
+                let _ = writeln!(out, "{name},{step},{v},{w}");
+            }
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Obj(
+            self.series
+                .iter()
+                .map(|(name, s)| {
+                    (
+                        name.clone(),
+                        Json::obj(vec![
+                            (
+                                "steps",
+                                Json::Arr(
+                                    s.steps
+                                        .iter()
+                                        .map(|&x| Json::num(x as f64))
+                                        .collect(),
+                                ),
+                            ),
+                            (
+                                "values",
+                                Json::Arr(
+                                    s.values
+                                        .iter()
+                                        .map(|&x| Json::num(x))
+                                        .collect(),
+                                ),
+                            ),
+                            (
+                                "wall",
+                                Json::Arr(
+                                    s.wall
+                                        .iter()
+                                        .map(|&x| Json::num(x))
+                                        .collect(),
+                                ),
+                            ),
+                        ]),
+                    )
+                })
+                .collect(),
+        )
+    }
+
+    pub fn save_csv(&self, path: impl AsRef<Path>) -> Result<()> {
+        if let Some(dir) = path.as_ref().parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_csv())?;
+        Ok(())
+    }
+}
+
+/// loss -> perplexity.
+pub fn ppl(loss: f64) -> f64 {
+    loss.exp()
+}
+
+/// Render an aligned text table (benches print these next to the paper's).
+pub fn render_table(
+    title: &str,
+    header: &[&str],
+    rows: &[Vec<String>],
+) -> String {
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let mut out = format!("== {title} ==\n");
+    let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+        cells
+            .iter()
+            .zip(widths)
+            .map(|(c, w)| format!("{c:>w$}", w = w))
+            .collect::<Vec<_>>()
+            .join("  ")
+    };
+    let hdr: Vec<String> = header.iter().map(|s| s.to_string()).collect();
+    out.push_str(&fmt_row(&hdr, &widths));
+    out.push('\n');
+    out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+    out.push('\n');
+    for row in rows {
+        out.push_str(&fmt_row(row, &widths));
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn series_summaries() {
+        let mut s = Series::default();
+        s.push_timed(0, 5.0, 0.0);
+        s.push_timed(10, 3.0, 1.0);
+        s.push_timed(20, 4.0, 2.0);
+        assert_eq!(s.min(), 3.0);
+        assert_eq!(s.last(), Some(4.0));
+        assert_eq!(s.time_to_reach(3.5), Some(1.0));
+        assert_eq!(s.time_to_reach(1.0), None);
+    }
+
+    #[test]
+    fn csv_format() {
+        let mut r = Recorder::new();
+        r.push("loss", 0, 1.5);
+        r.push("loss", 1, 1.25);
+        let csv = r.to_csv();
+        assert!(csv.starts_with("series,step,value,wall_time\n"));
+        assert!(csv.contains("loss,1,1.25,"));
+    }
+
+    #[test]
+    fn json_roundtrips() {
+        let mut r = Recorder::new();
+        r.push_timed("a", 0, 2.0, 0.1);
+        let j = r.to_json();
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(
+            parsed.req("a").unwrap().req("values").unwrap().as_arr().unwrap()
+                [0],
+            Json::Num(2.0)
+        );
+    }
+
+    #[test]
+    fn ppl_conversion() {
+        assert!((ppl(0.0) - 1.0).abs() < 1e-12);
+        assert!((ppl(2.0) - 2.0f64.exp()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn table_alignment() {
+        let t = render_table(
+            "T",
+            &["method", "val"],
+            &[
+                vec!["Muon".into(), "15.33".into()],
+                vec!["MuonBP".into(), "15.12".into()],
+            ],
+        );
+        assert!(t.contains("== T =="));
+        assert!(t.contains("Muon"));
+        assert!(t.lines().count() >= 4);
+    }
+}

@@ -1,0 +1,131 @@
+//! Host-side model state: parameter initialization and classification for
+//! the artifact described by the manifest (the compute graph itself lives
+//! in the AOT'd HLO; rust owns the weights).
+
+use crate::optim::{ParamKind, ParamMeta};
+use crate::runtime::artifact::ConfigEntry;
+use crate::tensor::Tensor;
+use crate::utils::rng::Rng;
+
+/// Materialized model parameters in manifest (artifact-argument) order.
+pub struct ModelState {
+    pub params: Vec<Tensor>,
+    pub metas: Vec<ParamMeta>,
+}
+
+impl ModelState {
+    /// Initialize per the manifest's init scales: vectors to ones (norm
+    /// gains), everything else gaussian with the recorded std (output
+    /// projections are depth-scaled by aot.py already).
+    pub fn init(cfg: &ConfigEntry, seed: u64) -> ModelState {
+        let mut rng = Rng::new(seed);
+        let mut params = Vec::with_capacity(cfg.params.len());
+        for p in &cfg.params {
+            // Per-param fork: init of one tensor is independent of others'
+            // shapes (stable across config edits).
+            let mut sub = rng.fork(hash_name(&p.name));
+            let t = match p.kind {
+                ParamKind::Vector => {
+                    let mut t = Tensor::zeros(&p.shape);
+                    t.data_mut().fill(1.0);
+                    t
+                }
+                _ => Tensor::randn(&p.shape, p.init_scale as f32, &mut sub),
+            };
+            params.push(t);
+        }
+        ModelState { params, metas: cfg.metas() }
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.params.iter().map(|p| p.numel()).sum()
+    }
+
+    /// Mean Frobenius norm over matrix params (the paper's Fig 2/8 and
+    /// Table 6 "Param Norm" diagnostic).
+    pub fn mean_matrix_norm(&self) -> f64 {
+        let norms: Vec<f64> = self
+            .params
+            .iter()
+            .zip(&self.metas)
+            .filter(|(_, m)| m.kind == ParamKind::Matrix)
+            .map(|(p, _)| p.frobenius() as f64)
+            .collect();
+        if norms.is_empty() {
+            0.0
+        } else {
+            norms.iter().sum::<f64>() / norms.len() as f64
+        }
+    }
+}
+
+fn hash_name(name: &str) -> u64 {
+    // FNV-1a.
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifact::Manifest;
+
+    fn sample_cfg() -> ConfigEntry {
+        let text = r#"{
+          "format": "hlo-text", "ns_steps": 5,
+          "configs": {
+            "t": {
+              "config": {"name":"t","vocab":16,"d_model":8,"n_layers":1,
+                         "n_heads":2,"n_kv_heads":1,"d_ff":16,"seq_len":4,
+                         "batch":2},
+              "n_params": 0,
+              "params": [
+                {"name":"a.weight","shape":[16,8],"kind":"embed","init_scale":0.02},
+                {"name":"b.gain","shape":[8],"kind":"vector","init_scale":1.0},
+                {"name":"c.w","shape":[8,8],"kind":"matrix","init_scale":0.02}
+              ],
+              "train_hlo": "x", "eval_hlo": "y"
+            }
+          },
+          "ns_kernels": []
+        }"#;
+        Manifest::parse(text).unwrap().config("t").unwrap().clone()
+    }
+
+    #[test]
+    fn init_shapes_and_kinds() {
+        let cfg = sample_cfg();
+        let st = ModelState::init(&cfg, 0);
+        assert_eq!(st.params.len(), 3);
+        assert_eq!(st.params[0].shape(), &[16, 8]);
+        // vector initialized to ones
+        assert!(st.params[1].data().iter().all(|&x| x == 1.0));
+        // gaussian scale roughly right
+        assert!((st.params[2].rms() - 0.02).abs() < 0.02);
+        assert_eq!(st.n_params(), 16 * 8 + 8 + 64);
+    }
+
+    #[test]
+    fn deterministic_and_name_stable() {
+        let cfg = sample_cfg();
+        let a = ModelState::init(&cfg, 7);
+        let b = ModelState::init(&cfg, 7);
+        for (x, y) in a.params.iter().zip(&b.params) {
+            assert_eq!(x, y);
+        }
+        let c = ModelState::init(&cfg, 8);
+        assert_ne!(a.params[0], c.params[0]);
+    }
+
+    #[test]
+    fn matrix_norm_counts_only_matrices() {
+        let cfg = sample_cfg();
+        let st = ModelState::init(&cfg, 0);
+        let want = st.params[2].frobenius() as f64;
+        assert!((st.mean_matrix_norm() - want).abs() < 1e-9);
+    }
+}

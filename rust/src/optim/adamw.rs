@@ -1,0 +1,142 @@
+//! AdamW (Loshchilov & Hutter 2019) — the coordinate-wise baseline.
+//!
+//! Decoupled weight decay, bias-corrected moments. This is also the inner
+//! optimizer the Muon family delegates embeddings / 1-D params to (§4.1).
+
+use crate::optim::{Optimizer, ParamMeta};
+use crate::tensor::Tensor;
+
+/// AdamW over all parameters it is given.
+pub struct AdamW {
+    m: Vec<Tensor>,
+    v: Vec<Tensor>,
+    pub beta1: f64,
+    pub beta2: f64,
+    pub eps: f64,
+    pub weight_decay: f64,
+    t: u64,
+}
+
+impl AdamW {
+    pub fn new(metas: &[ParamMeta]) -> AdamW {
+        AdamW::with_hyper(metas, 0.9, 0.95, 1e-8, 0.1)
+    }
+
+    pub fn with_hyper(
+        metas: &[ParamMeta],
+        beta1: f64,
+        beta2: f64,
+        eps: f64,
+        weight_decay: f64,
+    ) -> AdamW {
+        AdamW {
+            m: metas.iter().map(|p| Tensor::zeros(&p.shape)).collect(),
+            v: metas.iter().map(|p| Tensor::zeros(&p.shape)).collect(),
+            beta1,
+            beta2,
+            eps,
+            weight_decay,
+            t: 0,
+        }
+    }
+
+    /// Update a single parameter by index (used by the Muon family to run
+    /// AdamW on its non-matrix subset while keeping one time counter).
+    pub fn step_param(
+        &mut self,
+        idx: usize,
+        param: &mut Tensor,
+        grad: &Tensor,
+        lr: f64,
+        t: u64,
+    ) {
+        let b1 = self.beta1;
+        let b2 = self.beta2;
+        let bc1 = 1.0 - b1.powi(t as i32);
+        let bc2 = 1.0 - b2.powi(t as i32);
+        let m = &mut self.m[idx];
+        let v = &mut self.v[idx];
+        m.scale_add(b1 as f32, (1.0 - b1) as f32, grad);
+        // v = b2*v + (1-b2)*g².
+        for (vi, gi) in v.data_mut().iter_mut().zip(grad.data()) {
+            *vi = (b2 * *vi as f64 + (1.0 - b2) * (*gi as f64) * (*gi as f64))
+                as f32;
+        }
+        let decay = (1.0 - lr * self.weight_decay) as f32;
+        for ((p, mi), vi) in
+            param.data_mut().iter_mut().zip(m.data()).zip(v.data())
+        {
+            let mhat = *mi as f64 / bc1;
+            let vhat = *vi as f64 / bc2;
+            *p = *p * decay - (lr * mhat / (vhat.sqrt() + self.eps)) as f32;
+        }
+    }
+}
+
+impl Optimizer for AdamW {
+    fn step(&mut self, params: &mut [Tensor], grads: &[Tensor], lr: f64) {
+        assert_eq!(params.len(), grads.len());
+        self.t += 1;
+        let t = self.t;
+        for i in 0..params.len() {
+            self.step_param(i, &mut params[i], &grads[i], lr, t);
+        }
+    }
+
+    fn name(&self) -> String {
+        "AdamW".into()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::testutil::{drive, Quad};
+    use crate::optim::ParamKind;
+
+    #[test]
+    fn converges_on_quadratic() {
+        let quad = Quad::new(1);
+        let mut opt = AdamW::new(&quad.metas);
+        opt.weight_decay = 0.0;
+        let (first, last) = drive(&mut opt, &quad, 300, 0.05);
+        assert!(last < first * 0.01, "first {first} last {last}");
+    }
+
+    #[test]
+    fn first_step_magnitude_is_lr() {
+        // With bias correction, |Δ| ≈ lr on step 1 (sign-descent-like).
+        let metas = [ParamMeta::new("w", &[4, 4], ParamKind::Matrix)];
+        let mut opt = AdamW::with_hyper(&metas, 0.9, 0.95, 1e-8, 0.0);
+        let mut p = vec![Tensor::zeros(&[4, 4])];
+        let mut g = Tensor::zeros(&[4, 4]);
+        g.data_mut().fill(3.0);
+        opt.step(&mut p, &[g], 0.01);
+        for &x in p[0].data() {
+            assert!((x + 0.01).abs() < 1e-4, "{x}");
+        }
+    }
+
+    #[test]
+    fn weight_decay_shrinks_params() {
+        let metas = [ParamMeta::new("w", &[2], ParamKind::Vector)];
+        let mut opt = AdamW::with_hyper(&metas, 0.9, 0.95, 1e-8, 0.5);
+        let mut p =
+            vec![Tensor::from_vec(&[2], vec![1.0, -1.0]).unwrap()];
+        let g = Tensor::zeros(&[2]);
+        for _ in 0..10 {
+            opt.step(&mut p, std::slice::from_ref(&g), 0.1);
+        }
+        assert!(p[0].data()[0] < 1.0 && p[0].data()[0] > 0.0);
+    }
+
+    #[test]
+    fn deterministic() {
+        let quad = Quad::new(2);
+        let mut a = AdamW::new(&quad.metas);
+        let mut b = AdamW::new(&quad.metas);
+        let (_, la) = drive(&mut a, &quad, 20, 0.01);
+        let (_, lb) = drive(&mut b, &quad, 20, 0.01);
+        assert_eq!(la, lb);
+    }
+}

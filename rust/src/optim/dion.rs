@@ -1,0 +1,194 @@
+//! Dion (Ahn et al. 2025) — distributed orthonormalized updates via
+//! amortized rank-r power iteration with error feedback.
+//!
+//! Per matrix it keeps the momentum buffer M and a right basis Q (n x r).
+//! One step:
+//!   B = M + G
+//!   P = orthonormalize(B Q)            (m x r, one power-iteration step)
+//!   R = Bᵀ P                           (n x r)
+//!   M = B − (1−μ) P Rᵀ                 (error feedback: the captured
+//!                                       component decays, residual stays)
+//!   Q = column-normalize(R)
+//!   Δ = P · colnorm(R)ᵀ · rms_scale    (orthonormal low-rank update)
+//!
+//! Communication (Appendix C): only the skinny factors P/R move across the
+//! mesh — O((m+n)r) vs Muon's O(mn) — which is what `last_comm_bytes`
+//! reports. Non-matrix params are delegated to AdamW, matching the paper's
+//! experimental setup (Lion is available via `optim::Lion` as well).
+
+use crate::linalg::matmul::{matmul, matmul_tn};
+use crate::linalg::qr::qr_thin;
+use crate::optim::adamw::AdamW;
+use crate::optim::scaling::rms_match_scale;
+use crate::optim::{Optimizer, ParamKind, ParamMeta};
+use crate::tensor::Tensor;
+use crate::utils::rng::Rng;
+
+pub struct Dion {
+    momenta: Vec<Tensor>,
+    /// Right bases Q (n x r) for matrix params.
+    bases: Vec<Option<Tensor>>,
+    adam: AdamW,
+    pub rank: usize,
+    pub momentum: f64,
+    pub rms_beta: f64,
+    pub weight_decay: f64,
+    t: u64,
+    last_comm: u64,
+}
+
+impl Dion {
+    pub fn new(metas: &[ParamMeta], rank: usize) -> Dion {
+        let mut rng = Rng::new(0xD10);
+        let bases = metas
+            .iter()
+            .map(|p| {
+                if p.kind == ParamKind::Matrix {
+                    let n = p.shape[1];
+                    let r = rank.min(n).min(p.shape[0]);
+                    Some(qr_thin(&Tensor::randn(&[n, r], 1.0, &mut rng)))
+                } else {
+                    None
+                }
+            })
+            .collect();
+        Dion {
+            momenta: metas.iter().map(|p| Tensor::zeros(&p.shape)).collect(),
+            bases,
+            adam: AdamW::new(metas),
+            rank,
+            momentum: 0.95,
+            rms_beta: 0.2,
+            weight_decay: 0.1,
+            t: 0,
+            last_comm: 0,
+        }
+    }
+}
+
+/// Normalize columns of a (n x r) matrix to unit l2 norm (zero-safe).
+fn colnorm(t: &Tensor) -> Tensor {
+    let (n, r) = (t.m(), t.n());
+    let mut out = t.clone();
+    for j in 0..r {
+        let norm: f64 = (0..n)
+            .map(|i| (t.at(i, j) as f64).powi(2))
+            .sum::<f64>()
+            .sqrt();
+        if norm > 1e-12 {
+            for i in 0..n {
+                out.set(i, j, (t.at(i, j) as f64 / norm) as f32);
+            }
+        }
+    }
+    out
+}
+
+impl Optimizer for Dion {
+    fn step(&mut self, params: &mut [Tensor], grads: &[Tensor], lr: f64) {
+        self.t += 1;
+        let mut comm = 0u64;
+        for i in 0..params.len() {
+            match &mut self.bases[i] {
+                Some(q) => {
+                    let m_buf = &mut self.momenta[i];
+                    // B = M + G
+                    m_buf.axpy(1.0, &grads[i]);
+                    // P = orth(B Q)
+                    let p_fac = qr_thin(&matmul(m_buf, q));
+                    // R = Bᵀ P
+                    let r_fac = matmul_tn(m_buf, &p_fac);
+                    // Error feedback: M = B − (1−μ) P Rᵀ
+                    let capture = matmul(&p_fac, &r_fac.transpose());
+                    m_buf.axpy(-(1.0 - self.momentum) as f32, &capture);
+                    // Q = colnorm(R)
+                    let qn = colnorm(&r_fac);
+                    // Δ = P qnᵀ, RMS-matched like the Muon family so the
+                    // same master lr transfers (paper §4.1 uses lr=0.02 for
+                    // all orthonormal methods).
+                    let mut delta = matmul(&p_fac, &qn.transpose());
+                    let s = rms_match_scale(
+                        params[i].m(),
+                        params[i].n(),
+                        self.rms_beta,
+                    );
+                    delta.scale(s as f32);
+                    let decay = (1.0 - lr * self.weight_decay) as f32;
+                    params[i].scale(decay);
+                    params[i].axpy(-(lr as f32), &delta);
+                    *q = qn;
+                    // O((m+n)r) factor exchange (Appendix C).
+                    let r = p_fac.n() as u64;
+                    comm += (params[i].m() as u64 + params[i].n() as u64)
+                        * r
+                        * 4;
+                }
+                None => {
+                    let t = self.t;
+                    self.adam.step_param(
+                        i,
+                        &mut params[i],
+                        &grads[i],
+                        lr,
+                        t,
+                    );
+                }
+            }
+        }
+        self.last_comm = comm;
+    }
+
+    fn name(&self) -> String {
+        format!("Dion(r={})", self.rank)
+    }
+
+    fn last_comm_bytes(&self) -> u64 {
+        self.last_comm
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::testutil::{drive, Quad};
+
+    #[test]
+    fn converges_on_quadratic() {
+        let quad = Quad::new(6);
+        let mut opt = Dion::new(&quad.metas, 8);
+        opt.weight_decay = 0.0;
+        let (first, last) = drive(&mut opt, &quad, 250, 0.05);
+        assert!(last < first * 0.2, "{first} -> {last}");
+    }
+
+    #[test]
+    fn low_rank_comm_is_factor_sized() {
+        let quad = Quad::new(6);
+        let mut opt = Dion::new(&quad.metas, 4);
+        let mut params = quad.init(1);
+        let g = quad.grads(&params);
+        opt.step(&mut params, &g, 0.01);
+        // matrices 8x16 and 16x8, rank 4: (8+16)*4*4 bytes each.
+        assert_eq!(opt.last_comm_bytes(), 2 * (8 + 16) * 4 * 4);
+        // Far less than Muon's full gather+scatter (2*mn*4 each).
+        assert!(opt.last_comm_bytes() < 2 * 2 * 128 * 4);
+    }
+
+    #[test]
+    fn rank_clamps_to_dims() {
+        let metas = [ParamMeta::new("w", &[4, 6], ParamKind::Matrix)];
+        let opt = Dion::new(&metas, 64);
+        let q = opt.bases[0].as_ref().unwrap();
+        assert_eq!(q.shape(), &[6, 4]); // r clamped to min(m, n) = 4
+    }
+
+    #[test]
+    fn colnorm_unit_columns() {
+        let t =
+            Tensor::from_vec(&[2, 2], vec![3.0, 0.0, 4.0, 0.0]).unwrap();
+        let c = colnorm(&t);
+        assert!((c.at(0, 0) - 0.6).abs() < 1e-6);
+        assert!((c.at(1, 0) - 0.8).abs() < 1e-6);
+        assert_eq!(c.at(0, 1), 0.0); // zero column preserved
+    }
+}

@@ -1,0 +1,88 @@
+//! Lion (Chen et al. 2023): sign-descent with interpolated momentum. Used
+//! as the scalar optimizer in the Dion-codebase comparison (paper §4.1).
+
+use crate::optim::{Optimizer, ParamMeta};
+use crate::tensor::Tensor;
+
+pub struct Lion {
+    m: Vec<Tensor>,
+    pub beta1: f64,
+    pub beta2: f64,
+    pub weight_decay: f64,
+}
+
+impl Lion {
+    pub fn new(metas: &[ParamMeta]) -> Lion {
+        Lion {
+            m: metas.iter().map(|p| Tensor::zeros(&p.shape)).collect(),
+            beta1: 0.9,
+            beta2: 0.99,
+            weight_decay: 0.1,
+        }
+    }
+}
+
+impl Optimizer for Lion {
+    fn step(&mut self, params: &mut [Tensor], grads: &[Tensor], lr: f64) {
+        assert_eq!(params.len(), grads.len());
+        for i in 0..params.len() {
+            let m = &mut self.m[i];
+            let decay = (1.0 - lr * self.weight_decay) as f32;
+            // c = β1·m + (1-β1)·g ; update = sign(c)
+            for ((p, mi), gi) in params[i]
+                .data_mut()
+                .iter_mut()
+                .zip(m.data_mut())
+                .zip(grads[i].data())
+            {
+                let c = self.beta1 as f32 * *mi
+                    + (1.0 - self.beta1 as f32) * *gi;
+                // sign(0) = 0 (f32::signum(0.0) is 1.0, which would drift).
+                let sign = if c == 0.0 { 0.0 } else { c.signum() };
+                *p = *p * decay - lr as f32 * sign;
+                // m = β2·m + (1-β2)·g
+                *mi = self.beta2 as f32 * *mi
+                    + (1.0 - self.beta2 as f32) * *gi;
+            }
+        }
+    }
+
+    fn name(&self) -> String {
+        "Lion".into()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::testutil::{drive, Quad};
+
+    #[test]
+    fn converges_on_quadratic() {
+        let quad = Quad::new(4);
+        let mut opt = Lion::new(&quad.metas);
+        opt.weight_decay = 0.0;
+        let (first, last) = drive(&mut opt, &quad, 400, 0.01);
+        assert!(last < first * 0.05, "{first} -> {last}");
+    }
+
+    #[test]
+    fn updates_are_sign_scaled() {
+        let metas = [super::ParamMeta::new(
+            "w",
+            &[4],
+            crate::optim::ParamKind::Vector,
+        )];
+        let mut opt = Lion::new(&metas);
+        opt.weight_decay = 0.0;
+        let mut p = vec![Tensor::zeros(&[4])];
+        let g =
+            Tensor::from_vec(&[4], vec![5.0, -0.1, 0.0, 2.0]).unwrap();
+        opt.step(&mut p, std::slice::from_ref(&g), 0.01);
+        let d = p[0].data();
+        assert!((d[0] + 0.01).abs() < 1e-6);
+        assert!((d[1] - 0.01).abs() < 1e-6);
+        assert_eq!(d[2], 0.0);
+        assert!((d[3] + 0.01).abs() < 1e-6);
+    }
+}

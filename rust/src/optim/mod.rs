@@ -1,0 +1,175 @@
+//! Optimizer zoo: the paper's method (MuonBP) plus every baseline it is
+//! evaluated against — Muon (P=1), BlockMuon (P=∞), AdamW, Lion, SGD-M and
+//! Dion — behind one `Optimizer` trait so the trainer and benches swap them
+//! freely.
+//!
+//! Following the paper's setup, hidden 2-D matrices get the Muon family
+//! while embeddings / 1-D params are always handled by AdamW (§4.1), with
+//! RMS-norm matching for learning-rate transfer (§3.2, Liu et al. 2025).
+
+pub mod adamw;
+pub mod dion;
+pub mod lion;
+pub mod muon;
+pub mod schedule;
+pub mod scaling;
+pub mod sgdm;
+
+use crate::tensor::Tensor;
+
+pub use adamw::AdamW;
+pub use dion::Dion;
+pub use lion::Lion;
+pub use muon::{Muon, MuonCfg, Period};
+pub use schedule::Schedule;
+pub use scaling::{clip_global_norm, rms_match_scale};
+pub use sgdm::SgdM;
+
+/// Parameter role, mirrored from the python manifest's `kind`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ParamKind {
+    /// Hidden 2-D weight — orthogonalized (Muon scope).
+    Matrix,
+    /// Embedding / LM head — AdamW scope (paper §4.1).
+    Embed,
+    /// 1-D gains etc. — AdamW scope.
+    Vector,
+}
+
+impl ParamKind {
+    pub fn parse(s: &str) -> anyhow::Result<ParamKind> {
+        Ok(match s {
+            "matrix" => ParamKind::Matrix,
+            "embed" => ParamKind::Embed,
+            "vector" => ParamKind::Vector,
+            other => anyhow::bail!("unknown param kind '{other}'"),
+        })
+    }
+}
+
+/// Static description of one parameter (order matches the artifact args).
+#[derive(Debug, Clone)]
+pub struct ParamMeta {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub kind: ParamKind,
+}
+
+impl ParamMeta {
+    pub fn new(name: &str, shape: &[usize], kind: ParamKind) -> ParamMeta {
+        ParamMeta { name: name.to_string(), shape: shape.to_vec(), kind }
+    }
+}
+
+/// A full-model optimizer: one `step` consumes gradients for every param.
+pub trait Optimizer: Send {
+    /// Apply one update. `lr` is the master learning rate for this step
+    /// (schedules are applied by the caller).
+    fn step(&mut self, params: &mut [Tensor], grads: &[Tensor], lr: f64);
+
+    fn name(&self) -> String;
+
+    /// Optimizer-induced model-parallel communication on the *last* step,
+    /// in bytes (0 for coordinate-wise methods; the reference single-process
+    /// Muon variants report what the distributed run would move).
+    fn last_comm_bytes(&self) -> u64 {
+        0
+    }
+}
+
+/// Build an optimizer by name (bench/CLI convenience).
+pub fn by_name(
+    name: &str,
+    metas: &[ParamMeta],
+    tp: usize,
+) -> anyhow::Result<Box<dyn Optimizer>> {
+    Ok(match name {
+        "adamw" => Box::new(AdamW::new(metas)),
+        "lion" => Box::new(Lion::new(metas)),
+        "sgdm" => Box::new(SgdM::new(metas, 0.9)),
+        "muon" => Box::new(Muon::full(metas, tp)),
+        "blockmuon" => Box::new(Muon::block(metas, tp)),
+        "muonbp" => Box::new(Muon::block_periodic(metas, tp, 5)),
+        "dion" => Box::new(Dion::new(metas, 64)),
+        other => anyhow::bail!("unknown optimizer '{other}'"),
+    })
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::*;
+    use crate::utils::rng::Rng;
+
+    /// A tiny synthetic "model": quadratic loss 0.5||X - X*||² per param.
+    pub struct Quad {
+        pub targets: Vec<Tensor>,
+        pub metas: Vec<ParamMeta>,
+    }
+
+    impl Quad {
+        pub fn new(seed: u64) -> Quad {
+            let mut rng = Rng::new(seed);
+            let metas = vec![
+                ParamMeta::new("w1", &[8, 16], ParamKind::Matrix),
+                ParamMeta::new("w2", &[16, 8], ParamKind::Matrix),
+                ParamMeta::new("emb", &[12, 8], ParamKind::Embed),
+                ParamMeta::new("g", &[8], ParamKind::Vector),
+            ];
+            let targets = metas
+                .iter()
+                .map(|m| Tensor::randn(&m.shape, 1.0, &mut rng))
+                .collect();
+            Quad { targets, metas }
+        }
+
+        pub fn init(&self, seed: u64) -> Vec<Tensor> {
+            let mut rng = Rng::new(seed);
+            self.metas
+                .iter()
+                .map(|m| Tensor::randn(&m.shape, 1.0, &mut rng))
+                .collect()
+        }
+
+        pub fn loss(&self, params: &[Tensor]) -> f64 {
+            params
+                .iter()
+                .zip(&self.targets)
+                .map(|(p, t)| {
+                    p.data()
+                        .iter()
+                        .zip(t.data())
+                        .map(|(a, b)| 0.5 * ((a - b) as f64).powi(2))
+                        .sum::<f64>()
+                })
+                .sum()
+        }
+
+        pub fn grads(&self, params: &[Tensor]) -> Vec<Tensor> {
+            params
+                .iter()
+                .zip(&self.targets)
+                .map(|(p, t)| {
+                    let mut g = p.clone();
+                    g.axpy(-1.0, t);
+                    g
+                })
+                .collect()
+        }
+    }
+
+    /// Run `steps` optimizer steps on the quadratic; return (first, last) loss.
+    pub fn drive(
+        opt: &mut dyn Optimizer,
+        quad: &Quad,
+        steps: usize,
+        lr: f64,
+    ) -> (f64, f64) {
+        let mut params = quad.init(7);
+        let first = quad.loss(&params);
+        for _ in 0..steps {
+            let grads = quad.grads(&params);
+            opt.step(&mut params, &grads, lr);
+        }
+        (first, quad.loss(&params))
+    }
+}

@@ -1,0 +1,78 @@
+//! Learning-rate transfer and gradient hygiene.
+//!
+//! `rms_match_scale` is the AdamW RMS-matching rule (Liu et al. 2025,
+//! paper §3.2): orthogonalized updates are scaled by β·√(max(m, n)) so their
+//! RMS matches an AdamW update of magnitude β, letting the AdamW learning
+//! rate transfer. MuonBP applies it with *block* dims on block steps and
+//! *full* dims on full steps.
+
+use crate::tensor::Tensor;
+
+/// β·√(max(m, n)) — update scale for an (m x n) orthogonalized matrix.
+///
+/// An m x n orthonormal-ish matrix (m ≤ n) has ||U||_F² = m, so
+/// RMS(U) = √(m/(mn)) = 1/√n = 1/√max(m,n); multiplying by β·√max(m,n)
+/// makes RMS(update) = β.
+pub fn rms_match_scale(m: usize, n: usize, beta: f64) -> f64 {
+    beta * (m.max(n) as f64).sqrt()
+}
+
+/// Clip a set of gradients to a global l2 norm (the paper clips AdamW-side
+/// params at 1.0). Returns the pre-clip norm.
+pub fn clip_global_norm(grads: &mut [&mut Tensor], max_norm: f64) -> f64 {
+    let total: f64 = grads
+        .iter()
+        .map(|g| {
+            g.data().iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>()
+        })
+        .sum();
+    let norm = total.sqrt();
+    if norm > max_norm && norm > 0.0 {
+        let s = (max_norm / norm) as f32;
+        for g in grads.iter_mut() {
+            g.scale(s);
+        }
+    }
+    norm
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::newton_schulz::{newton_schulz, NsCoeffs};
+    use crate::utils::rng::Rng;
+
+    #[test]
+    fn scale_formula() {
+        assert_eq!(rms_match_scale(4, 16, 0.2), 0.2 * 4.0);
+        assert_eq!(rms_match_scale(16, 4, 0.2), 0.2 * 4.0);
+    }
+
+    #[test]
+    fn scaled_orth_update_has_rms_beta() {
+        let mut rng = Rng::new(3);
+        let g = Tensor::randn(&[64, 256], 1.0, &mut rng);
+        let mut u = newton_schulz(&g, 8, NsCoeffs::jordan());
+        u.scale(rms_match_scale(64, 256, 0.2) as f32);
+        let rms = u.rms() as f64;
+        assert!((rms - 0.2).abs() < 0.05, "rms {rms}");
+    }
+
+    #[test]
+    fn clip_reduces_large_grads() {
+        let mut a = Tensor::from_vec(&[2], vec![3.0, 0.0]).unwrap();
+        let mut b = Tensor::from_vec(&[2], vec![0.0, 4.0]).unwrap();
+        let pre = clip_global_norm(&mut [&mut a, &mut b], 1.0);
+        assert!((pre - 5.0).abs() < 1e-6);
+        assert!((a.data()[0] - 0.6).abs() < 1e-6);
+        assert!((b.data()[1] - 0.8).abs() < 1e-6);
+    }
+
+    #[test]
+    fn clip_noop_below_threshold() {
+        let mut a = Tensor::from_vec(&[2], vec![0.3, 0.4]).unwrap();
+        let pre = clip_global_norm(&mut [&mut a], 1.0);
+        assert!((pre - 0.5).abs() < 1e-6);
+        assert_eq!(a.data(), &[0.3, 0.4]);
+    }
+}

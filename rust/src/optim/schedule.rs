@@ -1,0 +1,102 @@
+//! Learning-rate schedules used in the paper's experiments: cosine decay
+//! (960M/1.2B, §B), Warmup-Stable-Decay (8B and the Dion-codebase 160M runs
+//! with 20% cooldown), linear, constant.
+
+/// A learning-rate schedule: returns the multiplier at step t of `total`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Schedule {
+    Constant,
+    /// Cosine decay from 1 to `floor` over all steps (no warmup, §B).
+    Cosine { floor: f64 },
+    /// Warmup-Stable-Decay: optional warmup, stable 1.0, linear decay to
+    /// `floor` over the last `decay_frac` of training.
+    Wsd { warmup_frac: f64, decay_frac: f64, floor: f64 },
+    /// Linear from 1 to `floor`.
+    Linear { floor: f64 },
+}
+
+impl Schedule {
+    /// Paper 8B setting: WSD with linear decay (no warmup).
+    pub fn paper_wsd() -> Schedule {
+        Schedule::Wsd { warmup_frac: 0.0, decay_frac: 0.2, floor: 0.035 }
+    }
+
+    /// Multiplier in [floor, 1] at step `t` (0-based) of `total`.
+    pub fn at(&self, t: usize, total: usize) -> f64 {
+        let total = total.max(1);
+        let x = (t as f64 / total as f64).clamp(0.0, 1.0);
+        match *self {
+            Schedule::Constant => 1.0,
+            Schedule::Cosine { floor } => {
+                floor
+                    + (1.0 - floor)
+                        * 0.5
+                        * (1.0 + (std::f64::consts::PI * x).cos())
+            }
+            Schedule::Wsd { warmup_frac, decay_frac, floor } => {
+                if x < warmup_frac {
+                    (x / warmup_frac).max(1e-8)
+                } else if x < 1.0 - decay_frac {
+                    1.0
+                } else {
+                    let d = (x - (1.0 - decay_frac)) / decay_frac.max(1e-12);
+                    1.0 + (floor - 1.0) * d.min(1.0)
+                }
+            }
+            Schedule::Linear { floor } => 1.0 + (floor - 1.0) * x,
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<Schedule> {
+        Ok(match s {
+            "constant" => Schedule::Constant,
+            "cosine" => Schedule::Cosine { floor: 0.0 },
+            "wsd" => Schedule::paper_wsd(),
+            "linear" => Schedule::Linear { floor: 0.0 },
+            other => anyhow::bail!("unknown schedule '{other}'"),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cosine_endpoints() {
+        let s = Schedule::Cosine { floor: 0.1 };
+        assert!((s.at(0, 100) - 1.0).abs() < 1e-9);
+        assert!((s.at(100, 100) - 0.1).abs() < 1e-9);
+        assert!(s.at(50, 100) > 0.1 && s.at(50, 100) < 1.0);
+    }
+
+    #[test]
+    fn wsd_phases() {
+        let s = Schedule::Wsd { warmup_frac: 0.1, decay_frac: 0.2, floor: 0.0 };
+        assert!(s.at(5, 100) < 1.0); // warming up
+        assert_eq!(s.at(50, 100), 1.0); // stable
+        assert!(s.at(90, 100) < 1.0); // decaying
+        assert!(s.at(99, 100) < 0.1);
+    }
+
+    #[test]
+    fn monotone_nonincreasing_after_warmup() {
+        for s in [
+            Schedule::Cosine { floor: 0.0 },
+            Schedule::paper_wsd(),
+            Schedule::Linear { floor: 0.0 },
+        ] {
+            let mut prev = f64::INFINITY;
+            for t in 0..200 {
+                let v = s.at(t, 200);
+                assert!(v <= prev + 1e-12, "{s:?} rose at {t}");
+                prev = v;
+            }
+        }
+    }
+
+    #[test]
+    fn constant_is_one() {
+        assert_eq!(Schedule::Constant.at(37, 100), 1.0);
+    }
+}

@@ -1,0 +1,59 @@
+//! SGD with momentum — the 2·mn-FLOP floor of the paper's §2.2 cost table.
+
+use crate::optim::{Optimizer, ParamMeta};
+use crate::tensor::Tensor;
+
+pub struct SgdM {
+    m: Vec<Tensor>,
+    pub momentum: f64,
+}
+
+impl SgdM {
+    pub fn new(metas: &[ParamMeta], momentum: f64) -> SgdM {
+        SgdM {
+            m: metas.iter().map(|p| Tensor::zeros(&p.shape)).collect(),
+            momentum,
+        }
+    }
+}
+
+impl Optimizer for SgdM {
+    fn step(&mut self, params: &mut [Tensor], grads: &[Tensor], lr: f64) {
+        for i in 0..params.len() {
+            self.m[i].scale_add(self.momentum as f32, 1.0, &grads[i]);
+            params[i].axpy(-(lr as f32), &self.m[i]);
+        }
+    }
+
+    fn name(&self) -> String {
+        "SGD-M".into()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::testutil::{drive, Quad};
+
+    #[test]
+    fn converges_on_quadratic() {
+        let quad = Quad::new(5);
+        let mut opt = SgdM::new(&quad.metas, 0.9);
+        let (first, last) = drive(&mut opt, &quad, 200, 0.02);
+        assert!(last < first * 0.01, "{first} -> {last}");
+    }
+
+    #[test]
+    fn zero_momentum_is_plain_sgd() {
+        let metas = [ParamMeta::new(
+            "w",
+            &[2],
+            crate::optim::ParamKind::Vector,
+        )];
+        let mut opt = SgdM::new(&metas, 0.0);
+        let mut p = vec![Tensor::from_vec(&[2], vec![1.0, 2.0]).unwrap()];
+        let g = Tensor::from_vec(&[2], vec![10.0, -10.0]).unwrap();
+        opt.step(&mut p, std::slice::from_ref(&g), 0.01);
+        assert_eq!(p[0].data(), &[0.9, 2.1]);
+    }
+}

@@ -1,0 +1,202 @@
+//! artifacts/manifest.json parsing — the contract between `aot.py` (which
+//! owns parameter ordering and shapes) and the rust side.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+use crate::optim::{ParamKind, ParamMeta};
+use crate::utils::json::Json;
+
+/// One parameter entry (ordered exactly as the artifact's arguments).
+#[derive(Debug, Clone)]
+pub struct ParamEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub kind: ParamKind,
+    pub init_scale: f64,
+}
+
+/// One model config's artifact set.
+#[derive(Debug, Clone)]
+pub struct ConfigEntry {
+    pub name: String,
+    pub n_params: usize,
+    pub params: Vec<ParamEntry>,
+    pub train_hlo: String,
+    pub eval_hlo: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub d_ff: usize,
+    pub seq_len: usize,
+    pub batch: usize,
+}
+
+impl ConfigEntry {
+    pub fn metas(&self) -> Vec<ParamMeta> {
+        self.params
+            .iter()
+            .map(|p| ParamMeta::new(&p.name, &p.shape, p.kind))
+            .collect()
+    }
+
+    /// Tokens per train step (batch x (seq+1) fed, batch x seq predicted).
+    pub fn tokens_per_step(&self) -> usize {
+        self.batch * self.seq_len
+    }
+}
+
+/// A lowered Newton–Schulz kernel artifact.
+#[derive(Debug, Clone)]
+pub struct NsKernelEntry {
+    pub shape: (usize, usize),
+    pub steps: usize,
+    pub hlo: String,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub configs: Vec<ConfigEntry>,
+    pub ns_kernels: Vec<NsKernelEntry>,
+    pub ns_steps: usize,
+}
+
+impl Manifest {
+    pub fn load(path: impl AsRef<Path>) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)?;
+        Manifest::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let root = Json::parse(text)?;
+        if root.req("format")?.as_str()? != "hlo-text" {
+            anyhow::bail!("unsupported artifact format");
+        }
+        let ns_steps = root.req("ns_steps")?.as_usize()?;
+        let mut configs = Vec::new();
+        for (name, entry) in root.req("configs")?.as_obj()? {
+            let cfg = entry.req("config")?;
+            let mut params = Vec::new();
+            for p in entry.req("params")?.as_arr()? {
+                params.push(ParamEntry {
+                    name: p.req("name")?.as_str()?.to_string(),
+                    shape: p
+                        .req("shape")?
+                        .as_arr()?
+                        .iter()
+                        .map(|d| d.as_usize())
+                        .collect::<Result<_>>()?,
+                    kind: ParamKind::parse(p.req("kind")?.as_str()?)?,
+                    init_scale: p.req("init_scale")?.as_f64()?,
+                });
+            }
+            configs.push(ConfigEntry {
+                name: name.clone(),
+                n_params: entry.req("n_params")?.as_usize()?,
+                params,
+                train_hlo: entry.req("train_hlo")?.as_str()?.to_string(),
+                eval_hlo: entry.req("eval_hlo")?.as_str()?.to_string(),
+                vocab: cfg.req("vocab")?.as_usize()?,
+                d_model: cfg.req("d_model")?.as_usize()?,
+                n_layers: cfg.req("n_layers")?.as_usize()?,
+                n_heads: cfg.req("n_heads")?.as_usize()?,
+                n_kv_heads: cfg.req("n_kv_heads")?.as_usize()?,
+                d_ff: cfg.req("d_ff")?.as_usize()?,
+                seq_len: cfg.req("seq_len")?.as_usize()?,
+                batch: cfg.req("batch")?.as_usize()?,
+            });
+        }
+        let mut ns_kernels = Vec::new();
+        for k in root.req("ns_kernels")?.as_arr()? {
+            let dims = k.req("shape")?.as_arr()?;
+            ns_kernels.push(NsKernelEntry {
+                shape: (dims[0].as_usize()?, dims[1].as_usize()?),
+                steps: k.req("steps")?.as_usize()?,
+                hlo: k.req("hlo")?.as_str()?.to_string(),
+            });
+        }
+        Ok(Manifest { configs, ns_kernels, ns_steps })
+    }
+
+    pub fn config(&self, name: &str) -> Result<&ConfigEntry> {
+        self.configs
+            .iter()
+            .find(|c| c.name == name)
+            .ok_or_else(|| anyhow!("no config '{name}' in manifest"))
+    }
+
+    pub fn ns_kernel(&self, m: usize, n: usize) -> Option<&NsKernelEntry> {
+        self.ns_kernels.iter().find(|k| k.shape == (m, n))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "format": "hlo-text", "ns_steps": 5,
+      "configs": {
+        "tiny": {
+          "config": {"name":"tiny","vocab":256,"d_model":64,"n_layers":2,
+                     "n_heads":4,"n_kv_heads":2,"d_ff":176,"seq_len":64,
+                     "batch":4,"rope_theta":10000.0,"head_dim":16,"kv_dim":32},
+          "n_params": 1000,
+          "params": [
+            {"name":"embed.weight","shape":[256,64],"kind":"embed","init_scale":0.02},
+            {"name":"layers.00.attn.wq","shape":[64,64],"kind":"matrix","init_scale":0.02},
+            {"name":"final_norm.gain","shape":[64],"kind":"vector","init_scale":1.0}
+          ],
+          "train_hlo": "train_tiny.hlo.txt",
+          "eval_hlo": "eval_tiny.hlo.txt"
+        }
+      },
+      "ns_kernels": [{"shape":[128,128],"steps":5,"hlo":"ns_128x128.hlo.txt"}]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let cfg = m.config("tiny").unwrap();
+        assert_eq!(cfg.params.len(), 3);
+        assert_eq!(cfg.params[1].shape, vec![64, 64]);
+        assert_eq!(cfg.params[1].kind, ParamKind::Matrix);
+        assert_eq!(cfg.d_ff, 176);
+        assert_eq!(cfg.tokens_per_step(), 4 * 64);
+        assert!(m.ns_kernel(128, 128).is_some());
+        assert!(m.ns_kernel(64, 64).is_none());
+        assert!(m.config("nope").is_err());
+    }
+
+    #[test]
+    fn rejects_bad_format() {
+        assert!(Manifest::parse(r#"{"format":"other"}"#).is_err());
+    }
+
+    #[test]
+    fn real_manifest_if_built() {
+        // Validate against the actual artifacts when present.
+        for dir in ["artifacts", "../artifacts", "../../artifacts"] {
+            let p = std::path::Path::new(dir).join("manifest.json");
+            if p.exists() {
+                let m = Manifest::load(&p).unwrap();
+                assert!(m.config("tiny").is_ok());
+                assert!(m.config("bench").is_ok());
+                assert!(m.config("e2e").is_ok());
+                assert!(!m.ns_kernels.is_empty());
+                // Param order must be sorted by name (aot.py contract).
+                let cfg = m.config("tiny").unwrap();
+                let names: Vec<_> =
+                    cfg.params.iter().map(|p| p.name.clone()).collect();
+                let mut sorted = names.clone();
+                sorted.sort();
+                assert_eq!(names, sorted);
+                return;
+            }
+        }
+    }
+}

@@ -1,0 +1,164 @@
+//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute on the
+//! step path. Also hosts the runtime-JIT Newton–Schulz fast path
+//! (`ns_builder`) used for shard shapes that have no Pallas artifact.
+//!
+//! Interchange is HLO *text*: jax ≥ 0.5 emits 64-bit instruction ids in
+//! serialized protos which xla_extension 0.5.1 rejects;
+//! `HloModuleProto::from_text_file` reassigns ids (see aot.py).
+
+pub mod artifact;
+pub mod ns_builder;
+pub mod ns_engine;
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+use xla::{ElementType, Literal, PjRtClient, PjRtLoadedExecutable};
+
+use crate::tensor::Tensor;
+
+pub use artifact::{ConfigEntry, Manifest, ParamEntry};
+pub use ns_engine::NsEngine;
+
+/// Convert a host tensor to an f32 XLA literal.
+pub fn tensor_to_literal(t: &Tensor) -> Result<Literal> {
+    let bytes: &[u8] = unsafe {
+        std::slice::from_raw_parts(
+            t.data().as_ptr() as *const u8,
+            t.data().len() * 4,
+        )
+    };
+    Ok(Literal::create_from_shape_and_untyped_data(
+        ElementType::F32,
+        t.shape(),
+        bytes,
+    )?)
+}
+
+/// Convert an i32 token batch to an XLA literal of shape [rows, cols].
+pub fn tokens_to_literal(tokens: &[i32], rows: usize, cols: usize) -> Result<Literal> {
+    anyhow::ensure!(tokens.len() == rows * cols, "token shape mismatch");
+    let bytes: &[u8] = unsafe {
+        std::slice::from_raw_parts(
+            tokens.as_ptr() as *const u8,
+            tokens.len() * 4,
+        )
+    };
+    Ok(Literal::create_from_shape_and_untyped_data(
+        ElementType::S32,
+        &[rows, cols],
+        bytes,
+    )?)
+}
+
+/// Convert an f32 XLA literal back to a host tensor with the given shape.
+pub fn literal_to_tensor(lit: &Literal, shape: &[usize]) -> Result<Tensor> {
+    let v = lit.to_vec::<f32>()?;
+    Tensor::from_vec(shape, v)
+}
+
+/// A compiled artifact plus its output shapes.
+pub struct Executable {
+    exe: PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Executable {
+    /// Execute with literal args; returns the decomposed result tuple
+    /// (aot.py lowers everything with return_tuple=True).
+    pub fn run(&self, args: &[Literal]) -> Result<Vec<Literal>> {
+        let out = self
+            .exe
+            .execute::<Literal>(args)
+            .with_context(|| format!("executing artifact '{}'", self.name))?;
+        let lit = out[0][0].to_literal_sync()?;
+        Ok(lit.to_tuple()?)
+    }
+}
+
+/// The PJRT runtime: one CPU client + the artifact registry.
+pub struct Runtime {
+    client: PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+}
+
+impl Runtime {
+    /// Open the artifact directory (built by `make artifacts`).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(dir.join("manifest.json"))
+            .with_context(|| {
+                format!(
+                    "loading manifest from {} (run `make artifacts`)",
+                    dir.display()
+                )
+            })?;
+        let client = PjRtClient::cpu()?;
+        Ok(Runtime { client, dir, manifest })
+    }
+
+    /// Locate the artifact dir relative to the repo root (works from
+    /// examples, benches, and tests).
+    pub fn open_default() -> Result<Runtime> {
+        let candidates = ["artifacts", "../artifacts", "../../artifacts"];
+        for c in candidates {
+            if Path::new(c).join("manifest.json").exists() {
+                return Runtime::open(c);
+            }
+        }
+        // CARGO_MANIFEST_DIR fallback for cargo test/bench cwd quirks.
+        let base = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if base.join("manifest.json").exists() {
+            return Runtime::open(base);
+        }
+        Err(anyhow!("artifacts/manifest.json not found; run `make artifacts`"))
+    }
+
+    pub fn client(&self) -> &PjRtClient {
+        &self.client
+    }
+
+    /// Compile an HLO-text artifact by file name.
+    pub fn compile_artifact(&self, file: &str) -> Result<Executable> {
+        let path = self.dir.join(file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        Ok(Executable { exe, name: file.to_string() })
+    }
+
+    /// Compile the train-step executable for a model config.
+    pub fn train_step(&self, config: &str) -> Result<Executable> {
+        let entry = self.manifest.config(config)?;
+        self.compile_artifact(&entry.train_hlo)
+    }
+
+    /// Compile the eval-step executable for a model config.
+    pub fn eval_step(&self, config: &str) -> Result<Executable> {
+        let entry = self.manifest.config(config)?;
+        self.compile_artifact(&entry.eval_hlo)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let t = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.])
+            .unwrap();
+        let lit = tensor_to_literal(&t).unwrap();
+        let back = literal_to_tensor(&lit, &[2, 3]).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn tokens_literal_shape() {
+        let lit = tokens_to_literal(&[1, 2, 3, 4, 5, 6], 2, 3).unwrap();
+        assert_eq!(lit.element_count(), 6);
+        assert!(tokens_to_literal(&[1, 2], 2, 3).is_err());
+    }
+}

@@ -1,0 +1,94 @@
+//! Runtime-JIT Newton–Schulz: compose the NS orthogonalization directly
+//! with `XlaBuilder` and compile it on the PJRT CPU client for any shape.
+//!
+//! This is the L3 fast path when a shard shape has no Pallas artifact:
+//! identical math to `linalg::newton_schulz` / the L1 kernel, but executed
+//! through XLA's optimized GEMMs instead of the host matmul. No python is
+//! involved — the computation is built op-by-op in rust.
+
+use anyhow::Result;
+use xla::{ElementType, PjRtClient, PjRtLoadedExecutable, XlaBuilder};
+
+use crate::linalg::newton_schulz::NsCoeffs;
+
+/// Build and compile `orth(G)` for a fixed (m, n) shape.
+pub fn compile_ns(
+    client: &PjRtClient,
+    m: usize,
+    n: usize,
+    steps: usize,
+    coeffs: NsCoeffs,
+) -> Result<PjRtLoadedExecutable> {
+    let builder = XlaBuilder::new(&format!("ns_{m}x{n}"));
+    let g = builder.parameter(
+        0,
+        ElementType::F32,
+        &[m as i64, n as i64],
+        "g",
+    )?;
+
+    // Work on the wide orientation (rows <= cols) like the kernel does.
+    let transpose = m > n;
+    let mut x = if transpose { g.transpose(&[1, 0])? } else { g };
+
+    // X <- G / (||G||_F + eps)
+    let sq = x.mul_(&x)?;
+    let norm = sq.reduce_sum(&[0, 1], false)?.sqrt()?;
+    let eps = builder.constant_r0(1e-7f32)?;
+    let denom = norm.add_(&eps)?;
+    x = x.div_(&denom.broadcast(&[])?)?;
+
+    let ca = builder.constant_r0(coeffs.a)?;
+    let cb = builder.constant_r0(coeffs.b)?;
+    let cc = builder.constant_r0(coeffs.c)?;
+    for _ in 0..steps {
+        let xt = x.transpose(&[1, 0])?;
+        let gram = x.matmul(&xt)?; // A = X Xᵀ
+        let gram2 = gram.matmul(&gram)?; // A²
+        let poly = gram.mul_(&cb)?.add_(&gram2.mul_(&cc)?)?; // bA + cA²
+        x = x.mul_(&ca)?.add_(&poly.matmul(&x)?)?; // aX + BX
+    }
+    let out = if transpose { x.transpose(&[1, 0])? } else { x };
+    let comp = out.build()?;
+    Ok(client.compile(&comp)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::newton_schulz::newton_schulz;
+    use crate::runtime::{literal_to_tensor, tensor_to_literal};
+    use crate::tensor::Tensor;
+    use crate::utils::rng::Rng;
+
+    fn run_ns(m: usize, n: usize) {
+        let client = PjRtClient::cpu().unwrap();
+        let exe = compile_ns(&client, m, n, 5, NsCoeffs::jordan()).unwrap();
+        let mut rng = Rng::new(42);
+        let g = Tensor::randn(&[m, n], 1.0, &mut rng);
+        let lit = tensor_to_literal(&g).unwrap();
+        let out = exe.execute::<xla::Literal>(&[lit]).unwrap()[0][0]
+            .to_literal_sync()
+            .unwrap();
+        let got = literal_to_tensor(&out, &[m, n]).unwrap();
+        let want = newton_schulz(&g, 5, NsCoeffs::jordan());
+        for (a, b) in got.data().iter().zip(want.data()) {
+            assert!((a - b).abs() < 2e-3, "{a} vs {b} ({m}x{n})");
+        }
+    }
+
+    #[test]
+    fn matches_host_ns_wide() {
+        run_ns(16, 48);
+    }
+
+    #[test]
+    fn matches_host_ns_tall() {
+        run_ns(48, 16);
+    }
+
+    #[test]
+    fn matches_host_ns_square() {
+        run_ns(32, 32);
+    }
+}

@@ -1,0 +1,196 @@
+//! NsEngine — the orthogonalization service used on the optimizer hot path.
+//!
+//! Resolution order per shape:
+//! 1. **Pallas artifact** (`artifacts/ns_MxN.hlo.txt`): the L1 kernel AOT'd
+//!    by python; proves the three-layer path end to end.
+//! 2. **Runtime XLA JIT** (`ns_builder`): same math composed with
+//!    XlaBuilder and compiled once per shape — covers arbitrary shard
+//!    shapes with XLA-grade GEMMs.
+//! 3. **Host Newton–Schulz** (`linalg`): pure-rust fallback (also used when
+//!    no PJRT client is wanted, e.g. small unit tests).
+//!
+//! Compiled executables are cached per shape. All XLA state lives behind
+//! one mutex so the rank threads of the simulated cluster share the engine:
+//! the `xla` crate's handles use non-atomic `Rc` refcounts internally, so
+//! we serialize *every* access (clone/execute/drop) through the lock and
+//! assert Send/Sync manually — sound because no XLA handle ever escapes the
+//! lock, and the underlying PJRT CPU client is itself thread-safe.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+use xla::PjRtLoadedExecutable;
+
+use crate::linalg::newton_schulz::{newton_schulz, NsCoeffs};
+use crate::optim::muon::OrthFn;
+use crate::runtime::{literal_to_tensor, ns_builder, tensor_to_literal, Runtime};
+use crate::tensor::Tensor;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NsBackendKind {
+    PallasArtifact,
+    RuntimeJit,
+    Host,
+}
+
+struct XlaState {
+    runtime: Option<Arc<Runtime>>,
+    exes: HashMap<(usize, usize), (PjRtLoadedExecutable, NsBackendKind)>,
+    hits: u64,
+    misses: u64,
+}
+
+// SAFETY: XlaState only moves between threads inside NsEngine's mutex (see
+// module docs); the PJRT CPU runtime is internally synchronized and the
+// non-atomic Rc refcounts are never touched concurrently because every
+// clone/execute/drop happens under the lock.
+unsafe impl Send for XlaState {}
+
+/// Shape-cached orthogonalizer.
+pub struct NsEngine {
+    state: Mutex<XlaState>,
+    pub steps: usize,
+    pub coeffs: NsCoeffs,
+    /// Disable the XLA paths entirely (host-only mode).
+    pub host_only: bool,
+}
+
+// SAFETY: all interior XLA access is serialized by `state`'s mutex.
+unsafe impl Sync for NsEngine {}
+
+impl NsEngine {
+    pub fn new(runtime: Option<Arc<Runtime>>) -> NsEngine {
+        NsEngine {
+            state: Mutex::new(XlaState {
+                runtime,
+                exes: HashMap::new(),
+                hits: 0,
+                misses: 0,
+            }),
+            steps: 5,
+            coeffs: NsCoeffs::jordan(),
+            host_only: false,
+        }
+    }
+
+    pub fn host_only() -> NsEngine {
+        let mut e = NsEngine::new(None);
+        e.host_only = true;
+        e
+    }
+
+    /// (hits, misses) of the executable cache.
+    pub fn cache_stats(&self) -> (u64, u64) {
+        let c = self.state.lock().unwrap();
+        (c.hits, c.misses)
+    }
+
+    /// Which backend serves the given shape.
+    pub fn backend_for(&self, m: usize, n: usize) -> NsBackendKind {
+        let st = self.state.lock().unwrap();
+        if self.host_only || st.runtime.is_none() {
+            return NsBackendKind::Host;
+        }
+        let rt = st.runtime.as_ref().unwrap();
+        if rt.manifest.ns_kernel(m, n).is_some() {
+            NsBackendKind::PallasArtifact
+        } else {
+            NsBackendKind::RuntimeJit
+        }
+    }
+
+    /// Orthogonalize `g` (≈ polar factor) through the best available path.
+    pub fn orthogonalize(&self, g: &Tensor) -> Result<Tensor> {
+        let (m, n) = (g.m(), g.n());
+        if self.host_only {
+            return Ok(newton_schulz(g, self.steps, self.coeffs));
+        }
+        let mut st = self.state.lock().unwrap();
+        if st.runtime.is_none() {
+            return Ok(newton_schulz(g, self.steps, self.coeffs));
+        }
+        if !st.exes.contains_key(&(m, n)) {
+            st.misses += 1;
+            let rt = Arc::clone(st.runtime.as_ref().unwrap());
+            let entry = match rt.manifest.ns_kernel(m, n) {
+                Some(k) => (
+                    rt.compile_artifact(&k.hlo)?.into_inner(),
+                    NsBackendKind::PallasArtifact,
+                ),
+                None => (
+                    ns_builder::compile_ns(
+                        rt.client(),
+                        m,
+                        n,
+                        self.steps,
+                        self.coeffs,
+                    )?,
+                    NsBackendKind::RuntimeJit,
+                ),
+            };
+            st.exes.insert((m, n), entry);
+        } else {
+            st.hits += 1;
+        }
+        let (exe, kind) = st.exes.get(&(m, n)).unwrap();
+        let lit = tensor_to_literal(g)?;
+        let out =
+            exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
+        // Pallas artifacts were lowered with return_tuple=True; the runtime
+        // JIT builds a bare array computation.
+        let arr = match kind {
+            NsBackendKind::PallasArtifact => {
+                let mut parts = out.to_tuple()?;
+                anyhow::ensure!(parts.len() == 1, "ns artifact arity");
+                parts.remove(0)
+            }
+            _ => out,
+        };
+        literal_to_tensor(&arr, &[m, n])
+    }
+
+    /// Wrap as the `OrthFn` callback the Muon family accepts. Falls back to
+    /// host NS on execution error (never poisons a training step).
+    pub fn as_orth_fn(self: &Arc<Self>) -> OrthFn {
+        let me = Arc::clone(self);
+        Arc::new(move |g: &Tensor| {
+            me.orthogonalize(g)
+                .unwrap_or_else(|_| newton_schulz(g, me.steps, me.coeffs))
+        })
+    }
+}
+
+impl crate::runtime::Executable {
+    /// Extract the raw loaded executable (NsEngine cache storage).
+    pub fn into_inner(self) -> PjRtLoadedExecutable {
+        self.exe
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::utils::rng::Rng;
+
+    #[test]
+    fn host_only_matches_linalg() {
+        let e = NsEngine::host_only();
+        let mut rng = Rng::new(1);
+        let g = Tensor::randn(&[8, 24], 1.0, &mut rng);
+        let a = e.orthogonalize(&g).unwrap();
+        let b = newton_schulz(&g, 5, NsCoeffs::jordan());
+        assert_eq!(a, b);
+        assert_eq!(e.backend_for(8, 24), NsBackendKind::Host);
+    }
+
+    #[test]
+    fn orth_fn_callback_works() {
+        let e = Arc::new(NsEngine::host_only());
+        let f = e.as_orth_fn();
+        let mut rng = Rng::new(2);
+        let g = Tensor::randn(&[4, 12], 1.0, &mut rng);
+        let u = f(&g);
+        assert_eq!(u.shape(), g.shape());
+    }
+}

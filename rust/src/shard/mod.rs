@@ -1,0 +1,188 @@
+//! Tensor sharding: extracting/assembling the exact submatrix blocks that
+//! model parallelism places on each device (paper §3).
+//!
+//! `ShardSpec` binds a parameter's layout + TP degree to concrete block
+//! coordinates; `shard`/`unshard` are the gather/scatter data movement the
+//! coordinator performs on *full* orthogonalization steps.
+
+use crate::mesh::Layout;
+use crate::tensor::Tensor;
+
+/// Even split of `dim` into `n` shards; trailing shards absorb remainder.
+/// Returns [start, end) of shard `idx`.
+pub fn shard_range(dim: usize, n: usize, idx: usize) -> (usize, usize) {
+    assert!(idx < n, "shard index {idx} out of {n}");
+    let base = dim / n;
+    let rem = dim % n;
+    // First `rem` shards get one extra element (balanced partition).
+    let start = idx * base + idx.min(rem);
+    let extra = if idx < rem { 1 } else { 0 };
+    (start, start + base + extra)
+}
+
+/// Concrete block partition of one matrix parameter.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardSpec {
+    pub rows: usize,
+    pub cols: usize,
+    pub m: usize,
+    pub n: usize,
+}
+
+impl ShardSpec {
+    pub fn new(layout: Layout, tp: usize, m: usize, n: usize) -> ShardSpec {
+        let (rows, cols) = layout.block_grid(tp, m, n);
+        ShardSpec { rows, cols, m, n }
+    }
+
+    pub fn num_blocks(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    /// (row-block, col-block) coordinates for flat block id.
+    pub fn coords(&self, idx: usize) -> (usize, usize) {
+        (idx / self.cols, idx % self.cols)
+    }
+
+    /// Row/col ranges of block `idx`.
+    pub fn ranges(&self, idx: usize) -> ((usize, usize), (usize, usize)) {
+        let (i, j) = self.coords(idx);
+        (shard_range(self.m, self.rows, i), shard_range(self.n, self.cols, j))
+    }
+
+    /// Shape of block `idx`.
+    pub fn block_shape(&self, idx: usize) -> (usize, usize) {
+        let ((r0, r1), (c0, c1)) = self.ranges(idx);
+        (r1 - r0, c1 - c0)
+    }
+
+    /// Bytes of one block (f32).
+    pub fn block_bytes(&self, idx: usize) -> usize {
+        let (bm, bn) = self.block_shape(idx);
+        bm * bn * 4
+    }
+}
+
+/// Extract block `idx` of `t` (a device's local shard).
+pub fn shard(t: &Tensor, spec: &ShardSpec, idx: usize) -> Tensor {
+    assert_eq!((t.m(), t.n()), (spec.m, spec.n), "spec/tensor mismatch");
+    let ((r0, r1), (c0, c1)) = spec.ranges(idx);
+    t.block(r0, r1, c0, c1)
+}
+
+/// Extract all blocks in block-id order (what an all-gather materializes).
+pub fn shard_all(t: &Tensor, spec: &ShardSpec) -> Vec<Tensor> {
+    (0..spec.num_blocks()).map(|i| shard(t, spec, i)).collect()
+}
+
+/// Reassemble the full matrix from blocks (the scatter inverse).
+pub fn unshard(blocks: &[Tensor], spec: &ShardSpec) -> Tensor {
+    assert_eq!(blocks.len(), spec.num_blocks());
+    let mut out = Tensor::zeros(&[spec.m, spec.n]);
+    for (idx, b) in blocks.iter().enumerate() {
+        let ((r0, _), (c0, _)) = spec.ranges(idx);
+        out.set_block(r0, c0, b);
+    }
+    out
+}
+
+/// Write one block back into the full matrix in place.
+pub fn write_shard(t: &mut Tensor, spec: &ShardSpec, idx: usize, block: &Tensor) {
+    let ((r0, r1), (c0, c1)) = spec.ranges(idx);
+    assert_eq!((block.m(), block.n()), (r1 - r0, c1 - c0));
+    t.set_block(r0, c0, block);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::utils::prop;
+    use crate::utils::rng::Rng;
+
+    #[test]
+    fn ranges_cover_dim() {
+        for (dim, n) in [(10, 3), (8, 4), (7, 7), (5, 1), (9, 2)] {
+            let mut covered = 0;
+            for i in 0..n {
+                let (s, e) = shard_range(dim, n, i);
+                assert_eq!(s, covered, "gap at shard {i}");
+                covered = e;
+            }
+            assert_eq!(covered, dim);
+        }
+    }
+
+    #[test]
+    fn balanced_ranges() {
+        // sizes differ by at most 1
+        for (dim, n) in [(10, 3), (100, 7), (16, 5)] {
+            let sizes: Vec<usize> = (0..n)
+                .map(|i| {
+                    let (s, e) = shard_range(dim, n, i);
+                    e - s
+                })
+                .collect();
+            let mx = sizes.iter().max().unwrap();
+            let mn = sizes.iter().min().unwrap();
+            assert!(mx - mn <= 1, "{sizes:?}");
+        }
+    }
+
+    #[test]
+    fn shard_unshard_roundtrip_property() {
+        prop::check("shard-roundtrip", 20, |rng| {
+            let m = rng.gen_range(1, 40);
+            let n = rng.gen_range(1, 40);
+            let layouts = [
+                Layout::Replicated,
+                Layout::TpColumn,
+                Layout::TpRow,
+                Layout::Fsdp2Dim0,
+                Layout::ZeroLayer,
+            ];
+            let layout = layouts[rng.gen_range(0, layouts.len())];
+            let tp = rng.gen_range(1, 9);
+            let t = Tensor::randn(&[m, n], 1.0, rng);
+            let spec = ShardSpec::new(layout, tp, m, n);
+            let blocks = shard_all(&t, &spec);
+            let back = unshard(&blocks, &spec);
+            if back != t {
+                return Err(format!(
+                    "roundtrip failed for {layout:?} tp={tp} {m}x{n}"
+                ));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn grid_roundtrip() {
+        let mut rng = Rng::new(5);
+        let t = Tensor::randn(&[12, 18], 1.0, &mut rng);
+        let spec =
+            ShardSpec::new(Layout::TpGrid { rows: 2, cols: 3 }, 6, 12, 18);
+        assert_eq!(spec.num_blocks(), 6);
+        assert_eq!(spec.block_shape(0), (6, 6));
+        let blocks = shard_all(&t, &spec);
+        assert_eq!(unshard(&blocks, &spec), t);
+    }
+
+    #[test]
+    fn write_shard_updates_in_place() {
+        let mut t = Tensor::zeros(&[4, 8]);
+        let spec = ShardSpec::new(Layout::TpColumn, 4, 4, 8);
+        let mut b = Tensor::zeros(&[4, 2]);
+        b.data_mut().fill(3.0);
+        write_shard(&mut t, &spec, 2, &b);
+        assert_eq!(t.at(0, 4), 3.0);
+        assert_eq!(t.at(3, 5), 3.0);
+        assert_eq!(t.at(0, 3), 0.0);
+        assert_eq!(t.at(0, 6), 0.0);
+    }
+
+    #[test]
+    fn block_bytes() {
+        let spec = ShardSpec::new(Layout::TpColumn, 4, 8, 16);
+        assert_eq!(spec.block_bytes(0), 8 * 4 * 4);
+    }
+}

@@ -1,0 +1,263 @@
+//! Host tensor: dense row-major f32, the currency of the optimizer layer.
+//!
+//! Compute-heavy model fwd/bwd stays inside PJRT executables; host tensors
+//! carry parameters, gradients, momenta and optimizer updates between the
+//! runtime and the coordinator, so the API is deliberately small: blocks
+//! (shard views of the paper's §3 "How blocks align"), elementwise update
+//! ops, and norms live in `linalg`.
+
+use anyhow::{bail, Result};
+
+use crate::utils::rng::Rng;
+
+/// Dense row-major f32 tensor (rank 1 or 2 in practice).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {shape:?} wants {n} elems, got {}", data.len());
+        }
+        Ok(Tensor { shape: shape.to_vec(), data })
+    }
+
+    /// Gaussian init with given std.
+    pub fn randn(shape: &[usize], std: f32, rng: &mut Rng) -> Tensor {
+        let mut t = Tensor::zeros(shape);
+        rng.fill_normal(&mut t.data, std);
+        t
+    }
+
+    pub fn scalar(x: f32) -> Tensor {
+        Tensor { shape: vec![], data: vec![x] }
+    }
+
+    // -- shape accessors ----------------------------------------------------
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Rows of a matrix (rank-2 only).
+    pub fn m(&self) -> usize {
+        assert_eq!(self.rank(), 2, "m() on rank {}", self.rank());
+        self.shape[0]
+    }
+
+    /// Columns of a matrix (rank-2 only).
+    pub fn n(&self) -> usize {
+        assert_eq!(self.rank(), 2, "n() on rank {}", self.rank());
+        self.shape[1]
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.shape[1] + j]
+    }
+
+    pub fn set(&mut self, i: usize, j: usize, v: f32) {
+        let n = self.shape[1];
+        self.data[i * n + j] = v;
+    }
+
+    // -- elementwise update ops (optimizer hot loop) -------------------------
+
+    /// self += alpha * other
+    pub fn axpy(&mut self, alpha: f32, other: &Tensor) {
+        assert_eq!(self.shape, other.shape, "axpy shape mismatch");
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += alpha * b;
+        }
+    }
+
+    /// self = alpha*self + beta*other  (momentum update)
+    pub fn scale_add(&mut self, alpha: f32, beta: f32, other: &Tensor) {
+        assert_eq!(self.shape, other.shape, "scale_add shape mismatch");
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a = alpha * *a + beta * b;
+        }
+    }
+
+    pub fn scale(&mut self, alpha: f32) {
+        for a in self.data.iter_mut() {
+            *a *= alpha;
+        }
+    }
+
+    pub fn add_scalar(&mut self, x: f32) {
+        for a in self.data.iter_mut() {
+            *a += x;
+        }
+    }
+
+    /// Elementwise map into a new tensor.
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Tensor {
+        Tensor {
+            shape: self.shape.clone(),
+            data: self.data.iter().map(|&x| f(x)).collect(),
+        }
+    }
+
+    // -- norms ---------------------------------------------------------------
+
+    pub fn frobenius(&self) -> f32 {
+        self.data.iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>().sqrt()
+            as f32
+    }
+
+    pub fn rms(&self) -> f32 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        (self.data.iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>()
+            / self.data.len() as f64)
+            .sqrt() as f32
+    }
+
+    pub fn abs_max(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |acc, x| acc.max(x.abs()))
+    }
+
+    // -- blocks (model-parallel shards as exact submatrices, paper §3) -------
+
+    /// Copy out the contiguous block rows [r0, r1) x cols [c0, c1).
+    pub fn block(&self, r0: usize, r1: usize, c0: usize, c1: usize) -> Tensor {
+        assert_eq!(self.rank(), 2);
+        assert!(r1 <= self.m() && c1 <= self.n() && r0 <= r1 && c0 <= c1);
+        let n = self.n();
+        let mut out = Tensor::zeros(&[r1 - r0, c1 - c0]);
+        for (bi, i) in (r0..r1).enumerate() {
+            let src = &self.data[i * n + c0..i * n + c1];
+            let w = c1 - c0;
+            out.data[bi * w..(bi + 1) * w].copy_from_slice(src);
+        }
+        out
+    }
+
+    /// Write `block` into rows [r0, ..) x cols [c0, ..).
+    pub fn set_block(&mut self, r0: usize, c0: usize, block: &Tensor) {
+        assert_eq!(self.rank(), 2);
+        assert_eq!(block.rank(), 2);
+        let (bm, bn) = (block.m(), block.n());
+        assert!(r0 + bm <= self.m() && c0 + bn <= self.n());
+        let n = self.n();
+        for i in 0..bm {
+            let dst_off = (r0 + i) * n + c0;
+            self.data[dst_off..dst_off + bn]
+                .copy_from_slice(&block.data[i * bn..(i + 1) * bn]);
+        }
+    }
+
+    /// Transposed copy (rank-2 only).
+    pub fn transpose(&self) -> Tensor {
+        assert_eq!(self.rank(), 2);
+        let (m, n) = (self.m(), self.n());
+        let mut out = Tensor::zeros(&[n, m]);
+        for i in 0..m {
+            for j in 0..n {
+                out.data[j * m + i] = self.data[i * n + j];
+            }
+        }
+        out
+    }
+
+    /// Flat 1D view of the underlying data as a new tensor shape.
+    pub fn reshape(&self, shape: &[usize]) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if n != self.data.len() {
+            bail!("reshape {:?} -> {shape:?} mismatch", self.shape);
+        }
+        Ok(Tensor { shape: shape.to_vec(), data: self.data.clone() })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construct_and_index() {
+        let t = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        assert_eq!(t.at(0, 2), 3.0);
+        assert_eq!(t.at(1, 0), 4.0);
+        assert_eq!(t.numel(), 6);
+        assert!(Tensor::from_vec(&[2, 2], vec![1.0]).is_err());
+    }
+
+    #[test]
+    fn update_ops() {
+        let mut a = Tensor::from_vec(&[2], vec![1.0, 2.0]).unwrap();
+        let b = Tensor::from_vec(&[2], vec![10.0, 20.0]).unwrap();
+        a.axpy(0.5, &b);
+        assert_eq!(a.data(), &[6.0, 12.0]);
+        a.scale_add(0.5, 1.0, &b);
+        assert_eq!(a.data(), &[13.0, 26.0]);
+        a.scale(2.0);
+        assert_eq!(a.data(), &[26.0, 52.0]);
+    }
+
+    #[test]
+    fn norms() {
+        let t = Tensor::from_vec(&[2, 2], vec![3.0, 0.0, 0.0, 4.0]).unwrap();
+        assert!((t.frobenius() - 5.0).abs() < 1e-6);
+        assert!((t.rms() - 2.5).abs() < 1e-6);
+        assert_eq!(t.abs_max(), 4.0);
+    }
+
+    #[test]
+    fn block_roundtrip() {
+        let t = Tensor::from_vec(
+            &[3, 4],
+            (0..12).map(|x| x as f32).collect(),
+        )
+        .unwrap();
+        let b = t.block(1, 3, 1, 3);
+        assert_eq!(b.shape(), &[2, 2]);
+        assert_eq!(b.data(), &[5.0, 6.0, 9.0, 10.0]);
+        let mut t2 = Tensor::zeros(&[3, 4]);
+        t2.set_block(1, 1, &b);
+        assert_eq!(t2.at(1, 1), 5.0);
+        assert_eq!(t2.at(2, 2), 10.0);
+        assert_eq!(t2.at(0, 0), 0.0);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Rng::new(0);
+        let t = Tensor::randn(&[5, 7], 1.0, &mut rng);
+        assert_eq!(t.transpose().transpose(), t);
+        assert_eq!(t.transpose().at(3, 2), t.at(2, 3));
+    }
+
+    #[test]
+    fn randn_scale() {
+        let mut rng = Rng::new(1);
+        let t = Tensor::randn(&[100, 100], 0.02, &mut rng);
+        assert!((t.rms() - 0.02).abs() < 0.002, "{}", t.rms());
+    }
+}

@@ -1,0 +1,212 @@
+//! Theorem 2 machinery: convergence-rate interpolation, optimal two-
+//! stepsize pairs, and the harmonic-vs-arithmetic-mean comparison that
+//! justifies using different η_full / η_block.
+//!
+//! In the noiseless (σ=0, μ=0) regime the paper shows:
+//!   rate(Muon)     ∝ √L_op,
+//!   rate(BlockMuon)∝ √L_B,
+//!   rate(MuonBP)   ∝ √L̄_BP,   L̄_BP⁻¹ = (1/P)·L_op⁻¹ + ((P−1)/P)·L_B⁻¹,
+//! with optimal stepsizes η*_full = √(2Δ₀L̄_BP/T)/L_op and
+//! η*_block = √(2Δ₀L̄_BP/T)/L_B. Tying the stepsizes replaces the harmonic
+//! mean L̄_BP by the arithmetic mean L̄_BP2 ≥ L̄_BP.
+
+pub mod quadratic;
+
+/// Harmonic-average smoothness L̄_BP of Theorem 2 (two stepsizes).
+pub fn harmonic_lbp(l_op: f64, l_b: f64, p: usize) -> f64 {
+    let p = p.max(1) as f64;
+    1.0 / ((1.0 / p) / l_op + ((p - 1.0) / p) / l_b)
+}
+
+/// Arithmetic-average smoothness L̄_BP2 (single tied stepsize).
+pub fn arithmetic_lbp2(l_op: f64, l_b: f64, p: usize) -> f64 {
+    let p = p.max(1) as f64;
+    l_op / p + (p - 1.0) / p * l_b
+}
+
+/// Noiseless convergence-rate bound min_t ||∇f||_op,* ≤ √(2Δ₀L/T).
+pub fn rate(l: f64, delta0: f64, t: usize) -> f64 {
+    (2.0 * delta0 * l / t.max(1) as f64).sqrt()
+}
+
+/// Theorem-2-optimal stepsize pair (η_full*, η_block*).
+pub fn optimal_stepsizes(
+    l_op: f64,
+    l_b: f64,
+    p: usize,
+    delta0: f64,
+    t: usize,
+) -> (f64, f64) {
+    let lbp = harmonic_lbp(l_op, l_b, p);
+    let base = (2.0 * delta0 * lbp / t.max(1) as f64).sqrt();
+    (base / l_op, base / l_b)
+}
+
+/// Optimal tied stepsize η* = √(2Δ₀/(T·L̄_BP2)).
+pub fn optimal_tied_stepsize(
+    l_op: f64,
+    l_b: f64,
+    p: usize,
+    delta0: f64,
+    t: usize,
+) -> f64 {
+    (2.0 * delta0 / (t.max(1) as f64 * arithmetic_lbp2(l_op, l_b, p))).sqrt()
+}
+
+/// All inputs of the full Theorem 2 bound (eq. 4).
+#[derive(Debug, Clone, Copy)]
+pub struct Theorem2Inputs {
+    pub l_op: f64,
+    pub l_b: f64,
+    /// Block grid r x c (for the √(rc) terms).
+    pub rc: usize,
+    pub delta0: f64,
+    pub sigma: f64,
+    pub mu: f64,
+    pub period: usize,
+    pub eta_full: f64,
+    pub eta_block: f64,
+    pub t: usize,
+}
+
+/// Evaluate the right-hand side of Theorem 2 (eq. 4) exactly.
+pub fn theorem2_bound(i: &Theorem2Inputs) -> f64 {
+    let p = i.period.max(1) as f64;
+    let t = i.t.max(1) as f64;
+    let bar_eta = i.eta_full / p + i.eta_block * (p - 1.0) / p;
+    let eta_max = i.eta_full.max(i.eta_block);
+    let a = (i.eta_full * i.l_op.sqrt()).max(i.eta_block * i.l_b.sqrt());
+    let q = i.l_op * i.eta_full.powi(2) / (2.0 * p)
+        + i.l_b * i.eta_block.powi(2) * (p - 1.0) / (2.0 * p);
+    let rc_sqrt = (i.rc as f64).sqrt();
+    let r = 2.0 * i.mu / (1.0 - i.mu)
+        * (i.l_op * i.eta_full * (i.eta_block * rc_sqrt).max(i.eta_full) / p
+            + i.l_b
+                * i.eta_block
+                * i.eta_full.max(i.eta_block)
+                * (p - 1.0)
+                / p);
+    i.delta0 / (bar_eta * t)
+        + 4.0 * (1.0 - i.mu) * i.sigma * eta_max / (bar_eta * t)
+        + 6.0 * i.mu * i.delta0.sqrt() * a / ((1.0 - i.mu) * bar_eta * t)
+        + (q + r) / bar_eta
+        + 2.0 * i.sigma * ((1.0 - i.mu) / (1.0 + i.mu)).sqrt()
+}
+
+/// Iterations to reach target gradient norm ε in the noiseless regime:
+/// T(ε, P) = 2Δ₀·L̄_BP(P)/ε² (inverting `rate`).
+pub fn iterations_to_eps(l_op: f64, l_b: f64, p: usize, delta0: f64, eps: f64) -> f64 {
+    2.0 * delta0 * harmonic_lbp(l_op, l_b, p) / (eps * eps)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const L_OP: f64 = 1.0;
+    const L_B: f64 = 4.0;
+
+    #[test]
+    fn harmonic_interpolates() {
+        // P=1 -> L_op; P->inf -> L_B; monotone in between.
+        assert!((harmonic_lbp(L_OP, L_B, 1) - L_OP).abs() < 1e-12);
+        assert!((harmonic_lbp(L_OP, L_B, 1_000_000) - L_B).abs() < 1e-3);
+        let mut prev = 0.0;
+        for p in 1..50 {
+            let l = harmonic_lbp(L_OP, L_B, p);
+            assert!(l >= prev);
+            assert!(l >= L_OP - 1e-12 && l <= L_B + 1e-12);
+            prev = l;
+        }
+    }
+
+    #[test]
+    fn harmonic_below_arithmetic() {
+        // The paper's two-stepsize advantage: L̄_BP ≤ L̄_BP2, strict unless
+        // L_op == L_B.
+        for p in 2..20 {
+            assert!(
+                harmonic_lbp(L_OP, L_B, p) < arithmetic_lbp2(L_OP, L_B, p)
+            );
+        }
+        assert!(
+            (harmonic_lbp(2.0, 2.0, 7) - arithmetic_lbp2(2.0, 2.0, 7)).abs()
+                < 1e-12
+        );
+    }
+
+    #[test]
+    fn rate_ordering_muon_bp_block() {
+        let t = 1000;
+        let d0 = 1.0;
+        let muon = rate(L_OP, d0, t);
+        let bp = rate(harmonic_lbp(L_OP, L_B, 5), d0, t);
+        let block = rate(L_B, d0, t);
+        assert!(muon < bp && bp < block, "{muon} {bp} {block}");
+    }
+
+    #[test]
+    fn optimal_stepsize_ratio_in_predicted_band() {
+        // η_block/η_full = L_op/L_B ∈ [1/(rc), 1]; the paper's band for the
+        // *ratio* under L_B ∈ [L_op, rc·L_op].
+        let (ef, eb) = optimal_stepsizes(L_OP, L_B, 5, 1.0, 1000);
+        let ratio = eb / ef;
+        assert!((ratio - L_OP / L_B).abs() < 1e-12);
+        assert!(ratio <= 1.0 && ratio >= 1.0 / (L_B / L_OP));
+    }
+
+    #[test]
+    fn theorem2_prefers_two_stepsizes() {
+        // Evaluate the exact bound at the optimal pair vs the optimal tied
+        // stepsize: the pair must be at least as good.
+        let (d0, t, p) = (1.0, 10_000, 5);
+        let (ef, eb) = optimal_stepsizes(L_OP, L_B, p, d0, t);
+        let tied = optimal_tied_stepsize(L_OP, L_B, p, d0, t);
+        let mk = |ef, eb| Theorem2Inputs {
+            l_op: L_OP,
+            l_b: L_B,
+            rc: 4,
+            delta0: d0,
+            sigma: 0.0,
+            mu: 0.0,
+            period: p,
+            eta_full: ef,
+            eta_block: eb,
+            t,
+        };
+        let two = theorem2_bound(&mk(ef, eb));
+        let one = theorem2_bound(&mk(tied, tied));
+        assert!(two < one, "two {two} vs tied {one}");
+        // And matches the closed-form harmonic rate.
+        let closed = rate(harmonic_lbp(L_OP, L_B, p), d0, t);
+        assert!((two - closed).abs() / closed < 0.02, "{two} vs {closed}");
+    }
+
+    #[test]
+    fn bound_increases_with_noise_and_momentum_terms_finite() {
+        let base = Theorem2Inputs {
+            l_op: L_OP,
+            l_b: L_B,
+            rc: 4,
+            delta0: 1.0,
+            sigma: 0.0,
+            mu: 0.9,
+            period: 5,
+            eta_full: 0.01,
+            eta_block: 0.005,
+            t: 1000,
+        };
+        let no_noise = theorem2_bound(&base);
+        let noisy = theorem2_bound(&Theorem2Inputs { sigma: 0.5, ..base });
+        assert!(noisy > no_noise);
+        assert!(no_noise.is_finite());
+    }
+
+    #[test]
+    fn iterations_monotone_in_period() {
+        let t1 = iterations_to_eps(L_OP, L_B, 1, 1.0, 0.01);
+        let t5 = iterations_to_eps(L_OP, L_B, 5, 1.0, 0.01);
+        let tinf = iterations_to_eps(L_OP, L_B, 10_000, 1.0, 0.01);
+        assert!(t1 < t5 && t5 < tinf);
+    }
+}

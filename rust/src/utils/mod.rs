@@ -1,0 +1,8 @@
+//! Small self-built substrates (offline registry: no rand / serde / clap /
+//! proptest — see DESIGN.md §3 for the substitution table).
+
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,84 @@
+//! Mini property-testing harness (proptest is unavailable offline).
+//!
+//! `check(name, cases, |rng| ...)` runs a closure over `cases` seeded random
+//! inputs; on failure it panics with the failing case's seed so the case can
+//! be replayed deterministically with `replay(seed, f)`.
+
+use super::rng::Rng;
+
+/// Outcome of a single property case.
+pub type CaseResult = Result<(), String>;
+
+/// Run `f` for `cases` pseudorandom cases. Panics on the first failure with
+/// the replayable seed.
+pub fn check<F: FnMut(&mut Rng) -> CaseResult>(
+    name: &str,
+    cases: usize,
+    mut f: F,
+) {
+    let base = 0xC0FFEE_u64;
+    for i in 0..cases {
+        let seed = base.wrapping_add(i as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = f(&mut rng) {
+            panic!(
+                "property '{name}' failed on case {i} (seed {seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Re-run a single failing case by seed.
+pub fn replay<F: FnMut(&mut Rng) -> CaseResult>(seed: u64, mut f: F) -> CaseResult {
+    let mut rng = Rng::new(seed);
+    f(&mut rng)
+}
+
+/// Assert helper returning CaseResult.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!($($fmt)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        check("sum-commutes", 50, |rng| {
+            let a = rng.next_f64();
+            let b = rng.next_f64();
+            if (a + b - (b + a)).abs() < 1e-15 {
+                Ok(())
+            } else {
+                Err("addition not commutative?!".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails'")]
+    fn reports_failures() {
+        check("always-fails", 3, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn replay_is_deterministic() {
+        let mut seen = Vec::new();
+        let _ = replay(42, |rng| {
+            seen.push(rng.next_u64());
+            Ok(())
+        });
+        let mut seen2 = Vec::new();
+        let _ = replay(42, |rng| {
+            seen2.push(rng.next_u64());
+            Ok(())
+        });
+        assert_eq!(seen, seen2);
+    }
+}

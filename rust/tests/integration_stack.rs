@@ -1,0 +1,204 @@
+//! Cross-module integration: artifacts -> runtime -> trainer -> optimizer
+//! -> coordinator, end to end on the tiny config. These tests exercise the
+//! same composition the examples use.
+
+use std::sync::Arc;
+
+use muonbp::coordinator::DistMuonBuilder;
+use muonbp::data::CorpusCfg;
+use muonbp::mesh::Mesh;
+use muonbp::optim::muon::{Muon, Period};
+use muonbp::optim::{AdamW, Schedule};
+use muonbp::runtime::{NsEngine, Runtime};
+use muonbp::train::{TrainCfg, Trainer};
+
+fn runtime() -> Arc<Runtime> {
+    Arc::new(Runtime::open_default().expect("run `make artifacts` first"))
+}
+
+fn small_cfg(steps: usize) -> TrainCfg {
+    TrainCfg {
+        steps,
+        lr: 0.02,
+        schedule: Schedule::Constant,
+        eval_every: steps,
+        eval_batches: 1,
+        grad_clip: 1.0,
+        seed: 5,
+        log_param_norm: true,
+    }
+}
+
+#[test]
+fn artifact_manifest_matches_python_contract() {
+    let rt = runtime();
+    for name in ["tiny", "bench", "e2e"] {
+        let cfg = rt.manifest.config(name).unwrap();
+        // Parameter ordering is sorted by name (aot.py contract) and the
+        // declared n_params matches the shapes.
+        let names: Vec<_> = cfg.params.iter().map(|p| &p.name).collect();
+        let mut sorted = names.clone();
+        sorted.sort();
+        assert_eq!(names, sorted, "{name}");
+        let total: usize = cfg
+            .params
+            .iter()
+            .map(|p| p.shape.iter().product::<usize>())
+            .sum();
+        assert_eq!(total, cfg.n_params, "{name}");
+    }
+}
+
+#[test]
+fn train_step_gradients_are_descent_directions() {
+    // One manual SGD step along the artifact's gradients must reduce the
+    // artifact's loss: pins fwd/bwd consistency through the PJRT path.
+    let rt = runtime();
+    let trainer = Trainer::new(rt, "tiny", CorpusCfg::default(), 3).unwrap();
+    let entry = trainer.runtime.manifest.config("tiny").unwrap();
+    let tokens: Vec<i32> = (0..(entry.batch * (entry.seq_len + 1)))
+        .map(|i| ((i * 7) % 61) as i32)
+        .collect();
+    let (loss0, grads) = trainer.forward_backward(&tokens).unwrap();
+    let mut trainer = trainer;
+    for (p, g) in trainer.state.params.iter_mut().zip(&grads) {
+        p.axpy(-0.5, g);
+    }
+    let (loss1, _) = trainer.forward_backward(&tokens).unwrap();
+    assert!(loss1 < loss0, "{loss0} -> {loss1}");
+}
+
+#[test]
+fn distributed_equals_reference_through_real_training() {
+    // The flagship equivalence, now through the REAL PJRT training stack:
+    // distributed MuonBP on the thread cluster == single-process MuonBP,
+    // same seeds, 4 steps of the tiny model.
+    let rt = runtime();
+    let steps = 4;
+
+    let mut t_ref =
+        Trainer::new(Arc::clone(&rt), "tiny", CorpusCfg::default(), 9).unwrap();
+    let metas = t_ref.state.metas.clone();
+    let mut opt_ref = Muon::block_periodic(&metas, 2, 2);
+    let rec_ref = t_ref.run(&mut opt_ref, &small_cfg(steps)).unwrap();
+
+    let mut t_dist =
+        Trainer::new(Arc::clone(&rt), "tiny", CorpusCfg::default(), 9).unwrap();
+    let ns = Arc::new(NsEngine::host_only());
+    let mut opt_dist =
+        DistMuonBuilder::new(Mesh::new(2, 2).unwrap(), Period::Every(2))
+            .ns_engine(ns)
+            .build(&metas);
+    let rec_dist = t_dist.run(&mut opt_dist, &small_cfg(steps)).unwrap();
+
+    let a = rec_ref.get("train_loss").unwrap();
+    let b = rec_dist.get("train_loss").unwrap();
+    for (x, y) in a.values.iter().zip(&b.values) {
+        assert!((x - y).abs() < 2e-4, "{x} vs {y}");
+    }
+    for (p, q) in t_ref.state.params.iter().zip(&t_dist.state.params) {
+        for (x, y) in p.data().iter().zip(q.data()) {
+            assert!((x - y).abs() < 2e-4, "param drift: {x} vs {y}");
+        }
+    }
+}
+
+#[test]
+fn xla_ns_backend_matches_host_in_training() {
+    // Same distributed run with the XLA executable cache vs host NS: the
+    // two orthogonalizers agree to f32 tolerance, so losses track.
+    let rt = runtime();
+    let steps = 3;
+    let mk = |ns: Arc<NsEngine>| {
+        let mut t = Trainer::new(
+            Arc::clone(&rt),
+            "tiny",
+            CorpusCfg::default(),
+            11,
+        )
+        .unwrap();
+        let metas = t.state.metas.clone();
+        let mut opt =
+            DistMuonBuilder::new(Mesh::new(1, 2).unwrap(), Period::Every(2))
+                .ns_engine(ns)
+                .build(&metas);
+        t.run(&mut opt, &small_cfg(steps)).unwrap()
+    };
+    let host = mk(Arc::new(NsEngine::host_only()));
+    let xla = mk(Arc::new(NsEngine::new(Some(Arc::clone(&rt)))));
+    let a = host.get("train_loss").unwrap();
+    let b = xla.get("train_loss").unwrap();
+    for (x, y) in a.values.iter().zip(&b.values) {
+        assert!((x - y).abs() < 5e-3, "{x} vs {y}");
+    }
+}
+
+#[test]
+fn muon_family_beats_adamw_on_short_run() {
+    // The paper's data-efficiency claim at miniature scale: given the same
+    // small step budget, MuonBP's train loss is at least as good as AdamW
+    // with its best-of-two lr.
+    let rt = runtime();
+    let steps = 25;
+    let run = |name: &str, lr: f64| {
+        let mut t = Trainer::new(
+            Arc::clone(&rt),
+            "tiny",
+            CorpusCfg::default(),
+            13,
+        )
+        .unwrap();
+        let metas = t.state.metas.clone();
+        let mut cfg = small_cfg(steps);
+        cfg.lr = lr;
+        let rec = match name {
+            "muonbp" => {
+                let mut o = Muon::block_periodic(&metas, 2, 5);
+                t.run(&mut o, &cfg).unwrap()
+            }
+            _ => {
+                let mut o = AdamW::new(&metas);
+                t.run(&mut o, &cfg).unwrap()
+            }
+        };
+        rec.get("train_loss").unwrap().min()
+    };
+    let muonbp = run("muonbp", 0.02);
+    let adam = run("adamw", 0.008).min(run("adamw", 0.02));
+    assert!(
+        muonbp <= adam + 0.05,
+        "muonbp {muonbp} should be <= adamw {adam} (+tol)"
+    );
+}
+
+#[test]
+fn comm_volume_reduction_matches_period() {
+    // Optimizer traffic over a full period divides by P (the paper's "5x
+    // reduction in optimizer step communication volume").
+    let rt = runtime();
+    let mut t =
+        Trainer::new(Arc::clone(&rt), "tiny", CorpusCfg::default(), 15)
+            .unwrap();
+    let metas = t.state.metas.clone();
+    let run_bytes = |period| {
+        let mut t = Trainer::new(
+            Arc::clone(&rt),
+            "tiny",
+            CorpusCfg::default(),
+            15,
+        )
+        .unwrap();
+        let mut opt =
+            DistMuonBuilder::new(Mesh::new(1, 2).unwrap(), period)
+                .ns_engine(Arc::new(NsEngine::host_only()))
+                .build(&metas);
+        let rec = t.run(&mut opt, &small_cfg(10)).unwrap();
+        rec.get("opt_comm_bytes").unwrap().values.iter().sum::<f64>()
+    };
+    let muon = run_bytes(Period::Every(1));
+    let bp5 = run_bytes(Period::Every(5));
+    let block = run_bytes(Period::Never);
+    assert_eq!(block, 0.0);
+    assert!((muon / bp5 - 5.0).abs() < 1e-6, "{muon} / {bp5}");
+    let _ = &mut t;
+}
