@@ -1,0 +1,28 @@
+# Convenience targets; tier-1 verify is `make verify` (== ROADMAP.md).
+
+.PHONY: build test verify ci perf artifacts clean
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+
+verify: build test
+
+ci:
+	./ci.sh
+
+# Hot-path microbenchmarks -> results/BENCH_hotpath.json (host sections
+# always run; XLA/train-step sections need `make artifacts` first).
+perf:
+	cargo bench --bench perf_hotpath
+
+# Build the L1/L2 HLO-text artifacts (requires the python toolchain with
+# jax; see python/compile/aot.py).
+artifacts:
+	python3 python/compile/aot.py --out artifacts
+
+clean:
+	cargo clean
+	rm -rf results

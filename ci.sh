@@ -1,0 +1,38 @@
+#!/usr/bin/env bash
+# CI gate: tier-1 verify (build + tests) plus formatting and lint checks.
+# Usage: ./ci.sh            — run everything, fail fast on tier-1,
+#                              report fmt/clippy at the end.
+set -uo pipefail
+cd "$(dirname "$0")"
+
+fail=0
+
+step() {
+    echo
+    echo "== $1 =="
+}
+
+step "tier-1: cargo build --release"
+cargo build --release || exit 1
+
+step "tier-1: cargo test -q"
+cargo test -q || exit 1
+
+step "cargo fmt --check"
+if ! cargo fmt --check; then
+    echo "FAIL: formatting (run 'cargo fmt')"
+    fail=1
+fi
+
+step "cargo clippy --all-targets -- -D warnings"
+if ! cargo clippy --all-targets -- -D warnings; then
+    echo "FAIL: clippy"
+    fail=1
+fi
+
+echo
+if [ "$fail" -ne 0 ]; then
+    echo "CI: tier-1 green, lint/format failures above"
+    exit 1
+fi
+echo "CI: all green"

@@ -1,61 +1,175 @@
 //! §Perf harness — micro-benchmarks of every hot path the optimizer step
-//! touches, used to drive the EXPERIMENTS.md §Perf iteration log:
-//!   - host blocked matmul GFLOP/s across shapes,
-//!   - Newton–Schulz: host vs XLA (artifact + runtime JIT),
-//!   - full PJRT train step (fwd/bwd) per config,
-//!   - collective rendezvous overhead of the simulated cluster,
-//!   - end-to-end optimizer step (reference vs distributed).
+//! touches, used to drive the README §Hot-path iteration log:
+//!   - packed GEMM vs the seed's naive kernels (GFLOP/s, speedup),
+//!   - symmetric syrk (X·Xᵀ) vs the naive dot-product Gram kernel,
+//!   - Newton–Schulz: fused zero-alloc workspace vs seed reference,
+//!   - parallel vs sequential block orthogonalization,
+//!   - XLA backends, full PJRT train step, collectives, end-to-end
+//!     optimizer step (artifact-gated; host sections always run).
+//!
+//! Every timed kernel is appended to `results/BENCH_hotpath.json`
+//! ({name, kind, shape, mean_s, gflops, speedup_vs_naive}) so the perf
+//! trajectory is tracked across PRs. The JSON is written before the
+//! artifact gate, so host numbers are recorded even without artifacts.
 
 #[path = "common.rs"]
 mod common;
 
 use std::sync::Arc;
 
-use muonbp::bench_util::{banner, time_it};
+use muonbp::bench_util::{banner, save_bench_json, time_it};
 use muonbp::coordinator::DistMuonBuilder;
 use muonbp::costmodel::netmodel::NetModel;
-use muonbp::linalg::matmul::matmul;
-use muonbp::linalg::newton_schulz::{newton_schulz, NsCoeffs};
-use muonbp::mesh::Mesh;
-use muonbp::optim::muon::{Muon, Period};
+use muonbp::linalg::matmul::{matmul, reference, syrk};
+use muonbp::linalg::newton_schulz::{
+    newton_schulz, newton_schulz_reference, ns_flops, NsCoeffs, NsWorkspace,
+};
+use muonbp::mesh::{Layout, Mesh};
+use muonbp::optim::muon::{Muon, OrthFn, Period};
 use muonbp::optim::Optimizer;
 use muonbp::runtime::NsEngine;
+use muonbp::shard::ShardSpec;
 use muonbp::tensor::Tensor;
+use muonbp::utils::json::Json;
 use muonbp::utils::rng::Rng;
 
 fn main() {
     banner("perf: hot-path microbenchmarks");
     let mut rng = Rng::new(0xBE);
+    let mut records: Vec<Json> = Vec::new();
 
-    // 1. Host matmul roofline.
+    // 1. Host matmul roofline: packed register-tiled kernels vs the seed's
+    //    naive blocked kernels (retained in `matmul::reference`).
     for (m, k, n) in [(128, 128, 128), (256, 256, 256), (128, 352, 352)] {
         let a = Tensor::randn(&[m, k], 1.0, &mut rng);
         let b = Tensor::randn(&[k, n], 1.0, &mut rng);
         let flops = 2.0 * m as f64 * k as f64 * n as f64;
-        let r = time_it(&format!("host matmul {m}x{k}x{n}"), 2, 8, || {
+        let shape = format!("{m}x{k}x{n}");
+        let r_ref =
+            time_it(&format!("host matmul-naive {shape}"), 2, 8, || {
+                std::hint::black_box(reference::matmul(&a, &b));
+            });
+        println!("    -> {:.2} GFLOP/s", flops / r_ref.mean_s / 1e9);
+        records.push(r_ref.to_json("matmul-naive", &shape, flops, 0.0));
+        let r = time_it(&format!("host matmul {shape}"), 2, 8, || {
             std::hint::black_box(matmul(&a, &b));
         });
-        println!("    -> {:.2} GFLOP/s", flops / r.mean_s / 1e9);
+        let speedup = r_ref.mean_s / r.mean_s;
+        println!(
+            "    -> {:.2} GFLOP/s ({speedup:.2}x vs naive)",
+            flops / r.mean_s / 1e9
+        );
+        records.push(r.to_json("matmul", &shape, flops, speedup));
     }
 
-    // 2. NS backends.
+    // 2. Gram kernel: symmetric syrk vs naive dot-product X·Xᵀ.
+    {
+        let (m, k) = (128usize, 352usize);
+        let x = Tensor::randn(&[m, k], 1.0, &mut rng);
+        let flops = 2.0 * m as f64 * m as f64 * k as f64;
+        let shape = format!("{m}x{k}");
+        let r_ref =
+            time_it(&format!("host gram-naive {shape}"), 2, 8, || {
+                std::hint::black_box(reference::matmul_nt(&x, &x));
+            });
+        println!("    -> {:.2} GFLOP/s", flops / r_ref.mean_s / 1e9);
+        records.push(r_ref.to_json("gram-naive", &shape, flops, 0.0));
+        let r = time_it(&format!("host gram-syrk {shape}"), 2, 8, || {
+            std::hint::black_box(syrk(&x));
+        });
+        let speedup = r_ref.mean_s / r.mean_s;
+        println!(
+            "    -> {:.2} GFLOP/s ({speedup:.2}x vs naive)",
+            flops / r.mean_s / 1e9
+        );
+        records.push(r.to_json("gram-syrk", &shape, flops, speedup));
+    }
+
+    // 3. Newton–Schulz: seed reference vs fused zero-alloc workspace.
     let g = Tensor::randn(&[128, 352], 1.0, &mut rng);
-    time_it("NS host 128x352 K=5", 2, 8, || {
+    let flops_ns = ns_flops(128, 352, 5);
+    let r_ns_ref = time_it("NS host-reference 128x352 K=5", 2, 8, || {
+        std::hint::black_box(newton_schulz_reference(
+            &g,
+            5,
+            NsCoeffs::jordan(),
+        ));
+    });
+    println!("    -> {:.2} GFLOP/s", flops_ns / r_ns_ref.mean_s / 1e9);
+    records.push(r_ns_ref.to_json("ns-naive", "128x352xK5", flops_ns, 0.0));
+    let r_ns = time_it("NS host 128x352 K=5", 2, 8, || {
         std::hint::black_box(newton_schulz(&g, 5, NsCoeffs::jordan()));
     });
+    let ns_speedup = r_ns_ref.mean_s / r_ns.mean_s;
+    println!(
+        "    -> {:.2} GFLOP/s ({ns_speedup:.2}x vs reference)",
+        flops_ns / r_ns.mean_s / 1e9
+    );
+    records.push(r_ns.to_json("ns-fused", "128x352xK5", flops_ns, ns_speedup));
+
+    // 3b. Explicit workspace reuse (what the engines do): no per-call
+    //     load/alloc beyond the output tensor.
+    let mut ws = NsWorkspace::new();
+    ws.newton_schulz(&g, 5, NsCoeffs::jordan()); // warm
+    let r_ws = time_it("NS workspace 128x352 K=5 (warm)", 2, 8, || {
+        std::hint::black_box(ws.newton_schulz(&g, 5, NsCoeffs::jordan()));
+    });
+    records.push(r_ws.to_json("ns-workspace", "128x352xK5", flops_ns, 0.0));
+
+    // 4. Parallel block orthogonalization (paper §3: blocks independent).
+    {
+        let (m, n, tp) = (256usize, 1024usize, 4usize);
+        let big = Tensor::randn(&[m, n], 1.0, &mut rng);
+        let spec = ShardSpec::new(Layout::TpColumn, tp, m, n);
+        let orth: OrthFn =
+            Arc::new(|t| newton_schulz(t, 5, NsCoeffs::jordan()));
+        let shape = format!("{m}x{n}/tp{tp}");
+        let r_seq = time_it(
+            &format!("block orth sequential {shape}"),
+            1,
+            6,
+            || {
+                std::hint::black_box(Muon::orth_update_with(
+                    &big, &spec, false, 0.2, &orth, false,
+                ));
+            },
+        );
+        records.push(r_seq.to_json("block-orth-seq", &shape, 0.0, 0.0));
+        let r_par = time_it(
+            &format!("block orth parallel {shape}"),
+            1,
+            6,
+            || {
+                std::hint::black_box(Muon::orth_update_with(
+                    &big, &spec, false, 0.2, &orth, true,
+                ));
+            },
+        );
+        let speedup = r_seq.mean_s / r_par.mean_s;
+        println!("    -> {speedup:.2}x vs sequential");
+        records.push(r_par.to_json("block-orth-par", &shape, 0.0, speedup));
+    }
+
+    // Host-side results are complete — persist before the artifact gate so
+    // BENCH_hotpath.json exists even without `make artifacts`.
+    save_bench_json("BENCH_hotpath", &records);
+
+    // 5. NS backends through the engine (artifact-gated from here on).
     let runtime = common::runtime_or_exit();
     let ns = Arc::new(NsEngine::new(Some(Arc::clone(&runtime))));
     ns.orthogonalize(&g).unwrap(); // compile outside timing
-    time_it("NS xla-artifact 128x352 K=5", 2, 8, || {
+    let r = time_it("NS xla-artifact 128x352 K=5", 2, 8, || {
         std::hint::black_box(ns.orthogonalize(&g).unwrap());
     });
+    records.push(r.to_json("ns-xla-artifact", "128x352xK5", flops_ns, 0.0));
     let g2 = Tensor::randn(&[96, 352], 1.0, &mut rng);
     ns.orthogonalize(&g2).unwrap();
-    time_it("NS xla-jit 96x352 K=5", 2, 8, || {
+    let r = time_it("NS xla-jit 96x352 K=5", 2, 8, || {
         std::hint::black_box(ns.orthogonalize(&g2).unwrap());
     });
+    records.push(r.to_json("ns-xla-jit", "96x352xK5", ns_flops(96, 352, 5), 0.0));
 
-    // 3. PJRT train step per config.
+    // 6. PJRT train step per config.
     for model in ["tiny", "bench"] {
         let trainer = muonbp::train::Trainer::new(
             Arc::clone(&runtime),
@@ -75,24 +189,26 @@ fn main() {
             * entry.n_params as f64
             * (entry.batch * entry.seq_len) as f64;
         println!("    -> {:.2} GFLOP/s effective", flops / r.mean_s / 1e9);
+        records.push(r.to_json("train-step", model, flops, 0.0));
     }
 
-    // 4. Collective rendezvous overhead (4 ranks, 1 KiB payload).
+    // 7. Collective rendezvous overhead (4 ranks, 1 KiB payload).
     let comm =
         muonbp::comm::Communicator::new(4, NetModel::a100_nvlink());
-    time_it("all_reduce x4 ranks (1KiB)", 2, 20, || {
+    let r = time_it("all_reduce x4 ranks (1KiB)", 2, 20, || {
         crossbeam_utils::thread::scope(|s| {
-            for r in 0..4 {
+            for rank in 0..4 {
                 let c = comm.clone();
                 s.spawn(move |_| {
-                    c.all_reduce_mean(r, Tensor::zeros(&[16, 16]))
+                    c.all_reduce_mean(rank, Tensor::zeros(&[16, 16]))
                 });
             }
         })
         .unwrap();
     });
+    records.push(r.to_json("allreduce", "4x1KiB", 0.0, 0.0));
 
-    // 5. End-to-end optimizer step, reference vs distributed.
+    // 8. End-to-end optimizer step, reference vs distributed.
     let trainer = muonbp::train::Trainer::new(
         Arc::clone(&runtime),
         "bench",
@@ -104,12 +220,13 @@ fn main() {
     let grads: Vec<Tensor> =
         metas.iter().map(|m| Tensor::randn(&m.shape, 0.01, &mut rng)).collect();
 
-    let mut reference = Muon::block_periodic(&metas, 4, 5);
+    let mut reference_opt = Muon::block_periodic(&metas, 4, 5);
     let mut params: Vec<Tensor> =
         metas.iter().map(|m| Tensor::zeros(&m.shape)).collect();
-    time_it("optimizer step: reference MuonBP (bench)", 1, 8, || {
-        reference.step(&mut params, &grads, 0.01);
+    let r = time_it("optimizer step: reference MuonBP (bench)", 1, 8, || {
+        reference_opt.step(&mut params, &grads, 0.01);
     });
+    records.push(r.to_json("opt-step-ref", "bench", 0.0, 0.0));
 
     let mut dist = DistMuonBuilder::new(
         Mesh::new(2, 4).unwrap(),
@@ -119,9 +236,13 @@ fn main() {
     .build(&metas);
     let mut params2: Vec<Tensor> =
         metas.iter().map(|m| Tensor::zeros(&m.shape)).collect();
-    time_it("optimizer step: DistMuonBP dp2xtp4 (bench)", 1, 8, || {
+    let r = time_it("optimizer step: DistMuonBP dp2xtp4 (bench)", 1, 8, || {
         dist.step(&mut params2, &grads, 0.01);
     });
+    records.push(r.to_json("opt-step-dist", "bench", 0.0, 0.0));
     let (hits, misses) = ns.cache_stats();
     println!("ns cache: {hits} hits / {misses} misses");
+
+    // Re-persist with the artifact-gated sections included.
+    save_bench_json("BENCH_hotpath", &records);
 }

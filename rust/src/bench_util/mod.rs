@@ -5,6 +5,7 @@
 use std::path::PathBuf;
 use std::time::Instant;
 
+use crate::utils::json::Json;
 use crate::utils::stats::Stats;
 
 /// Result of one timed benchmark.
@@ -24,6 +25,52 @@ impl BenchResult {
             self.name, self.mean_s, self.p50_s, self.p95_s, self.samples
         )
     }
+
+    /// Machine-readable record for the perf-trajectory files
+    /// (`results/BENCH_*.json`). `kind`/`shape` identify the kernel;
+    /// `flops == 0` means "no GFLOP/s figure for this entry";
+    /// `speedup_vs_ref == 0` likewise.
+    pub fn to_json(
+        &self,
+        kind: &str,
+        shape: &str,
+        flops: f64,
+        speedup_vs_ref: f64,
+    ) -> Json {
+        let mut kv = vec![
+            ("name", Json::str(&self.name)),
+            ("kind", Json::str(kind)),
+            ("shape", Json::str(shape)),
+            ("mean_s", Json::num(self.mean_s)),
+            ("p50_s", Json::num(self.p50_s)),
+            ("p95_s", Json::num(self.p95_s)),
+            ("samples", Json::num(self.samples as f64)),
+        ];
+        if flops > 0.0 {
+            kv.push(("gflops", Json::num(flops / self.mean_s / 1e9)));
+        }
+        if speedup_vs_ref > 0.0 {
+            kv.push(("speedup_vs_naive", Json::num(speedup_vs_ref)));
+        }
+        Json::obj(kv)
+    }
+}
+
+/// Write a perf-results JSON artifact under `results/` and report its
+/// path. Entries are wrapped as `{"bench": name, "entries": [...]}` so
+/// the perf trajectory across PRs is diffable per kernel.
+pub fn save_bench_json(name: &str, entries: &[Json]) -> PathBuf {
+    let doc = Json::obj(vec![
+        ("bench", Json::str(name)),
+        ("entries", Json::Arr(entries.to_vec())),
+    ]);
+    let path = results_dir().join(format!("{name}.json"));
+    if let Err(e) = std::fs::write(&path, doc.to_string_pretty()) {
+        eprintln!("warn: could not write {}: {e}", path.display());
+    } else {
+        println!("  -> {}", path.display());
+    }
+    path
 }
 
 /// Time `f` with `warmup` untimed and `iters` timed runs.

@@ -53,6 +53,9 @@ impl DistMuonBuilder {
     }
 
     pub fn build(self, metas: &[ParamMeta]) -> DistMuon {
+        if let Err(e) = self.cfg.validate() {
+            panic!("{e}");
+        }
         let specs: Vec<Option<ShardSpec>> = metas
             .iter()
             .map(|p| {
@@ -85,6 +88,12 @@ impl DistMuonBuilder {
         let orth: OrthFn = match &self.ns {
             Some(ns) => ns.as_orth_fn(),
             None => {
+                // Host fallback goes through the fused workspace NS: each
+                // TP rank thread warms its own thread-local `NsWorkspace`
+                // and every orthogonalization it runs after that is
+                // allocation-free. (Rank threads are re-spawned per step
+                // by `thread::scope`, so the warm-up recurs once per rank
+                // per step — persistent rank workers are a ROADMAP item.)
                 let steps = self.cfg.ns_steps;
                 let coeffs = self.cfg.coeffs;
                 Arc::new(move |g: &Tensor| {

@@ -1,0 +1,532 @@
+//! Packed, register-tiled GEMM microkernels — the host hot path.
+//!
+//! Everything Newton–Schulz touches funnels through two primitives:
+//!
+//! - [`gemm_into`]: C = op(A)·op(B) (+ optional fused `alpha·S` writeback),
+//!   built from a 4×16 register-accumulator microkernel over *packed*
+//!   operand panels. Packing rewrites A into MR-row column-interleaved
+//!   panels and B into NR-column row-interleaved panels so the microkernel
+//!   inner loop is two contiguous streams feeding 64 independent FMA
+//!   accumulators — a shape LLVM reliably autovectorizes via
+//!   `chunks_exact`. Row panels are independent, so large products fan out
+//!   across scoped threads (bit-identical to single-threaded: each output
+//!   row is computed by exactly one thread with the same k-order).
+//! - [`syrk_into`]: C = X·Xᵀ exploiting symmetry — only tiles touching the
+//!   upper triangle are computed and the strict lower triangle is mirrored,
+//!   halving the Gram-matrix FLOPs of every NS iteration (`A = X Xᵀ` and,
+//!   because A is symmetric, `A² = A·Aᵀ` too).
+//!
+//! All scratch (packed panels) lives in caller-provided grow-only `Vec`s so
+//! the NS iteration loop runs allocation-free after warm-up (see
+//! `linalg::newton_schulz::NsWorkspace` and `tests/ns_zero_alloc.rs`).
+//! The naive kernels these replace survive in `matmul::reference` as
+//! property-test oracles.
+
+use crossbeam_utils::thread;
+
+/// Microkernel tile rows (A panel height).
+pub const MR: usize = 4;
+/// Microkernel tile columns (B panel width): 16 f32 = four 128-bit or two
+/// 256-bit SIMD lanes per accumulator row.
+pub const NR: usize = 16;
+
+/// FLOP threshold below which threading overhead beats the speedup.
+const MT_MIN_FLOPS: f64 = 4.0e6;
+
+#[inline]
+fn div_up(x: usize, d: usize) -> usize {
+    (x + d - 1) / d
+}
+
+/// Threads worth spawning for a kernel of `flops` floating point ops.
+pub fn suggested_threads(flops: f64) -> usize {
+    if flops < MT_MIN_FLOPS {
+        return 1;
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(8)
+}
+
+/// Pack `a` (logical m×k; stored k×m when `trans`) into MR-row panels:
+/// panel p holds rows [p·MR, p·MR+MR) column-interleaved as
+/// `out[p·k·MR + kk·MR + r]`, zero-padded past row m so the microkernel
+/// never branches on the edge.
+fn pack_a(a: &[f32], m: usize, k: usize, trans: bool, out: &mut Vec<f32>) {
+    let panels = div_up(m, MR);
+    out.clear();
+    out.resize(panels * k * MR, 0.0);
+    for p in 0..panels {
+        let dst = &mut out[p * k * MR..(p + 1) * k * MR];
+        let rows = MR.min(m - p * MR);
+        if !trans {
+            for r in 0..rows {
+                let row = &a[(p * MR + r) * k..(p * MR + r + 1) * k];
+                for (kk, &v) in row.iter().enumerate() {
+                    dst[kk * MR + r] = v;
+                }
+            }
+        } else {
+            // a is stored k×m: logical A[i][kk] = a[kk·m + i].
+            for kk in 0..k {
+                let arow = &a[kk * m..(kk + 1) * m];
+                for r in 0..rows {
+                    dst[kk * MR + r] = arow[p * MR + r];
+                }
+            }
+        }
+    }
+}
+
+/// Pack `b` (logical k×n; stored n×k when `trans`) into NR-column panels:
+/// panel q holds columns [q·NR, q·NR+NR) row-interleaved as
+/// `out[q·k·NR + kk·NR + c]`, zero-padded past column n.
+fn pack_b(b: &[f32], k: usize, n: usize, trans: bool, out: &mut Vec<f32>) {
+    let panels = div_up(n, NR);
+    out.clear();
+    out.resize(panels * k * NR, 0.0);
+    for q in 0..panels {
+        let dst = &mut out[q * k * NR..(q + 1) * k * NR];
+        let cols = NR.min(n - q * NR);
+        if !trans {
+            for kk in 0..k {
+                let brow = &b[kk * n..(kk + 1) * n];
+                dst[kk * NR..kk * NR + cols]
+                    .copy_from_slice(&brow[q * NR..q * NR + cols]);
+            }
+        } else {
+            // b is stored n×k: logical B[kk][j] = b[j·k + kk].
+            for c in 0..cols {
+                let brow = &b[(q * NR + c) * k..(q * NR + c + 1) * k];
+                for (kk, &v) in brow.iter().enumerate() {
+                    dst[kk * NR + c] = v;
+                }
+            }
+        }
+    }
+}
+
+/// The register-tiled heart: one MR×NR accumulator tile over the full k
+/// extent of a packed A panel (k·MR) and packed B panel (k·NR). The paired
+/// `chunks_exact` streams plus the fixed-size accumulator array are the
+/// autovectorization contract.
+#[inline]
+fn microkernel(ap: &[f32], bp: &[f32]) -> [[f32; NR]; MR] {
+    let mut acc = [[0.0f32; NR]; MR];
+    for (a4, b16) in ap.chunks_exact(MR).zip(bp.chunks_exact(NR)) {
+        for r in 0..MR {
+            let ar = a4[r];
+            let accr = &mut acc[r];
+            for c in 0..NR {
+                accr[c] += ar * b16[c];
+            }
+        }
+    }
+    acc
+}
+
+/// Compute one row panel of C (rows p·MR..p·MR+rows, all n columns).
+/// `fuse` is `(alpha, s_panel)` with `s_panel` the same rows of a source
+/// matrix S: writeback becomes `C = acc + alpha·S` in a single pass (the
+/// fused `X' = B·X + a·X` NS update).
+fn run_row_panel(
+    cpanel: &mut [f32],
+    rows: usize,
+    n: usize,
+    ap_panel: &[f32],
+    pb: &[f32],
+    k: usize,
+    fuse: Option<(f32, &[f32])>,
+) {
+    let col_panels = div_up(n, NR);
+    for q in 0..col_panels {
+        let cols = NR.min(n - q * NR);
+        let bp_panel = &pb[q * k * NR..(q + 1) * k * NR];
+        let acc = microkernel(ap_panel, bp_panel);
+        for r in 0..rows {
+            let off = r * n + q * NR;
+            let dst = &mut cpanel[off..off + cols];
+            match fuse {
+                Some((alpha, s_panel)) => {
+                    let src = &s_panel[off..off + cols];
+                    for ((d, &a), &s) in
+                        dst.iter_mut().zip(&acc[r][..cols]).zip(src)
+                    {
+                        *d = a + alpha * s;
+                    }
+                }
+                None => dst.copy_from_slice(&acc[r][..cols]),
+            }
+        }
+    }
+}
+
+/// C (m×n, row-major) = op(A)·op(B), optionally fused with `+ alpha·S`.
+///
+/// - `a` is m×k row-major, or k×m when `trans_a` (computes Aᵀ·B shapes).
+/// - `b` is k×n row-major, or n×k when `trans_b` (computes A·Bᵀ shapes).
+/// - `fuse_axpy = Some((alpha, s))` with `s.len() == m·n` writes
+///   `C = op(A)·op(B) + alpha·S` in one pass over C.
+/// - `pa`/`pb` are grow-only packing scratch; no other heap use.
+/// - `threads > 1` fans row panels out across scoped threads; results are
+///   bit-identical to the single-threaded path for any thread count.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_into(
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    trans_a: bool,
+    b: &[f32],
+    trans_b: bool,
+    fuse_axpy: Option<(f32, &[f32])>,
+    pa: &mut Vec<f32>,
+    pb: &mut Vec<f32>,
+    threads: usize,
+) {
+    assert_eq!(c.len(), m * n, "gemm output size");
+    assert_eq!(a.len(), m * k, "gemm A size");
+    assert_eq!(b.len(), k * n, "gemm B size");
+    if let Some((_, s)) = fuse_axpy {
+        assert_eq!(s.len(), m * n, "gemm fuse source size");
+    }
+    if m == 0 || n == 0 {
+        return;
+    }
+    if k == 0 {
+        match fuse_axpy {
+            Some((alpha, s)) => {
+                for (d, &x) in c.iter_mut().zip(s) {
+                    *d = alpha * x;
+                }
+            }
+            None => c.fill(0.0),
+        }
+        return;
+    }
+    pack_a(a, m, k, trans_a, pa);
+    pack_b(b, k, n, trans_b, pb);
+    let pa_s: &[f32] = pa;
+    let pb_s: &[f32] = pb;
+    let row_panels = div_up(m, MR);
+    let use_threads = threads.clamp(1, row_panels);
+    if use_threads <= 1 {
+        for (p, cpanel) in c.chunks_mut(MR * n).enumerate() {
+            let rows = MR.min(m - p * MR);
+            let fuse_p = fuse_axpy
+                .map(|(al, s)| (al, &s[p * MR * n..p * MR * n + rows * n]));
+            run_row_panel(
+                cpanel,
+                rows,
+                n,
+                &pa_s[p * k * MR..(p + 1) * k * MR],
+                pb_s,
+                k,
+                fuse_p,
+            );
+        }
+    } else {
+        thread::scope(|scope| {
+            // Round-robin panel assignment: balanced and deterministic.
+            let mut buckets: Vec<Vec<(usize, &mut [f32])>> =
+                (0..use_threads).map(|_| Vec::new()).collect();
+            for (p, cpanel) in c.chunks_mut(MR * n).enumerate() {
+                buckets[p % use_threads].push((p, cpanel));
+            }
+            for bucket in buckets {
+                scope.spawn(move |_| {
+                    for (p, cpanel) in bucket {
+                        let rows = MR.min(m - p * MR);
+                        let fuse_p = fuse_axpy.map(|(al, s)| {
+                            (al, &s[p * MR * n..p * MR * n + rows * n])
+                        });
+                        run_row_panel(
+                            cpanel,
+                            rows,
+                            n,
+                            &pa_s[p * k * MR..(p + 1) * k * MR],
+                            pb_s,
+                            k,
+                            fuse_p,
+                        );
+                    }
+                });
+            }
+        })
+        .unwrap();
+    }
+}
+
+/// C (m×m) = X·Xᵀ for row-major X (m×k), computing only tiles that touch
+/// the upper triangle and mirroring the rest — ≈½ the FLOPs of a full
+/// GEMM. Also serves `A²` for symmetric A (A·A = A·Aᵀ), which is exactly
+/// the other Gram-shaped product in a Newton–Schulz iteration.
+pub fn syrk_into(
+    c: &mut [f32],
+    x: &[f32],
+    m: usize,
+    k: usize,
+    pa: &mut Vec<f32>,
+    pb: &mut Vec<f32>,
+) {
+    assert_eq!(c.len(), m * m, "syrk output size");
+    assert_eq!(x.len(), m * k, "syrk input size");
+    if m == 0 {
+        return;
+    }
+    if k == 0 {
+        c.fill(0.0);
+        return;
+    }
+    pack_a(x, m, k, false, pa);
+    // B = Xᵀ (k×m), packed straight from X's rows.
+    pack_b(x, k, m, true, pb);
+    let row_panels = div_up(m, MR);
+    let col_panels = div_up(m, NR);
+    for p in 0..row_panels {
+        let rows = MR.min(m - p * MR);
+        let ap_panel = &pa[p * k * MR..(p + 1) * k * MR];
+        for q in 0..col_panels {
+            // Tile columns are [q·NR, q·NR+NR); skip tiles entirely below
+            // the diagonal (max column index < first row index).
+            if (q + 1) * NR <= p * MR {
+                continue;
+            }
+            let cols = NR.min(m - q * NR);
+            let bp_panel = &pb[q * k * NR..(q + 1) * k * NR];
+            let acc = microkernel(ap_panel, bp_panel);
+            for r in 0..rows {
+                let i = p * MR + r;
+                for cc in 0..cols {
+                    let j = q * NR + cc;
+                    if j >= i {
+                        c[i * m + j] = acc[r][cc];
+                    }
+                }
+            }
+        }
+    }
+    // Mirror the computed upper triangle into the strict lower triangle.
+    for i in 0..m {
+        for j in (i + 1)..m {
+            c[j * m + i] = c[i * m + j];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matmul::reference;
+    use crate::tensor::Tensor;
+    use crate::utils::prop;
+    use crate::utils::rng::Rng;
+
+    fn packed(a: &Tensor, b: &Tensor, threads: usize) -> Tensor {
+        let (m, k, n) = (a.m(), a.n(), b.n());
+        let mut c = Tensor::zeros(&[m, n]);
+        let (mut pa, mut pb) = (Vec::new(), Vec::new());
+        gemm_into(
+            c.data_mut(),
+            m,
+            k,
+            n,
+            a.data(),
+            false,
+            b.data(),
+            false,
+            None,
+            &mut pa,
+            &mut pb,
+            threads,
+        );
+        c
+    }
+
+    fn assert_close(a: &Tensor, b: &Tensor, tol: f32) {
+        assert_eq!(a.shape(), b.shape());
+        for (x, y) in a.data().iter().zip(b.data()) {
+            assert!((x - y).abs() <= tol * (1.0 + x.abs()), "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn packed_matches_reference_property() {
+        prop::check("packed-gemm==reference", 30, |rng| {
+            let m = rng.gen_range(1, 70);
+            let k = rng.gen_range(1, 70);
+            let n = rng.gen_range(1, 70);
+            let a = Tensor::randn(&[m, k], 1.0, rng);
+            let b = Tensor::randn(&[k, n], 1.0, rng);
+            let got = packed(&a, &b, 1);
+            let want = reference::matmul(&a, &b);
+            for (x, y) in got.data().iter().zip(want.data()) {
+                if (x - y).abs() > 1e-4 * (1.0 + x.abs()) {
+                    return Err(format!("({m},{k},{n}): {x} vs {y}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn adversarial_shapes() {
+        // Degenerate vectors, single tiles, and every remainder class
+        // around the MR=4 / NR=16 tile sizes.
+        let mut rng = Rng::new(7);
+        for (m, k, n) in [
+            (1, 1, 1),
+            (1, 7, 33),
+            (33, 7, 1),
+            (1, 40, 1),
+            (4, 16, 16),
+            (5, 17, 17),
+            (3, 2, 15),
+            (8, 1, 32),
+            (19, 23, 31),
+            (64, 64, 64),
+        ] {
+            let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+            let b = Tensor::randn(&[k, n], 1.0, &mut rng);
+            assert_close(&packed(&a, &b, 1), &reference::matmul(&a, &b), 1e-4);
+        }
+    }
+
+    #[test]
+    fn transposed_operands() {
+        let mut rng = Rng::new(9);
+        // A·Bᵀ with B stored n×k.
+        let a = Tensor::randn(&[13, 21], 1.0, &mut rng);
+        let b = Tensor::randn(&[18, 21], 1.0, &mut rng);
+        let mut c = Tensor::zeros(&[13, 18]);
+        let (mut pa, mut pb) = (Vec::new(), Vec::new());
+        gemm_into(
+            c.data_mut(),
+            13,
+            21,
+            18,
+            a.data(),
+            false,
+            b.data(),
+            true,
+            None,
+            &mut pa,
+            &mut pb,
+            1,
+        );
+        assert_close(&c, &reference::matmul(&a, &b.transpose()), 1e-4);
+        // Aᵀ·B with A stored k×m.
+        let at = Tensor::randn(&[21, 13], 1.0, &mut rng);
+        let b2 = Tensor::randn(&[21, 17], 1.0, &mut rng);
+        let mut c2 = Tensor::zeros(&[13, 17]);
+        gemm_into(
+            c2.data_mut(),
+            13,
+            21,
+            17,
+            at.data(),
+            true,
+            b2.data(),
+            false,
+            None,
+            &mut pa,
+            &mut pb,
+            1,
+        );
+        assert_close(&c2, &reference::matmul(&at.transpose(), &b2), 1e-4);
+    }
+
+    #[test]
+    fn fused_axpy_writeback() {
+        let mut rng = Rng::new(11);
+        let a = Tensor::randn(&[9, 9], 1.0, &mut rng);
+        let x = Tensor::randn(&[9, 22], 1.0, &mut rng);
+        let mut c = Tensor::zeros(&[9, 22]);
+        let (mut pa, mut pb) = (Vec::new(), Vec::new());
+        gemm_into(
+            c.data_mut(),
+            9,
+            9,
+            22,
+            a.data(),
+            false,
+            x.data(),
+            false,
+            Some((3.4445, x.data())),
+            &mut pa,
+            &mut pb,
+            1,
+        );
+        let mut want = reference::matmul(&a, &x);
+        want.axpy(3.4445, &x);
+        assert_close(&c, &want, 1e-4);
+    }
+
+    #[test]
+    fn multithreaded_bit_identical() {
+        let mut rng = Rng::new(13);
+        let a = Tensor::randn(&[97, 55], 1.0, &mut rng);
+        let b = Tensor::randn(&[55, 83], 1.0, &mut rng);
+        let base = packed(&a, &b, 1);
+        for threads in [2, 3, 8, 64] {
+            let c = packed(&a, &b, threads);
+            assert_eq!(base, c, "threads={threads} drifted");
+        }
+    }
+
+    #[test]
+    fn syrk_matches_reference_property() {
+        prop::check("syrk==X·Xᵀ", 25, |rng| {
+            let m = rng.gen_range(1, 60);
+            let k = rng.gen_range(1, 60);
+            let x = Tensor::randn(&[m, k], 1.0, rng);
+            let mut c = Tensor::zeros(&[m, m]);
+            let (mut pa, mut pb) = (Vec::new(), Vec::new());
+            syrk_into(c.data_mut(), x.data(), m, k, &mut pa, &mut pb);
+            let want = reference::matmul_nt(&x, &x);
+            for (a, b) in c.data().iter().zip(want.data()) {
+                if (a - b).abs() > 1e-4 * (1.0 + a.abs()) {
+                    return Err(format!("({m},{k}): {a} vs {b}"));
+                }
+            }
+            // Exact symmetry by construction.
+            for i in 0..m {
+                for j in 0..m {
+                    if c.at(i, j) != c.at(j, i) {
+                        return Err(format!("asymmetric at ({i},{j})"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn scratch_reuse_across_shapes() {
+        // The same grow-only buffers must serve shrinking/growing shapes.
+        let mut rng = Rng::new(17);
+        let (mut pa, mut pb) = (Vec::new(), Vec::new());
+        for (m, k, n) in [(40, 40, 40), (3, 50, 7), (64, 2, 64), (5, 5, 5)] {
+            let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+            let b = Tensor::randn(&[k, n], 1.0, &mut rng);
+            let mut c = Tensor::zeros(&[m, n]);
+            gemm_into(
+                c.data_mut(),
+                m,
+                k,
+                n,
+                a.data(),
+                false,
+                b.data(),
+                false,
+                None,
+                &mut pa,
+                &mut pb,
+                1,
+            );
+            assert_close(&c, &reference::matmul(&a, &b), 1e-4);
+        }
+    }
+}

@@ -1,15 +1,27 @@
-//! Cache-blocked single-threaded matmul kernels (f32, f64 accumulation off
-//! the hot path is unnecessary: NS is self-correcting and pre-normalized).
+//! Host matmul entry points, backed by the packed register-tiled kernels
+//! in [`crate::linalg::gemm`].
 //!
-//! The i-k-j loop order streams the B panel row-wise so the inner loop is a
-//! contiguous FMA the compiler auto-vectorizes; `MC`/`KC` tiles keep the
-//! working set in L1/L2. This is the fallback / small-shape path — large
-//! orthogonalizations go through the XLA executable cache in `runtime`.
+//! `matmul` / `matmul_nt` / `matmul_tn` keep their seed signatures but now
+//! route through `gemm_into` (packed panels + 4×16 microkernel, scoped
+//! threads for large products; `matmul_nt(x, x)` is detected by pointer
+//! identity and served by the symmetric `syrk_into` at half the FLOPs).
+//! Packing scratch is thread-local and grow-only, so repeated calls do not
+//! allocate beyond the output tensor.
+//!
+//! The seed's naive kernels live on in [`reference`] — they are the
+//! property-test oracles for the packed path and the "before" side of
+//! `benches/perf_hotpath.rs`.
 
+use std::cell::RefCell;
+
+use crate::linalg::gemm::{gemm_into, suggested_threads, syrk_into};
 use crate::tensor::Tensor;
 
-const MC: usize = 64;
-const KC: usize = 256;
+thread_local! {
+    /// Per-thread packing scratch shared by every allocating entry point.
+    static PACK: RefCell<(Vec<f32>, Vec<f32>)> =
+        RefCell::new((Vec::new(), Vec::new()));
+}
 
 /// C = A (m x k) · B (k x n).
 pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
@@ -17,50 +29,72 @@ pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
     let (kb, n) = (b.m(), b.n());
     assert_eq!(k, kb, "matmul inner-dim mismatch: {k} vs {kb}");
     let mut c = Tensor::zeros(&[m, n]);
-    let (ad, bd) = (a.data(), b.data());
-    let cd = c.data_mut();
-    for i0 in (0..m).step_by(MC) {
-        let i1 = (i0 + MC).min(m);
-        for k0 in (0..k).step_by(KC) {
-            let k1 = (k0 + KC).min(k);
-            for i in i0..i1 {
-                let crow = &mut cd[i * n..(i + 1) * n];
-                for kk in k0..k1 {
-                    let aik = ad[i * k + kk];
-                    if aik == 0.0 {
-                        continue;
-                    }
-                    let brow = &bd[kk * n..(kk + 1) * n];
-                    for (cj, bj) in crow.iter_mut().zip(brow) {
-                        *cj += aik * bj;
-                    }
-                }
-            }
-        }
-    }
+    let threads = suggested_threads(2.0 * m as f64 * k as f64 * n as f64);
+    PACK.with(|p| {
+        let (pa, pb) = &mut *p.borrow_mut();
+        gemm_into(
+            c.data_mut(),
+            m,
+            k,
+            n,
+            a.data(),
+            false,
+            b.data(),
+            false,
+            None,
+            pa,
+            pb,
+            threads,
+        );
+    });
     c
 }
 
-/// C = A (m x k) · Bᵀ where B is (n x k) — the Gram-matrix building block
-/// (X Xᵀ = matmul_nt(X, X)) with both operands streamed row-contiguously.
+/// C = X·Xᵀ (m x m) for X (m x k): the symmetric Gram product, computing
+/// the upper triangle only and mirroring it (≈half the FLOPs of the
+/// generic `matmul_nt`). Single-threaded — outer parallelism (blocks /
+/// rank threads) is where the cores go on the hot path.
+pub fn syrk(x: &Tensor) -> Tensor {
+    let (m, k) = (x.m(), x.n());
+    let mut c = Tensor::zeros(&[m, m]);
+    PACK.with(|p| {
+        let (pa, pb) = &mut *p.borrow_mut();
+        syrk_into(c.data_mut(), x.data(), m, k, pa, pb);
+    });
+    c
+}
+
+/// C = A (m x k) · Bᵀ where B is (n x k) — the Gram-matrix building block.
+/// When both operands are the *same* tensor (X·Xᵀ) and the product is
+/// small enough that the generic path would not multithread, this
+/// dispatches to the half-FLOP [`syrk`] (callers who know they want the
+/// symmetric kernel should call [`syrk`] directly).
 pub fn matmul_nt(a: &Tensor, b: &Tensor) -> Tensor {
     let (m, k) = (a.m(), a.n());
     let (n, kb) = (b.m(), b.n());
     assert_eq!(k, kb, "matmul_nt inner-dim mismatch: {k} vs {kb}");
-    let mut c = Tensor::zeros(&[m, n]);
-    let (ad, bd) = (a.data(), b.data());
-    let cd = c.data_mut();
-    for i in 0..m {
-        let arow = &ad[i * k..(i + 1) * k];
-        for j in 0..n {
-            let brow = &bd[j * k..(j + 1) * k];
-            let mut acc = 0.0f32;
-            for (x, y) in arow.iter().zip(brow) {
-                acc += x * y;
-            }
-            cd[i * n + j] = acc;
-        }
+    let threads = suggested_threads(2.0 * m as f64 * k as f64 * n as f64);
+    if std::ptr::eq(a, b) && threads == 1 {
+        return syrk(a);
     }
+    let mut c = Tensor::zeros(&[m, n]);
+    PACK.with(|p| {
+        let (pa, pb) = &mut *p.borrow_mut();
+        gemm_into(
+            c.data_mut(),
+            m,
+            k,
+            n,
+            a.data(),
+            false,
+            b.data(),
+            true,
+            None,
+            pa,
+            pb,
+            threads,
+        );
+    });
     c
 }
 
@@ -70,23 +104,24 @@ pub fn matmul_tn(a: &Tensor, b: &Tensor) -> Tensor {
     let (kb, n) = (b.m(), b.n());
     assert_eq!(k, kb, "matmul_tn inner-dim mismatch: {k} vs {kb}");
     let mut c = Tensor::zeros(&[m, n]);
-    let (ad, bd) = (a.data(), b.data());
-    let cd = c.data_mut();
-    // Stream over k: rank-1 update per k keeps both reads contiguous.
-    for kk in 0..k {
-        let arow = &ad[kk * m..(kk + 1) * m];
-        let brow = &bd[kk * n..(kk + 1) * n];
-        for i in 0..m {
-            let aik = arow[i];
-            if aik == 0.0 {
-                continue;
-            }
-            let crow = &mut cd[i * n..(i + 1) * n];
-            for (cj, bj) in crow.iter_mut().zip(brow) {
-                *cj += aik * bj;
-            }
-        }
-    }
+    let threads = suggested_threads(2.0 * m as f64 * k as f64 * n as f64);
+    PACK.with(|p| {
+        let (pa, pb) = &mut *p.borrow_mut();
+        gemm_into(
+            c.data_mut(),
+            m,
+            k,
+            n,
+            a.data(),
+            true,
+            b.data(),
+            false,
+            None,
+            pa,
+            pb,
+            threads,
+        );
+    });
     c
 }
 
@@ -121,26 +156,98 @@ pub fn matvec_t(mt: &Tensor, x: &[f32]) -> Vec<f32> {
     out
 }
 
+/// The seed's naive kernels, retained as property-test oracles and as the
+/// "before" baseline in `benches/perf_hotpath.rs`. Single-threaded, no
+/// packing — do not use on the hot path.
+pub mod reference {
+    use crate::tensor::Tensor;
+
+    const MC: usize = 64;
+    const KC: usize = 256;
+
+    /// Cache-blocked i-k-j matmul (the seed's hot kernel).
+    pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+        let (m, k) = (a.m(), a.n());
+        let (kb, n) = (b.m(), b.n());
+        assert_eq!(k, kb, "matmul inner-dim mismatch: {k} vs {kb}");
+        let mut c = Tensor::zeros(&[m, n]);
+        let (ad, bd) = (a.data(), b.data());
+        let cd = c.data_mut();
+        for i0 in (0..m).step_by(MC) {
+            let i1 = (i0 + MC).min(m);
+            for k0 in (0..k).step_by(KC) {
+                let k1 = (k0 + KC).min(k);
+                for i in i0..i1 {
+                    let crow = &mut cd[i * n..(i + 1) * n];
+                    for kk in k0..k1 {
+                        let aik = ad[i * k + kk];
+                        if aik == 0.0 {
+                            continue;
+                        }
+                        let brow = &bd[kk * n..(kk + 1) * n];
+                        for (cj, bj) in crow.iter_mut().zip(brow) {
+                            *cj += aik * bj;
+                        }
+                    }
+                }
+            }
+        }
+        c
+    }
+
+    /// Dot-product A·Bᵀ (the seed's Gram kernel).
+    pub fn matmul_nt(a: &Tensor, b: &Tensor) -> Tensor {
+        let (m, k) = (a.m(), a.n());
+        let (n, kb) = (b.m(), b.n());
+        assert_eq!(k, kb, "matmul_nt inner-dim mismatch: {k} vs {kb}");
+        let mut c = Tensor::zeros(&[m, n]);
+        let (ad, bd) = (a.data(), b.data());
+        let cd = c.data_mut();
+        for i in 0..m {
+            let arow = &ad[i * k..(i + 1) * k];
+            for j in 0..n {
+                let brow = &bd[j * k..(j + 1) * k];
+                let mut acc = 0.0f32;
+                for (x, y) in arow.iter().zip(brow) {
+                    acc += x * y;
+                }
+                cd[i * n + j] = acc;
+            }
+        }
+        c
+    }
+
+    /// Rank-1-update Aᵀ·B with A stored (k x m).
+    pub fn matmul_tn(a: &Tensor, b: &Tensor) -> Tensor {
+        let (k, m) = (a.m(), a.n());
+        let (kb, n) = (b.m(), b.n());
+        assert_eq!(k, kb, "matmul_tn inner-dim mismatch: {k} vs {kb}");
+        let mut c = Tensor::zeros(&[m, n]);
+        let (ad, bd) = (a.data(), b.data());
+        let cd = c.data_mut();
+        for kk in 0..k {
+            let arow = &ad[kk * m..(kk + 1) * m];
+            let brow = &bd[kk * n..(kk + 1) * n];
+            for i in 0..m {
+                let aik = arow[i];
+                if aik == 0.0 {
+                    continue;
+                }
+                let crow = &mut cd[i * n..(i + 1) * n];
+                for (cj, bj) in crow.iter_mut().zip(brow) {
+                    *cj += aik * bj;
+                }
+            }
+        }
+        c
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::utils::prop;
     use crate::utils::rng::Rng;
-
-    fn naive(a: &Tensor, b: &Tensor) -> Tensor {
-        let (m, k, n) = (a.m(), a.n(), b.n());
-        let mut c = Tensor::zeros(&[m, n]);
-        for i in 0..m {
-            for j in 0..n {
-                let mut acc = 0.0;
-                for kk in 0..k {
-                    acc += a.at(i, kk) * b.at(kk, j);
-                }
-                c.set(i, j, acc);
-            }
-        }
-        c
-    }
 
     fn assert_close(a: &Tensor, b: &Tensor, tol: f32) {
         assert_eq!(a.shape(), b.shape());
@@ -150,15 +257,15 @@ mod tests {
     }
 
     #[test]
-    fn matmul_matches_naive_property() {
-        prop::check("matmul==naive", 25, |rng| {
+    fn matmul_matches_reference_property() {
+        prop::check("matmul==reference", 25, |rng| {
             let m = rng.gen_range(1, 40);
             let k = rng.gen_range(1, 40);
             let n = rng.gen_range(1, 40);
             let a = Tensor::randn(&[m, k], 1.0, rng);
             let b = Tensor::randn(&[k, n], 1.0, rng);
             let got = matmul(&a, &b);
-            let want = naive(&a, &b);
+            let want = reference::matmul(&a, &b);
             for (x, y) in got.data().iter().zip(want.data()) {
                 if (x - y).abs() > 1e-4 * (1.0 + x.abs()) {
                     return Err(format!("({m},{k},{n}): {x} vs {y}"));
@@ -177,6 +284,24 @@ mod tests {
         let c = Tensor::randn(&[7, 13], 1.0, &mut rng);
         let d = Tensor::randn(&[7, 11], 1.0, &mut rng);
         assert_close(&matmul_tn(&c, &d), &matmul(&c.transpose(), &d), 1e-5);
+    }
+
+    #[test]
+    fn nt_same_tensor_takes_syrk_path() {
+        // syrk (and the matmul_nt same-tensor dispatch) must agree with
+        // the generic path and be exactly symmetric (upper triangle
+        // mirrored, not recomputed).
+        let mut rng = Rng::new(6);
+        let x = Tensor::randn(&[23, 37], 1.0, &mut rng);
+        let want = reference::matmul_nt(&x, &x);
+        for gram in [syrk(&x), matmul_nt(&x, &x)] {
+            assert_close(&gram, &want, 1e-4);
+            for i in 0..23 {
+                for j in 0..23 {
+                    assert_eq!(gram.at(i, j), gram.at(j, i));
+                }
+            }
+        }
     }
 
     #[test]
@@ -207,5 +332,24 @@ mod tests {
         for (a, b) in z.iter().zip(want2.data()) {
             assert!((a - b).abs() < 1e-4);
         }
+    }
+
+    #[test]
+    fn reference_oracles_agree_with_each_other() {
+        let mut rng = Rng::new(8);
+        let a = Tensor::randn(&[12, 9], 1.0, &mut rng);
+        let b = Tensor::randn(&[14, 9], 1.0, &mut rng);
+        assert_close(
+            &reference::matmul_nt(&a, &b),
+            &reference::matmul(&a, &b.transpose()),
+            1e-5,
+        );
+        let c = Tensor::randn(&[9, 12], 1.0, &mut rng);
+        let d = Tensor::randn(&[9, 11], 1.0, &mut rng);
+        assert_close(
+            &reference::matmul_tn(&c, &d),
+            &reference::matmul(&c.transpose(), &d),
+            1e-5,
+        );
     }
 }

@@ -4,13 +4,24 @@
 //! math (Newton–Schulz orthogonalization, norms for the theory module, QR /
 //! power iteration for Dion) and the pure-rust fallback path when a shard
 //! shape has no AOT artifact and runtime XLA JIT is disabled.
+//!
+//! Hot-path layering (see README "Hot path architecture"):
+//! - `gemm` — packed register-tiled microkernels: `gemm_into` (scoped-
+//!   thread row-panel parallelism, fused axpy writeback) and the
+//!   symmetric `syrk_into` (upper triangle + mirror, half the FLOPs).
+//! - `matmul` — seed-compatible allocating entry points over `gemm`, with
+//!   the naive seed kernels kept in `matmul::reference` as oracles.
+//! - `newton_schulz` — the fused zero-alloc NS loop over an `NsWorkspace`
+//!   arena (thread-local by default, explicit for engines).
 
+pub mod gemm;
 pub mod matmul;
 pub mod newton_schulz;
 pub mod norms;
 pub mod qr;
 
-pub use matmul::{matmul, matmul_nt, matmul_tn};
-pub use newton_schulz::{newton_schulz, NsCoeffs};
+pub use gemm::{gemm_into, syrk_into};
+pub use matmul::{matmul, matmul_nt, matmul_tn, syrk};
+pub use newton_schulz::{newton_schulz, newton_schulz_reference, NsCoeffs, NsWorkspace};
 pub use norms::{block_spectral_norm, nuclear_norm, op_norm};
 pub use qr::qr_thin;

@@ -5,8 +5,24 @@
 //!   X <- G / (||G||_F + eps);  K times: A = XXᵀ; B = bA + cA²; X = aX + BX.
 //! Tall inputs are transposed so the Gram matrix forms on the short side
 //! (the paper's §2.2 FLOP model assumes m <= n).
+//!
+//! The hot path is [`NsWorkspace`]: a ping-pong buffer arena that runs all
+//! K iterations with zero heap allocations after warm-up
+//! (`tests/ns_zero_alloc.rs` proves it with a counting allocator). Per
+//! iteration it issues two symmetric syrk products (X·Xᵀ, and A·Aᵀ = A²
+//! since the Gram matrix is symmetric — half the FLOPs each) plus one
+//! packed GEMM whose writeback fuses the `+ a·X` term. The free
+//! [`newton_schulz`] keeps the seed signature and routes through a
+//! thread-local workspace, so every caller — `Muon`, the coordinator rank
+//! threads, `NsEngine`'s host fallback — reuses buffers across params
+//! without plumbing. The seed's allocating implementation survives as
+//! [`newton_schulz_reference`] / [`ns_iteration`], the property-test
+//! oracle.
 
-use crate::linalg::matmul::{matmul, matmul_nt};
+use std::cell::RefCell;
+
+use crate::linalg::gemm::{gemm_into, syrk_into};
+use crate::linalg::matmul::reference;
 use crate::tensor::Tensor;
 
 /// Newton–Schulz polynomial coefficients (a, b, c).
@@ -43,8 +59,174 @@ impl Default for NsCoeffs {
     }
 }
 
-/// Orthogonalize `g` approximately: returns ≈ (G Gᵀ)^{-1/2} G.
+/// Reusable buffer arena for the fused NS hot loop.
+///
+/// `load` copies the input into the wide orientation and pre-normalizes;
+/// `iterate` runs the K-step loop entirely inside the arena (ping-pong X
+/// buffers, in-place polynomial, shared packing scratch — zero
+/// allocations once the grow-only buffers have warmed up); `store`
+/// materializes the result tensor. Buffers are sized high-water-mark, so
+/// one workspace serves every parameter/block shape an optimizer step
+/// visits.
+#[derive(Default)]
+pub struct NsWorkspace {
+    /// Current X (wide orientation, m·n).
+    x: Vec<f32>,
+    /// Ping-pong partner of `x`.
+    y: Vec<f32>,
+    /// Gram matrix A = X·Xᵀ (m·m); overwritten by B = b·A + c·A².
+    gram: Vec<f32>,
+    /// A² (m·m).
+    gram2: Vec<f32>,
+    /// GEMM packing scratch.
+    pa: Vec<f32>,
+    /// GEMM packing scratch.
+    pb: Vec<f32>,
+    /// Wide dims of the loaded matrix.
+    m: usize,
+    n: usize,
+    /// Whether the input was tall (result must transpose back).
+    transposed: bool,
+}
+
+impl NsWorkspace {
+    pub fn new() -> NsWorkspace {
+        NsWorkspace::default()
+    }
+
+    /// Load `g` (any orientation), transposing tall inputs to wide and
+    /// applying the `1/(||G||_F + eps)` pre-normalization.
+    pub fn load(&mut self, g: &Tensor) {
+        assert_eq!(g.rank(), 2, "newton_schulz expects a matrix");
+        let (gm, gn) = (g.m(), g.n());
+        self.transposed = gm > gn;
+        let (m, n) = if self.transposed { (gn, gm) } else { (gm, gn) };
+        self.m = m;
+        self.n = n;
+        // Size only — every buffer is fully overwritten before it is read
+        // (x by the copy below, y/gram/gram2 by their kernels), so no
+        // clear+refill: resize zero-fills growth once and otherwise just
+        // sets the length.
+        self.x.resize(m * n, 0.0);
+        self.y.resize(m * n, 0.0);
+        self.gram.resize(m * m, 0.0);
+        self.gram2.resize(m * m, 0.0);
+        let d = g.data();
+        if self.transposed {
+            // x = gᵀ: x is (gn × gm) row-major.
+            for i in 0..gm {
+                for j in 0..gn {
+                    self.x[j * gm + i] = d[i * gn + j];
+                }
+            }
+        } else {
+            self.x.copy_from_slice(d);
+        }
+        let norm = self
+            .x
+            .iter()
+            .map(|v| (*v as f64) * (*v as f64))
+            .sum::<f64>()
+            .sqrt() as f32
+            + 1e-7;
+        let inv = 1.0 / norm;
+        for v in &mut self.x {
+            *v *= inv;
+        }
+    }
+
+    /// Run `steps` fused NS iterations in-place. Allocation-free after the
+    /// grow-only buffers are warm; single-threaded by design — parallelism
+    /// lives one level up, across independent blocks (`Muon::orth_update`)
+    /// and coordinator rank threads.
+    pub fn iterate(&mut self, steps: usize, coeffs: NsCoeffs) {
+        let (m, n) = (self.m, self.n);
+        for _ in 0..steps {
+            // A = X·Xᵀ — symmetric, so syrk computes half the tiles.
+            syrk_into(&mut self.gram, &self.x, m, n, &mut self.pa, &mut self.pb);
+            // A² = A·Aᵀ (A symmetric) — syrk again.
+            syrk_into(
+                &mut self.gram2,
+                &self.gram,
+                m,
+                m,
+                &mut self.pa,
+                &mut self.pb,
+            );
+            // B = b·A + c·A², in place over A.
+            for (a, &a2) in self.gram.iter_mut().zip(&self.gram2) {
+                *a = coeffs.b * *a + coeffs.c * a2;
+            }
+            // X' = B·X + a·X — the axpy is fused into the GEMM writeback.
+            gemm_into(
+                &mut self.y,
+                m,
+                m,
+                n,
+                &self.gram,
+                false,
+                &self.x,
+                false,
+                Some((coeffs.a, &self.x)),
+                &mut self.pa,
+                &mut self.pb,
+                1,
+            );
+            std::mem::swap(&mut self.x, &mut self.y);
+        }
+    }
+
+    /// Materialize the current X as a tensor in the input's orientation.
+    pub fn store(&self) -> Tensor {
+        let (m, n) = (self.m, self.n);
+        if self.transposed {
+            let mut t = Tensor::zeros(&[n, m]);
+            let d = t.data_mut();
+            for i in 0..m {
+                for j in 0..n {
+                    d[j * m + i] = self.x[i * n + j];
+                }
+            }
+            t
+        } else {
+            Tensor::from_vec(&[m, n], self.x.clone()).unwrap()
+        }
+    }
+
+    /// Full orthogonalization through this workspace's buffers.
+    pub fn newton_schulz(
+        &mut self,
+        g: &Tensor,
+        steps: usize,
+        coeffs: NsCoeffs,
+    ) -> Tensor {
+        self.load(g);
+        self.iterate(steps, coeffs);
+        self.store()
+    }
+}
+
+thread_local! {
+    /// One workspace per thread: coordinator rank threads and parallel
+    /// block orthogonalizations each warm their own arena once and then
+    /// reuse it for every param / block / step.
+    static NS_WS: RefCell<NsWorkspace> = RefCell::new(NsWorkspace::new());
+}
+
+/// Orthogonalize `g` approximately: returns ≈ (G Gᵀ)^{-1/2} G. Runs on the
+/// calling thread's [`NsWorkspace`] — allocation-free after warm-up except
+/// for the returned tensor.
 pub fn newton_schulz(g: &Tensor, steps: usize, coeffs: NsCoeffs) -> Tensor {
+    NS_WS.with(|ws| ws.borrow_mut().newton_schulz(g, steps, coeffs))
+}
+
+/// The seed's allocating implementation over the naive oracles — retained
+/// for property tests and the perf baseline. Do not use on the hot path.
+pub fn newton_schulz_reference(
+    g: &Tensor,
+    steps: usize,
+    coeffs: NsCoeffs,
+) -> Tensor {
     assert_eq!(g.rank(), 2, "newton_schulz expects a matrix");
     let transpose = g.m() > g.n();
     let mut x = if transpose { g.transpose() } else { g.clone() };
@@ -60,16 +242,17 @@ pub fn newton_schulz(g: &Tensor, steps: usize, coeffs: NsCoeffs) -> Tensor {
     }
 }
 
-/// One NS iteration on a pre-normalized wide matrix (m <= n).
+/// One NS iteration on a pre-normalized wide matrix (m <= n) — the
+/// allocating oracle step backing [`newton_schulz_reference`].
 pub fn ns_iteration(x: &Tensor, coeffs: NsCoeffs) -> Tensor {
-    let gram = matmul_nt(x, x); // A = X Xᵀ  (m x m)
-    let gram2 = matmul(&gram, &gram); // A²
+    let gram = reference::matmul_nt(x, x); // A = X Xᵀ  (m x m)
+    let gram2 = reference::matmul(&gram, &gram); // A²
     // B = b·A + c·A²
     let mut poly = gram;
     poly.scale(coeffs.b);
     poly.axpy(coeffs.c, &gram2);
     // X' = a·X + B·X
-    let mut out = matmul(&poly, x);
+    let mut out = reference::matmul(&poly, x);
     out.axpy(coeffs.a, x);
     // axpy computes out += a*x after out = B·X, i.e. out = B·X + a·X. ✓
     out
@@ -152,6 +335,41 @@ mod tests {
                     gram.at(i, j)
                 );
             }
+        }
+    }
+
+    #[test]
+    fn fused_matches_reference_property() {
+        // The zero-alloc fused path must agree with the seed's allocating
+        // implementation across orientations and remainder shapes.
+        prop::check("fused-ns==reference", 12, |rng| {
+            let m = rng.gen_range(1, 28);
+            let n = rng.gen_range(1, 28);
+            let g = Tensor::randn(&[m, n], 1.0, rng);
+            let fast = newton_schulz(&g, 5, NsCoeffs::jordan());
+            let slow = newton_schulz_reference(&g, 5, NsCoeffs::jordan());
+            for (a, b) in fast.data().iter().zip(slow.data()) {
+                if (a - b).abs() > 5e-4 * (1.0 + a.abs()) {
+                    return Err(format!("({m},{n}): {a} vs {b}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn workspace_reuse_across_shapes() {
+        // One arena, many shapes (what an optimizer step does across
+        // params/blocks): results must match fresh-workspace runs.
+        let mut rng = Rng::new(29);
+        let mut ws = NsWorkspace::new();
+        for (m, n) in [(16, 48), (48, 16), (5, 7), (1, 9), (9, 1), (12, 12)]
+        {
+            let g = Tensor::randn(&[m, n], 1.0, &mut rng);
+            let got = ws.newton_schulz(&g, 5, NsCoeffs::jordan());
+            let want =
+                NsWorkspace::new().newton_schulz(&g, 5, NsCoeffs::jordan());
+            assert_eq!(got, want, "({m},{n}) drifted with reused buffers");
         }
     }
 

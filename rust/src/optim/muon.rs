@@ -11,6 +11,8 @@
 
 use std::sync::Arc;
 
+use crossbeam_utils::thread;
+
 use crate::linalg::newton_schulz::{newton_schulz, NsCoeffs};
 use crate::mesh::Layout;
 use crate::optim::adamw::AdamW;
@@ -36,7 +38,17 @@ pub enum Period {
 impl Period {
     pub fn is_full_step(&self, t: u64) -> bool {
         match *self {
-            Period::Every(p) => t % p.max(1) as u64 == 0,
+            Period::Every(p) => {
+                // No silent coercion: Every(0) is a config error that
+                // MuonCfg::validate rejects at construction. Fail loudly if
+                // one reaches the hot path anyway.
+                assert!(
+                    p > 0,
+                    "Period::Every(0) is invalid — use Every(1) for \
+                     baseline Muon or Period::Never for pure BlockMuon"
+                );
+                t % p as u64 == 0
+            }
             Period::Never => false,
         }
     }
@@ -65,6 +77,44 @@ pub struct MuonCfg {
 }
 
 impl MuonCfg {
+    /// Reject invalid configurations at construction time instead of
+    /// coercing them on the hot path (`Muon::new` and
+    /// `DistMuonBuilder::build` both call this).
+    pub fn validate(&self) -> anyhow::Result<()> {
+        if self.period == Period::Every(0) {
+            anyhow::bail!(
+                "MuonCfg: Period::Every(0) is invalid — use \
+                 Period::Every(1) for baseline Muon or Period::Never for \
+                 pure BlockMuon"
+            );
+        }
+        if self.ns_steps == 0 {
+            anyhow::bail!("MuonCfg: ns_steps must be >= 1");
+        }
+        if self.tp == 0 {
+            anyhow::bail!("MuonCfg: tp degree must be >= 1");
+        }
+        if !(0.0..1.0).contains(&self.momentum) {
+            anyhow::bail!(
+                "MuonCfg: momentum must be in [0, 1), got {}",
+                self.momentum
+            );
+        }
+        if self.eta_block_ratio < 0.0 {
+            anyhow::bail!(
+                "MuonCfg: eta_block_ratio must be >= 0, got {}",
+                self.eta_block_ratio
+            );
+        }
+        if self.rms_beta <= 0.0 {
+            anyhow::bail!(
+                "MuonCfg: rms_beta must be > 0, got {}",
+                self.rms_beta
+            );
+        }
+        Ok(())
+    }
+
     pub fn default_with(period: Period, tp: usize) -> MuonCfg {
         MuonCfg {
             period,
@@ -90,12 +140,24 @@ pub struct Muon {
     momenta: Vec<Tensor>,
     adam: AdamW,
     orth: OrthFn,
+    /// Whether `orth` can run concurrently from several threads with real
+    /// parallelism. True for the default host Newton–Schulz (per-thread
+    /// workspaces); false for injected backends unless declared otherwise
+    /// (`NsEngine` serializes every call behind one mutex, so fanning
+    /// blocks across threads would only add spawn overhead).
+    orth_concurrent: bool,
     t: u64,
     last_comm: u64,
 }
 
 impl Muon {
+    /// Build the optimizer. Panics on an invalid `cfg` (see
+    /// [`MuonCfg::validate`]) — config errors surface here, not as silent
+    /// coercions inside the step loop.
     pub fn new(metas: &[ParamMeta], cfg: MuonCfg) -> Muon {
+        if let Err(e) = cfg.validate() {
+            panic!("{e}");
+        }
         let specs: Vec<Option<ShardSpec>> = metas
             .iter()
             .map(|p| {
@@ -122,6 +184,7 @@ impl Muon {
             momenta,
             adam: AdamW::new(metas),
             orth: Arc::new(move |g| newton_schulz(g, ns_steps, coeffs)),
+            orth_concurrent: true,
             t: 0,
             last_comm: 0,
         }
@@ -143,8 +206,19 @@ impl Muon {
     }
 
     /// Replace the orthogonalization backend (runtime XLA fast path).
+    /// Conservatively disables the parallel block fan-out — injected
+    /// backends like `NsEngine` serialize internally; use
+    /// [`Muon::set_orth_concurrent`] to declare a backend parallel-safe.
     pub fn set_orth(&mut self, orth: OrthFn) {
         self.orth = orth;
+        self.orth_concurrent = false;
+    }
+
+    /// Replace the backend and declare whether concurrent calls from
+    /// several threads make actual progress in parallel.
+    pub fn set_orth_concurrent(&mut self, orth: OrthFn, concurrent: bool) {
+        self.orth = orth;
+        self.orth_concurrent = concurrent;
     }
 
     pub fn cfg(&self) -> &MuonCfg {
@@ -162,13 +236,34 @@ impl Muon {
 
     /// Compute the orthogonalized update for one matrix momentum, either
     /// full or blockwise. Exposed for the distributed coordinator, which
-    /// runs exactly this on gathered / local shards.
+    /// runs exactly this on gathered / local shards. This compat wrapper
+    /// is always sequential — it cannot know whether an arbitrary `orth`
+    /// makes parallel progress (the mutexed `NsEngine` does not). The
+    /// scoped-thread block fan-out is opt-in via
+    /// [`Muon::orth_update_with`]; `Muon::step` opts in when its backend
+    /// is declared concurrent (see [`Muon::set_orth_concurrent`]).
     pub fn orth_update(
         momentum: &Tensor,
         spec: &ShardSpec,
         full: bool,
         rms_beta: f64,
         orth: &OrthFn,
+    ) -> Tensor {
+        Muon::orth_update_with(momentum, spec, full, rms_beta, orth, false)
+    }
+
+    /// [`Muon::orth_update`] with the threading decision made explicit.
+    /// The parallel path is bit-identical to the sequential one: each
+    /// block is orthogonalized by exactly one thread running the same
+    /// deterministic kernel (each worker has its own thread-local
+    /// `NsWorkspace`), and results are reassembled in block order.
+    pub fn orth_update_with(
+        momentum: &Tensor,
+        spec: &ShardSpec,
+        full: bool,
+        rms_beta: f64,
+        orth: &OrthFn,
+        parallel: bool,
     ) -> Tensor {
         if full || spec.num_blocks() == 1 {
             let mut u = orth(momentum);
@@ -177,20 +272,58 @@ impl Muon {
             u
         } else {
             let blocks = shard_all(momentum, spec);
-            let upd: Vec<Tensor> = blocks
-                .iter()
-                .map(|b| {
-                    let mut u = orth(b);
-                    // RMS matching with the *block* dims (paper §3.2).
-                    let s = rms_match_scale(b.m(), b.n(), rms_beta);
-                    u.scale(s as f32);
-                    u
+            let orth_block = |b: &Tensor| {
+                let mut u = orth(b);
+                // RMS matching with the *block* dims (paper §3.2).
+                let s = rms_match_scale(b.m(), b.n(), rms_beta);
+                u.scale(s as f32);
+                u
+            };
+            let upd: Vec<Tensor> = if parallel {
+                // A few workers, each owning a round-robin stripe of
+                // blocks: one thread-local NsWorkspace warm-up per worker
+                // per call (not per block), and far fewer spawns than one
+                // thread per block.
+                let workers = std::thread::available_parallelism()
+                    .map(|n| n.get())
+                    .unwrap_or(1)
+                    .clamp(1, blocks.len());
+                let orth_block = &orth_block;
+                let blocks_ref = &blocks;
+                let striped: Vec<Vec<(usize, Tensor)>> = thread::scope(|s| {
+                    let handles: Vec<_> = (0..workers)
+                        .map(|w| {
+                            s.spawn(move |_| {
+                                blocks_ref
+                                    .iter()
+                                    .enumerate()
+                                    .filter(|(i, _)| i % workers == w)
+                                    .map(|(i, b)| (i, orth_block(b)))
+                                    .collect::<Vec<(usize, Tensor)>>()
+                            })
+                        })
+                        .collect();
+                    handles.into_iter().map(|h| h.join().unwrap()).collect()
                 })
-                .collect();
+                .unwrap();
+                let mut out: Vec<Option<Tensor>> = vec![None; blocks.len()];
+                for stripe in striped {
+                    for (i, u) in stripe {
+                        out[i] = Some(u);
+                    }
+                }
+                out.into_iter().map(|o| o.unwrap()).collect()
+            } else {
+                blocks.iter().map(orth_block).collect()
+            };
             unshard(&upd, spec)
         }
     }
 }
+
+/// Below this many elements the scoped-thread spawns cost more than the
+/// block orthogonalizations they parallelize.
+const PARALLEL_BLOCK_MIN_NUMEL: usize = 16 * 1024;
 
 impl Optimizer for Muon {
     fn step(&mut self, params: &mut [Tensor], grads: &[Tensor], lr: f64) {
@@ -205,12 +338,16 @@ impl Optimizer for Muon {
                     // M_t = μ M_{t-1} + G_t  (paper Alg. 1 line 5)
                     self.momenta[i]
                         .scale_add(self.cfg.momentum as f32, 1.0, &grads[i]);
-                    let u = Muon::orth_update(
+                    let parallel = self.orth_concurrent
+                        && spec.num_blocks() > 1
+                        && self.momenta[i].numel() >= PARALLEL_BLOCK_MIN_NUMEL;
+                    let u = Muon::orth_update_with(
                         &self.momenta[i],
                         &spec,
                         full,
                         self.cfg.rms_beta,
                         &self.orth,
+                        parallel,
                     );
                     if full && spec.num_blocks() > 1 {
                         // gather momentum + scatter update (bytes a real
@@ -283,6 +420,60 @@ mod tests {
         assert!(Period::Every(5).is_full_step(5));
         assert!(Period::Every(1).is_full_step(3));
         assert!(!Period::Never.is_full_step(0));
+    }
+
+    #[test]
+    #[should_panic(expected = "Period::Every(0)")]
+    fn zero_period_rejected_at_construction() {
+        let metas = [ParamMeta::new("w", &[8, 8], ParamKind::Matrix)];
+        let _ = Muon::new(&metas, MuonCfg::default_with(Period::Every(0), 2));
+    }
+
+    #[test]
+    #[should_panic(expected = "Period::Every(0)")]
+    fn zero_period_not_silently_coerced_on_hot_path() {
+        let _ = Period::Every(0).is_full_step(3);
+    }
+
+    #[test]
+    fn cfg_validation_bounds() {
+        let ok = MuonCfg::default_with(Period::Every(5), 4);
+        assert!(ok.validate().is_ok());
+        let mut bad = ok.clone();
+        bad.ns_steps = 0;
+        assert!(bad.validate().is_err());
+        let mut bad = ok.clone();
+        bad.tp = 0;
+        assert!(bad.validate().is_err());
+        let mut bad = ok.clone();
+        bad.momentum = 1.0;
+        assert!(bad.validate().is_err());
+        let mut bad = ok.clone();
+        bad.eta_block_ratio = -0.1;
+        assert!(bad.validate().is_err());
+        let mut bad = ok;
+        bad.rms_beta = 0.0;
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn parallel_blocks_bit_identical_to_sequential() {
+        // The scoped-thread fan-out must reproduce the sequential result
+        // bit for bit (same kernels, one owner per block, block-order
+        // reassembly) — the distributed-equivalence guarantees depend on
+        // orthogonalization being deterministic regardless of threading.
+        let mut rng = Rng::new(31);
+        let orth: OrthFn =
+            Arc::new(|t| newton_schulz(t, 5, NsCoeffs::jordan()));
+        for (m, n, tp) in [(64, 256, 4), (96, 96, 3), (40, 30, 8)] {
+            let g = Tensor::randn(&[m, n], 1.0, &mut rng);
+            let spec = ShardSpec::new(Layout::TpColumn, tp, m, n);
+            let par =
+                Muon::orth_update_with(&g, &spec, false, 0.2, &orth, true);
+            let seq =
+                Muon::orth_update_with(&g, &spec, false, 0.2, &orth, false);
+            assert_eq!(par, seq, "({m},{n},tp={tp}) drifted");
+        }
     }
 
     #[test]

@@ -7,7 +7,11 @@
 //!    XlaBuilder and compiled once per shape — covers arbitrary shard
 //!    shapes with XLA-grade GEMMs.
 //! 3. **Host Newton–Schulz** (`linalg`): pure-rust fallback (also used when
-//!    no PJRT client is wanted, e.g. small unit tests).
+//!    no PJRT client is wanted, e.g. small unit tests). This path runs the
+//!    fused `NsWorkspace` kernels — packed GEMM + symmetric syrk with
+//!    per-thread buffer arenas — so "fallback" no longer means "slow":
+//!    after the first call on a thread the K-iteration loop is
+//!    allocation-free and register-tiled.
 //!
 //! Compiled executables are cached per shape. All XLA state lives behind
 //! one mutex so the rank threads of the simulated cluster share the engine:
@@ -101,6 +105,8 @@ impl NsEngine {
     }
 
     /// Orthogonalize `g` (≈ polar factor) through the best available path.
+    /// Host paths use the calling thread's `NsWorkspace` (zero-alloc fused
+    /// NS loop) via `linalg::newton_schulz`.
     pub fn orthogonalize(&self, g: &Tensor) -> Result<Tensor> {
         let (m, n) = (g.m(), g.n());
         if self.host_only {

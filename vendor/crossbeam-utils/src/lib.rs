@@ -1,0 +1,111 @@
+//! Minimal offline stand-in for `crossbeam_utils::thread` scoped threads.
+//!
+//! The build environment has no crates.io access, so this shim implements
+//! the `thread::scope` / `Scope::spawn` / `ScopedJoinHandle::join` subset
+//! muonbp uses on top of `std::thread::scope` (stable since Rust 1.63).
+//! Semantics match what the callers rely on: spawned threads may borrow
+//! from the enclosing stack frame, every handle can be joined inside the
+//! scope, and `scope` returns `Ok(r)` once all threads have finished.
+
+pub mod thread {
+    use std::thread as stdthread;
+
+    /// Mirrors `crossbeam_utils::thread::Scope`: spawn closures receive a
+    /// `&Scope` argument so they can spawn nested siblings.
+    pub struct Scope<'scope, 'env: 'scope> {
+        inner: &'scope stdthread::Scope<'scope, 'env>,
+    }
+
+    impl<'scope, 'env> Clone for Scope<'scope, 'env> {
+        fn clone(&self) -> Self {
+            *self
+        }
+    }
+
+    impl<'scope, 'env> Copy for Scope<'scope, 'env> {}
+
+    /// Join handle for a scoped thread.
+    pub struct ScopedJoinHandle<'scope, T> {
+        inner: stdthread::ScopedJoinHandle<'scope, T>,
+    }
+
+    impl<'scope, T> ScopedJoinHandle<'scope, T> {
+        /// Wait for the thread to finish; `Err` carries the panic payload.
+        pub fn join(self) -> stdthread::Result<T> {
+            self.inner.join()
+        }
+    }
+
+    impl<'scope, 'env> Scope<'scope, 'env> {
+        /// Spawn a scoped thread. The closure receives this scope (ignored
+        /// by every current caller, hence the `|_|` idiom).
+        pub fn spawn<F, T>(&self, f: F) -> ScopedJoinHandle<'scope, T>
+        where
+            F: FnOnce(&Scope<'scope, 'env>) -> T + Send + 'scope,
+            T: Send + 'scope,
+        {
+            let scope = *self;
+            ScopedJoinHandle { inner: self.inner.spawn(move || f(&scope)) }
+        }
+    }
+
+    /// Run `f` with a scope in which borrowing threads can be spawned; all
+    /// threads are joined before this returns. Unlike crossbeam, a panic in
+    /// an unjoined child propagates as a panic here rather than an `Err` —
+    /// every caller in this repo `.unwrap()`s the result, so the observable
+    /// behavior (test/process failure with the panic message) is identical.
+    pub fn scope<'env, F, R>(f: F) -> stdthread::Result<R>
+    where
+        F: for<'scope> FnOnce(&Scope<'scope, 'env>) -> R,
+    {
+        Ok(stdthread::scope(|s| f(&Scope { inner: s })))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::thread;
+
+    #[test]
+    fn scoped_threads_borrow_and_join() {
+        let data = vec![1u64, 2, 3, 4];
+        let total: u64 = thread::scope(|s| {
+            let handles: Vec<_> = data
+                .chunks(2)
+                .map(|c| s.spawn(move |_| c.iter().sum::<u64>()))
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).sum()
+        })
+        .unwrap();
+        assert_eq!(total, 10);
+    }
+
+    #[test]
+    fn mutable_disjoint_borrows() {
+        let mut buf = vec![0u32; 8];
+        thread::scope(|s| {
+            for chunk in buf.chunks_mut(4) {
+                s.spawn(move |_| {
+                    for v in chunk {
+                        *v += 1;
+                    }
+                });
+            }
+        })
+        .unwrap();
+        assert!(buf.iter().all(|&v| v == 1));
+    }
+
+    #[test]
+    fn nested_spawn_via_scope_arg() {
+        let r = thread::scope(|s| {
+            let h = s.spawn(|inner| {
+                let h2 = inner.spawn(|_| 21);
+                h2.join().unwrap() * 2
+            });
+            h.join().unwrap()
+        })
+        .unwrap();
+        assert_eq!(r, 42);
+    }
+}

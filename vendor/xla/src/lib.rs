@@ -1,0 +1,640 @@
+//! Offline stand-in for the `xla` crate (PJRT bindings).
+//!
+//! The build environment has neither crates.io access nor the
+//! `xla_extension` C library, so this shim keeps the muonbp runtime layer
+//! compiling and *functionally* working by interpreting `XlaBuilder`
+//! computations on the host:
+//!
+//! - `XlaBuilder` / `XlaOp` build an expression DAG covering exactly the op
+//!   set `runtime::ns_builder` emits (parameter, constant, transpose,
+//!   matmul, add/mul/div with scalar broadcast, sqrt, reduce_sum,
+//!   broadcast). `PjRtClient::compile` + `PjRtLoadedExecutable::execute`
+//!   evaluate that DAG with memoization — deterministic f32 math, f64
+//!   reduction accumulators.
+//! - `HloModuleProto::from_text_file` (AOT Pallas/XLA artifacts) returns a
+//!   descriptive error: HLO text requires the real runtime. `NsEngine`
+//!   already falls back to the host Newton–Schulz path on that error, and
+//!   the artifact-gated tests/benches skip when no manifest is present.
+//!
+//! Swapping the real `xla` crate back in is a Cargo.toml change only — the
+//! public surface here mirrors the real crate's names and signatures for
+//! everything muonbp calls.
+
+#![allow(clippy::needless_range_loop)] // index math mirrors the shape algebra
+
+use std::collections::HashMap;
+use std::fmt;
+use std::path::Path;
+use std::rc::Rc;
+
+/// Error type matching the real crate's role; converts into `anyhow::Error`
+/// through the blanket `std::error::Error` impl.
+#[derive(Debug, Clone)]
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    fn new(msg: impl Into<String>) -> Error {
+        Error { msg: msg.into() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla (host shim): {}", self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+type Result<T> = std::result::Result<T, Error>;
+
+/// Element types muonbp materializes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+}
+
+#[derive(Debug, Clone)]
+enum LiteralData {
+    F32(Vec<f32>),
+    S32(Vec<i32>),
+    /// Only produced by real-runtime artifacts; the shim never builds one
+    /// but keeps the variant so `to_tuple` mirrors the real API.
+    #[allow(dead_code)]
+    Tuple(Vec<Literal>),
+}
+
+/// A host-side literal: shape + typed buffer (or a tuple of literals).
+#[derive(Debug, Clone)]
+pub struct Literal {
+    dims: Vec<usize>,
+    data: LiteralData,
+}
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        dims: &[usize],
+        bytes: &[u8],
+    ) -> Result<Literal> {
+        let n: usize = dims.iter().product();
+        if bytes.len() != n * 4 {
+            return Err(Error::new(format!(
+                "literal shape {dims:?} wants {} bytes, got {}",
+                n * 4,
+                bytes.len()
+            )));
+        }
+        let data = match ty {
+            ElementType::F32 => LiteralData::F32(
+                bytes
+                    .chunks_exact(4)
+                    .map(|c| f32::from_ne_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect(),
+            ),
+            ElementType::S32 => LiteralData::S32(
+                bytes
+                    .chunks_exact(4)
+                    .map(|c| i32::from_ne_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect(),
+            ),
+        };
+        Ok(Literal { dims: dims.to_vec(), data })
+    }
+
+    fn from_f32(dims: Vec<usize>, data: Vec<f32>) -> Literal {
+        Literal { dims, data: LiteralData::F32(data) }
+    }
+
+    pub fn element_count(&self) -> usize {
+        match &self.data {
+            LiteralData::Tuple(parts) => {
+                parts.iter().map(|p| p.element_count()).sum()
+            }
+            _ => self.dims.iter().product(),
+        }
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::extract(self)
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        match &self.data {
+            LiteralData::Tuple(parts) => Ok(parts.clone()),
+            _ => Err(Error::new("to_tuple on a non-tuple literal")),
+        }
+    }
+}
+
+/// Sealed-ish extraction helper backing `Literal::to_vec`.
+pub trait NativeType: Sized {
+    fn extract(lit: &Literal) -> Result<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    fn extract(lit: &Literal) -> Result<Vec<f32>> {
+        match &lit.data {
+            LiteralData::F32(v) => Ok(v.clone()),
+            _ => Err(Error::new("literal is not f32")),
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn extract(lit: &Literal) -> Result<Vec<i32>> {
+        match &lit.data {
+            LiteralData::S32(v) => Ok(v.clone()),
+            _ => Err(Error::new("literal is not s32")),
+        }
+    }
+}
+
+// -- expression DAG ----------------------------------------------------------
+
+#[derive(Debug)]
+enum Node {
+    Parameter { id: usize, dims: Vec<usize> },
+    ConstantR0(f32),
+    Transpose { x: Rc<Node>, perm: Vec<usize> },
+    Matmul { a: Rc<Node>, b: Rc<Node> },
+    Binary { op: BinOp, a: Rc<Node>, b: Rc<Node> },
+    Sqrt { x: Rc<Node> },
+    ReduceSum { x: Rc<Node>, dims: Vec<usize>, keep: bool },
+    Broadcast { x: Rc<Node>, dims: Vec<usize> },
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum BinOp {
+    Add,
+    Mul,
+    Div,
+}
+
+#[derive(Clone)]
+struct Value {
+    dims: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Value {
+    fn is_scalar(&self) -> bool {
+        self.dims.iter().product::<usize>() == 1
+    }
+}
+
+fn eval(
+    node: &Rc<Node>,
+    args: &[Value],
+    memo: &mut HashMap<*const Node, Value>,
+) -> Result<Value> {
+    let key = Rc::as_ptr(node);
+    if let Some(v) = memo.get(&key) {
+        return Ok(v.clone());
+    }
+    let out = match &**node {
+        Node::Parameter { id, dims } => {
+            let arg = args.get(*id).ok_or_else(|| {
+                Error::new(format!("missing argument for parameter {id}"))
+            })?;
+            let want: usize = dims.iter().product();
+            if arg.data.len() != want {
+                return Err(Error::new(format!(
+                    "parameter {id}: shape {dims:?} wants {want} elems, got {}",
+                    arg.data.len()
+                )));
+            }
+            Value { dims: dims.clone(), data: arg.data.clone() }
+        }
+        Node::ConstantR0(c) => Value { dims: vec![], data: vec![*c] },
+        Node::Transpose { x, perm } => {
+            let v = eval(x, args, memo)?;
+            if v.dims.len() != 2 || perm.as_slice() != [1, 0] {
+                return Err(Error::new("transpose supports rank-2 [1,0] only"));
+            }
+            let (m, n) = (v.dims[0], v.dims[1]);
+            let mut out = vec![0.0f32; m * n];
+            for i in 0..m {
+                for j in 0..n {
+                    out[j * m + i] = v.data[i * n + j];
+                }
+            }
+            Value { dims: vec![n, m], data: out }
+        }
+        Node::Matmul { a, b } => {
+            let va = eval(a, args, memo)?;
+            let vb = eval(b, args, memo)?;
+            if va.dims.len() != 2 || vb.dims.len() != 2 || va.dims[1] != vb.dims[0]
+            {
+                return Err(Error::new(format!(
+                    "matmul shape mismatch: {:?} x {:?}",
+                    va.dims, vb.dims
+                )));
+            }
+            let (m, k, n) = (va.dims[0], va.dims[1], vb.dims[1]);
+            let mut out = vec![0.0f32; m * n];
+            for i in 0..m {
+                for kk in 0..k {
+                    let aik = va.data[i * k + kk];
+                    if aik == 0.0 {
+                        continue;
+                    }
+                    let brow = &vb.data[kk * n..(kk + 1) * n];
+                    let crow = &mut out[i * n..(i + 1) * n];
+                    for (c, bj) in crow.iter_mut().zip(brow) {
+                        *c += aik * bj;
+                    }
+                }
+            }
+            Value { dims: vec![m, n], data: out }
+        }
+        Node::Binary { op, a, b } => {
+            let va = eval(a, args, memo)?;
+            let vb = eval(b, args, memo)?;
+            let apply = |x: f32, y: f32| match op {
+                BinOp::Add => x + y,
+                BinOp::Mul => x * y,
+                BinOp::Div => x / y,
+            };
+            if va.dims == vb.dims {
+                let data =
+                    va.data.iter().zip(&vb.data).map(|(&x, &y)| apply(x, y)).collect();
+                Value { dims: va.dims.clone(), data }
+            } else if vb.is_scalar() {
+                let y = vb.data[0];
+                Value {
+                    dims: va.dims.clone(),
+                    data: va.data.iter().map(|&x| apply(x, y)).collect(),
+                }
+            } else if va.is_scalar() {
+                let x = va.data[0];
+                Value {
+                    dims: vb.dims.clone(),
+                    data: vb.data.iter().map(|&y| apply(x, y)).collect(),
+                }
+            } else {
+                return Err(Error::new(format!(
+                    "binary op shape mismatch: {:?} vs {:?}",
+                    va.dims, vb.dims
+                )));
+            }
+        }
+        Node::Sqrt { x } => {
+            let v = eval(x, args, memo)?;
+            Value {
+                dims: v.dims.clone(),
+                data: v.data.iter().map(|&x| x.sqrt()).collect(),
+            }
+        }
+        Node::ReduceSum { x, dims, keep } => {
+            let v = eval(x, args, memo)?;
+            let rank = v.dims.len();
+            for d in dims {
+                if *d >= rank {
+                    return Err(Error::new("reduce_sum dim out of range"));
+                }
+            }
+            // Only the all-axes reduction is emitted by ns_builder.
+            if dims.len() != rank {
+                return Err(Error::new(
+                    "reduce_sum supports full reduction only",
+                ));
+            }
+            let s = v.data.iter().map(|&x| x as f64).sum::<f64>() as f32;
+            let out_dims =
+                if *keep { vec![1; rank] } else { Vec::new() };
+            Value { dims: out_dims, data: vec![s] }
+        }
+        Node::Broadcast { x, dims } => {
+            let v = eval(x, args, memo)?;
+            if dims.is_empty() {
+                v
+            } else {
+                let reps: usize = dims.iter().product();
+                let mut out_dims = dims.clone();
+                out_dims.extend_from_slice(&v.dims);
+                let mut data = Vec::with_capacity(reps * v.data.len());
+                for _ in 0..reps {
+                    data.extend_from_slice(&v.data);
+                }
+                Value { dims: out_dims, data }
+            }
+        }
+    };
+    memo.insert(key, out.clone());
+    Ok(out)
+}
+
+// -- builder -----------------------------------------------------------------
+
+/// Graph builder mirroring `xla::XlaBuilder`.
+pub struct XlaBuilder {
+    #[allow(dead_code)]
+    name: String,
+}
+
+/// One node of the computation being built.
+#[derive(Clone)]
+pub struct XlaOp {
+    node: Rc<Node>,
+}
+
+impl XlaBuilder {
+    pub fn new(name: &str) -> XlaBuilder {
+        XlaBuilder { name: name.to_string() }
+    }
+
+    pub fn parameter(
+        &self,
+        id: usize,
+        ty: ElementType,
+        dims: &[i64],
+        _name: &str,
+    ) -> Result<XlaOp> {
+        if ty != ElementType::F32 {
+            return Err(Error::new("only f32 parameters supported"));
+        }
+        let dims: Vec<usize> = dims.iter().map(|&d| d as usize).collect();
+        Ok(XlaOp { node: Rc::new(Node::Parameter { id, dims }) })
+    }
+
+    pub fn constant_r0(&self, v: f32) -> Result<XlaOp> {
+        Ok(XlaOp { node: Rc::new(Node::ConstantR0(v)) })
+    }
+}
+
+impl XlaOp {
+    fn binary(&self, op: BinOp, rhs: &XlaOp) -> Result<XlaOp> {
+        Ok(XlaOp {
+            node: Rc::new(Node::Binary {
+                op,
+                a: Rc::clone(&self.node),
+                b: Rc::clone(&rhs.node),
+            }),
+        })
+    }
+
+    pub fn add_(&self, rhs: &XlaOp) -> Result<XlaOp> {
+        self.binary(BinOp::Add, rhs)
+    }
+
+    pub fn mul_(&self, rhs: &XlaOp) -> Result<XlaOp> {
+        self.binary(BinOp::Mul, rhs)
+    }
+
+    pub fn div_(&self, rhs: &XlaOp) -> Result<XlaOp> {
+        self.binary(BinOp::Div, rhs)
+    }
+
+    pub fn matmul(&self, rhs: &XlaOp) -> Result<XlaOp> {
+        Ok(XlaOp {
+            node: Rc::new(Node::Matmul {
+                a: Rc::clone(&self.node),
+                b: Rc::clone(&rhs.node),
+            }),
+        })
+    }
+
+    pub fn transpose(&self, perm: &[i64]) -> Result<XlaOp> {
+        Ok(XlaOp {
+            node: Rc::new(Node::Transpose {
+                x: Rc::clone(&self.node),
+                perm: perm.iter().map(|&d| d as usize).collect(),
+            }),
+        })
+    }
+
+    pub fn sqrt(&self) -> Result<XlaOp> {
+        Ok(XlaOp { node: Rc::new(Node::Sqrt { x: Rc::clone(&self.node) }) })
+    }
+
+    pub fn reduce_sum(&self, dims: &[i64], keep_dims: bool) -> Result<XlaOp> {
+        Ok(XlaOp {
+            node: Rc::new(Node::ReduceSum {
+                x: Rc::clone(&self.node),
+                dims: dims.iter().map(|&d| d as usize).collect(),
+                keep: keep_dims,
+            }),
+        })
+    }
+
+    pub fn broadcast(&self, dims: &[i64]) -> Result<XlaOp> {
+        Ok(XlaOp {
+            node: Rc::new(Node::Broadcast {
+                x: Rc::clone(&self.node),
+                dims: dims.iter().map(|&d| d as usize).collect(),
+            }),
+        })
+    }
+
+    /// Finish the computation rooted at this op.
+    pub fn build(&self) -> Result<XlaComputation> {
+        Ok(XlaComputation { root: Some(Rc::clone(&self.node)) })
+    }
+}
+
+// -- compiled artifacts / PJRT surface ---------------------------------------
+
+/// Parsed HLO module placeholder. Text parsing needs the real XLA runtime,
+/// so construction always fails in the shim (callers treat this exactly
+/// like a missing artifact and fall back to host math).
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: impl AsRef<Path>) -> Result<HloModuleProto> {
+        Err(Error::new(format!(
+            "HLO-text artifact '{}' requires the real xla runtime; the \
+             offline shim only executes XlaBuilder computations (host \
+             Newton-Schulz fallback applies)",
+            path.as_ref().display()
+        )))
+    }
+}
+
+/// A computation: either a builder DAG (executable by the shim) or an
+/// artifact placeholder (compile will fail with a clear message).
+pub struct XlaComputation {
+    root: Option<Rc<Node>>,
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { root: None }
+    }
+}
+
+/// Host "device" client.
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient { _private: () })
+    }
+
+    pub fn platform_name(&self) -> String {
+        "host-shim".to_string()
+    }
+
+    pub fn compile(&self, comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        match &comp.root {
+            Some(root) => {
+                Ok(PjRtLoadedExecutable { root: Rc::clone(root) })
+            }
+            None => Err(Error::new(
+                "cannot compile an HLO-proto computation without the real \
+                 xla runtime",
+            )),
+        }
+    }
+}
+
+/// Device buffer holding one result.
+pub struct PjRtBuffer {
+    lit: Literal,
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Ok(self.lit.clone())
+    }
+}
+
+/// A compiled (interpretable) computation. Like the real crate's handles,
+/// this type is intentionally !Send/!Sync (`Rc` graph) — muonbp serializes
+/// all access through `NsEngine`'s mutex.
+pub struct PjRtLoadedExecutable {
+    root: Rc<Node>,
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        let vals: Vec<Value> = args
+            .iter()
+            .map(|l| {
+                let lit: &Literal = l.borrow();
+                let data = match &lit.data {
+                    LiteralData::F32(v) => Ok(v.clone()),
+                    LiteralData::S32(v) => {
+                        Ok(v.iter().map(|&x| x as f32).collect())
+                    }
+                    LiteralData::Tuple(_) => {
+                        Err(Error::new("tuple arguments unsupported"))
+                    }
+                }?;
+                Ok(Value { dims: lit.dims.clone(), data })
+            })
+            .collect::<Result<_>>()?;
+        let mut memo = HashMap::new();
+        let out = eval(&self.root, &vals, &mut memo)?;
+        let lit = Literal::from_f32(out.dims, out.data);
+        Ok(vec![vec![PjRtBuffer { lit }]])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn f32_literal(dims: &[usize], data: &[f32]) -> Literal {
+        let bytes: Vec<u8> =
+            data.iter().flat_map(|v| v.to_ne_bytes()).collect();
+        Literal::create_from_shape_and_untyped_data(
+            ElementType::F32,
+            dims,
+            &bytes,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn literal_roundtrip() {
+        let lit = f32_literal(&[2, 2], &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(lit.element_count(), 4);
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(lit.to_vec::<i32>().is_err());
+        assert!(lit.to_tuple().is_err());
+    }
+
+    #[test]
+    fn builder_matmul_and_scalar_ops() {
+        let b = XlaBuilder::new("t");
+        let x = b.parameter(0, ElementType::F32, &[2, 2], "x").unwrap();
+        let two = b.constant_r0(2.0).unwrap();
+        // y = (x·x) * 2 + x
+        let y = x
+            .matmul(&x)
+            .unwrap()
+            .mul_(&two)
+            .unwrap()
+            .add_(&x)
+            .unwrap();
+        let exe = PjRtClient::cpu()
+            .unwrap()
+            .compile(&y.build().unwrap())
+            .unwrap();
+        let arg = f32_literal(&[2, 2], &[1.0, 1.0, 0.0, 1.0]);
+        let out = exe.execute::<Literal>(&[arg]).unwrap()[0][0]
+            .to_literal_sync()
+            .unwrap();
+        // x·x = [[1,2],[0,1]]; *2 = [[2,4],[0,2]]; +x = [[3,5],[0,3]]
+        assert_eq!(out.to_vec::<f32>().unwrap(), vec![3.0, 5.0, 0.0, 3.0]);
+    }
+
+    #[test]
+    fn reduce_norm_pipeline() {
+        let b = XlaBuilder::new("n");
+        let x = b.parameter(0, ElementType::F32, &[1, 4], "x").unwrap();
+        let norm = x
+            .mul_(&x)
+            .unwrap()
+            .reduce_sum(&[0, 1], false)
+            .unwrap()
+            .sqrt()
+            .unwrap();
+        let scaled = x.div_(&norm.broadcast(&[]).unwrap()).unwrap();
+        let exe = PjRtClient::cpu()
+            .unwrap()
+            .compile(&scaled.build().unwrap())
+            .unwrap();
+        let arg = f32_literal(&[1, 4], &[3.0, 0.0, 4.0, 0.0]);
+        let out = exe.execute::<Literal>(&[arg]).unwrap()[0][0]
+            .to_literal_sync()
+            .unwrap();
+        let v = out.to_vec::<f32>().unwrap();
+        assert!((v[0] - 0.6).abs() < 1e-6 && (v[2] - 0.8).abs() < 1e-6);
+    }
+
+    #[test]
+    fn transpose_rank2() {
+        let b = XlaBuilder::new("tr");
+        let x = b.parameter(0, ElementType::F32, &[2, 3], "x").unwrap();
+        let xt = x.transpose(&[1, 0]).unwrap();
+        let exe = PjRtClient::cpu()
+            .unwrap()
+            .compile(&xt.build().unwrap())
+            .unwrap();
+        let arg = f32_literal(&[2, 3], &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let out = exe.execute::<Literal>(&[arg]).unwrap()[0][0]
+            .to_literal_sync()
+            .unwrap();
+        assert_eq!(
+            out.to_vec::<f32>().unwrap(),
+            vec![1.0, 4.0, 2.0, 5.0, 3.0, 6.0]
+        );
+    }
+
+    #[test]
+    fn hlo_text_is_gated() {
+        assert!(HloModuleProto::from_text_file("/nope.hlo.txt").is_err());
+    }
+}
