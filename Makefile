@@ -1,6 +1,6 @@
 # Convenience targets; tier-1 verify is `make verify` (== ROADMAP.md).
 
-.PHONY: build test verify ci perf artifacts clean
+.PHONY: build test verify ci perf pool-stress artifacts clean
 
 build:
 	cargo build --release
@@ -17,6 +17,12 @@ ci:
 # always run; XLA/train-step sections need `make artifacts` first).
 perf:
 	cargo bench --bench perf_hotpath
+
+# Worker-pool stress tests (concurrent submitters, rendezvous growth,
+# drop ordering) with the libtest thread count forced high so the test
+# binaries themselves contend for the pool.
+pool-stress:
+	RUST_TEST_THREADS=16 cargo test --test pool_stress -- --nocapture
 
 # Build the L1/L2 HLO-text artifacts (requires the python toolchain with
 # jax; see python/compile/aot.py).

@@ -18,6 +18,9 @@ cargo build --release || exit 1
 step "tier-1: cargo test -q"
 cargo test -q || exit 1
 
+step "tier-1: cargo bench --no-run (benches must keep compiling)"
+cargo bench --no-run || exit 1
+
 step "cargo fmt --check"
 if ! cargo fmt --check; then
     echo "FAIL: formatting (run 'cargo fmt')"

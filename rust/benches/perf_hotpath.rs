@@ -20,6 +20,7 @@ use std::sync::Arc;
 use muonbp::bench_util::{banner, save_bench_json, time_it};
 use muonbp::coordinator::DistMuonBuilder;
 use muonbp::costmodel::netmodel::NetModel;
+use muonbp::linalg::gemm::{gemm_into, gemm_into_blocked};
 use muonbp::linalg::matmul::{matmul, reference, syrk};
 use muonbp::linalg::newton_schulz::{
     newton_schulz, newton_schulz_reference, ns_flops, NsCoeffs, NsWorkspace,
@@ -148,6 +149,114 @@ fn main() {
         let speedup = r_seq.mean_s / r_par.mean_s;
         println!("    -> {speedup:.2}x vs sequential");
         records.push(r_par.to_json("block-orth-par", &shape, 0.0, speedup));
+    }
+
+    // 4b. Full-step Newton–Schulz, single-thread vs pooled, at 1k–4k
+    //     square sizes — the tentpole measurement: full orthogonalization
+    //     (the expensive P-th step of MuonBP) goes multicore through the
+    //     persistent worker pool, with zero steady-state allocations.
+    //     K shrinks with size to keep the bench runnable; FLOPs are
+    //     accounted per (size, K) so GFLOP/s stays comparable.
+    for (n, k_ns, iters) in [(1024usize, 5usize, 3usize), (2048, 2, 2), (4096, 1, 1)] {
+        let g = Tensor::randn(&[n, n], 1.0, &mut rng);
+        let flops = ns_flops(n, n, k_ns);
+        let shape = format!("{n}x{n}xK{k_ns}");
+        let mut ws = NsWorkspace::new();
+        ws.load(&g);
+        ws.iterate_threads(1, NsCoeffs::jordan(), 1); // warm buffers
+        let r_1t = time_it(
+            &format!("NS full-step 1-thread {shape}"),
+            0,
+            iters,
+            || {
+                ws.load(&g);
+                ws.iterate_threads(k_ns, NsCoeffs::jordan(), 1);
+            },
+        );
+        println!("    -> {:.2} GFLOP/s", flops / r_1t.mean_s / 1e9);
+        records.push(r_1t.to_json("ns-full-1thread", &shape, flops, 0.0));
+        let r_pool = time_it(
+            &format!("NS full-step pooled {shape}"),
+            0,
+            iters,
+            || {
+                ws.load(&g);
+                ws.iterate(k_ns, NsCoeffs::jordan()); // FLOP-derived threads
+            },
+        );
+        let speedup = r_1t.mean_s / r_pool.mean_s;
+        println!(
+            "    -> {:.2} GFLOP/s ({speedup:.2}x vs 1-thread)",
+            flops / r_pool.mean_s / 1e9
+        );
+        records.push(r_pool.to_json("ns-full-pooled", &shape, flops, speedup));
+    }
+
+    // 4c. Cache blocking: MC/KC-blocked GEMM vs the unblocked full-k
+    //     kernel (kc >= k, mc >= m reproduces it exactly), single-thread
+    //     so the comparison isolates the memory hierarchy.
+    for n in [1024usize, 2048, 4096] {
+        let a = Tensor::randn(&[n, n], 1.0, &mut rng);
+        let b = Tensor::randn(&[n, n], 1.0, &mut rng);
+        let mut c = Tensor::zeros(&[n, n]);
+        let (mut pa, mut pb) = (Vec::new(), Vec::new());
+        let flops = 2.0 * (n as f64).powi(3);
+        let shape = format!("{n}x{n}x{n}");
+        // kc = k and mc = m (all bench sizes are multiples of MR) turn the
+        // blocked kernel back into the unblocked full-k one.
+        let mc_unblocked = n;
+        let r_un = time_it(
+            &format!("gemm unblocked 1-thread {shape}"),
+            0,
+            1,
+            || {
+                gemm_into_blocked(
+                    c.data_mut(),
+                    n,
+                    n,
+                    n,
+                    a.data(),
+                    false,
+                    b.data(),
+                    false,
+                    None,
+                    &mut pa,
+                    &mut pb,
+                    1,
+                    n,
+                    mc_unblocked,
+                );
+            },
+        );
+        println!("    -> {:.2} GFLOP/s", flops / r_un.mean_s / 1e9);
+        records.push(r_un.to_json("gemm-unblocked", &shape, flops, 0.0));
+        let r_blk = time_it(
+            &format!("gemm MC/KC-blocked 1-thread {shape}"),
+            0,
+            1,
+            || {
+                gemm_into(
+                    c.data_mut(),
+                    n,
+                    n,
+                    n,
+                    a.data(),
+                    false,
+                    b.data(),
+                    false,
+                    None,
+                    &mut pa,
+                    &mut pb,
+                    1,
+                );
+            },
+        );
+        let speedup = r_un.mean_s / r_blk.mean_s;
+        println!(
+            "    -> {:.2} GFLOP/s ({speedup:.2}x vs unblocked)",
+            flops / r_blk.mean_s / 1e9
+        );
+        records.push(r_blk.to_json("gemm-blocked", &shape, flops, speedup));
     }
 
     // Host-side results are complete — persist before the artifact gate so

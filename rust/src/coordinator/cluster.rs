@@ -2,8 +2,6 @@
 
 use std::sync::Arc;
 
-use crossbeam_utils::thread;
-
 use crate::comm::{CommStats, Communicator};
 use crate::costmodel::netmodel::NetModel;
 use crate::mesh::{Layout, Mesh};
@@ -11,6 +9,7 @@ use crate::optim::adamw::AdamW;
 use crate::optim::muon::{MuonCfg, OrthFn, Period};
 use crate::optim::scaling::rms_match_scale;
 use crate::optim::{Optimizer, ParamKind, ParamMeta};
+use crate::runtime::pool::{Pool, SendPtr};
 use crate::runtime::NsEngine;
 use crate::shard::{shard, unshard, ShardSpec};
 use crate::tensor::Tensor;
@@ -88,12 +87,11 @@ impl DistMuonBuilder {
         let orth: OrthFn = match &self.ns {
             Some(ns) => ns.as_orth_fn(),
             None => {
-                // Host fallback goes through the fused workspace NS: each
-                // TP rank thread warms its own thread-local `NsWorkspace`
-                // and every orthogonalization it runs after that is
-                // allocation-free. (Rank threads are re-spawned per step
-                // by `thread::scope`, so the warm-up recurs once per rank
-                // per step — persistent rank workers are a ROADMAP item.)
+                // Host fallback goes through the fused workspace NS. Rank
+                // tasks run on the persistent pool with a stable rank →
+                // worker mapping, so each rank's thread-local `NsWorkspace`
+                // warms once and stays warm across *steps*, not just
+                // within one call (ROADMAP items 3–4, now resolved).
                 let steps = self.cfg.ns_steps;
                 let coeffs = self.cfg.coeffs;
                 Arc::new(move |g: &Tensor| {
@@ -155,33 +153,21 @@ impl DistMuon {
     /// Gradient all-reduce across the DP group (phase 1). Every DP rank
     /// holds the same replica here (batch-split grads average to exactly
     /// the full-batch grad — see DESIGN.md §1), so payloads are real and
-    /// results bit-identical.
+    /// results bit-identical. Rank tasks run concurrently on the
+    /// persistent pool (they rendezvous inside the collective).
     fn dp_allreduce(&self, grads: &[Tensor]) -> Vec<Tensor> {
         if self.mesh.dp <= 1 {
             return grads.to_vec();
         }
         let comm = &self.dp_comm;
         let dp = self.mesh.dp;
-        let mut out: Vec<Option<Vec<Tensor>>> = (0..dp).map(|_| None).collect();
-        thread::scope(|s| {
-            let handles: Vec<_> = (0..dp)
-                .map(|r| {
-                    let comm = comm.clone();
-                    let grads = &grads;
-                    s.spawn(move |_| {
-                        grads
-                            .iter()
-                            .map(|g| comm.all_reduce_mean(r, g.clone()))
-                            .collect::<Vec<_>>()
-                    })
-                })
-                .collect();
-            for (r, h) in handles.into_iter().enumerate() {
-                out[r] = Some(h.join().unwrap());
-            }
-        })
-        .unwrap();
-        out[0].take().unwrap()
+        let mut out = Pool::global().run_concurrent_map(dp, |r, _arena| {
+            grads
+                .iter()
+                .map(|g| comm.all_reduce_mean(r, g.clone()))
+                .collect::<Vec<_>>()
+        });
+        out.swap_remove(0)
     }
 
     /// TP optimizer phase (phase 2): returns the per-matrix update deltas
@@ -206,74 +192,64 @@ impl DistMuon {
             .map(|(i, _)| i)
             .collect();
 
-        let rank_updates: Vec<Vec<Tensor>> = thread::scope(|s| {
-            let handles: Vec<_> = self
-                .rank_momenta
-                .iter_mut()
-                .enumerate()
-                .map(|(rank, momenta)| {
-                    let comm = comm.clone();
-                    let matrix_idx = &matrix_idx;
-                    let orth = Arc::clone(orth);
-                    let grads = &grads;
-                    let specs = &specs;
-                    s.spawn(move |_| {
-                        let mut updates = Vec::with_capacity(momenta.len());
-                        for (ord, &pidx) in matrix_idx.iter().enumerate() {
-                            let spec = specs[pidx].as_ref().unwrap();
-                            let block_id = rank.min(spec.num_blocks() - 1);
-                            // M_t^(m) = μ M_{t-1}^(m) + G_t^(m)
-                            let g_shard = shard(&grads[pidx], spec, block_id);
-                            momenta[ord].scale_add(mu, 1.0, &g_shard);
-                            let upd = if full && spec.num_blocks() > 1 {
-                                // Gather momentum shards -> leader orth ->
-                                // scatter update shards (Alg. 1 lines 6-9).
-                                let gathered = comm.gather_to(
-                                    rank,
-                                    0,
-                                    momenta[ord].clone(),
-                                );
-                                let parts = gathered.map(|mut shards| {
-                                    // Ranks beyond the block count hold
-                                    // replicas (dim < tp clamp); drop them.
-                                    shards.truncate(spec.num_blocks());
-                                    let m_full = unshard(&shards, spec);
-                                    let mut u = orth(&m_full);
-                                    u.scale(rms_match_scale(
-                                        m_full.m(),
-                                        m_full.n(),
-                                        rms_beta,
-                                    )
-                                        as f32);
-                                    let mut parts =
-                                        crate::shard::shard_all(&u, spec);
-                                    while parts.len() < comm.world() {
-                                        parts.push(
-                                            parts.last().unwrap().clone(),
-                                        );
-                                    }
-                                    parts
-                                });
-                                comm.scatter_from(rank, 0, parts)
-                            } else {
-                                // Local block orthogonalization (lines 11-13).
-                                let mut u = orth(&momenta[ord]);
-                                u.scale(rms_match_scale(
-                                    momenta[ord].m(),
-                                    momenta[ord].n(),
-                                    rms_beta,
-                                ) as f32);
-                                u
-                            };
-                            updates.push(upd);
-                        }
-                        updates
-                    })
-                })
-                .collect();
-            handles.into_iter().map(|h| h.join().unwrap()).collect()
-        })
-        .unwrap();
+        // One task per TP rank on the persistent pool. run_concurrent_map
+        // guarantees all ranks run simultaneously (they rendezvous in
+        // gather/scatter) and pins rank i to worker i, so each rank's
+        // thread-local NsWorkspace stays warm across steps.
+        let momenta_ptr = SendPtr(self.rank_momenta.as_mut_ptr());
+        let rank_updates: Vec<Vec<Tensor>> =
+            Pool::global().run_concurrent_map(tp, |rank, _arena| {
+                // SAFETY: task `rank` is the sole user of
+                // `rank_momenta[rank]`; the map joins all tasks before
+                // `rank_momenta` is touched again.
+                let momenta: &mut Vec<Tensor> =
+                    unsafe { &mut *momenta_ptr.0.add(rank) };
+                let orth = Arc::clone(orth);
+                let mut updates = Vec::with_capacity(momenta.len());
+                for (ord, &pidx) in matrix_idx.iter().enumerate() {
+                    let spec = specs[pidx].as_ref().unwrap();
+                    let block_id = rank.min(spec.num_blocks() - 1);
+                    // M_t^(m) = μ M_{t-1}^(m) + G_t^(m)
+                    let g_shard = shard(&grads[pidx], spec, block_id);
+                    momenta[ord].scale_add(mu, 1.0, &g_shard);
+                    let upd = if full && spec.num_blocks() > 1 {
+                        // Gather momentum shards -> leader orth ->
+                        // scatter update shards (Alg. 1 lines 6-9).
+                        let gathered =
+                            comm.gather_to(rank, 0, momenta[ord].clone());
+                        let parts = gathered.map(|mut shards| {
+                            // Ranks beyond the block count hold
+                            // replicas (dim < tp clamp); drop them.
+                            shards.truncate(spec.num_blocks());
+                            let m_full = unshard(&shards, spec);
+                            let mut u = orth(&m_full);
+                            u.scale(rms_match_scale(
+                                m_full.m(),
+                                m_full.n(),
+                                rms_beta,
+                            ) as f32);
+                            let mut parts =
+                                crate::shard::shard_all(&u, spec);
+                            while parts.len() < comm.world() {
+                                parts.push(parts.last().unwrap().clone());
+                            }
+                            parts
+                        });
+                        comm.scatter_from(rank, 0, parts)
+                    } else {
+                        // Local block orthogonalization (lines 11-13).
+                        let mut u = orth(&momenta[ord]);
+                        u.scale(rms_match_scale(
+                            momenta[ord].m(),
+                            momenta[ord].n(),
+                            rms_beta,
+                        ) as f32);
+                        u
+                    };
+                    updates.push(upd);
+                }
+                updates
+            });
 
         // Reassemble per-param full update deltas from rank shards.
         let mut out: Vec<Option<Tensor>> = vec![None; metas.len()];

@@ -1,4 +1,5 @@
-//! Packed, register-tiled GEMM microkernels — the host hot path.
+//! Packed, register-tiled, cache-blocked GEMM microkernels — the host hot
+//! path.
 //!
 //! Everything Newton–Schulz touches funnels through two primitives:
 //!
@@ -8,27 +9,49 @@
 //!   panels and B into NR-column row-interleaved panels so the microkernel
 //!   inner loop is two contiguous streams feeding 64 independent FMA
 //!   accumulators — a shape LLVM reliably autovectorizes via
-//!   `chunks_exact`. Row panels are independent, so large products fan out
-//!   across scoped threads (bit-identical to single-threaded: each output
-//!   row is computed by exactly one thread with the same k-order).
+//!   `chunks_exact`.
 //! - [`syrk_into`]: C = X·Xᵀ exploiting symmetry — only tiles touching the
 //!   upper triangle are computed and the strict lower triangle is mirrored,
 //!   halving the Gram-matrix FLOPs of every NS iteration (`A = X Xᵀ` and,
 //!   because A is symmetric, `A² = A·Aᵀ` too).
 //!
-//! All scratch (packed panels) lives in caller-provided grow-only `Vec`s so
-//! the NS iteration loop runs allocation-free after warm-up (see
+//! On top of the microkernel sits BLIS-style **MC/KC cache blocking**: the
+//! k extent is cut into [`KC`]-deep slabs and the rows into [`MC`]-row
+//! blocks, so one A block (MC×KC ≈ 64 KiB) lives in L2 and one B panel
+//! (KC×NR ≈ 16 KiB) stays in L1 across the row sweep, instead of the
+//! full-k panels thrashing cache on ≥1k matrices. Partial products are
+//! accumulated into C per k-slab (first slab writes — fused with the
+//! optional `alpha·S` term — later slabs add).
+//!
+//! Large products fan MC row blocks out across the **persistent worker
+//! pool** ([`crate::runtime::pool::Pool`]) instead of re-spawning scoped
+//! threads per call. The row-block partition depends only on the problem
+//! shape — never on the worker count — so results are **bit-identical for
+//! any thread count**, including the sequential and nested-inline paths.
+//!
+//! All scratch (packed panels) lives in caller-provided grow-only `Vec`s,
+//! and the pool dispatch itself is allocation-free, so the NS iteration
+//! loop runs allocation-free after warm-up even when multithreaded (see
 //! `linalg::newton_schulz::NsWorkspace` and `tests/ns_zero_alloc.rs`).
 //! The naive kernels these replace survive in `matmul::reference` as
 //! property-test oracles.
 
-use crossbeam_utils::thread;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use crate::runtime::pool::{Pool, SendPtr};
 
 /// Microkernel tile rows (A panel height).
 pub const MR: usize = 4;
 /// Microkernel tile columns (B panel width): 16 f32 = four 128-bit or two
 /// 256-bit SIMD lanes per accumulator row.
 pub const NR: usize = 16;
+/// Cache-blocking depth: k is processed in KC-deep slabs so a packed B
+/// panel (KC×NR f32 = 16 KiB) fits L1 and an A block (MC×KC = 64 KiB)
+/// fits L2.
+pub const KC: usize = 256;
+/// Cache-blocking height: rows are processed in MC-row blocks (multiple of
+/// MR); one MC block is also the unit of work a pool worker claims.
+pub const MC: usize = 64;
 
 /// FLOP threshold below which threading overhead beats the speedup.
 const MT_MIN_FLOPS: f64 = 4.0e6;
@@ -39,24 +62,50 @@ fn div_up(x: usize, d: usize) -> usize {
 }
 
 /// Threads worth spawning for a kernel of `flops` floating point ops.
+/// Called inside the NS hot loop, so the core count is cached: on Linux
+/// `available_parallelism` re-reads /proc (and heap-allocates) per call,
+/// which would tick the counting allocator the zero-alloc proof relies on.
 pub fn suggested_threads(flops: f64) -> usize {
     if flops < MT_MIN_FLOPS {
         return 1;
     }
-    std::thread::available_parallelism()
-        .map(|n| n.get())
-        .unwrap_or(1)
-        .min(8)
+    static CORES: AtomicUsize = AtomicUsize::new(0);
+    let cores = match CORES.load(Ordering::Relaxed) {
+        0 => {
+            let n = std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1);
+            CORES.store(n, Ordering::Relaxed);
+            n
+        }
+        n => n,
+    };
+    cores.min(8)
 }
 
 /// Pack `a` (logical m×k; stored k×m when `trans`) into MR-row panels:
 /// panel p holds rows [p·MR, p·MR+MR) column-interleaved as
 /// `out[p·k·MR + kk·MR + r]`, zero-padded past row m so the microkernel
-/// never branches on the edge.
+/// never branches on the edge. Within a panel the layout is kk-major, so
+/// the KC-slab [k0, k1) of panel p is the contiguous subrange
+/// `[p·k·MR + k0·MR, p·k·MR + k1·MR)` — cache blocking never re-packs.
 fn pack_a(a: &[f32], m: usize, k: usize, trans: bool, out: &mut Vec<f32>) {
     let panels = div_up(m, MR);
-    out.clear();
+    // Grow-only resize: new tail is zero-filled, surviving prefix keeps
+    // stale data. The pack loops below overwrite every non-padding entry,
+    // so only the ragged last panel's padding rows — the one region the
+    // microkernel reads but the loops don't write — need explicit zeroing
+    // (a full clear+refill would re-zero O(m·k) per call on the hot loop).
     out.resize(panels * k * MR, 0.0);
+    let tail_rows = m - (panels - 1) * MR;
+    if tail_rows < MR {
+        let dst = &mut out[(panels - 1) * k * MR..];
+        for kk in 0..k {
+            for r in tail_rows..MR {
+                dst[kk * MR + r] = 0.0;
+            }
+        }
+    }
     for p in 0..panels {
         let dst = &mut out[p * k * MR..(p + 1) * k * MR];
         let rows = MR.min(m - p * MR);
@@ -81,11 +130,22 @@ fn pack_a(a: &[f32], m: usize, k: usize, trans: bool, out: &mut Vec<f32>) {
 
 /// Pack `b` (logical k×n; stored n×k when `trans`) into NR-column panels:
 /// panel q holds columns [q·NR, q·NR+NR) row-interleaved as
-/// `out[q·k·NR + kk·NR + c]`, zero-padded past column n.
+/// `out[q·k·NR + kk·NR + c]`, zero-padded past column n. kk-major like
+/// `pack_a`, so KC slabs are contiguous subranges of each panel.
 fn pack_b(b: &[f32], k: usize, n: usize, trans: bool, out: &mut Vec<f32>) {
     let panels = div_up(n, NR);
-    out.clear();
+    // Grow-only resize + explicit padding zeroing of the ragged last
+    // panel's columns only — see the matching comment in `pack_a`.
     out.resize(panels * k * NR, 0.0);
+    let tail_cols = n - (panels - 1) * NR;
+    if tail_cols < NR {
+        let dst = &mut out[(panels - 1) * k * NR..];
+        for kk in 0..k {
+            for c in tail_cols..NR {
+                dst[kk * NR + c] = 0.0;
+            }
+        }
+    }
     for q in 0..panels {
         let dst = &mut out[q * k * NR..(q + 1) * k * NR];
         let cols = NR.min(n - q * NR);
@@ -107,13 +167,12 @@ fn pack_b(b: &[f32], k: usize, n: usize, trans: bool, out: &mut Vec<f32>) {
     }
 }
 
-/// The register-tiled heart: one MR×NR accumulator tile over the full k
-/// extent of a packed A panel (k·MR) and packed B panel (k·NR). The paired
-/// `chunks_exact` streams plus the fixed-size accumulator array are the
-/// autovectorization contract.
+/// The register-tiled heart: accumulate one MR×NR tile over the given
+/// k-slab of a packed A panel (len·MR) and packed B panel (len·NR). The
+/// paired `chunks_exact` streams plus the fixed-size accumulator array are
+/// the autovectorization contract.
 #[inline]
-fn microkernel(ap: &[f32], bp: &[f32]) -> [[f32; NR]; MR] {
-    let mut acc = [[0.0f32; NR]; MR];
+fn microkernel_acc(acc: &mut [[f32; NR]; MR], ap: &[f32], bp: &[f32]) {
     for (a4, b16) in ap.chunks_exact(MR).zip(bp.chunks_exact(NR)) {
         for r in 0..MR {
             let ar = a4[r];
@@ -123,40 +182,66 @@ fn microkernel(ap: &[f32], bp: &[f32]) -> [[f32; NR]; MR] {
             }
         }
     }
-    acc
 }
 
-/// Compute one row panel of C (rows p·MR..p·MR+rows, all n columns).
-/// `fuse` is `(alpha, s_panel)` with `s_panel` the same rows of a source
-/// matrix S: writeback becomes `C = acc + alpha·S` in a single pass (the
-/// fused `X' = B·X + a·X` NS update).
-fn run_row_panel(
-    cpanel: &mut [f32],
+/// Compute rows [row0, row0+rows) of C — one MC row block, the unit of
+/// pool work. Loops k-slabs outermost (cache blocking), then column
+/// panels, then the MR micro-panels of the block, accumulating partial
+/// products into C (`kb == 0` writes, later slabs add). `fuse` is
+/// `(alpha, s)` with `s` the full m×n source: the first slab's writeback
+/// becomes `C = acc + alpha·S` (the fused `X' = B·X + a·X` NS update).
+#[allow(clippy::too_many_arguments)]
+fn run_row_block(
+    cblock: &mut [f32],
+    row0: usize,
     rows: usize,
-    n: usize,
-    ap_panel: &[f32],
-    pb: &[f32],
     k: usize,
+    n: usize,
+    pa: &[f32],
+    pb: &[f32],
     fuse: Option<(f32, &[f32])>,
+    kc: usize,
 ) {
     let col_panels = div_up(n, NR);
-    for q in 0..col_panels {
-        let cols = NR.min(n - q * NR);
-        let bp_panel = &pb[q * k * NR..(q + 1) * k * NR];
-        let acc = microkernel(ap_panel, bp_panel);
-        for r in 0..rows {
-            let off = r * n + q * NR;
-            let dst = &mut cpanel[off..off + cols];
-            match fuse {
-                Some((alpha, s_panel)) => {
-                    let src = &s_panel[off..off + cols];
-                    for ((d, &a), &s) in
-                        dst.iter_mut().zip(&acc[r][..cols]).zip(src)
-                    {
-                        *d = a + alpha * s;
+    let panels = div_up(rows, MR);
+    let p0 = row0 / MR; // row0 is a multiple of MC, hence of MR
+    let nkb = div_up(k, kc);
+    for kb in 0..nkb {
+        let k0 = kb * kc;
+        let kext = kc.min(k - k0);
+        for q in 0..col_panels {
+            let cols = NR.min(n - q * NR);
+            let bp = &pb[q * k * NR + k0 * NR..q * k * NR + (k0 + kext) * NR];
+            for pl in 0..panels {
+                let p = p0 + pl;
+                let prow = pl * MR;
+                let prows = MR.min(rows - prow);
+                let ap =
+                    &pa[p * k * MR + k0 * MR..p * k * MR + (k0 + kext) * MR];
+                let mut acc = [[0.0f32; NR]; MR];
+                microkernel_acc(&mut acc, ap, bp);
+                for r in 0..prows {
+                    let off = (prow + r) * n + q * NR;
+                    let dst = &mut cblock[off..off + cols];
+                    if kb == 0 {
+                        match fuse {
+                            Some((alpha, s)) => {
+                                let soff = (row0 + prow + r) * n + q * NR;
+                                let src = &s[soff..soff + cols];
+                                for ((d, &a), &sv) in
+                                    dst.iter_mut().zip(&acc[r][..cols]).zip(src)
+                                {
+                                    *d = a + alpha * sv;
+                                }
+                            }
+                            None => dst.copy_from_slice(&acc[r][..cols]),
+                        }
+                    } else {
+                        for (d, &a) in dst.iter_mut().zip(&acc[r][..cols]) {
+                            *d += a;
+                        }
                     }
                 }
-                None => dst.copy_from_slice(&acc[r][..cols]),
             }
         }
     }
@@ -169,8 +254,9 @@ fn run_row_panel(
 /// - `fuse_axpy = Some((alpha, s))` with `s.len() == m·n` writes
 ///   `C = op(A)·op(B) + alpha·S` in one pass over C.
 /// - `pa`/`pb` are grow-only packing scratch; no other heap use.
-/// - `threads > 1` fans row panels out across scoped threads; results are
-///   bit-identical to the single-threaded path for any thread count.
+/// - `threads > 1` fans MC row blocks out across the persistent pool; the
+///   block partition depends only on the shape, so results are
+///   bit-identical for any thread count (and to the sequential path).
 #[allow(clippy::too_many_arguments)]
 pub fn gemm_into(
     c: &mut [f32],
@@ -186,9 +272,36 @@ pub fn gemm_into(
     pb: &mut Vec<f32>,
     threads: usize,
 ) {
+    gemm_into_blocked(
+        c, m, k, n, a, trans_a, b, trans_b, fuse_axpy, pa, pb, threads, KC, MC,
+    );
+}
+
+/// [`gemm_into`] with explicit cache-blocking parameters — the bench /
+/// tuning escape hatch (`kc >= k`, `mc >= m` reproduces the unblocked
+/// full-k kernel). `mc` must be a positive multiple of [`MR`].
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_into_blocked(
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    trans_a: bool,
+    b: &[f32],
+    trans_b: bool,
+    fuse_axpy: Option<(f32, &[f32])>,
+    pa: &mut Vec<f32>,
+    pb: &mut Vec<f32>,
+    threads: usize,
+    kc: usize,
+    mc: usize,
+) {
     assert_eq!(c.len(), m * n, "gemm output size");
     assert_eq!(a.len(), m * k, "gemm A size");
     assert_eq!(b.len(), k * n, "gemm B size");
+    assert!(kc > 0, "gemm kc blocking must be positive");
+    assert!(mc > 0 && mc % MR == 0, "gemm mc must be a multiple of MR");
     if let Some((_, s)) = fuse_axpy {
         assert_eq!(s.len(), m * n, "gemm fuse source size");
     }
@@ -210,59 +323,47 @@ pub fn gemm_into(
     pack_b(b, k, n, trans_b, pb);
     let pa_s: &[f32] = pa;
     let pb_s: &[f32] = pb;
-    let row_panels = div_up(m, MR);
-    let use_threads = threads.clamp(1, row_panels);
-    if use_threads <= 1 {
-        for (p, cpanel) in c.chunks_mut(MR * n).enumerate() {
-            let rows = MR.min(m - p * MR);
-            let fuse_p = fuse_axpy
-                .map(|(al, s)| (al, &s[p * MR * n..p * MR * n + rows * n]));
-            run_row_panel(
-                cpanel,
+    let nblocks = div_up(m, mc);
+    if threads <= 1 || nblocks <= 1 {
+        for t in 0..nblocks {
+            let row0 = t * mc;
+            let rows = mc.min(m - row0);
+            run_row_block(
+                &mut c[row0 * n..(row0 + rows) * n],
+                row0,
                 rows,
-                n,
-                &pa_s[p * k * MR..(p + 1) * k * MR],
-                pb_s,
                 k,
-                fuse_p,
+                n,
+                pa_s,
+                pb_s,
+                fuse_axpy,
+                kc,
             );
         }
     } else {
-        thread::scope(|scope| {
-            // Round-robin panel assignment: balanced and deterministic.
-            let mut buckets: Vec<Vec<(usize, &mut [f32])>> =
-                (0..use_threads).map(|_| Vec::new()).collect();
-            for (p, cpanel) in c.chunks_mut(MR * n).enumerate() {
-                buckets[p % use_threads].push((p, cpanel));
-            }
-            for bucket in buckets {
-                scope.spawn(move |_| {
-                    for (p, cpanel) in bucket {
-                        let rows = MR.min(m - p * MR);
-                        let fuse_p = fuse_axpy.map(|(al, s)| {
-                            (al, &s[p * MR * n..p * MR * n + rows * n])
-                        });
-                        run_row_panel(
-                            cpanel,
-                            rows,
-                            n,
-                            &pa_s[p * k * MR..(p + 1) * k * MR],
-                            pb_s,
-                            k,
-                            fuse_p,
-                        );
-                    }
-                });
-            }
-        })
-        .unwrap();
+        let cptr = SendPtr(c.as_mut_ptr());
+        Pool::global().fanout_limited(nblocks, threads, &|t, _arena| {
+            let row0 = t * mc;
+            let rows = mc.min(m - row0);
+            // SAFETY: row blocks are disjoint slices of C, one per task,
+            // and the fan-out joins before `c` is touched again.
+            let cblock = unsafe {
+                std::slice::from_raw_parts_mut(cptr.0.add(row0 * n), rows * n)
+            };
+            run_row_block(
+                cblock, row0, rows, k, n, pa_s, pb_s, fuse_axpy, kc,
+            );
+        });
     }
 }
 
 /// C (m×m) = X·Xᵀ for row-major X (m×k), computing only tiles that touch
 /// the upper triangle and mirroring the rest — ≈½ the FLOPs of a full
 /// GEMM. Also serves `A²` for symmetric A (A·A = A·Aᵀ), which is exactly
-/// the other Gram-shaped product in a Newton–Schulz iteration.
+/// the other Gram-shaped product in a Newton–Schulz iteration. Same KC/MC
+/// cache blocking and pool fan-out as [`gemm_into`]; `threads > 1` splits
+/// MC row blocks across the pool, bit-identical to sequential.
+#[allow(clippy::too_many_arguments)]
 pub fn syrk_into(
     c: &mut [f32],
     x: &[f32],
@@ -270,6 +371,7 @@ pub fn syrk_into(
     k: usize,
     pa: &mut Vec<f32>,
     pb: &mut Vec<f32>,
+    threads: usize,
 ) {
     assert_eq!(c.len(), m * m, "syrk output size");
     assert_eq!(x.len(), m * k, "syrk input size");
@@ -283,35 +385,92 @@ pub fn syrk_into(
     pack_a(x, m, k, false, pa);
     // B = Xᵀ (k×m), packed straight from X's rows.
     pack_b(x, k, m, true, pb);
-    let row_panels = div_up(m, MR);
-    let col_panels = div_up(m, NR);
-    for p in 0..row_panels {
-        let rows = MR.min(m - p * MR);
-        let ap_panel = &pa[p * k * MR..(p + 1) * k * MR];
-        for q in 0..col_panels {
-            // Tile columns are [q·NR, q·NR+NR); skip tiles entirely below
-            // the diagonal (max column index < first row index).
-            if (q + 1) * NR <= p * MR {
-                continue;
-            }
-            let cols = NR.min(m - q * NR);
-            let bp_panel = &pb[q * k * NR..(q + 1) * k * NR];
-            let acc = microkernel(ap_panel, bp_panel);
-            for r in 0..rows {
-                let i = p * MR + r;
-                for cc in 0..cols {
-                    let j = q * NR + cc;
-                    if j >= i {
-                        c[i * m + j] = acc[r][cc];
-                    }
-                }
-            }
+    let pa_s: &[f32] = pa;
+    let pb_s: &[f32] = pb;
+    let nblocks = div_up(m, MC);
+    if threads <= 1 || nblocks <= 1 {
+        for t in 0..nblocks {
+            let row0 = t * MC;
+            let rows = MC.min(m - row0);
+            syrk_row_block(
+                &mut c[row0 * m..(row0 + rows) * m],
+                row0,
+                rows,
+                k,
+                m,
+                pa_s,
+                pb_s,
+            );
         }
+    } else {
+        let cptr = SendPtr(c.as_mut_ptr());
+        Pool::global().fanout_limited(nblocks, threads, &|t, _arena| {
+            let row0 = t * MC;
+            let rows = MC.min(m - row0);
+            // SAFETY: disjoint row blocks, joined before further use of c.
+            let cblock = unsafe {
+                std::slice::from_raw_parts_mut(cptr.0.add(row0 * m), rows * m)
+            };
+            syrk_row_block(cblock, row0, rows, k, m, pa_s, pb_s);
+        });
     }
     // Mirror the computed upper triangle into the strict lower triangle.
     for i in 0..m {
         for j in (i + 1)..m {
             c[j * m + i] = c[i * m + j];
+        }
+    }
+}
+
+/// One MC row block of the syrk upper triangle (KC-blocked like
+/// [`run_row_block`], with the below-diagonal tile skip).
+fn syrk_row_block(
+    cblock: &mut [f32],
+    row0: usize,
+    rows: usize,
+    k: usize,
+    m: usize,
+    pa: &[f32],
+    pb: &[f32],
+) {
+    let col_panels = div_up(m, NR);
+    let panels = div_up(rows, MR);
+    let p0 = row0 / MR;
+    let nkb = div_up(k, KC);
+    for kb in 0..nkb {
+        let k0 = kb * KC;
+        let kext = KC.min(k - k0);
+        for q in 0..col_panels {
+            let cols = NR.min(m - q * NR);
+            let bp = &pb[q * k * NR + k0 * NR..q * k * NR + (k0 + kext) * NR];
+            for pl in 0..panels {
+                let p = p0 + pl;
+                // Tile columns are [q·NR, q·NR+NR); skip tiles entirely
+                // below the diagonal (max column index < first row index).
+                if (q + 1) * NR <= p * MR {
+                    continue;
+                }
+                let prow = pl * MR;
+                let prows = MR.min(rows - prow);
+                let ap =
+                    &pa[p * k * MR + k0 * MR..p * k * MR + (k0 + kext) * MR];
+                let mut acc = [[0.0f32; NR]; MR];
+                microkernel_acc(&mut acc, ap, bp);
+                for r in 0..prows {
+                    let i = row0 + prow + r;
+                    for cc in 0..cols {
+                        let j = q * NR + cc;
+                        if j >= i {
+                            let off = (prow + r) * m + j;
+                            if kb == 0 {
+                                cblock[off] = acc[r][cc];
+                            } else {
+                                cblock[off] += acc[r][cc];
+                            }
+                        }
+                    }
+                }
+            }
         }
     }
 }
@@ -395,6 +554,54 @@ mod tests {
     }
 
     #[test]
+    fn cache_blocking_crosses_kc_and_mc() {
+        // Shapes straddling the KC/MC block edges, including remainders:
+        // the blocked accumulation must agree with the oracle.
+        let mut rng = Rng::new(23);
+        for (m, k, n) in [
+            (MC, KC, 32),
+            (MC + 1, KC + 1, 17),
+            (2 * MC + 3, 2 * KC + 5, 40),
+            (7, 3 * KC, 9),
+            (130, 300, 70),
+        ] {
+            let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+            let b = Tensor::randn(&[k, n], 1.0, &mut rng);
+            assert_close(&packed(&a, &b, 1), &reference::matmul(&a, &b), 2e-4);
+        }
+    }
+
+    #[test]
+    fn blocked_equals_unblocked_within_tolerance() {
+        // kc >= k / mc >= m reproduces the unblocked full-k kernel; the
+        // blocked path differs only in f32 summation association.
+        let mut rng = Rng::new(41);
+        let (m, k, n) = (97, 2 * KC + 19, 53);
+        let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+        let b = Tensor::randn(&[k, n], 1.0, &mut rng);
+        let blocked = packed(&a, &b, 1);
+        let mut un = Tensor::zeros(&[m, n]);
+        let (mut pa, mut pb) = (Vec::new(), Vec::new());
+        gemm_into_blocked(
+            un.data_mut(),
+            m,
+            k,
+            n,
+            a.data(),
+            false,
+            b.data(),
+            false,
+            None,
+            &mut pa,
+            &mut pb,
+            1,
+            k,
+            div_up(m, MR) * MR,
+        );
+        assert_close(&blocked, &un, 1e-4);
+    }
+
+    #[test]
     fn transposed_operands() {
         let mut rng = Rng::new(9);
         // A·Bᵀ with B stored n×k.
@@ -465,9 +672,40 @@ mod tests {
     }
 
     #[test]
+    fn fused_axpy_across_k_slabs() {
+        // The fuse term is applied exactly once (on the first k slab) even
+        // when k spans several KC blocks and m spans several MC blocks.
+        let mut rng = Rng::new(43);
+        let (m, n, k) = (MC + 9, 21, KC + 31);
+        let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+        let b = Tensor::randn(&[k, n], 1.0, &mut rng);
+        let s = Tensor::randn(&[m, n], 1.0, &mut rng);
+        let mut c = Tensor::zeros(&[m, n]);
+        let (mut pa, mut pb) = (Vec::new(), Vec::new());
+        gemm_into(
+            c.data_mut(),
+            m,
+            k,
+            n,
+            a.data(),
+            false,
+            b.data(),
+            false,
+            Some((-0.75, s.data())),
+            &mut pa,
+            &mut pb,
+            1,
+        );
+        let mut want = reference::matmul(&a, &b);
+        want.axpy(-0.75, &s);
+        assert_close(&c, &want, 2e-4);
+    }
+
+    #[test]
     fn multithreaded_bit_identical() {
         let mut rng = Rng::new(13);
-        let a = Tensor::randn(&[97, 55], 1.0, &mut rng);
+        // Several MC row blocks so the pool actually fans out.
+        let a = Tensor::randn(&[3 * MC + 5, 55], 1.0, &mut rng);
         let b = Tensor::randn(&[55, 83], 1.0, &mut rng);
         let base = packed(&a, &b, 1);
         for threads in [2, 3, 8, 64] {
@@ -484,7 +722,7 @@ mod tests {
             let x = Tensor::randn(&[m, k], 1.0, rng);
             let mut c = Tensor::zeros(&[m, m]);
             let (mut pa, mut pb) = (Vec::new(), Vec::new());
-            syrk_into(c.data_mut(), x.data(), m, k, &mut pa, &mut pb);
+            syrk_into(c.data_mut(), x.data(), m, k, &mut pa, &mut pb, 1);
             let want = reference::matmul_nt(&x, &x);
             for (a, b) in c.data().iter().zip(want.data()) {
                 if (a - b).abs() > 1e-4 * (1.0 + a.abs()) {
@@ -501,6 +739,24 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn syrk_multithreaded_bit_identical_across_blocks() {
+        let mut rng = Rng::new(19);
+        // m spans several MC blocks; k spans several KC slabs.
+        let x = Tensor::randn(&[2 * MC + 11, KC + 40], 1.0, &mut rng);
+        let (m, k) = (x.m(), x.n());
+        let mut base = Tensor::zeros(&[m, m]);
+        let (mut pa, mut pb) = (Vec::new(), Vec::new());
+        syrk_into(base.data_mut(), x.data(), m, k, &mut pa, &mut pb, 1);
+        for threads in [2, 4, 16] {
+            let mut c = Tensor::zeros(&[m, m]);
+            syrk_into(c.data_mut(), x.data(), m, k, &mut pa, &mut pb, threads);
+            assert_eq!(base, c, "threads={threads} drifted");
+        }
+        let want = reference::matmul_nt(&x, &x);
+        assert_close(&base, &want, 2e-4);
     }
 
     #[test]

@@ -2,9 +2,10 @@
 //! in [`crate::linalg::gemm`].
 //!
 //! `matmul` / `matmul_nt` / `matmul_tn` keep their seed signatures but now
-//! route through `gemm_into` (packed panels + 4×16 microkernel, scoped
-//! threads for large products; `matmul_nt(x, x)` is detected by pointer
-//! identity and served by the symmetric `syrk_into` at half the FLOPs).
+//! route through `gemm_into` (packed panels + 4×16 microkernel, MC/KC
+//! cache blocking, persistent-pool fan-out for large products;
+//! `matmul_nt(x, x)` is detected by pointer identity and served by the
+//! symmetric `syrk_into` at half the FLOPs).
 //! Packing scratch is thread-local and grow-only, so repeated calls do not
 //! allocate beyond the output tensor.
 //!
@@ -52,29 +53,29 @@ pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
 
 /// C = X·Xᵀ (m x m) for X (m x k): the symmetric Gram product, computing
 /// the upper triangle only and mirroring it (≈half the FLOPs of the
-/// generic `matmul_nt`). Single-threaded — outer parallelism (blocks /
-/// rank threads) is where the cores go on the hot path.
+/// generic `matmul_nt`). Large products fan row blocks across the
+/// persistent pool, bit-identical to the sequential kernel.
 pub fn syrk(x: &Tensor) -> Tensor {
     let (m, k) = (x.m(), x.n());
     let mut c = Tensor::zeros(&[m, m]);
+    let threads = suggested_threads(m as f64 * m as f64 * k as f64);
     PACK.with(|p| {
         let (pa, pb) = &mut *p.borrow_mut();
-        syrk_into(c.data_mut(), x.data(), m, k, pa, pb);
+        syrk_into(c.data_mut(), x.data(), m, k, pa, pb, threads);
     });
     c
 }
 
 /// C = A (m x k) · Bᵀ where B is (n x k) — the Gram-matrix building block.
-/// When both operands are the *same* tensor (X·Xᵀ) and the product is
-/// small enough that the generic path would not multithread, this
-/// dispatches to the half-FLOP [`syrk`] (callers who know they want the
-/// symmetric kernel should call [`syrk`] directly).
+/// When both operands are the *same* tensor (X·Xᵀ) this dispatches to the
+/// half-FLOP [`syrk`], which threads through the pool on its own (callers
+/// who know they want the symmetric kernel should call [`syrk`] directly).
 pub fn matmul_nt(a: &Tensor, b: &Tensor) -> Tensor {
     let (m, k) = (a.m(), a.n());
     let (n, kb) = (b.m(), b.n());
     assert_eq!(k, kb, "matmul_nt inner-dim mismatch: {k} vs {kb}");
     let threads = suggested_threads(2.0 * m as f64 * k as f64 * n as f64);
-    if std::ptr::eq(a, b) && threads == 1 {
+    if std::ptr::eq(a, b) {
         return syrk(a);
     }
     let mut c = Tensor::zeros(&[m, n]);

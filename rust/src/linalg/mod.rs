@@ -6,13 +6,16 @@
 //! shape has no AOT artifact and runtime XLA JIT is disabled.
 //!
 //! Hot-path layering (see README "Hot path architecture"):
-//! - `gemm` — packed register-tiled microkernels: `gemm_into` (scoped-
-//!   thread row-panel parallelism, fused axpy writeback) and the
-//!   symmetric `syrk_into` (upper triangle + mirror, half the FLOPs).
+//! - `gemm` — packed register-tiled microkernels with MC/KC cache
+//!   blocking: `gemm_into` (persistent-pool row-block parallelism, fused
+//!   axpy writeback) and the symmetric `syrk_into` (upper triangle +
+//!   mirror, half the FLOPs). Results are bit-identical for any thread
+//!   count — the row-block partition depends only on the shape.
 //! - `matmul` — seed-compatible allocating entry points over `gemm`, with
 //!   the naive seed kernels kept in `matmul::reference` as oracles.
 //! - `newton_schulz` — the fused zero-alloc NS loop over an `NsWorkspace`
-//!   arena (thread-local by default, explicit for engines).
+//!   arena (thread-local by default, explicit for engines), multicore on
+//!   large matrices via the pool (`runtime::pool`).
 
 pub mod gemm;
 pub mod matmul;

@@ -11,7 +11,10 @@
 //! (`tests/ns_zero_alloc.rs` proves it with a counting allocator). Per
 //! iteration it issues two symmetric syrk products (X·Xᵀ, and A·Aᵀ = A²
 //! since the Gram matrix is symmetric — half the FLOPs each) plus one
-//! packed GEMM whose writeback fuses the `+ a·X` term. The free
+//! packed GEMM whose writeback fuses the `+ a·X` term. Large iterations
+//! fan their row blocks across the persistent worker pool — full-step
+//! orthogonalization is multicore, still allocation-free, and bit-identical
+//! to the single-thread kernel for any pool size. The free
 //! [`newton_schulz`] keeps the seed signature and routes through a
 //! thread-local workspace, so every caller — `Muon`, the coordinator rank
 //! threads, `NsEngine`'s host fallback — reuses buffers across params
@@ -21,7 +24,7 @@
 
 use std::cell::RefCell;
 
-use crate::linalg::gemm::{gemm_into, syrk_into};
+use crate::linalg::gemm::{gemm_into, suggested_threads, syrk_into};
 use crate::linalg::matmul::reference;
 use crate::tensor::Tensor;
 
@@ -135,15 +138,40 @@ impl NsWorkspace {
         }
     }
 
-    /// Run `steps` fused NS iterations in-place. Allocation-free after the
-    /// grow-only buffers are warm; single-threaded by design — parallelism
-    /// lives one level up, across independent blocks (`Muon::orth_update`)
-    /// and coordinator rank threads.
+    /// Run `steps` fused NS iterations in-place, fanning the GEMM/syrk row
+    /// blocks of large matrices across the persistent worker pool (FLOP-
+    /// derived thread budget). Allocation-free after the grow-only buffers
+    /// are warm — the pool dispatch itself allocates nothing, which is what
+    /// finally makes *full-step* orthogonalization multicore (the old
+    /// scoped-spawn route would have re-allocated every iteration).
+    /// Bit-identical to [`NsWorkspace::iterate_threads`] with `threads = 1`
+    /// for every pool size.
     pub fn iterate(&mut self, steps: usize, coeffs: NsCoeffs) {
+        let threads = suggested_threads(ns_flops(self.m, self.n, 1));
+        self.iterate_threads(steps, coeffs, threads);
+    }
+
+    /// [`NsWorkspace::iterate`] with the thread budget made explicit
+    /// (`threads = 1` is the exact sequential kernel — the bench/test
+    /// baseline; pooled runs reproduce it bit for bit).
+    pub fn iterate_threads(
+        &mut self,
+        steps: usize,
+        coeffs: NsCoeffs,
+        threads: usize,
+    ) {
         let (m, n) = (self.m, self.n);
         for _ in 0..steps {
             // A = X·Xᵀ — symmetric, so syrk computes half the tiles.
-            syrk_into(&mut self.gram, &self.x, m, n, &mut self.pa, &mut self.pb);
+            syrk_into(
+                &mut self.gram,
+                &self.x,
+                m,
+                n,
+                &mut self.pa,
+                &mut self.pb,
+                threads,
+            );
             // A² = A·Aᵀ (A symmetric) — syrk again.
             syrk_into(
                 &mut self.gram2,
@@ -152,6 +180,7 @@ impl NsWorkspace {
                 m,
                 &mut self.pa,
                 &mut self.pb,
+                threads,
             );
             // B = b·A + c·A², in place over A.
             for (a, &a2) in self.gram.iter_mut().zip(&self.gram2) {
@@ -170,7 +199,7 @@ impl NsWorkspace {
                 Some((coeffs.a, &self.x)),
                 &mut self.pa,
                 &mut self.pb,
-                1,
+                threads,
             );
             std::mem::swap(&mut self.x, &mut self.y);
         }
@@ -179,17 +208,32 @@ impl NsWorkspace {
     /// Materialize the current X as a tensor in the input's orientation.
     pub fn store(&self) -> Tensor {
         let (m, n) = (self.m, self.n);
+        let mut t = if self.transposed {
+            Tensor::zeros(&[n, m])
+        } else {
+            Tensor::zeros(&[m, n])
+        };
+        self.store_into(&mut t);
+        t
+    }
+
+    /// Write the current X into a preallocated tensor of the input's
+    /// orientation — the zero-alloc sibling of [`NsWorkspace::store`]
+    /// (`Muon::step`'s arena path reuses one output per parameter across
+    /// steps).
+    pub fn store_into(&self, out: &mut Tensor) {
+        let (m, n) = (self.m, self.n);
         if self.transposed {
-            let mut t = Tensor::zeros(&[n, m]);
-            let d = t.data_mut();
+            assert_eq!((out.m(), out.n()), (n, m), "store_into shape");
+            let d = out.data_mut();
             for i in 0..m {
                 for j in 0..n {
                     d[j * m + i] = self.x[i * n + j];
                 }
             }
-            t
         } else {
-            Tensor::from_vec(&[m, n], self.x.clone()).unwrap()
+            assert_eq!((out.m(), out.n()), (m, n), "store_into shape");
+            out.data_mut().copy_from_slice(&self.x);
         }
     }
 

@@ -8,17 +8,30 @@
 //! orthogonalized with full-dims RMS matching and η_full. Theorem 2 is the
 //! reason two stepsizes exist: tying them degrades the rate from the
 //! harmonic to the arithmetic mean of (L_op, L_B).
+//!
+//! # Steady-state zero-alloc step
+//!
+//! With the default host backend, `Muon::step` routes every matrix through
+//! preallocated arenas: a Muon-owned [`NsWorkspace`] for full
+//! orthogonalizations (whose GEMM row blocks fan out across the persistent
+//! worker pool — full-step NS is multicore), per-parameter block/update
+//! tensors for block steps (fanned across pool workers, each using its own
+//! warm arena), and in-place parameter updates. After warm-up, consecutive
+//! steps perform **zero heap allocations** — proved across whole steps by
+//! `tests/ns_zero_alloc.rs`. Injected backends ([`Muon::set_orth`]) keep
+//! the allocating compat path, since an arbitrary `OrthFn` returns fresh
+//! tensors by contract.
 
 use std::sync::Arc;
 
-use crossbeam_utils::thread;
-
-use crate::linalg::newton_schulz::{newton_schulz, NsCoeffs};
+use crate::linalg::gemm;
+use crate::linalg::newton_schulz::{ns_flops, NsCoeffs, NsWorkspace};
 use crate::mesh::Layout;
 use crate::optim::adamw::AdamW;
 use crate::optim::scaling::rms_match_scale;
 use crate::optim::{Optimizer, ParamKind, ParamMeta};
-use crate::shard::{shard_all, unshard, ShardSpec};
+use crate::runtime::pool::{Pool, SendPtr};
+use crate::shard::{shard_all, shard_into, unshard, unshard_into, ShardSpec};
 use crate::tensor::Tensor;
 
 /// Orthogonalization backend: host Newton–Schulz by default, or an injected
@@ -131,6 +144,69 @@ impl MuonCfg {
     }
 }
 
+/// How a block (non-full) step dispatches its per-block orthogonalizations,
+/// decided from **FLOP accounting** (`ns_flops` of the block shape ×
+/// block count) rather than a raw element count. The old numel threshold
+/// got both extremes wrong: many tiny blocks can clear an element count
+/// while each orthogonalization is far too small to amortize a dispatch,
+/// and a couple of huge blocks saturate the machine better by threading
+/// *inside* each block's GEMMs than by a two-way block fan-out.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BlockDispatch {
+    /// Total work below the multithreading threshold: plain loop,
+    /// single-thread kernels.
+    Sequential,
+    /// Few blocks, each with enough FLOPs to feed every core on its own:
+    /// loop blocks sequentially, let each block's GEMM row panels fan out
+    /// across the pool.
+    SequentialPooledGemm,
+    /// Many mid-size blocks: fan whole blocks out across pool workers
+    /// (one warm per-worker arena each, single-thread kernels inside).
+    ParallelBlocks,
+}
+
+/// FLOP-based dispatch decision for a block step. All three modes are
+/// bit-identical in results (the GEMM row-block partition never depends on
+/// the thread count); the choice is purely a throughput heuristic.
+pub fn block_dispatch(spec: &ShardSpec, ns_steps: usize) -> BlockDispatch {
+    let (bm, bn) = spec.block_shape(0);
+    let per_block = ns_flops(bm, bn, ns_steps);
+    let total = per_block * spec.num_blocks() as f64;
+    if gemm::suggested_threads(total) <= 1 {
+        BlockDispatch::Sequential
+    } else if gemm::suggested_threads(per_block) >= spec.num_blocks() {
+        BlockDispatch::SequentialPooledGemm
+    } else {
+        BlockDispatch::ParallelBlocks
+    }
+}
+
+/// Preallocated per-matrix step buffers: the full-size update plus one
+/// momentum/update tensor pair per block, all sized at construction and
+/// reused for every step — the reason the host path of `Muon::step`
+/// allocates nothing in steady state.
+struct MatrixScratch {
+    /// Assembled update (full orthogonalization writes it directly;
+    /// block steps assemble it from `ublocks`).
+    update: Tensor,
+    /// Momentum blocks (inputs to per-block orthogonalization).
+    blocks: Vec<Tensor>,
+    /// Per-block orthogonalized updates.
+    ublocks: Vec<Tensor>,
+}
+
+/// Which engine orthogonalizes momenta.
+enum OrthBackend {
+    /// Default host Newton–Schulz through Muon-owned arenas: pooled,
+    /// multicore on full steps, zero steady-state allocations.
+    Host { steps: usize, coeffs: NsCoeffs },
+    /// Injected orthogonalizer (runtime XLA / Pallas artifact engine).
+    /// `concurrent` declares whether simultaneous calls from several
+    /// threads make real parallel progress (the mutexed `NsEngine` does
+    /// not).
+    Custom { f: OrthFn, concurrent: bool },
+}
+
 /// Muon / BlockMuon / MuonBP over a full parameter set (matrices get the
 /// orthogonalized update; everything else is delegated to AdamW).
 pub struct Muon {
@@ -138,14 +214,11 @@ pub struct Muon {
     metas: Vec<ParamMeta>,
     specs: Vec<Option<ShardSpec>>,
     momenta: Vec<Tensor>,
+    scratch: Vec<Option<MatrixScratch>>,
+    /// Full-orthogonalization arena (block steps use pool worker arenas).
+    ws: NsWorkspace,
     adam: AdamW,
-    orth: OrthFn,
-    /// Whether `orth` can run concurrently from several threads with real
-    /// parallelism. True for the default host Newton–Schulz (per-thread
-    /// workspaces); false for injected backends unless declared otherwise
-    /// (`NsEngine` serializes every call behind one mutex, so fanning
-    /// blocks across threads would only add spawn overhead).
-    orth_concurrent: bool,
+    backend: OrthBackend,
     t: u64,
     last_comm: u64,
 }
@@ -175,16 +248,38 @@ impl Muon {
             .collect();
         let momenta =
             metas.iter().map(|p| Tensor::zeros(&p.shape)).collect();
-        let ns_steps = cfg.ns_steps;
-        let coeffs = cfg.coeffs;
+        let scratch: Vec<Option<MatrixScratch>> = specs
+            .iter()
+            .zip(metas)
+            .map(|(s, p)| {
+                s.as_ref().map(|spec| {
+                    let blocks: Vec<Tensor> = (0..spec.num_blocks())
+                        .map(|b| {
+                            let (bm, bn) = spec.block_shape(b);
+                            Tensor::zeros(&[bm, bn])
+                        })
+                        .collect();
+                    MatrixScratch {
+                        update: Tensor::zeros(&p.shape),
+                        ublocks: blocks.clone(),
+                        blocks,
+                    }
+                })
+            })
+            .collect();
+        let backend = OrthBackend::Host {
+            steps: cfg.ns_steps,
+            coeffs: cfg.coeffs,
+        };
         Muon {
             cfg,
             metas: metas.to_vec(),
             specs,
             momenta,
+            scratch,
+            ws: NsWorkspace::new(),
             adam: AdamW::new(metas),
-            orth: Arc::new(move |g| newton_schulz(g, ns_steps, coeffs)),
-            orth_concurrent: true,
+            backend,
             t: 0,
             last_comm: 0,
         }
@@ -209,16 +304,24 @@ impl Muon {
     /// Conservatively disables the parallel block fan-out — injected
     /// backends like `NsEngine` serialize internally; use
     /// [`Muon::set_orth_concurrent`] to declare a backend parallel-safe.
+    /// Switching away from the host backend also leaves the zero-alloc
+    /// arena path (an `OrthFn` returns fresh tensors by contract), so the
+    /// host-only arenas — per-matrix scratch and the full-step workspace,
+    /// ~3× matrix-param memory — are released here rather than kept dead.
     pub fn set_orth(&mut self, orth: OrthFn) {
-        self.orth = orth;
-        self.orth_concurrent = false;
+        self.set_orth_concurrent(orth, false);
     }
 
     /// Replace the backend and declare whether concurrent calls from
     /// several threads make actual progress in parallel.
     pub fn set_orth_concurrent(&mut self, orth: OrthFn, concurrent: bool) {
-        self.orth = orth;
-        self.orth_concurrent = concurrent;
+        self.backend = OrthBackend::Custom { f: orth, concurrent };
+        // There is no way back to the Host backend, so its arenas are
+        // dead weight from here on.
+        for s in &mut self.scratch {
+            *s = None;
+        }
+        self.ws = NsWorkspace::new();
     }
 
     pub fn cfg(&self) -> &MuonCfg {
@@ -239,9 +342,9 @@ impl Muon {
     /// runs exactly this on gathered / local shards. This compat wrapper
     /// is always sequential — it cannot know whether an arbitrary `orth`
     /// makes parallel progress (the mutexed `NsEngine` does not). The
-    /// scoped-thread block fan-out is opt-in via
-    /// [`Muon::orth_update_with`]; `Muon::step` opts in when its backend
-    /// is declared concurrent (see [`Muon::set_orth_concurrent`]).
+    /// pool block fan-out is opt-in via [`Muon::orth_update_with`];
+    /// `Muon::step` opts in when its backend is declared concurrent (see
+    /// [`Muon::set_orth_concurrent`]).
     pub fn orth_update(
         momentum: &Tensor,
         spec: &ShardSpec,
@@ -253,10 +356,10 @@ impl Muon {
     }
 
     /// [`Muon::orth_update`] with the threading decision made explicit.
-    /// The parallel path is bit-identical to the sequential one: each
-    /// block is orthogonalized by exactly one thread running the same
-    /// deterministic kernel (each worker has its own thread-local
-    /// `NsWorkspace`), and results are reassembled in block order.
+    /// The parallel path fans blocks across the persistent worker pool and
+    /// is bit-identical to the sequential one: each block is orthogonalized
+    /// by exactly one task running the same deterministic kernel, and
+    /// results land in block-order slots.
     pub fn orth_update_with(
         momentum: &Tensor,
         spec: &ShardSpec,
@@ -280,50 +383,94 @@ impl Muon {
                 u
             };
             let upd: Vec<Tensor> = if parallel {
-                // A few workers, each owning a round-robin stripe of
-                // blocks: one thread-local NsWorkspace warm-up per worker
-                // per call (not per block), and far fewer spawns than one
-                // thread per block.
-                let workers = std::thread::available_parallelism()
-                    .map(|n| n.get())
-                    .unwrap_or(1)
-                    .clamp(1, blocks.len());
+                let mut out: Vec<Option<Tensor>> =
+                    (0..blocks.len()).map(|_| None).collect();
+                let optr = SendPtr(out.as_mut_ptr());
+                let blocks_ref: &[Tensor] = &blocks;
                 let orth_block = &orth_block;
-                let blocks_ref = &blocks;
-                let striped: Vec<Vec<(usize, Tensor)>> = thread::scope(|s| {
-                    let handles: Vec<_> = (0..workers)
-                        .map(|w| {
-                            s.spawn(move |_| {
-                                blocks_ref
-                                    .iter()
-                                    .enumerate()
-                                    .filter(|(i, _)| i % workers == w)
-                                    .map(|(i, b)| (i, orth_block(b)))
-                                    .collect::<Vec<(usize, Tensor)>>()
-                            })
-                        })
-                        .collect();
-                    handles.into_iter().map(|h| h.join().unwrap()).collect()
-                })
-                .unwrap();
-                let mut out: Vec<Option<Tensor>> = vec![None; blocks.len()];
-                for stripe in striped {
-                    for (i, u) in stripe {
-                        out[i] = Some(u);
-                    }
-                }
-                out.into_iter().map(|o| o.unwrap()).collect()
+                Pool::global().fanout(blocks_ref.len(), |i, _arena| {
+                    let u = orth_block(&blocks_ref[i]);
+                    // SAFETY: slot i is written exactly once by task i and
+                    // the fan-out joins before `out` is read.
+                    unsafe { *optr.0.add(i) = Some(u) };
+                });
+                out.into_iter()
+                    .map(|o| o.expect("block fan-out missed a slot"))
+                    .collect()
             } else {
                 blocks.iter().map(orth_block).collect()
             };
             unshard(&upd, spec)
         }
     }
-}
 
-/// Below this many elements the scoped-thread spawns cost more than the
-/// block orthogonalizations they parallelize.
-const PARALLEL_BLOCK_MIN_NUMEL: usize = 16 * 1024;
+    /// Host-backend orthogonalized update, written entirely into the
+    /// preallocated `sc` buffers (zero heap allocations once every arena is
+    /// warm). Bit-identical to [`Muon::orth_update_with`] over the host
+    /// `newton_schulz` for every dispatch mode, because the underlying
+    /// GEMM partition is thread-count-invariant.
+    #[allow(clippy::too_many_arguments)]
+    fn host_orth_into(
+        ws: &mut NsWorkspace,
+        momentum: &Tensor,
+        spec: &ShardSpec,
+        full: bool,
+        steps: usize,
+        coeffs: NsCoeffs,
+        rms_beta: f64,
+        sc: &mut MatrixScratch,
+    ) {
+        if full || spec.num_blocks() == 1 {
+            // Full orthogonalization: one big NS whose GEMM/syrk row
+            // blocks fan out across the pool — the multicore full step.
+            ws.load(momentum);
+            ws.iterate(steps, coeffs);
+            ws.store_into(&mut sc.update);
+            let s = rms_match_scale(momentum.m(), momentum.n(), rms_beta);
+            sc.update.scale(s as f32);
+            return;
+        }
+        let nb = spec.num_blocks();
+        for b in 0..nb {
+            shard_into(momentum, spec, b, &mut sc.blocks[b]);
+        }
+        match block_dispatch(spec, steps) {
+            BlockDispatch::ParallelBlocks => {
+                let MatrixScratch { blocks, ublocks, .. } = &mut *sc;
+                let blocks: &[Tensor] = blocks;
+                let uptr = SendPtr(ublocks.as_mut_ptr());
+                Pool::global().fanout(nb, |b, arena| {
+                    // SAFETY: one task per update slot, joined below.
+                    let u = unsafe { &mut *uptr.0.add(b) };
+                    let blk = &blocks[b];
+                    arena.ns.load(blk);
+                    arena.ns.iterate_threads(steps, coeffs, 1);
+                    arena.ns.store_into(u);
+                    u.scale(
+                        rms_match_scale(blk.m(), blk.n(), rms_beta) as f32,
+                    );
+                });
+            }
+            mode => {
+                let pooled_gemm =
+                    mode == BlockDispatch::SequentialPooledGemm;
+                for b in 0..nb {
+                    ws.load(&sc.blocks[b]);
+                    if pooled_gemm {
+                        ws.iterate(steps, coeffs);
+                    } else {
+                        ws.iterate_threads(steps, coeffs, 1);
+                    }
+                    ws.store_into(&mut sc.ublocks[b]);
+                    let (bm, bn) = (sc.blocks[b].m(), sc.blocks[b].n());
+                    sc.ublocks[b]
+                        .scale(rms_match_scale(bm, bn, rms_beta) as f32);
+                }
+            }
+        }
+        unshard_into(&sc.ublocks, spec, &mut sc.update);
+    }
+}
 
 impl Optimizer for Muon {
     fn step(&mut self, params: &mut [Tensor], grads: &[Tensor], lr: f64) {
@@ -338,26 +485,48 @@ impl Optimizer for Muon {
                     // M_t = μ M_{t-1} + G_t  (paper Alg. 1 line 5)
                     self.momenta[i]
                         .scale_add(self.cfg.momentum as f32, 1.0, &grads[i]);
-                    let parallel = self.orth_concurrent
-                        && spec.num_blocks() > 1
-                        && self.momenta[i].numel() >= PARALLEL_BLOCK_MIN_NUMEL;
-                    let u = Muon::orth_update_with(
-                        &self.momenta[i],
-                        &spec,
-                        full,
-                        self.cfg.rms_beta,
-                        &self.orth,
-                        parallel,
-                    );
+                    let decay =
+                        (1.0 - eta * self.cfg.weight_decay) as f32;
+                    match &self.backend {
+                        OrthBackend::Host { steps, coeffs } => {
+                            let (steps, coeffs) = (*steps, *coeffs);
+                            let sc = self.scratch[i].as_mut().unwrap();
+                            Muon::host_orth_into(
+                                &mut self.ws,
+                                &self.momenta[i],
+                                &spec,
+                                full,
+                                steps,
+                                coeffs,
+                                self.cfg.rms_beta,
+                                sc,
+                            );
+                            params[i].scale(decay);
+                            params[i].axpy(-(eta as f32), &sc.update);
+                        }
+                        OrthBackend::Custom { f, concurrent } => {
+                            let parallel = *concurrent
+                                && !full
+                                && spec.num_blocks() > 1
+                                && block_dispatch(&spec, self.cfg.ns_steps)
+                                    == BlockDispatch::ParallelBlocks;
+                            let u = Muon::orth_update_with(
+                                &self.momenta[i],
+                                &spec,
+                                full,
+                                self.cfg.rms_beta,
+                                f,
+                                parallel,
+                            );
+                            params[i].scale(decay);
+                            params[i].axpy(-(eta as f32), &u);
+                        }
+                    }
                     if full && spec.num_blocks() > 1 {
                         // gather momentum + scatter update (bytes a real
                         // cluster would move on this step).
                         comm += 2 * (params[i].numel() as u64) * 4;
                     }
-                    let decay =
-                        (1.0 - eta * self.cfg.weight_decay) as f32;
-                    params[i].scale(decay);
-                    params[i].axpy(-(eta as f32), &u);
                 }
                 None => {
                     let t = self.t;
@@ -390,6 +559,7 @@ impl Optimizer for Muon {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::linalg::newton_schulz::newton_schulz;
     use crate::optim::testutil::{drive, Quad};
     use crate::utils::rng::Rng;
 
@@ -458,10 +628,10 @@ mod tests {
 
     #[test]
     fn parallel_blocks_bit_identical_to_sequential() {
-        // The scoped-thread fan-out must reproduce the sequential result
-        // bit for bit (same kernels, one owner per block, block-order
-        // reassembly) — the distributed-equivalence guarantees depend on
-        // orthogonalization being deterministic regardless of threading.
+        // The pool fan-out must reproduce the sequential result bit for
+        // bit (same kernels, one owner per block, block-order slots) — the
+        // distributed-equivalence guarantees depend on orthogonalization
+        // being deterministic regardless of threading.
         let mut rng = Rng::new(31);
         let orth: OrthFn =
             Arc::new(|t| newton_schulz(t, 5, NsCoeffs::jordan()));
@@ -473,6 +643,70 @@ mod tests {
             let seq =
                 Muon::orth_update_with(&g, &spec, false, 0.2, &orth, false);
             assert_eq!(par, seq, "({m},{n},tp={tp}) drifted");
+        }
+    }
+
+    #[test]
+    fn host_arena_path_matches_orthfn_path() {
+        // The zero-alloc host arena path and the allocating OrthFn compat
+        // path are the same math over the same kernels: parameters after a
+        // step must agree bit for bit, across full and block steps.
+        let quad = Quad::new(17);
+        let mut host = Muon::block_periodic(&quad.metas, 4, 2);
+        let mut compat = Muon::block_periodic(&quad.metas, 4, 2);
+        compat.set_orth_concurrent(
+            Arc::new(|g: &Tensor| newton_schulz(g, 5, NsCoeffs::jordan())),
+            true,
+        );
+        let mut p_host = quad.init(5);
+        let mut p_compat = quad.init(5);
+        for step in 0..5 {
+            let g1 = quad.grads(&p_host);
+            host.step(&mut p_host, &g1, 0.03);
+            let g2 = quad.grads(&p_compat);
+            compat.step(&mut p_compat, &g2, 0.03);
+            for (a, b) in p_host.iter().zip(&p_compat) {
+                assert_eq!(a, b, "step {step}: host arena path drifted");
+            }
+        }
+    }
+
+    #[test]
+    fn block_dispatch_uses_flops_not_numel() {
+        // Many tiny blocks: a raw numel threshold (the old heuristic
+        // dispatched at >= 16Ki elements of *total* momentum) would fan
+        // out; FLOP accounting sees each 4x4 orthogonalization is
+        // negligible and stays sequential.
+        let tiny_many = ShardSpec::new(Layout::TpColumn, 1024, 4, 4096);
+        assert_eq!(tiny_many.num_blocks(), 1024);
+        assert_eq!(tiny_many.block_shape(0), (4, 4));
+        assert_eq!(
+            block_dispatch(&tiny_many, 1),
+            BlockDispatch::Sequential,
+            "1024 tiny blocks must not pay fan-out overhead"
+        );
+        // The machine-independent half of the huge-block claim: per-block
+        // FLOPs of a 1024x1024 NS vastly clear the threading threshold.
+        let huge_few = ShardSpec::new(Layout::TpColumn, 2, 1024, 2048);
+        assert_eq!(huge_few.block_shape(0), (1024, 1024));
+        if gemm::suggested_threads(ns_flops(1024, 1024, 5)) > 1 {
+            // On any multicore machine: two huge blocks are served by
+            // within-block GEMM threading, not a two-way block fan-out.
+            assert_eq!(
+                block_dispatch(&huge_few, 5),
+                BlockDispatch::SequentialPooledGemm
+            );
+            // Many mid-size blocks fan out across workers instead (128x128
+            // NS exceeds the FLOP floor but a single block cannot feed the
+            // whole machine as well as 16 of them).
+            let mid_many =
+                ShardSpec::new(Layout::TpColumn, 16, 128, 2048);
+            if gemm::suggested_threads(ns_flops(128, 128, 5)) < 16 {
+                assert_eq!(
+                    block_dispatch(&mid_many, 5),
+                    BlockDispatch::ParallelBlocks
+                );
+            }
         }
     }
 

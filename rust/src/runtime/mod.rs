@@ -9,6 +9,7 @@
 pub mod artifact;
 pub mod ns_builder;
 pub mod ns_engine;
+pub mod pool;
 
 use std::path::{Path, PathBuf};
 
@@ -19,6 +20,7 @@ use crate::tensor::Tensor;
 
 pub use artifact::{ConfigEntry, Manifest, ParamEntry};
 pub use ns_engine::NsEngine;
+pub use pool::{Pool, WorkerArena};
 
 /// Convert a host tensor to an f32 XLA literal.
 pub fn tensor_to_literal(t: &Tensor) -> Result<Literal> {

@@ -8,10 +8,12 @@
 //!    shapes with XLA-grade GEMMs.
 //! 3. **Host Newton–Schulz** (`linalg`): pure-rust fallback (also used when
 //!    no PJRT client is wanted, e.g. small unit tests). This path runs the
-//!    fused `NsWorkspace` kernels — packed GEMM + symmetric syrk with
-//!    per-thread buffer arenas — so "fallback" no longer means "slow":
-//!    after the first call on a thread the K-iteration loop is
-//!    allocation-free and register-tiled.
+//!    fused `NsWorkspace` kernels — packed MC/KC-blocked GEMM + symmetric
+//!    syrk with per-thread buffer arenas, large iterations fanning row
+//!    blocks across the persistent worker pool (`runtime::pool`) — so
+//!    "fallback" no longer means "slow": after the first call on a thread
+//!    the K-iteration loop is allocation-free, register-tiled and
+//!    multicore.
 //!
 //! Compiled executables are cached per shape. All XLA state lives behind
 //! one mutex so the rank threads of the simulated cluster share the engine:

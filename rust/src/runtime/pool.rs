@@ -1,0 +1,595 @@
+//! Persistent worker pool with per-worker arenas — the process-wide
+//! threading substrate of the host hot path.
+//!
+//! Before this module, four sites re-spawned `thread::scope` threads on
+//! every call: `gemm_into` row panels, `Muon::orth_update_with` block
+//! fan-out, and the coordinator's `dp_allreduce` / `tp_phase` rank threads.
+//! Each spawn re-warmed a fresh thread-local `NsWorkspace`, so the
+//! zero-alloc property held only *within* one call, and full-step
+//! Newton–Schulz could never thread its inner GEMMs (scoped spawns inside
+//! the K-loop would allocate every iteration). The pool fixes both:
+//!
+//! - **Long-lived parked workers**, created once ([`Pool::global`]), each
+//!   owning a preallocated [`WorkerArena`] (`NsWorkspace` + GEMM packing
+//!   scratch) that stays warm across optimizer steps.
+//! - **Allocation-free dispatch**: a fan-out publishes one type-erased
+//!   `(data, trampoline)` pointer pair under a mutex and wakes the workers;
+//!   no boxing, no channels, no per-task heap traffic. After pool warm-up,
+//!   `fanout` performs zero heap allocations, which is what lets
+//!   `NsWorkspace::iterate` go multicore while `tests/ns_zero_alloc.rs`
+//!   still proves the steady state allocation-free across whole
+//!   `Muon::step` calls.
+//! - **Deterministic results**: task `i` of a fan-out always computes the
+//!   same values regardless of worker count or scheduling, because tasks
+//!   partition the output disjointly and each task runs the same sequential
+//!   kernel. Every pooled path is bit-identical to its sequential
+//!   counterpart (see `tests/pool_stress.rs` and the determinism tests in
+//!   `gemm`/`muon`).
+//!
+//! # Nesting contract
+//!
+//! Pool parallelism lives at the *outermost* dispatch only. A [`Pool::fanout`]
+//! issued from inside a pool worker runs inline (sequentially, on that
+//! worker) — same results, no deadlock. [`Pool::run_concurrent_map`] tasks
+//! are allowed to rendezvous with each other (collective phases), so a
+//! nested call falls back to freshly scoped threads instead of inlining.
+//!
+//! # Shutdown
+//!
+//! The global pool lives for the process. Locally constructed pools
+//! ([`Pool::new`]) join all workers on drop; dropping a pool with no job in
+//! flight is always safe because submissions hold `&self`.
+
+use std::cell::{Cell, RefCell};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread;
+
+use crate::linalg::newton_schulz::NsWorkspace;
+
+/// Per-worker scratch arena: everything a task may need, preallocated once
+/// per worker and reused for every job the worker ever runs. Constructing
+/// one allocates nothing (all buffers are grow-only and start empty); the
+/// first tasks a worker runs warm it to the high-water mark.
+pub struct WorkerArena {
+    /// Newton–Schulz ping-pong arena (block orthogonalizations).
+    pub ns: NsWorkspace,
+    /// GEMM packing scratch (A panels).
+    pub pa: Vec<f32>,
+    /// GEMM packing scratch (B panels).
+    pub pb: Vec<f32>,
+}
+
+impl WorkerArena {
+    pub fn new() -> WorkerArena {
+        WorkerArena { ns: NsWorkspace::new(), pa: Vec::new(), pb: Vec::new() }
+    }
+}
+
+impl Default for WorkerArena {
+    fn default() -> Self {
+        WorkerArena::new()
+    }
+}
+
+/// Copyable raw-pointer wrapper for fan-out tasks that write disjoint
+/// regions of one buffer (row panels of a GEMM output, per-block update
+/// slots). The caller asserts disjointness; the wrapper only supplies the
+/// Send/Sync the closure needs to cross into the workers.
+pub struct SendPtr<T>(pub *mut T);
+
+impl<T> Clone for SendPtr<T> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl<T> Copy for SendPtr<T> {}
+// SAFETY: SendPtr is a plain address; the pool's fan-out contract (each
+// task writes only its own disjoint region, all tasks joined before the
+// submitting call returns) is what makes dereferences sound.
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+/// One published fan-out: a type-erased pointer to the submitting call's
+/// closure plus its monomorphized trampoline. `Copy` so workers can take it
+/// out of the slot without touching the heap.
+#[derive(Clone, Copy)]
+struct JobRef {
+    /// `&F` of the submitting `fanout` call, erased. Valid until that call
+    /// returns, which cannot happen before every participating worker has
+    /// checked in.
+    data: *const (),
+    call: unsafe fn(*const (), usize, &mut WorkerArena),
+    ntasks: usize,
+    /// Workers participating in this job: worker `w < workers` runs tasks
+    /// `w, w + workers, w + 2·workers, …` (static strided assignment — no
+    /// shared claim counter a straggler from a previous job could race).
+    workers: usize,
+}
+
+// SAFETY: `data` is only dereferenced through `call`, whose `F: Sync`
+// bound makes the shared borrow valid from worker threads; lifetime is
+// enforced by the submit/check-in protocol described on `JobRef::data`.
+unsafe impl Send for JobRef {}
+
+unsafe fn trampoline<F: Fn(usize, &mut WorkerArena) + Sync>(
+    data: *const (),
+    task: usize,
+    arena: &mut WorkerArena,
+) {
+    let f = &*(data as *const F);
+    f(task, arena);
+}
+
+struct Slot {
+    /// Bumped once per published job; workers participate in a job exactly
+    /// once by comparing against the last epoch they served.
+    epoch: u64,
+    job: Option<JobRef>,
+    shutdown: bool,
+}
+
+struct Shared {
+    slot: Mutex<Slot>,
+    /// Workers wait here for a new epoch.
+    work_cv: Condvar,
+    /// The submitter waits here for `pending == 0`.
+    done_cv: Condvar,
+    /// Participating workers yet to check in for the current job.
+    pending: AtomicUsize,
+    /// Set when any task panicked; the submitter re-raises after the join.
+    panicked: AtomicBool,
+}
+
+thread_local! {
+    static IN_POOL_WORKER: Cell<bool> = Cell::new(false);
+    /// Arena used when a fan-out runs inline on the submitting thread
+    /// (small jobs, single-worker pools, or nested dispatch).
+    static INLINE_ARENA: RefCell<WorkerArena> = RefCell::new(WorkerArena::new());
+}
+
+/// True on threads owned by a [`Pool`] — nested fan-outs from such threads
+/// run inline rather than re-entering the pool.
+pub fn in_pool_worker() -> bool {
+    IN_POOL_WORKER.with(|c| c.get())
+}
+
+fn worker_main(shared: Arc<Shared>, index: usize) {
+    IN_POOL_WORKER.with(|c| c.set(true));
+    let mut arena = WorkerArena::new();
+    let mut last_epoch = 0u64;
+    loop {
+        let job = {
+            let mut slot = shared.slot.lock().unwrap();
+            loop {
+                if slot.shutdown {
+                    return;
+                }
+                if slot.epoch != last_epoch {
+                    last_epoch = slot.epoch;
+                    if let Some(job) = slot.job {
+                        break job;
+                    }
+                }
+                slot = shared.work_cv.wait(slot).unwrap();
+            }
+        };
+        if index >= job.workers {
+            // Not a participant of this job; `pending` did not count us.
+            continue;
+        }
+        let mut t = index;
+        while t < job.ntasks {
+            // SAFETY: see `JobRef::data` — the closure outlives the job.
+            let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                || unsafe { (job.call)(job.data, t, &mut arena) },
+            ));
+            if run.is_err() {
+                // The default panic hook already printed the payload;
+                // remember it so the submitter can re-raise after the join
+                // instead of deadlocking on a missing check-in.
+                shared.panicked.store(true, Ordering::Release);
+            }
+            t += job.workers;
+        }
+        if shared.pending.fetch_sub(1, Ordering::AcqRel) == 1 {
+            // Last check-in: take the lock so the notify cannot land
+            // between the submitter's predicate check and its wait.
+            let _g = shared.slot.lock().unwrap();
+            shared.done_cv.notify_all();
+        }
+    }
+}
+
+/// Persistent worker pool. See the module docs for the threading and
+/// determinism contract.
+pub struct Pool {
+    shared: Arc<Shared>,
+    /// Serializes fan-outs: one job in flight at a time, so concurrent
+    /// submitters queue here (results stay bit-identical under contention).
+    submit: Mutex<()>,
+    handles: Mutex<Vec<thread::JoinHandle<()>>>,
+    size: AtomicUsize,
+    /// Whether `run_concurrent_map` may spawn extra workers on demand.
+    /// Pinned to `false` when the operator fixed the size via
+    /// `MUONBP_POOL_THREADS` — rendezvous phases then use scoped threads
+    /// instead of silently re-enabling pooled parallelism.
+    growable: bool,
+}
+
+static GLOBAL: OnceLock<Pool> = OnceLock::new();
+
+impl Pool {
+    /// Pool with `workers` persistent threads (fewer if spawning fails);
+    /// may grow on demand for rendezvous fan-outs.
+    pub fn new(workers: usize) -> Pool {
+        Pool::build(workers, true)
+    }
+
+    fn build(workers: usize, growable: bool) -> Pool {
+        let pool = Pool {
+            shared: Arc::new(Shared {
+                slot: Mutex::new(Slot {
+                    epoch: 0,
+                    job: None,
+                    shutdown: false,
+                }),
+                work_cv: Condvar::new(),
+                done_cv: Condvar::new(),
+                pending: AtomicUsize::new(0),
+                panicked: AtomicBool::new(false),
+            }),
+            submit: Mutex::new(()),
+            handles: Mutex::new(Vec::new()),
+            size: AtomicUsize::new(0),
+            growable,
+        };
+        pool.spawn_workers(workers);
+        pool
+    }
+
+    /// The process-wide pool every hot path routes through. Created on
+    /// first use with one worker per available core. `MUONBP_POOL_THREADS`
+    /// pins the size instead (`0` or `1` disables pooled parallelism —
+    /// every fan-out then runs inline or on throwaway scoped threads,
+    /// still bit-identical — and a pinned pool never grows).
+    pub fn global() -> &'static Pool {
+        GLOBAL.get_or_init(|| match std::env::var("MUONBP_POOL_THREADS") {
+            // A pin the operator set must be honored or rejected loudly —
+            // silently falling back to a growable per-core pool would
+            // re-enable exactly the parallelism the pin disables.
+            Ok(v) => match v.trim().parse::<usize>() {
+                Ok(n) => Pool::build(n, false),
+                Err(_) => panic!(
+                    "MUONBP_POOL_THREADS must be a thread count, got '{v}'"
+                ),
+            },
+            Err(std::env::VarError::NotPresent) => Pool::build(
+                thread::available_parallelism()
+                    .map(|n| n.get())
+                    .unwrap_or(1),
+                true,
+            ),
+            Err(e) => panic!("MUONBP_POOL_THREADS unreadable: {e}"),
+        })
+    }
+
+    /// Number of live workers.
+    pub fn workers(&self) -> usize {
+        self.size.load(Ordering::Acquire)
+    }
+
+    fn spawn_workers(&self, total: usize) {
+        let mut handles = self.handles.lock().unwrap();
+        let cur = self.size.load(Ordering::Acquire);
+        for i in cur..total {
+            let shared = Arc::clone(&self.shared);
+            let builder =
+                thread::Builder::new().name(format!("muonbp-pool-{i}"));
+            match builder.spawn(move || worker_main(shared, i)) {
+                Ok(h) => {
+                    handles.push(h);
+                    self.size.fetch_add(1, Ordering::Release);
+                }
+                Err(_) => break,
+            }
+        }
+    }
+
+    /// Grow to at least `n` workers (no job may be in flight while workers
+    /// join, hence the submit lock). Returns whether `n` are available.
+    /// Size-pinned pools (`MUONBP_POOL_THREADS`) never grow — callers fall
+    /// back to scoped threads.
+    fn try_ensure_workers(&self, n: usize) -> bool {
+        if self.workers() >= n {
+            return true;
+        }
+        if !self.growable {
+            return false;
+        }
+        {
+            let _guard = self.submit.lock().unwrap();
+            self.spawn_workers(n);
+        }
+        self.workers() >= n
+    }
+
+    /// Fan `ntasks` independent tasks out across the pool and join them.
+    /// Task `i` receives `(i, &mut arena)`; tasks must write disjoint
+    /// outputs. Results are bit-identical to running tasks `0..ntasks`
+    /// sequentially, for any pool size — including zero (inline fallback).
+    /// Allocation-free after pool warm-up.
+    pub fn fanout<F>(&self, ntasks: usize, f: F)
+    where
+        F: Fn(usize, &mut WorkerArena) + Sync,
+    {
+        self.fanout_limited(ntasks, usize::MAX, &f);
+    }
+
+    /// [`Pool::fanout`] with an upper bound on participating workers
+    /// (kernels pass their FLOP-derived thread budget here).
+    pub fn fanout_limited<F>(&self, ntasks: usize, max_workers: usize, f: &F)
+    where
+        F: Fn(usize, &mut WorkerArena) + Sync,
+    {
+        if ntasks == 0 {
+            return;
+        }
+        let workers = self.workers().min(max_workers).min(ntasks);
+        if workers <= 1 || in_pool_worker() {
+            run_inline(ntasks, f);
+            return;
+        }
+        self.dispatch(ntasks, workers, f);
+    }
+
+    /// Run `n` tasks that may rendezvous with each other (collective
+    /// phases): every task is guaranteed its own concurrently running
+    /// thread. Task `i` always lands on worker `i`, so a rank keeps the
+    /// same warm thread-local state across steps. Grows the pool beyond
+    /// the core count if `n` demands it (rendezvous tasks mostly block)
+    /// unless the size was pinned via `MUONBP_POOL_THREADS`. Falls back to
+    /// freshly scoped threads — marked as pool workers, so their nested
+    /// fan-outs inline — when called from inside a pool worker, when the
+    /// pool is size-pinned below `n`, or when workers cannot be spawned.
+    pub fn run_concurrent_map<T, F>(&self, n: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize, &mut WorkerArena) -> T + Sync,
+    {
+        if n == 0 {
+            return Vec::new();
+        }
+        let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+        if n == 1 {
+            let slots = SendPtr(out.as_mut_ptr());
+            let f = &f;
+            run_inline(1, &move |i: usize, arena: &mut WorkerArena| {
+                let v = f(i, arena);
+                // SAFETY: single task, single slot, joined before return.
+                unsafe { *slots.0.add(i) = Some(v) };
+            });
+        } else if in_pool_worker() || !self.try_ensure_workers(n) {
+            // Rendezvous tasks must not be serialized (they would deadlock
+            // waiting for each other), so the nested / size-pinned /
+            // degraded path spawns real scoped threads instead of
+            // inlining. The spawned threads are marked as pool workers so
+            // any fan-out they issue runs inline rather than re-entering
+            // the pool — a nested dispatch would block on the submit lock
+            // an enclosing fan-out may already hold (deadlock).
+            thread::scope(|s| {
+                for (i, slot) in out.iter_mut().enumerate() {
+                    let f = &f;
+                    s.spawn(move || {
+                        IN_POOL_WORKER.with(|c| c.set(true));
+                        let mut arena = WorkerArena::new();
+                        *slot = Some(f(i, &mut arena));
+                    });
+                }
+            });
+        } else {
+            let slots = SendPtr(out.as_mut_ptr());
+            let write = |i: usize, arena: &mut WorkerArena| {
+                let v = f(i, arena);
+                // SAFETY: task i writes slot i exactly once; slots are
+                // disjoint and `out` outlives the dispatch join.
+                unsafe { *slots.0.add(i) = Some(v) };
+            };
+            self.dispatch(n, n, &write);
+        }
+        out.into_iter()
+            .map(|o| o.expect("pool: task produced no result"))
+            .collect()
+    }
+
+    fn dispatch<F>(&self, ntasks: usize, workers: usize, f: &F)
+    where
+        F: Fn(usize, &mut WorkerArena) + Sync,
+    {
+        let job = JobRef {
+            data: f as *const F as *const (),
+            call: trampoline::<F>,
+            ntasks,
+            workers,
+        };
+        let guard = self.submit.lock().unwrap();
+        self.shared.pending.store(workers, Ordering::Release);
+        {
+            let mut slot = self.shared.slot.lock().unwrap();
+            slot.epoch = slot.epoch.wrapping_add(1);
+            slot.job = Some(job);
+            self.shared.work_cv.notify_all();
+        }
+        let mut slot = self.shared.slot.lock().unwrap();
+        while self.shared.pending.load(Ordering::Acquire) != 0 {
+            slot = self.shared.done_cv.wait(slot).unwrap();
+        }
+        slot.job = None;
+        drop(slot);
+        let panicked = self.shared.panicked.swap(false, Ordering::AcqRel);
+        drop(guard);
+        if panicked {
+            panic!("pool: a fan-out task panicked (see stderr for payload)");
+        }
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        {
+            let mut slot = self.shared.slot.lock().unwrap();
+            slot.shutdown = true;
+            self.shared.work_cv.notify_all();
+        }
+        for h in self.handles.get_mut().unwrap().drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn run_inline<F>(ntasks: usize, f: &F)
+where
+    F: Fn(usize, &mut WorkerArena) + Sync,
+{
+    INLINE_ARENA.with(|cell| match cell.try_borrow_mut() {
+        Ok(mut arena) => {
+            for t in 0..ntasks {
+                f(t, &mut arena);
+            }
+        }
+        Err(_) => {
+            // Re-entrant inline fan-out (a task dispatched inline spawned
+            // another): a fresh arena keeps it correct, and constructing
+            // one is allocation-free (grow-only buffers start empty).
+            let mut arena = WorkerArena::new();
+            for t in 0..ntasks {
+                f(t, &mut arena);
+            }
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn fanout_runs_every_task_once() {
+        let pool = Pool::new(3);
+        let hits: Vec<AtomicU64> =
+            (0..17).map(|_| AtomicU64::new(0)).collect();
+        pool.fanout(17, |i, _| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::Relaxed), 1, "task {i}");
+        }
+    }
+
+    #[test]
+    fn fanout_disjoint_writes_via_sendptr() {
+        let pool = Pool::new(2);
+        let mut out = vec![0u64; 100];
+        let ptr = SendPtr(out.as_mut_ptr());
+        pool.fanout(100, |i, _| unsafe {
+            *ptr.0.add(i) = (i * i) as u64;
+        });
+        for (i, &v) in out.iter().enumerate() {
+            assert_eq!(v, (i * i) as u64);
+        }
+    }
+
+    #[test]
+    fn inline_when_empty_or_single() {
+        for workers in [0, 1] {
+            let pool = Pool::new(workers);
+            let mut out = vec![0usize; 9];
+            let ptr = SendPtr(out.as_mut_ptr());
+            pool.fanout(9, |i, _| unsafe {
+                *ptr.0.add(i) = i + 1;
+            });
+            assert_eq!(out, (1..=9).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn nested_fanout_runs_inline() {
+        let pool = Pool::new(2);
+        let depth_hits = AtomicU64::new(0);
+        pool.fanout(2, |_, _| {
+            // Nested dispatch from a worker must complete inline.
+            Pool::global().fanout(3, |_, _| {
+                depth_hits.fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(depth_hits.load(Ordering::Relaxed), 6);
+    }
+
+    #[test]
+    fn run_concurrent_map_rendezvous() {
+        // Tasks barrier on each other: only true concurrency finishes this.
+        let pool = Pool::new(2);
+        let n = 4; // forces growth beyond the initial 2 workers
+        let arrived = AtomicUsize::new(0);
+        let got = pool.run_concurrent_map(n, |i, _| {
+            arrived.fetch_add(1, Ordering::SeqCst);
+            while arrived.load(Ordering::SeqCst) < n {
+                std::thread::yield_now();
+            }
+            i * 10
+        });
+        assert_eq!(got, vec![0, 10, 20, 30]);
+        assert!(pool.workers() >= n);
+    }
+
+    #[test]
+    fn worker_arena_persists_across_jobs() {
+        let pool = Pool::new(1);
+        // Job 1 warms the arena; job 2 observes the warm buffers. With a
+        // single worker both jobs land on the same arena... unless the
+        // fan-out inlines (1 worker => inline on the submitter), which
+        // exercises the same persistence through INLINE_ARENA.
+        pool.fanout(1, |_, arena| {
+            arena.pa.resize(1024, 1.0);
+        });
+        let mut saw = 0usize;
+        let saw_ptr = SendPtr(&mut saw as *mut usize);
+        pool.fanout(1, |_, arena| unsafe {
+            *saw_ptr.0 = arena.pa.len();
+        });
+        assert_eq!(saw, 1024);
+    }
+
+    #[test]
+    fn drop_joins_workers() {
+        let pool = Pool::new(4);
+        let mut out = vec![0u8; 4];
+        let ptr = SendPtr(out.as_mut_ptr());
+        pool.fanout(4, |i, _| unsafe {
+            *ptr.0.add(i) = 1;
+        });
+        drop(pool); // must not hang or leak panics
+        assert_eq!(out, vec![1; 4]);
+    }
+
+    #[test]
+    fn task_panic_propagates_to_submitter() {
+        let pool = Pool::new(2);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.fanout(4, |i, _| {
+                if i == 2 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(r.is_err());
+        // The pool stays usable after a task panic.
+        let mut out = vec![0usize; 3];
+        let ptr = SendPtr(out.as_mut_ptr());
+        pool.fanout(3, |i, _| unsafe {
+            *ptr.0.add(i) = i + 7;
+        });
+        assert_eq!(out, vec![7, 8, 9]);
+    }
+}

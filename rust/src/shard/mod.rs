@@ -70,6 +70,23 @@ pub fn shard(t: &Tensor, spec: &ShardSpec, idx: usize) -> Tensor {
     t.block(r0, r1, c0, c1)
 }
 
+/// Copy block `idx` of `t` into a preallocated block tensor — the
+/// zero-alloc sibling of [`shard`] (the optimizer's steady-state arena
+/// path reuses one block tensor per slot across steps).
+pub fn shard_into(t: &Tensor, spec: &ShardSpec, idx: usize, out: &mut Tensor) {
+    assert_eq!((t.m(), t.n()), (spec.m, spec.n), "spec/tensor mismatch");
+    let ((r0, r1), (c0, c1)) = spec.ranges(idx);
+    assert_eq!((out.m(), out.n()), (r1 - r0, c1 - c0), "shard_into shape");
+    let n = t.n();
+    let w = c1 - c0;
+    let src = t.data();
+    let dst = out.data_mut();
+    for (bi, i) in (r0..r1).enumerate() {
+        dst[bi * w..(bi + 1) * w]
+            .copy_from_slice(&src[i * n + c0..i * n + c1]);
+    }
+}
+
 /// Extract all blocks in block-id order (what an all-gather materializes).
 pub fn shard_all(t: &Tensor, spec: &ShardSpec) -> Vec<Tensor> {
     (0..spec.num_blocks()).map(|i| shard(t, spec, i)).collect()
@@ -77,13 +94,19 @@ pub fn shard_all(t: &Tensor, spec: &ShardSpec) -> Vec<Tensor> {
 
 /// Reassemble the full matrix from blocks (the scatter inverse).
 pub fn unshard(blocks: &[Tensor], spec: &ShardSpec) -> Tensor {
-    assert_eq!(blocks.len(), spec.num_blocks());
     let mut out = Tensor::zeros(&[spec.m, spec.n]);
+    unshard_into(blocks, spec, &mut out);
+    out
+}
+
+/// [`unshard`] into a preallocated full matrix (zero-alloc sibling).
+pub fn unshard_into(blocks: &[Tensor], spec: &ShardSpec, out: &mut Tensor) {
+    assert_eq!(blocks.len(), spec.num_blocks());
+    assert_eq!((out.m(), out.n()), (spec.m, spec.n), "unshard_into shape");
     for (idx, b) in blocks.iter().enumerate() {
         let ((r0, _), (c0, _)) = spec.ranges(idx);
         out.set_block(r0, c0, b);
     }
-    out
 }
 
 /// Write one block back into the full matrix in place.

@@ -1,0 +1,150 @@
+//! Pool stress: concurrent submitters, shutdown/drop ordering, pool
+//! growth under rendezvous load, and bit-identical results under
+//! contention. `make pool-stress` runs this binary with a high
+//! `RUST_TEST_THREADS` so the tests themselves interleave aggressively on
+//! top of the submitter threads each test spawns.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use muonbp::linalg::gemm::gemm_into;
+use muonbp::linalg::newton_schulz::{newton_schulz, NsCoeffs};
+use muonbp::mesh::Layout;
+use muonbp::optim::muon::{Muon, OrthFn};
+use muonbp::runtime::pool::{Pool, SendPtr};
+use muonbp::shard::ShardSpec;
+use muonbp::tensor::Tensor;
+use muonbp::utils::rng::Rng;
+
+fn gemm(a: &Tensor, b: &Tensor, threads: usize) -> Tensor {
+    let (m, k, n) = (a.m(), a.n(), b.n());
+    let mut c = Tensor::zeros(&[m, n]);
+    let (mut pa, mut pb) = (Vec::new(), Vec::new());
+    gemm_into(
+        c.data_mut(),
+        m,
+        k,
+        n,
+        a.data(),
+        false,
+        b.data(),
+        false,
+        None,
+        &mut pa,
+        &mut pb,
+        threads,
+    );
+    c
+}
+
+#[test]
+fn concurrent_gemm_submitters_bit_identical() {
+    // Several submitter threads hammer the global pool with pooled GEMMs
+    // at varying thread budgets; every result must equal the sequential
+    // kernel bit for bit (the submit lock serializes jobs, and the row-
+    // block partition is thread-count-invariant).
+    let mut rng = Rng::new(1);
+    let a = Tensor::randn(&[197, 64], 1.0, &mut rng);
+    let b = Tensor::randn(&[64, 93], 1.0, &mut rng);
+    let base = gemm(&a, &b, 1);
+    std::thread::scope(|s| {
+        for t in 0..4 {
+            let (a, b, base) = (&a, &b, &base);
+            s.spawn(move || {
+                for threads in [2, 3, 8, 2, 64, 5 + t, 2, 8] {
+                    let c = gemm(a, b, threads);
+                    assert_eq!(&c, base, "threads={threads} drifted");
+                }
+            });
+        }
+    });
+}
+
+#[test]
+fn concurrent_block_orth_submitters_bit_identical() {
+    // Two submitters run the pooled block fan-out while two more run the
+    // sequential path on the same inputs; all four must agree exactly.
+    let mut rng = Rng::new(2);
+    let g = Tensor::randn(&[64, 256], 1.0, &mut rng);
+    let spec = ShardSpec::new(Layout::TpColumn, 4, 64, 256);
+    let orth: OrthFn =
+        std::sync::Arc::new(|t: &Tensor| newton_schulz(t, 5, NsCoeffs::jordan()));
+    let seq = Muon::orth_update_with(&g, &spec, false, 0.2, &orth, false);
+    std::thread::scope(|s| {
+        for parallel in [true, false, true, false] {
+            let (g, seq, orth) = (&g, &seq, &orth);
+            let spec = spec;
+            s.spawn(move || {
+                for _ in 0..3 {
+                    let u = Muon::orth_update_with(
+                        g, &spec, false, 0.2, orth, parallel,
+                    );
+                    assert_eq!(&u, seq, "parallel={parallel} drifted");
+                }
+            });
+        }
+    });
+}
+
+#[test]
+fn rendezvous_growth_under_concurrent_fanouts() {
+    // run_concurrent_map must grow a small local pool and keep barrier
+    // tasks live together while plain fan-outs from other threads contend
+    // for the same pool.
+    let pool = Pool::new(1);
+    std::thread::scope(|s| {
+        let pool = &pool;
+        s.spawn(move || {
+            for _ in 0..20 {
+                let mut out = vec![0usize; 32];
+                let ptr = SendPtr(out.as_mut_ptr());
+                pool.fanout(32, |i, _| unsafe {
+                    *ptr.0.add(i) = i * 3;
+                });
+                assert!(out.iter().enumerate().all(|(i, &v)| v == i * 3));
+            }
+        });
+        s.spawn(move || {
+            for round in 0..10 {
+                let n = 2 + (round % 3); // 2..=4 ranks
+                let arrived = AtomicUsize::new(0);
+                let got = pool.run_concurrent_map(n, |i, _| {
+                    arrived.fetch_add(1, Ordering::SeqCst);
+                    // Barrier: every task must be live at once.
+                    while arrived.load(Ordering::SeqCst) < n {
+                        std::thread::yield_now();
+                    }
+                    i
+                });
+                assert_eq!(got, (0..n).collect::<Vec<_>>());
+            }
+        });
+    });
+    assert!(pool.workers() >= 4);
+}
+
+#[test]
+fn shutdown_and_drop_ordering() {
+    // Pools must join cleanly in every lifecycle: unused, after plain
+    // fan-outs, after growth, and immediately after a burst of jobs from
+    // several submitters.
+    drop(Pool::new(0));
+    drop(Pool::new(3));
+    for round in 0..8 {
+        let pool = Pool::new(1 + round % 4);
+        std::thread::scope(|s| {
+            let pool = &pool;
+            for _ in 0..3 {
+                s.spawn(move || {
+                    let mut out = vec![0u32; 19];
+                    let ptr = SendPtr(out.as_mut_ptr());
+                    pool.fanout(19, |i, _| unsafe {
+                        *ptr.0.add(i) = i as u32 + 1;
+                    });
+                    assert!(out.iter().enumerate().all(|(i, &v)| v
+                        == i as u32 + 1));
+                });
+            }
+        });
+        drop(pool); // joins workers; must not hang or lose tasks
+    }
+}
