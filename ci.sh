@@ -18,6 +18,12 @@ cargo build --release || exit 1
 step "tier-1: cargo test -q"
 cargo test -q || exit 1
 
+step "tier-1: pool-stress suite (RUST_TEST_THREADS=16)"
+# Rendezvous / pool changes must not land untested under contention: the
+# high libtest thread count makes the test binaries themselves fight for
+# the pool while each test spawns its own submitter threads.
+RUST_TEST_THREADS=16 cargo test -q --test pool_stress || exit 1
+
 step "tier-1: cargo bench --no-run (benches must keep compiling)"
 cargo bench --no-run || exit 1
 

@@ -27,7 +27,8 @@ use muonbp::linalg::newton_schulz::{
 };
 use muonbp::mesh::{Layout, Mesh};
 use muonbp::optim::muon::{Muon, OrthFn, Period};
-use muonbp::optim::Optimizer;
+use muonbp::optim::{Optimizer, ParamKind, ParamMeta};
+use muonbp::runtime::pool::Pool;
 use muonbp::runtime::NsEngine;
 use muonbp::shard::ShardSpec;
 use muonbp::tensor::Tensor;
@@ -257,6 +258,101 @@ fn main() {
             flops / r_blk.mean_s / 1e9
         );
         records.push(r_blk.to_json("gemm-blocked", &shape, flops, speedup));
+    }
+
+    // 4d. Distributed full step: the phased coordinator's pooled-leader
+    //     orthogonalization vs the old in-rank schedule (leader NS inside
+    //     a rank task, where nested fan-outs inline — single-core while
+    //     the other tp-1 ranks idle at the scatter rendezvous).
+    {
+        let (m, n, k_ns) = (1024usize, 2048usize, 3usize);
+        let g = Tensor::randn(&[m, n], 1.0, &mut rng);
+        let flops = ns_flops(m, n, k_ns);
+        for tp in [4usize, 8] {
+            let shape = format!("{m}x{n}/tp{tp}");
+            // In-rank baseline: rank 0 orthogonalizes inside a pool rank
+            // task, so its NS cannot fan out (nested dispatch inlines).
+            // warmup=1 so the first timed sample excludes the one-time
+            // worker-arena growth — symmetric with the pre-warmed pooled
+            // side below.
+            let gref = &g;
+            let r_inrank = time_it(
+                &format!("leader orth in-rank {shape} K={k_ns}"),
+                1,
+                2,
+                || {
+                    Pool::global().run_concurrent_map(tp, |rank, arena| {
+                        if rank == 0 {
+                            arena.ns.load(gref);
+                            arena.ns.iterate(k_ns, NsCoeffs::jordan());
+                        }
+                        0usize
+                    });
+                },
+            );
+            println!(
+                "    -> {:.2} GFLOP/s",
+                flops / r_inrank.mean_s / 1e9
+            );
+            records.push(r_inrank.to_json(
+                "leader-orth-in-rank",
+                &shape,
+                flops,
+                0.0,
+            ));
+            // Pooled leader: the phased schedule runs the same NS on the
+            // main thread after the rank-task join, so its GEMM/syrk row
+            // blocks fan across the whole pool.
+            let mut lws = NsWorkspace::new();
+            lws.load(&g);
+            lws.iterate_threads(1, NsCoeffs::jordan(), 1); // warm buffers
+            let r_leader = time_it(
+                &format!("leader orth pooled {shape} K={k_ns}"),
+                1,
+                2,
+                || {
+                    lws.load(&g);
+                    lws.iterate(k_ns, NsCoeffs::jordan());
+                },
+            );
+            let speedup = r_inrank.mean_s / r_leader.mean_s;
+            println!(
+                "    -> {:.2} GFLOP/s ({speedup:.2}x vs in-rank)",
+                flops / r_leader.mean_s / 1e9
+            );
+            records.push(r_leader.to_json(
+                "leader-orth-pooled",
+                &shape,
+                flops,
+                speedup,
+            ));
+            // End-to-end distributed full step through the phased
+            // coordinator (P=1: every step gathers + leader-orths).
+            let metas = [ParamMeta::new("w", &[m, n], ParamKind::Matrix)];
+            let mut dist = DistMuonBuilder::new(
+                Mesh::new(1, tp).unwrap(),
+                Period::Every(1),
+            )
+            .cfg(|c| c.ns_steps = k_ns)
+            .build(&metas);
+            let mut params = vec![Tensor::zeros(&[m, n])];
+            let dgrads = vec![Tensor::randn(&[m, n], 0.1, &mut rng)];
+            dist.step(&mut params, &dgrads, 0.01); // warm arenas
+            let r_step = time_it(
+                &format!("dist full step pooled-leader {shape}"),
+                1,
+                2,
+                || {
+                    dist.step(&mut params, &dgrads, 0.01);
+                },
+            );
+            records.push(r_step.to_json(
+                "dist-step-pooled-leader",
+                &shape,
+                flops,
+                0.0,
+            ));
+        }
     }
 
     // Host-side results are complete — persist before the artifact gate so

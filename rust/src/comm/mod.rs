@@ -12,6 +12,7 @@
 //! all-gather of arbitrary payloads); every collective is built on it and
 //! charged with the ring-algorithm volume a real implementation would move.
 
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 
 use crate::costmodel::netmodel::NetModel;
@@ -20,6 +21,52 @@ use crate::tensor::Tensor;
 pub mod stats;
 
 pub use stats::{CollectiveKind, CommStats};
+
+/// Pool-native sense-reversing barrier: ranks spin briefly, then yield, on
+/// an atomic generation counter — no condvar wakeups, no mutex, no heap
+/// traffic. One `wait` per rank per phase; reusable for any number of
+/// rounds. Callers must guarantee all `n` participants are live
+/// concurrently (`Pool::run_concurrent` provides exactly that), otherwise
+/// the missing rank starves the group.
+pub struct PhaseBarrier {
+    n: usize,
+    arrived: AtomicUsize,
+    generation: AtomicUsize,
+}
+
+impl PhaseBarrier {
+    pub fn new(n: usize) -> PhaseBarrier {
+        PhaseBarrier {
+            n,
+            arrived: AtomicUsize::new(0),
+            generation: AtomicUsize::new(0),
+        }
+    }
+
+    /// Block until all `n` participants have called `wait` for the current
+    /// round. The last arriver resets the count *before* bumping the
+    /// generation, so the barrier is immediately reusable.
+    pub fn wait(&self) {
+        if self.n <= 1 {
+            return;
+        }
+        let round = self.generation.load(Ordering::Acquire);
+        if self.arrived.fetch_add(1, Ordering::AcqRel) + 1 == self.n {
+            self.arrived.store(0, Ordering::Relaxed);
+            self.generation.fetch_add(1, Ordering::Release);
+        } else {
+            let mut spins = 0u32;
+            while self.generation.load(Ordering::Acquire) == round {
+                spins = spins.wrapping_add(1);
+                if spins < 128 {
+                    std::hint::spin_loop();
+                } else {
+                    std::thread::yield_now();
+                }
+            }
+        }
+    }
+}
 
 /// Rendezvous state machine: Fill (deposit) -> Drain (read) -> Fill ...
 struct State<T> {
@@ -41,6 +88,12 @@ pub struct Communicator {
     tensors: Arc<Inner<Tensor>>,
     stats: Arc<Mutex<CommStats>>,
     net: NetModel,
+    /// Pool-native barrier for the allocation-free `_into` collectives and
+    /// explicit phase handoffs (`rendezvous`).
+    phase: Arc<PhaseBarrier>,
+    /// Deposit slots for the `_into` collectives: rank r publishes the
+    /// address of its payload tensor here (as usize) for the round.
+    deposit_slots: Arc<Vec<AtomicUsize>>,
 }
 
 impl Clone for Communicator {
@@ -50,6 +103,8 @@ impl Clone for Communicator {
             tensors: Arc::clone(&self.tensors),
             stats: Arc::clone(&self.stats),
             net: self.net,
+            phase: Arc::clone(&self.phase),
+            deposit_slots: Arc::clone(&self.deposit_slots),
         }
     }
 }
@@ -71,6 +126,10 @@ impl Communicator {
             }),
             stats: Arc::new(Mutex::new(CommStats::default())),
             net,
+            phase: Arc::new(PhaseBarrier::new(n)),
+            deposit_slots: Arc::new(
+                (0..n).map(|_| AtomicUsize::new(0)).collect(),
+            ),
         }
     }
 
@@ -129,6 +188,62 @@ impl Communicator {
         }
     }
 
+    // -- pool-native phase primitives ----------------------------------------
+
+    /// Pool-native rendezvous: block until every rank of the group has
+    /// arrived. This is phase synchronization of the *simulator* (no
+    /// payload, no charge, no allocation, no condvar wakeups), the
+    /// substrate the phased coordinator schedule and the `_into`
+    /// collectives hand off on. For a *modeled* barrier collective that
+    /// charges α-time, use [`Communicator::barrier`].
+    pub fn rendezvous(&self) {
+        self.phase.wait();
+    }
+
+    /// Allocation-free all-reduce-mean: every rank deposits the address of
+    /// `src`, rendezvouses, reduces in rank order into its own
+    /// preallocated `dst`, and rendezvouses again before returning (so no
+    /// rank can retire `src` while a peer still reads it). Bit-identical
+    /// to [`Communicator::all_reduce_mean`] — zero-fill, rank-order axpy,
+    /// `1/n` scale. `dst` must not alias any rank's `src`.
+    pub fn all_reduce_mean_into(
+        &self,
+        rank: usize,
+        src: &Tensor,
+        dst: &mut Tensor,
+    ) {
+        assert!(rank < self.n);
+        assert_eq!(src.shape(), dst.shape(), "all_reduce_mean_into shape");
+        let bytes = src.numel() * 4;
+        self.deposit_slots[rank]
+            .store(src as *const Tensor as usize, Ordering::Release);
+        self.phase.wait();
+        dst.data_mut().fill(0.0);
+        for r in 0..self.n {
+            let p =
+                self.deposit_slots[r].load(Ordering::Acquire) as *const Tensor;
+            // SAFETY: every deposited reference outlives the closing
+            // rendezvous below, and slots are only rewritten after it —
+            // the shared borrow is valid for the whole read loop.
+            dst.axpy(1.0, unsafe { &*p });
+        }
+        dst.scale(1.0 / self.n as f32);
+        self.phase.wait();
+        self.charge(rank, CollectiveKind::AllReduce, bytes);
+    }
+
+    /// Record a collective whose rendezvous happened out-of-band: phased
+    /// schedules synchronize on the pool join and move payloads through
+    /// shared arenas, but must still account the bytes a real cluster
+    /// would put on the wire. Charged once for the whole group.
+    pub fn charge_collective(
+        &self,
+        kind: CollectiveKind,
+        payload_bytes: usize,
+    ) {
+        self.charge(0, kind, payload_bytes);
+    }
+
     // -- collectives ---------------------------------------------------------
 
     /// Synchronization only; moves no payload (charged α only).
@@ -176,8 +291,26 @@ impl Communicator {
         root: usize,
         t: Tensor,
     ) -> Option<Vec<Tensor>> {
+        self.gather_to_real(rank, root, t, self.n)
+    }
+
+    /// [`Communicator::gather_to`] for clamped shard grids: when a matrix
+    /// dimension is smaller than the group, ranks `real_ranks..` own
+    /// *replicas* of real shards and their deposits move no payload on a
+    /// real cluster — only the first `real_ranks` deposits are charged.
+    /// (Replica owners are always the trailing ranks: `ShardSpec` clamps
+    /// `block_id = rank.min(num_blocks - 1)`.)
+    pub fn gather_to_real(
+        &self,
+        rank: usize,
+        root: usize,
+        t: Tensor,
+        real_ranks: usize,
+    ) -> Option<Vec<Tensor>> {
+        assert!(real_ranks <= self.n, "gather_to_real arity");
         let out = self.exchange(rank, t);
-        let bytes: usize = out.iter().map(|t| t.numel() * 4).sum();
+        let bytes: usize =
+            out.iter().take(real_ranks).map(|t| t.numel() * 4).sum();
         self.charge(rank, CollectiveKind::Gather, bytes);
         if rank == root {
             Some(out.as_ref().clone())
@@ -194,6 +327,21 @@ impl Communicator {
         root: usize,
         parts: Option<Vec<Tensor>>,
     ) -> Tensor {
+        self.scatter_from_real(rank, root, parts, self.n)
+    }
+
+    /// [`Communicator::scatter_from`] with replica-aware accounting: parts
+    /// `real_ranks..` are duplicates padded for clamped shard grids (every
+    /// replica rank receives a copy the real owner already holds), so only
+    /// the first `real_ranks` parts count as wire payload.
+    pub fn scatter_from_real(
+        &self,
+        rank: usize,
+        root: usize,
+        parts: Option<Vec<Tensor>>,
+        real_ranks: usize,
+    ) -> Tensor {
+        assert!(real_ranks <= self.n, "scatter_from_real arity");
         // Rendezvous in two phases: root broadcasts the whole list (payload
         // accounting below reflects a true scatter, not the broadcast).
         let payload = match parts {
@@ -205,8 +353,11 @@ impl Communicator {
         };
         let all = self.exchange(rank, payload);
         let unpacked = unpack(&all[root]);
-        let bytes: usize =
-            unpacked.iter().map(|t| t.numel() * 4).sum::<usize>();
+        let bytes: usize = unpacked
+            .iter()
+            .take(real_ranks)
+            .map(|t| t.numel() * 4)
+            .sum::<usize>();
         self.charge(rank, CollectiveKind::Scatter, bytes);
         unpacked[rank].clone()
     }
@@ -439,6 +590,100 @@ mod tests {
         assert_eq!(stats.calls(CollectiveKind::AllGather), 1);
         assert_eq!(stats.bytes(CollectiveKind::AllGather), 8 * 8 * 4 * 2);
         assert!(stats.total_sim_time() > 0.0);
+    }
+
+    #[test]
+    fn pool_rendezvous_blocks_until_all_arrive() {
+        // A rank passing the rendezvous must observe every peer's arrival
+        // for that round — over many rounds, so barrier reuse (the sense-
+        // reversing generation counter) is exercised too.
+        let comm = Communicator::new(4, NetModel::a100_nvlink());
+        let arrived = std::sync::atomic::AtomicUsize::new(0);
+        thread::scope(|s| {
+            for _ in 0..4 {
+                let c = comm.clone();
+                let arrived = &arrived;
+                s.spawn(move |_| {
+                    for round in 0..200usize {
+                        arrived.fetch_add(1, Ordering::SeqCst);
+                        c.rendezvous();
+                        assert!(
+                            arrived.load(Ordering::SeqCst) >= 4 * (round + 1),
+                            "rendezvous let a rank through early"
+                        );
+                    }
+                });
+            }
+        })
+        .unwrap();
+        // Pure phase sync: nothing charged.
+        assert_eq!(comm.stats().total_bytes(), 0);
+        assert_eq!(comm.stats().calls(CollectiveKind::Barrier), 0);
+    }
+
+    #[test]
+    fn all_reduce_mean_into_matches_allocating() {
+        let comm = Communicator::new(3, NetModel::a100_nvlink());
+        let check = Communicator::new(3, NetModel::a100_nvlink());
+        thread::scope(|s| {
+            for r in 0..3 {
+                let c = comm.clone();
+                let c2 = check.clone();
+                s.spawn(move |_| {
+                    let src = Tensor::from_vec(
+                        &[2, 2],
+                        vec![r as f32, 1.0, -2.0 * r as f32, 0.5],
+                    )
+                    .unwrap();
+                    let mut dst = Tensor::zeros(&[2, 2]);
+                    for _ in 0..10 {
+                        c.all_reduce_mean_into(r, &src, &mut dst);
+                    }
+                    let want = c2.all_reduce_mean(r, src.clone());
+                    assert_eq!(dst, want, "rank {r} drifted");
+                });
+            }
+        })
+        .unwrap();
+        // Charged once per collective, with the real payload bytes.
+        let stats = comm.stats();
+        assert_eq!(stats.calls(CollectiveKind::AllReduce), 10);
+        assert_eq!(stats.bytes(CollectiveKind::AllReduce), 10 * 4 * 4);
+        assert!(stats.total_sim_time() > 0.0);
+    }
+
+    #[test]
+    fn replica_aware_gather_scatter_accounting() {
+        // 4 ranks, 2 real shards (a clamped grid): replica deposits and
+        // padded scatter parts must not be charged as wire payload, but
+        // every rank still receives its (possibly duplicate) part.
+        let comm = Communicator::new(4, NetModel::a100_nvlink());
+        thread::scope(|s| {
+            for rank in 0..4 {
+                let c = comm.clone();
+                s.spawn(move |_| {
+                    let t =
+                        Tensor::from_vec(&[2], vec![rank as f32; 2]).unwrap();
+                    let gathered = c.gather_to_real(rank, 0, t, 2);
+                    let parts = gathered.map(|v| {
+                        v.into_iter()
+                            .map(|mut t| {
+                                t.scale(3.0);
+                                t
+                            })
+                            .collect::<Vec<_>>()
+                    });
+                    let got = c.scatter_from_real(rank, 0, parts, 2);
+                    assert_eq!(got.data()[0], rank as f32 * 3.0);
+                });
+            }
+        })
+        .unwrap();
+        let stats = comm.stats();
+        // 2 real shards x 2 f32 each = 16 bytes; the old accounting
+        // charged all 4 deposits (32 bytes).
+        assert_eq!(stats.bytes(CollectiveKind::Gather), 16);
+        assert_eq!(stats.bytes(CollectiveKind::Scatter), 16);
     }
 
     #[test]

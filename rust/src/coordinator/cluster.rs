@@ -1,17 +1,66 @@
 //! DistMuon: the distributed MuonBP coordinator (see module docs in mod.rs).
+//!
+//! # Phased step schedule
+//!
+//! `DistMuon::step` used to run one monolithic closure per TP rank; on a
+//! full step the leader rank orthogonalized the gathered matrix *inside*
+//! its rank task, where nested fan-outs inline — so the most expensive
+//! computation of the whole schedule ran single-core while every peer
+//! idled at the scatter rendezvous. The step is now a phased schedule:
+//!
+//! ```text
+//! phase 0  DP sync     pooled rank tasks; pool-native all_reduce_mean_into
+//!                      (rendezvous barrier, preallocated accumulators)
+//! phase 1  TP ranks    pooled fan-out: momentum shard update; on block
+//!                      steps, per-block NS in the worker's arena
+//! phase 2  TP leader   MAIN THREAD, after the phase-1 join: assemble the
+//!                      full momentum, run NsWorkspace::iterate — its
+//!                      GEMM/syrk row blocks fan out across the ENTIRE
+//!                      pool, exactly like a single-process full step —
+//!                      then RMS-match (shared `Muon::full_orth_into`)
+//! phase 3  reassembly  block-step deltas assembled from rank shards;
+//!                      apply + AdamW for non-matrix params
+//! ```
+//!
+//! The pool join between phases is the rendezvous: every rank's phase-1
+//! writes complete before the leader reads them, which is the same
+//! ordering a gather would enforce — so results are bit-identical to the
+//! rendezvous-in-task schedule, and `matches_reference_muon_exactly`
+//! pins them to the single-process `Muon` across layouts and periods.
+//!
+//! # Byte accounting
+//!
+//! Payloads move through shared arenas, but `CommStats` still records what
+//! a real cluster would put on the wire (`charge_collective`): gather of
+//! the momentum shards and scatter of the update shards on full steps,
+//! nothing on block steps. Ranks beyond a clamped block grid
+//! (`dim < tp`) hold *replicas*; their deposits move no payload and are
+//! excluded from the charge.
+//!
+//! # Zero allocations in steady state
+//!
+//! With the default host backend every buffer a step touches — per-rank
+//! grad/momentum/update shards, per-matrix full/update matrices, DP
+//! accumulators, the leader NS workspace, per-worker arenas — is
+//! preallocated at build or warmed by the first period. A warm
+//! `DistMuon::step` performs **zero heap allocations**
+//! (`tests/ns_zero_alloc.rs` proves it with a counting global allocator).
+//! Injected engines (`DistMuonBuilder::ns_engine`) keep the allocating
+//! compat path, since an `OrthFn` returns fresh tensors by contract.
 
 use std::sync::Arc;
 
-use crate::comm::{CommStats, Communicator};
+use crate::comm::{CollectiveKind, CommStats, Communicator};
 use crate::costmodel::netmodel::NetModel;
+use crate::linalg::newton_schulz::{NsCoeffs, NsWorkspace};
 use crate::mesh::{Layout, Mesh};
 use crate::optim::adamw::AdamW;
-use crate::optim::muon::{MuonCfg, OrthFn, Period};
+use crate::optim::muon::{Muon, MuonCfg, OrthFn, Period};
 use crate::optim::scaling::rms_match_scale;
 use crate::optim::{Optimizer, ParamKind, ParamMeta};
 use crate::runtime::pool::{Pool, SendPtr};
 use crate::runtime::NsEngine;
-use crate::shard::{shard, unshard, ShardSpec};
+use crate::shard::{shard_into, unshard_from, ShardSpec};
 use crate::tensor::Tensor;
 
 /// Builder for the distributed coordinator.
@@ -68,36 +117,59 @@ impl DistMuonBuilder {
                 })
             })
             .collect();
-        // Momentum shards per TP rank, aligned with the matrix params.
-        // With TpColumn/TpRow layouts the block grid is 1 x tp (or tp x 1),
-        // so block id == tp rank. For grids, rank j owns block j.
-        let rank_momenta: Vec<Vec<Tensor>> = (0..self.mesh.tp)
-            .map(|j| {
-                specs
-                    .iter()
-                    .filter_map(|s| s.as_ref())
-                    .map(|spec| {
-                        let (bm, bn) =
-                            spec.block_shape(j.min(spec.num_blocks() - 1));
-                        Tensor::zeros(&[bm, bn])
-                    })
-                    .collect()
+        let matrix_idx: Vec<usize> = metas
+            .iter()
+            .enumerate()
+            .filter(|(_, m)| m.kind == ParamKind::Matrix)
+            .map(|(i, _)| i)
+            .collect();
+        // Per-TP-rank shard arenas, aligned with the matrix params. With
+        // TpColumn/TpRow layouts the block grid is 1 x tp (or tp x 1), so
+        // block id == tp rank. For grids, rank j owns block j; ranks past
+        // a clamped grid (dim < tp) hold replicas of the last block.
+        let rank_blocks = |j: usize| -> Vec<Tensor> {
+            specs
+                .iter()
+                .filter_map(|s| s.as_ref())
+                .map(|spec| {
+                    let (bm, bn) =
+                        spec.block_shape(j.min(spec.num_blocks() - 1));
+                    Tensor::zeros(&[bm, bn])
+                })
+                .collect()
+        };
+        let rank_momenta: Vec<Vec<Tensor>> =
+            (0..self.mesh.tp).map(rank_blocks).collect();
+        let rank_grads = rank_momenta.clone();
+        let rank_updates = rank_momenta.clone();
+        // Per-matrix leader-phase arenas (full momentum + update delta).
+        let scratch: Vec<Option<DistScratch>> = specs
+            .iter()
+            .map(|s| {
+                s.as_ref().map(|spec| DistScratch {
+                    full: Tensor::zeros(&[spec.m, spec.n]),
+                    update: Tensor::zeros(&[spec.m, spec.n]),
+                })
             })
             .collect();
-        let orth: OrthFn = match &self.ns {
-            Some(ns) => ns.as_orth_fn(),
-            None => {
-                // Host fallback goes through the fused workspace NS. Rank
-                // tasks run on the persistent pool with a stable rank →
-                // worker mapping, so each rank's thread-local `NsWorkspace`
-                // warms once and stays warm across *steps*, not just
-                // within one call (ROADMAP items 3–4, now resolved).
-                let steps = self.cfg.ns_steps;
-                let coeffs = self.cfg.coeffs;
-                Arc::new(move |g: &Tensor| {
-                    crate::linalg::newton_schulz(g, steps, coeffs)
+        // DP all-reduce accumulators: one full param set per DP rank
+        // (every rank reduces, like a real cluster; rank 0's result is
+        // consumed). Empty when dp == 1 — the input grads are used as-is.
+        let dp_acc: Vec<Vec<Tensor>> = if self.mesh.dp > 1 {
+            (0..self.mesh.dp)
+                .map(|_| {
+                    metas.iter().map(|p| Tensor::zeros(&p.shape)).collect()
                 })
-            }
+                .collect()
+        } else {
+            Vec::new()
+        };
+        let backend = match &self.ns {
+            Some(ns) => DistBackend::Custom(ns.as_orth_fn()),
+            None => DistBackend::Host {
+                steps: self.cfg.ns_steps,
+                coeffs: self.cfg.coeffs,
+            },
         };
         DistMuon {
             mesh: self.mesh,
@@ -106,13 +178,38 @@ impl DistMuonBuilder {
             cfg: self.cfg,
             metas: metas.to_vec(),
             specs,
+            matrix_idx,
             rank_momenta,
+            rank_grads,
+            rank_updates,
+            scratch,
+            dp_acc,
+            ws: NsWorkspace::new(),
             adam: AdamW::new(metas),
-            orth,
+            backend,
             t: 0,
             last_opt_bytes: 0,
         }
     }
+}
+
+/// Which engine orthogonalizes momenta.
+enum DistBackend {
+    /// Default host Newton–Schulz through preallocated arenas: pooled,
+    /// multicore leader phase, zero steady-state heap allocations.
+    Host { steps: usize, coeffs: NsCoeffs },
+    /// Injected orthogonalizer (runtime XLA / Pallas artifact engine) —
+    /// the allocating compat path (an `OrthFn` returns fresh tensors).
+    Custom(OrthFn),
+}
+
+/// Per-matrix leader-phase arenas.
+struct DistScratch {
+    /// Gathered full momentum (leader input on full steps).
+    full: Tensor,
+    /// Assembled update delta: leader output on full steps; assembled
+    /// from the per-rank update shards on block steps.
+    update: Tensor,
 }
 
 /// Distributed MuonBP over a simulated DP x TP cluster.
@@ -123,10 +220,24 @@ pub struct DistMuon {
     cfg: MuonCfg,
     metas: Vec<ParamMeta>,
     specs: Vec<Option<ShardSpec>>,
+    /// Matrix ordinal -> param index (fixed at build; the step loop never
+    /// recomputes it).
+    matrix_idx: Vec<usize>,
     /// [tp_rank][matrix_ordinal] momentum shard.
     rank_momenta: Vec<Vec<Tensor>>,
+    /// [tp_rank][matrix_ordinal] grad-shard staging buffer.
+    rank_grads: Vec<Vec<Tensor>>,
+    /// [tp_rank][matrix_ordinal] block-step update shard.
+    rank_updates: Vec<Vec<Tensor>>,
+    /// Per-matrix leader arenas, aligned with params (None = AdamW scope).
+    scratch: Vec<Option<DistScratch>>,
+    /// [dp_rank][param] all-reduce accumulators (empty when dp == 1).
+    dp_acc: Vec<Vec<Tensor>>,
+    /// Leader-phase NS arena; its GEMM/syrk row blocks fan out across the
+    /// pool because the leader runs on the main thread, not a rank task.
+    ws: NsWorkspace,
     adam: AdamW,
-    orth: OrthFn,
+    backend: DistBackend,
     t: u64,
     last_opt_bytes: u64,
 }
@@ -149,139 +260,162 @@ impl DistMuon {
     pub fn comm_stats(&self) -> (CommStats, CommStats) {
         (self.tp_comm.stats(), self.dp_comm.stats())
     }
-
-    /// Gradient all-reduce across the DP group (phase 1). Every DP rank
-    /// holds the same replica here (batch-split grads average to exactly
-    /// the full-batch grad — see DESIGN.md §1), so payloads are real and
-    /// results bit-identical. Rank tasks run concurrently on the
-    /// persistent pool (they rendezvous inside the collective).
-    fn dp_allreduce(&self, grads: &[Tensor]) -> Vec<Tensor> {
-        if self.mesh.dp <= 1 {
-            return grads.to_vec();
-        }
-        let comm = &self.dp_comm;
-        let dp = self.mesh.dp;
-        let mut out = Pool::global().run_concurrent_map(dp, |r, _arena| {
-            grads
-                .iter()
-                .map(|g| comm.all_reduce_mean(r, g.clone()))
-                .collect::<Vec<_>>()
-        });
-        out.swap_remove(0)
-    }
-
-    /// TP optimizer phase (phase 2): returns the per-matrix update deltas
-    /// (already RMS-matched and ready for `param -= eta * delta`).
-    fn tp_phase(
-        &mut self,
-        grads: &[Tensor],
-        full: bool,
-    ) -> Vec<Option<Tensor>> {
-        let tp = self.mesh.tp;
-        let comm = &self.tp_comm;
-        let specs = &self.specs;
-        let metas = &self.metas;
-        let orth = &self.orth;
-        let mu = self.cfg.momentum as f32;
-        let rms_beta = self.cfg.rms_beta;
-        // Matrix ordinal -> param index map.
-        let matrix_idx: Vec<usize> = metas
-            .iter()
-            .enumerate()
-            .filter(|(_, m)| m.kind == ParamKind::Matrix)
-            .map(|(i, _)| i)
-            .collect();
-
-        // One task per TP rank on the persistent pool. run_concurrent_map
-        // guarantees all ranks run simultaneously (they rendezvous in
-        // gather/scatter) and pins rank i to worker i, so each rank's
-        // thread-local NsWorkspace stays warm across steps.
-        let momenta_ptr = SendPtr(self.rank_momenta.as_mut_ptr());
-        let rank_updates: Vec<Vec<Tensor>> =
-            Pool::global().run_concurrent_map(tp, |rank, _arena| {
-                // SAFETY: task `rank` is the sole user of
-                // `rank_momenta[rank]`; the map joins all tasks before
-                // `rank_momenta` is touched again.
-                let momenta: &mut Vec<Tensor> =
-                    unsafe { &mut *momenta_ptr.0.add(rank) };
-                let orth = Arc::clone(orth);
-                let mut updates = Vec::with_capacity(momenta.len());
-                for (ord, &pidx) in matrix_idx.iter().enumerate() {
-                    let spec = specs[pidx].as_ref().unwrap();
-                    let block_id = rank.min(spec.num_blocks() - 1);
-                    // M_t^(m) = μ M_{t-1}^(m) + G_t^(m)
-                    let g_shard = shard(&grads[pidx], spec, block_id);
-                    momenta[ord].scale_add(mu, 1.0, &g_shard);
-                    let upd = if full && spec.num_blocks() > 1 {
-                        // Gather momentum shards -> leader orth ->
-                        // scatter update shards (Alg. 1 lines 6-9).
-                        let gathered =
-                            comm.gather_to(rank, 0, momenta[ord].clone());
-                        let parts = gathered.map(|mut shards| {
-                            // Ranks beyond the block count hold
-                            // replicas (dim < tp clamp); drop them.
-                            shards.truncate(spec.num_blocks());
-                            let m_full = unshard(&shards, spec);
-                            let mut u = orth(&m_full);
-                            u.scale(rms_match_scale(
-                                m_full.m(),
-                                m_full.n(),
-                                rms_beta,
-                            ) as f32);
-                            let mut parts =
-                                crate::shard::shard_all(&u, spec);
-                            while parts.len() < comm.world() {
-                                parts.push(parts.last().unwrap().clone());
-                            }
-                            parts
-                        });
-                        comm.scatter_from(rank, 0, parts)
-                    } else {
-                        // Local block orthogonalization (lines 11-13).
-                        let mut u = orth(&momenta[ord]);
-                        u.scale(rms_match_scale(
-                            momenta[ord].m(),
-                            momenta[ord].n(),
-                            rms_beta,
-                        ) as f32);
-                        u
-                    };
-                    updates.push(upd);
-                }
-                updates
-            });
-
-        // Reassemble per-param full update deltas from rank shards.
-        let mut out: Vec<Option<Tensor>> = vec![None; metas.len()];
-        for (ord, &pidx) in matrix_idx.iter().enumerate() {
-            let spec = self.specs[pidx].as_ref().unwrap();
-            let blocks: Vec<Tensor> = (0..spec.num_blocks())
-                .map(|b| rank_updates[b.min(tp - 1)][ord].clone())
-                .collect();
-            out[pidx] = Some(unshard(&blocks, spec));
-        }
-        out
-    }
 }
 
 impl Optimizer for DistMuon {
     fn step(&mut self, params: &mut [Tensor], grads: &[Tensor], lr: f64) {
+        assert_eq!(params.len(), self.metas.len());
+        // Explicit arity check: with dp > 1 a short grads slice would
+        // otherwise silently zip-truncate against dp_acc and feed stale
+        // accumulator contents to the truncated params.
+        assert_eq!(grads.len(), self.metas.len());
         self.t += 1;
         let full = self.cfg.period.is_full_step(self.t - 1);
-        let eta =
-            if full { lr } else { lr * self.cfg.eta_block_ratio };
-
+        let eta = if full { lr } else { lr * self.cfg.eta_block_ratio };
         let tp_before = self.tp_comm.stats().total_bytes();
-        let grads = self.dp_allreduce(grads);
-        let deltas = self.tp_phase(&grads, full);
 
+        // ---- Phase 0: DP gradient sync. Every DP rank holds the same
+        // replica (batch-split grads average to exactly the full-batch
+        // grad), so payloads are real and results bit-identical. Rank
+        // tasks run concurrently on the pool and rendezvous inside the
+        // allocation-free pool-native collective.
+        if self.mesh.dp > 1 {
+            let comm = &self.dp_comm;
+            let acc_ptr = SendPtr(self.dp_acc.as_mut_ptr());
+            Pool::global().run_concurrent(self.mesh.dp, |r, _arena| {
+                // SAFETY: task r is the sole user of `dp_acc[r]`; the map
+                // joins all tasks before `dp_acc` is touched again.
+                let acc: &mut Vec<Tensor> = unsafe { &mut *acc_ptr.0.add(r) };
+                for (g, dst) in grads.iter().zip(acc.iter_mut()) {
+                    comm.all_reduce_mean_into(r, g, dst);
+                }
+            });
+        }
+        let grads: &[Tensor] =
+            if self.mesh.dp > 1 { &self.dp_acc[0] } else { grads };
+
+        // ---- Phase 1: pooled TP rank tasks — momentum shard update, and
+        // on block steps the per-block orthogonalization (each rank in
+        // its worker's warm arena). No task rendezvous is needed: ranks
+        // touch disjoint arenas, and the fan-out join *is* the gather
+        // rendezvous for the leader phase.
+        {
+            let specs = &self.specs;
+            let matrix_idx = &self.matrix_idx;
+            let backend = &self.backend;
+            let mu = self.cfg.momentum as f32;
+            let rms_beta = self.cfg.rms_beta;
+            let momenta_ptr = SendPtr(self.rank_momenta.as_mut_ptr());
+            let grads_ptr = SendPtr(self.rank_grads.as_mut_ptr());
+            let upd_ptr = SendPtr(self.rank_updates.as_mut_ptr());
+            Pool::global().fanout(self.mesh.tp, |rank, arena| {
+                // SAFETY: task `rank` is the sole user of row `rank` of
+                // each per-rank arena; the fan-out joins before any row
+                // is read again.
+                let momenta = unsafe { &mut *momenta_ptr.0.add(rank) };
+                let gbufs = unsafe { &mut *grads_ptr.0.add(rank) };
+                let ups = unsafe { &mut *upd_ptr.0.add(rank) };
+                for (ord, &pidx) in matrix_idx.iter().enumerate() {
+                    let spec = specs[pidx].as_ref().unwrap();
+                    let block_id = rank.min(spec.num_blocks() - 1);
+                    // M_t^(m) = μ M_{t-1}^(m) + G_t^(m)
+                    shard_into(&grads[pidx], spec, block_id, &mut gbufs[ord]);
+                    momenta[ord].scale_add(mu, 1.0, &gbufs[ord]);
+                    if full {
+                        // Full step: the leader phase orthogonalizes
+                        // after the join (Alg. 1 lines 6-9).
+                        continue;
+                    }
+                    // Local block orthogonalization (lines 11-13), RMS-
+                    // matched with the *block* dims (paper §3.2).
+                    match backend {
+                        DistBackend::Host { steps, coeffs } => {
+                            arena.ns.load(&momenta[ord]);
+                            arena.ns.iterate_threads(*steps, *coeffs, 1);
+                            arena.ns.store_into(&mut ups[ord]);
+                        }
+                        DistBackend::Custom(f) => {
+                            let u = f(&momenta[ord]);
+                            ups[ord].data_mut().copy_from_slice(u.data());
+                        }
+                    }
+                    let (bm, bn) = (momenta[ord].m(), momenta[ord].n());
+                    ups[ord]
+                        .scale(rms_match_scale(bm, bn, rms_beta) as f32);
+                }
+            });
+        }
+
+        // ---- Phase 2 (full steps): leader orthogonalization OUTSIDE the
+        // rank tasks. The full-matrix Newton–Schulz threads its GEMM/syrk
+        // row blocks across the entire pool (`NsWorkspace::iterate` via
+        // the shared `Muon::full_orth_into`), instead of running inline
+        // single-core inside a rank task while peers idle.
+        // ---- Phase 3 (block steps): reassemble deltas from rank shards.
+        for (ord, &pidx) in self.matrix_idx.iter().enumerate() {
+            let spec = self.specs[pidx].as_ref().unwrap();
+            let nb = spec.num_blocks();
+            let sc = self.scratch[pidx].as_mut().unwrap();
+            if full {
+                // Gather: the phase-1 join guarantees every momentum
+                // shard is final; replica deposits (ranks >= nb on a
+                // clamped grid) move no payload and are not charged.
+                unshard_from(spec, &mut sc.full, |b| {
+                    &self.rank_momenta[b][ord]
+                });
+                let real_bytes: usize =
+                    (0..nb).map(|b| spec.block_bytes(b)).sum();
+                if nb > 1 {
+                    self.tp_comm
+                        .charge_collective(CollectiveKind::Gather, real_bytes);
+                }
+                let DistScratch { full: m_full, update } = sc;
+                match &self.backend {
+                    DistBackend::Host { steps, coeffs } => {
+                        Muon::full_orth_into(
+                            &mut self.ws,
+                            m_full,
+                            *steps,
+                            *coeffs,
+                            self.cfg.rms_beta,
+                            update,
+                        );
+                    }
+                    DistBackend::Custom(f) => {
+                        let u = f(m_full);
+                        update.data_mut().copy_from_slice(u.data());
+                        update.scale(rms_match_scale(
+                            spec.m,
+                            spec.n,
+                            self.cfg.rms_beta,
+                        ) as f32);
+                    }
+                }
+                // Scatter of the update shards back to the owning ranks
+                // (replica ranks excluded, as above). The shards are
+                // read out of `update` directly — an exact-copy
+                // roundtrip, so skipping the re-assembly is bit-free.
+                if nb > 1 {
+                    self.tp_comm.charge_collective(
+                        CollectiveKind::Scatter,
+                        real_bytes,
+                    );
+                }
+            } else {
+                unshard_from(spec, &mut sc.update, |b| {
+                    &self.rank_updates[b][ord]
+                });
+            }
+        }
+
+        // ---- Apply: matrix params take the assembled delta; everything
+        // else is delegated to AdamW on the (replicated) leader.
         for i in 0..params.len() {
-            match &deltas[i] {
-                Some(u) => {
-                    let decay =
-                        (1.0 - eta * self.cfg.weight_decay) as f32;
+            match &self.scratch[i] {
+                Some(sc) => {
+                    let decay = (1.0 - eta * self.cfg.weight_decay) as f32;
                     params[i].scale(decay);
-                    params[i].axpy(-(eta as f32), u);
+                    params[i].axpy(-(eta as f32), &sc.update);
                 }
                 None => {
                     let t = self.t;
@@ -316,43 +450,138 @@ impl Optimizer for DistMuon {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::comm::CollectiveKind;
-    use crate::optim::muon::Muon;
     use crate::optim::testutil::Quad;
     use crate::utils::prop;
+    use crate::utils::rng::Rng;
 
     fn builder(dp: usize, tp: usize, period: Period) -> DistMuonBuilder {
         DistMuonBuilder::new(Mesh::new(dp, tp).unwrap(), period)
     }
 
+    fn assert_params_match(
+        a: &[Tensor],
+        b: &[Tensor],
+        ctx: &dyn std::fmt::Debug,
+        step: usize,
+    ) {
+        for (x, y) in a.iter().zip(b) {
+            for (p, q) in x.data().iter().zip(y.data()) {
+                assert!(
+                    (p - q).abs() < 1e-5,
+                    "{ctx:?} step {step}: {p} vs {q}"
+                );
+            }
+        }
+    }
+
     /// The central equivalence: the distributed coordinator must produce
-    /// *identical* parameters to the single-process reference optimizer.
+    /// *identical* parameters to the single-process reference optimizer —
+    /// across periods AND layouts (column, row, 2-D grid).
     #[test]
     fn matches_reference_muon_exactly() {
-        for period in [Period::Every(1), Period::Every(3), Period::Never] {
-            let quad = Quad::new(11);
-            let mut dist = builder(2, 4, period).build(&quad.metas);
-            let mut refr = Muon::new(
-                &quad.metas,
-                MuonCfg::default_with(period, 4),
-            );
-            let mut p_dist = quad.init(3);
-            let mut p_ref = quad.init(3);
-            for step in 0..7 {
-                let g = quad.grads(&p_dist);
-                dist.step(&mut p_dist, &g, 0.02);
-                let g2 = quad.grads(&p_ref);
-                refr.step(&mut p_ref, &g2, 0.02);
-                for (a, b) in p_dist.iter().zip(&p_ref) {
-                    for (x, y) in a.data().iter().zip(b.data()) {
-                        assert!(
-                            (x - y).abs() < 1e-5,
-                            "{period:?} step {step}: {x} vs {y}"
-                        );
-                    }
+        let layouts = [
+            Layout::TpColumn,
+            Layout::TpRow,
+            Layout::TpGrid { rows: 2, cols: 2 },
+        ];
+        for layout in layouts {
+            for period in
+                [Period::Every(1), Period::Every(3), Period::Never]
+            {
+                let quad = Quad::new(11);
+                let mut dist = builder(2, 4, period)
+                    .layout(layout)
+                    .build(&quad.metas);
+                let mut cfg = MuonCfg::default_with(period, 4);
+                cfg.layout = layout;
+                let mut refr = Muon::new(&quad.metas, cfg);
+                let mut p_dist = quad.init(3);
+                let mut p_ref = quad.init(3);
+                for step in 0..7 {
+                    let g = quad.grads(&p_dist);
+                    dist.step(&mut p_dist, &g, 0.02);
+                    let g2 = quad.grads(&p_ref);
+                    refr.step(&mut p_ref, &g2, 0.02);
+                    assert_params_match(
+                        &p_dist,
+                        &p_ref,
+                        &(layout, period),
+                        step,
+                    );
                 }
             }
         }
+    }
+
+    /// Clamped mesh (tp > matrix dim): replica ranks must not perturb the
+    /// math — the coordinator still matches the single-process reference.
+    #[test]
+    fn clamped_mesh_matches_reference() {
+        let metas = [
+            ParamMeta::new("thin", &[9, 2], ParamKind::Matrix),
+            ParamMeta::new("wide", &[2, 9], ParamKind::Matrix),
+        ];
+        let mut rng = Rng::new(13);
+        let targets: Vec<Tensor> = metas
+            .iter()
+            .map(|m| Tensor::randn(&m.shape, 1.0, &mut rng))
+            .collect();
+        let grads_of = |params: &[Tensor]| -> Vec<Tensor> {
+            params
+                .iter()
+                .zip(&targets)
+                .map(|(p, t)| {
+                    let mut g = p.clone();
+                    g.axpy(-1.0, t);
+                    g
+                })
+                .collect()
+        };
+        for period in [Period::Every(2), Period::Never] {
+            let mut dist = builder(2, 4, period).build(&metas);
+            let mut refr =
+                Muon::new(&metas, MuonCfg::default_with(period, 4));
+            let mut rng = Rng::new(5);
+            let mut p_dist: Vec<Tensor> = metas
+                .iter()
+                .map(|m| Tensor::randn(&m.shape, 1.0, &mut rng))
+                .collect();
+            let mut p_ref = p_dist.clone();
+            for step in 0..5 {
+                let g = grads_of(&p_dist);
+                dist.step(&mut p_dist, &g, 0.02);
+                let g2 = grads_of(&p_ref);
+                refr.step(&mut p_ref, &g2, 0.02);
+                assert_params_match(&p_dist, &p_ref, &period, step);
+            }
+        }
+    }
+
+    /// Regression for the clamped-shard byte over-accounting bug: tp=4
+    /// over an 8x2 TpColumn matrix has only 2 real column blocks; ranks
+    /// 2-3 deposit replicas, which a real cluster would not move. One full
+    /// step must charge exactly one matrix for the gather and one for the
+    /// scatter (the old accounting summed all 4 deposits — 2x).
+    #[test]
+    fn clamped_shard_bytes_exclude_replicas() {
+        let metas = [ParamMeta::new("w", &[8, 2], ParamKind::Matrix)];
+        let mut dist = builder(1, 4, Period::Every(1)).build(&metas);
+        let mut params = vec![Tensor::zeros(&[8, 2])];
+        let mut rng = Rng::new(3);
+        let grads = vec![Tensor::randn(&[8, 2], 1.0, &mut rng)];
+        dist.step(&mut params, &grads, 0.01);
+        let (tp, _) = dist.comm_stats();
+        let matrix_bytes = 8 * 2 * 4u64;
+        assert_eq!(
+            tp.bytes(CollectiveKind::Gather),
+            matrix_bytes,
+            "replica shards charged as gather payload"
+        );
+        assert_eq!(
+            tp.bytes(CollectiveKind::Scatter),
+            matrix_bytes,
+            "replica shards charged as scatter payload"
+        );
     }
 
     #[test]

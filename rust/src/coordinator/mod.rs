@@ -2,17 +2,25 @@
 //! DP x TP cluster running MuonBP's block-periodic schedule with actual
 //! collectives (rendezvous + byte accounting, `comm/`).
 //!
-//! Step anatomy (Alg. 1 + §3.2 "Communication cost of MuonBP"):
+//! Step anatomy (Alg. 1 + §3.2 "Communication cost of MuonBP"), run as a
+//! **phased schedule** (see `cluster.rs` module docs for who runs where):
 //! 1. DP phase — gradient all-reduce across the DP group (always present,
-//!    charged to the training stack, not the optimizer).
+//!    charged to the training stack, not the optimizer). Pooled rank
+//!    tasks rendezvous on the communicator's pool-native barrier and
+//!    reduce into preallocated accumulators.
 //! 2. TP phase — per hidden matrix, each TP rank owns a momentum *shard*
 //!    (exactly its model-parallel block):
-//!      block step: update shard momentum, orthogonalize locally (NsEngine),
-//!                  RMS-match with the block dims, apply with η_block.
-//!                  ZERO optimizer bytes on the wire.
-//!      full step:  gather momentum shards to the TP leader, orthogonalize
-//!                  the full matrix, RMS-match with full dims, scatter the
-//!                  update shards, apply with η_full.
+//!      block step: rank tasks update shard momentum and orthogonalize
+//!                  locally, RMS-match with the block dims, apply with
+//!                  η_block. ZERO optimizer bytes on the wire.
+//!      full step:  rank tasks update shard momentum; after the pool join
+//!                  (the gather rendezvous) the **leader runs on the main
+//!                  thread**, orthogonalizing the full matrix with its
+//!                  Newton–Schulz GEMMs fanned across the entire worker
+//!                  pool, RMS-matching with full dims, and scattering the
+//!                  update shards (replica shards of clamped grids are
+//!                  excluded from the byte accounting), applied with
+//!                  η_full.
 //! 3. Non-matrix params — AdamW on the leader (replicated, coordinate-wise,
 //!    no model-parallel traffic).
 //!

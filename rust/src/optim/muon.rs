@@ -75,7 +75,11 @@ pub struct MuonCfg {
     pub momentum: f64,
     pub ns_steps: usize,
     pub coeffs: NsCoeffs,
-    /// η_block / η_full ratio. Theory (§3.2): optimal in [1/√(rc), 1].
+    /// η_block / η_full ratio. **Defaults to 1.0 — tied stepsizes.** The
+    /// §3.2 theory (Theorem 2) puts the optimum in `[1/√(rc), 1]` for an
+    /// r×c block grid: tying the stepsizes degrades the convergence rate
+    /// from the harmonic to the arithmetic mean of (L_op, L_B), so sweeps
+    /// reproducing the paper's Fig. 4 should lower this below 1.
     pub eta_block_ratio: f64,
     /// RMS-matching β (update RMS target, Liu et al. 2025).
     pub rms_beta: f64,
@@ -404,6 +408,29 @@ impl Muon {
         }
     }
 
+    /// Full-matrix orthogonalized update into a preallocated output:
+    /// load → pooled NS iterate (GEMM/syrk row blocks fan out across the
+    /// persistent worker pool) → store + *full-dims* RMS matching. This is
+    /// the shared **leader-orth helper**: the host full step of
+    /// [`Muon::step`] and the distributed coordinator's leader phase both
+    /// route through it, so the two produce bit-identical updates from
+    /// identical momenta — and both are multicore, because neither caller
+    /// runs it from inside a pool worker.
+    pub(crate) fn full_orth_into(
+        ws: &mut NsWorkspace,
+        momentum: &Tensor,
+        steps: usize,
+        coeffs: NsCoeffs,
+        rms_beta: f64,
+        out: &mut Tensor,
+    ) {
+        ws.load(momentum);
+        ws.iterate(steps, coeffs);
+        ws.store_into(out);
+        let s = rms_match_scale(momentum.m(), momentum.n(), rms_beta);
+        out.scale(s as f32);
+    }
+
     /// Host-backend orthogonalized update, written entirely into the
     /// preallocated `sc` buffers (zero heap allocations once every arena is
     /// warm). Bit-identical to [`Muon::orth_update_with`] over the host
@@ -421,13 +448,12 @@ impl Muon {
         sc: &mut MatrixScratch,
     ) {
         if full || spec.num_blocks() == 1 {
-            // Full orthogonalization: one big NS whose GEMM/syrk row
-            // blocks fan out across the pool — the multicore full step.
-            ws.load(momentum);
-            ws.iterate(steps, coeffs);
-            ws.store_into(&mut sc.update);
-            let s = rms_match_scale(momentum.m(), momentum.n(), rms_beta);
-            sc.update.scale(s as f32);
+            // Full orthogonalization through the shared leader-orth
+            // helper — one big NS whose GEMM/syrk row blocks fan out
+            // across the pool (the multicore full step).
+            Muon::full_orth_into(
+                ws, momentum, steps, coeffs, rms_beta, &mut sc.update,
+            );
             return;
         }
         let nb = spec.num_blocks();

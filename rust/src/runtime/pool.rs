@@ -3,7 +3,9 @@
 //!
 //! Before this module, four sites re-spawned `thread::scope` threads on
 //! every call: `gemm_into` row panels, `Muon::orth_update_with` block
-//! fan-out, and the coordinator's `dp_allreduce` / `tp_phase` rank threads.
+//! fan-out, and the coordinator's DP/TP rank threads (now the phased
+//! `DistMuon::step` — DP collectives via [`Pool::run_concurrent`], TP
+//! rank work via [`Pool::fanout`]).
 //! Each spawn re-warmed a fresh thread-local `NsWorkspace`, so the
 //! zero-alloc property held only *within* one call, and full-step
 //! Newton–Schulz could never thread its inner GEMMs (scoped spawns inside
@@ -30,9 +32,10 @@
 //!
 //! Pool parallelism lives at the *outermost* dispatch only. A [`Pool::fanout`]
 //! issued from inside a pool worker runs inline (sequentially, on that
-//! worker) — same results, no deadlock. [`Pool::run_concurrent_map`] tasks
-//! are allowed to rendezvous with each other (collective phases), so a
-//! nested call falls back to freshly scoped threads instead of inlining.
+//! worker) — same results, no deadlock. [`Pool::run_concurrent_map`] /
+//! [`Pool::run_concurrent`] tasks are allowed to rendezvous with each
+//! other (collective phases), so a nested call falls back to freshly
+//! scoped threads instead of inlining.
 //!
 //! # Shutdown
 //!
@@ -357,18 +360,41 @@ impl Pool {
         T: Send,
         F: Fn(usize, &mut WorkerArena) -> T + Sync,
     {
-        if n == 0 {
-            return Vec::new();
-        }
+        // Thin wrapper over run_concurrent: same concurrency/fallback
+        // rules, plus per-task result slots written through disjoint
+        // SendPtr offsets.
         let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+        let slots = SendPtr(out.as_mut_ptr());
+        self.run_concurrent(n, |i, arena| {
+            let v = f(i, arena);
+            // SAFETY: task i writes slot i exactly once; slots are
+            // disjoint and `out` outlives the join inside run_concurrent.
+            unsafe { *slots.0.add(i) = Some(v) };
+        });
+        out.into_iter()
+            .map(|o| o.expect("pool: task produced no result"))
+            .collect()
+    }
+
+    /// [`Pool::run_concurrent_map`] for tasks with no result: the same
+    /// concurrency guarantee (task `i` pinned to worker `i`, every task
+    /// live simultaneously, tasks may rendezvous with each other) without
+    /// the result-slot vector — in the steady state a call performs zero
+    /// heap allocations, since dispatch is pointer publication only. The
+    /// phased coordinator runs its DP collective phase through this every
+    /// step, which is part of what lets a warm `DistMuon::step` allocate
+    /// nothing. Falls back to freshly scoped threads under the same
+    /// conditions as `run_concurrent_map` (nested caller, size-pinned or
+    /// degraded pool).
+    pub fn run_concurrent<F>(&self, n: usize, f: F)
+    where
+        F: Fn(usize, &mut WorkerArena) + Sync,
+    {
+        if n == 0 {
+            return;
+        }
         if n == 1 {
-            let slots = SendPtr(out.as_mut_ptr());
-            let f = &f;
-            run_inline(1, &move |i: usize, arena: &mut WorkerArena| {
-                let v = f(i, arena);
-                // SAFETY: single task, single slot, joined before return.
-                unsafe { *slots.0.add(i) = Some(v) };
-            });
+            run_inline(1, &f);
         } else if in_pool_worker() || !self.try_ensure_workers(n) {
             // Rendezvous tasks must not be serialized (they would deadlock
             // waiting for each other), so the nested / size-pinned /
@@ -378,28 +404,18 @@ impl Pool {
             // the pool — a nested dispatch would block on the submit lock
             // an enclosing fan-out may already hold (deadlock).
             thread::scope(|s| {
-                for (i, slot) in out.iter_mut().enumerate() {
+                for i in 0..n {
                     let f = &f;
                     s.spawn(move || {
                         IN_POOL_WORKER.with(|c| c.set(true));
                         let mut arena = WorkerArena::new();
-                        *slot = Some(f(i, &mut arena));
+                        f(i, &mut arena);
                     });
                 }
             });
         } else {
-            let slots = SendPtr(out.as_mut_ptr());
-            let write = |i: usize, arena: &mut WorkerArena| {
-                let v = f(i, arena);
-                // SAFETY: task i writes slot i exactly once; slots are
-                // disjoint and `out` outlives the dispatch join.
-                unsafe { *slots.0.add(i) = Some(v) };
-            };
-            self.dispatch(n, n, &write);
+            self.dispatch(n, n, &f);
         }
-        out.into_iter()
-            .map(|o| o.expect("pool: task produced no result"))
-            .collect()
     }
 
     fn dispatch<F>(&self, ntasks: usize, workers: usize, f: &F)

@@ -109,6 +109,25 @@ pub fn unshard_into(blocks: &[Tensor], spec: &ShardSpec, out: &mut Tensor) {
     }
 }
 
+/// Assemble `out` from blocks produced by `block_of` (block id → tensor):
+/// the gather-free sibling of [`unshard_into`] for callers whose blocks
+/// live in non-contiguous storage — the phased coordinator's leader phase
+/// reads momentum/update blocks straight out of per-rank arenas without
+/// collecting them into a slice first (zero allocations).
+pub fn unshard_from<'a>(
+    spec: &ShardSpec,
+    out: &mut Tensor,
+    block_of: impl Fn(usize) -> &'a Tensor,
+) {
+    assert_eq!((out.m(), out.n()), (spec.m, spec.n), "unshard_from shape");
+    for idx in 0..spec.num_blocks() {
+        let b = block_of(idx);
+        let ((r0, r1), (c0, c1)) = spec.ranges(idx);
+        assert_eq!((b.m(), b.n()), (r1 - r0, c1 - c0), "unshard_from block");
+        out.set_block(r0, c0, b);
+    }
+}
+
 /// Write one block back into the full matrix in place.
 pub fn write_shard(t: &mut Tensor, spec: &ShardSpec, idx: usize, block: &Tensor) {
     let ((r0, r1), (c0, c1)) = spec.ranges(idx);
@@ -188,6 +207,18 @@ mod tests {
         assert_eq!(spec.block_shape(0), (6, 6));
         let blocks = shard_all(&t, &spec);
         assert_eq!(unshard(&blocks, &spec), t);
+    }
+
+    #[test]
+    fn unshard_from_matches_unshard() {
+        let mut rng = Rng::new(9);
+        let t = Tensor::randn(&[10, 14], 1.0, &mut rng);
+        let spec =
+            ShardSpec::new(Layout::TpGrid { rows: 2, cols: 3 }, 6, 10, 14);
+        let blocks = shard_all(&t, &spec);
+        let mut out = Tensor::zeros(&[10, 14]);
+        unshard_from(&spec, &mut out, |b| &blocks[b]);
+        assert_eq!(out, t);
     }
 
     #[test]

@@ -123,6 +123,32 @@ fn rendezvous_growth_under_concurrent_fanouts() {
 }
 
 #[test]
+fn run_concurrent_rendezvous_without_results() {
+    // The no-result sibling of run_concurrent_map (the phased
+    // coordinator's DP phase): every task must be live simultaneously —
+    // a barrier inside the tasks only completes under true concurrency —
+    // and disjoint SendPtr writes must land exactly once per task.
+    let pool = Pool::new(1); // forces growth to n
+    let n = 4;
+    for round in 0..10 {
+        let mut out = vec![0usize; n];
+        let ptr = SendPtr(out.as_mut_ptr());
+        let arrived = AtomicUsize::new(0);
+        pool.run_concurrent(n, |i, _| {
+            arrived.fetch_add(1, Ordering::SeqCst);
+            while arrived.load(Ordering::SeqCst) < n {
+                std::thread::yield_now();
+            }
+            unsafe { *ptr.0.add(i) = i + 1 + 10 * round };
+        });
+        let want: Vec<usize> =
+            (0..n).map(|i| i + 1 + 10 * round).collect();
+        assert_eq!(out, want, "round {round}");
+    }
+    assert!(pool.workers() >= n);
+}
+
+#[test]
 fn shutdown_and_drop_ordering() {
     // Pools must join cleanly in every lifecycle: unused, after plain
     // fan-outs, after growth, and immediately after a burst of jobs from
