@@ -18,6 +18,15 @@ cargo build --release || exit 1
 step "tier-1: cargo test -q"
 cargo test -q || exit 1
 
+step "tier-1: forced-scalar dispatch (MUONBP_FORCE_SCALAR=1, lib tests)"
+# The GEMM microkernel dispatch is decided once per process, so the
+# default run above exercises whatever the CI machine's CPU detects
+# (AVX2+FMA on any modern x86_64). This second pass pins the scalar
+# fallback so BOTH maintained kernel bodies stay green: the in-process
+# property tests cover scalar-vs-SIMD agreement, this covers the
+# dispatch-level scalar path end to end.
+MUONBP_FORCE_SCALAR=1 cargo test -q --lib || exit 1
+
 step "tier-1: pool-stress suite (RUST_TEST_THREADS=16)"
 # Rendezvous / pool changes must not land untested under contention: the
 # high libtest thread count makes the test binaries themselves fight for

@@ -20,7 +20,10 @@ use std::sync::Arc;
 use muonbp::bench_util::{banner, save_bench_json, time_it};
 use muonbp::coordinator::DistMuonBuilder;
 use muonbp::costmodel::netmodel::NetModel;
-use muonbp::linalg::gemm::{gemm_into, gemm_into_blocked};
+use muonbp::linalg::gemm::{
+    active_kernel, gemm_into, gemm_into_blocked, gemm_into_with,
+    scalar_kernel, simd_kernel, KC, MC, NC,
+};
 use muonbp::linalg::matmul::{matmul, reference, syrk};
 use muonbp::linalg::newton_schulz::{
     newton_schulz, newton_schulz_reference, ns_flops, NsCoeffs, NsWorkspace,
@@ -37,6 +40,12 @@ use muonbp::utils::rng::Rng;
 
 fn main() {
     banner("perf: hot-path microbenchmarks");
+    println!(
+        "microkernel dispatch: {} (scalar oracle: {}, simd: {})",
+        active_kernel().name,
+        scalar_kernel().name,
+        simd_kernel().map_or("none detected", |k| k.name),
+    );
     let mut rng = Rng::new(0xBE);
     let mut records: Vec<Json> = Vec::new();
 
@@ -226,6 +235,7 @@ fn main() {
                     1,
                     n,
                     mc_unblocked,
+                    n, // nc >= n: NC blocking off
                 );
             },
         );
@@ -258,6 +268,153 @@ fn main() {
             flops / r_blk.mean_s / 1e9
         );
         records.push(r_blk.to_json("gemm-blocked", &shape, flops, speedup));
+    }
+
+    // 4c2. Microkernel dispatch: the scalar 4x16 oracle vs the detected
+    //      explicit-SIMD kernel — identical packing/blocking machinery,
+    //      only the register tile differs. Single-thread so the
+    //      comparison isolates the kernel (this is the scalar-vs-SIMD
+    //      section of BENCH_hotpath.json; MUONBP_FORCE_SCALAR pins the
+    //      dispatched entry points to the scalar row).
+    for n in [512usize, 1024, 2048] {
+        let a = Tensor::randn(&[n, n], 1.0, &mut rng);
+        let b = Tensor::randn(&[n, n], 1.0, &mut rng);
+        let mut c = Tensor::zeros(&[n, n]);
+        let (mut pa, mut pb) = (Vec::new(), Vec::new());
+        let flops = 2.0 * (n as f64).powi(3);
+        let shape = format!("{n}x{n}x{n}");
+        let r_scalar = time_it(
+            &format!("gemm scalar-kernel 1-thread {shape}"),
+            0,
+            1,
+            || {
+                gemm_into_with(
+                    scalar_kernel(),
+                    c.data_mut(),
+                    n,
+                    n,
+                    n,
+                    a.data(),
+                    false,
+                    b.data(),
+                    false,
+                    None,
+                    &mut pa,
+                    &mut pb,
+                    1,
+                    KC,
+                    MC,
+                    NC,
+                );
+            },
+        );
+        println!("    -> {:.2} GFLOP/s", flops / r_scalar.mean_s / 1e9);
+        records.push(r_scalar.to_json("gemm-scalar", &shape, flops, 0.0));
+        match simd_kernel() {
+            Some(simd) => {
+                let r_simd = time_it(
+                    &format!("gemm {} 1-thread {shape}", simd.name),
+                    0,
+                    1,
+                    || {
+                        gemm_into_with(
+                            simd,
+                            c.data_mut(),
+                            n,
+                            n,
+                            n,
+                            a.data(),
+                            false,
+                            b.data(),
+                            false,
+                            None,
+                            &mut pa,
+                            &mut pb,
+                            1,
+                            KC,
+                            MC,
+                            NC,
+                        );
+                    },
+                );
+                let speedup = r_scalar.mean_s / r_simd.mean_s;
+                println!(
+                    "    -> {:.2} GFLOP/s ({speedup:.2}x vs scalar)",
+                    flops / r_simd.mean_s / 1e9
+                );
+                records.push(
+                    r_simd.to_json("gemm-simd", &shape, flops, speedup),
+                );
+            }
+            None => println!("    (no SIMD kernel detected on this CPU)"),
+        }
+    }
+
+    // 4c3. NC column blocking on/off with the dispatched kernel: nc = NC
+    //      keeps the per-row-block C/B working set at MC x NC, nc >= n
+    //      streams all columns per k slab (the pre-NC nest). Wide n so
+    //      the difference is meaningful; single-thread.
+    {
+        let (m, k, n) = (1024usize, 1024usize, 4096usize);
+        let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+        let b = Tensor::randn(&[k, n], 1.0, &mut rng);
+        let mut c = Tensor::zeros(&[m, n]);
+        let (mut pa, mut pb) = (Vec::new(), Vec::new());
+        let flops = 2.0 * m as f64 * k as f64 * n as f64;
+        let shape = format!("{m}x{k}x{n}");
+        let r_off = time_it(
+            &format!("gemm NC-off 1-thread {shape}"),
+            0,
+            1,
+            || {
+                gemm_into_blocked(
+                    c.data_mut(),
+                    m,
+                    k,
+                    n,
+                    a.data(),
+                    false,
+                    b.data(),
+                    false,
+                    None,
+                    &mut pa,
+                    &mut pb,
+                    1,
+                    KC,
+                    MC,
+                    n, // nc >= n: NC loop disabled
+                );
+            },
+        );
+        println!("    -> {:.2} GFLOP/s", flops / r_off.mean_s / 1e9);
+        records.push(r_off.to_json("gemm-nc-off", &shape, flops, 0.0));
+        let r_on = time_it(
+            &format!("gemm NC-on 1-thread {shape}"),
+            0,
+            1,
+            || {
+                gemm_into(
+                    c.data_mut(),
+                    m,
+                    k,
+                    n,
+                    a.data(),
+                    false,
+                    b.data(),
+                    false,
+                    None,
+                    &mut pa,
+                    &mut pb,
+                    1,
+                );
+            },
+        );
+        let speedup = r_off.mean_s / r_on.mean_s;
+        println!(
+            "    -> {:.2} GFLOP/s ({speedup:.2}x vs NC-off)",
+            flops / r_on.mean_s / 1e9
+        );
+        records.push(r_on.to_json("gemm-nc-on", &shape, flops, speedup));
     }
 
     // 4d. Distributed full step: the phased coordinator's pooled-leader

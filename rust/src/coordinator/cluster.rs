@@ -12,7 +12,12 @@
 //! phase 0  DP sync     pooled rank tasks; pool-native all_reduce_mean_into
 //!                      (rendezvous barrier, preallocated accumulators)
 //! phase 1  TP ranks    pooled fan-out: momentum shard update; on block
-//!                      steps, per-block NS in the worker's arena
+//!                      steps, per-block NS in the worker's arena —
+//!                      once per DISTINCT block: replica ranks of a
+//!                      clamped grid (rank >= num_blocks) skip the NS
+//!                      and receive a copy of the owner's update after
+//!                      the join (the old schedule re-ran the identical
+//!                      NS on every replica, pure wasted compute)
 //! phase 2  TP leader   MAIN THREAD, after the phase-1 join: assemble the
 //!                      full momentum, run NsWorkspace::iterate — its
 //!                      GEMM/syrk row blocks fan out across the ENTIRE
@@ -48,6 +53,7 @@
 //! Injected engines (`DistMuonBuilder::ns_engine`) keep the allocating
 //! compat path, since an `OrthFn` returns fresh tensors by contract.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 use crate::comm::{CollectiveKind, CommStats, Communicator};
@@ -187,6 +193,7 @@ impl DistMuonBuilder {
             ws: NsWorkspace::new(),
             adam: AdamW::new(metas),
             backend,
+            ns_calls: AtomicU64::new(0),
             t: 0,
             last_opt_bytes: 0,
         }
@@ -238,6 +245,11 @@ pub struct DistMuon {
     ws: NsWorkspace,
     adam: AdamW,
     backend: DistBackend,
+    /// Orthogonalizations issued so far: one per *distinct* block on
+    /// block steps (clamped-grid replicas deduplicated), one per matrix
+    /// on full steps (the leader). Atomic because block-step increments
+    /// happen inside the pooled rank fan-out.
+    ns_calls: AtomicU64,
     t: u64,
     last_opt_bytes: u64,
 }
@@ -259,6 +271,13 @@ impl DistMuon {
     /// sync that any optimizer pays).
     pub fn comm_stats(&self) -> (CommStats, CommStats) {
         (self.tp_comm.stats(), self.dp_comm.stats())
+    }
+
+    /// Newton–Schulz orthogonalizations issued so far — one per distinct
+    /// block on block steps (the clamped-grid dedup regression target:
+    /// replica ranks must NOT add calls), one per matrix on full steps.
+    pub fn ns_calls(&self) -> u64 {
+        self.ns_calls.load(Ordering::Relaxed)
     }
 }
 
@@ -303,6 +322,7 @@ impl Optimizer for DistMuon {
             let specs = &self.specs;
             let matrix_idx = &self.matrix_idx;
             let backend = &self.backend;
+            let ns_calls = &self.ns_calls;
             let mu = self.cfg.momentum as f32;
             let rms_beta = self.cfg.rms_beta;
             let momenta_ptr = SendPtr(self.rank_momenta.as_mut_ptr());
@@ -317,7 +337,8 @@ impl Optimizer for DistMuon {
                 let ups = unsafe { &mut *upd_ptr.0.add(rank) };
                 for (ord, &pidx) in matrix_idx.iter().enumerate() {
                     let spec = specs[pidx].as_ref().unwrap();
-                    let block_id = rank.min(spec.num_blocks() - 1);
+                    let nb = spec.num_blocks();
+                    let block_id = rank.min(nb - 1);
                     // M_t^(m) = μ M_{t-1}^(m) + G_t^(m)
                     shard_into(&grads[pidx], spec, block_id, &mut gbufs[ord]);
                     momenta[ord].scale_add(mu, 1.0, &gbufs[ord]);
@@ -326,8 +347,17 @@ impl Optimizer for DistMuon {
                         // after the join (Alg. 1 lines 6-9).
                         continue;
                     }
+                    if rank >= nb {
+                        // Clamped grid: this rank holds a *replica* of
+                        // block nb-1, so its Newton–Schulz would repeat
+                        // the owner's (rank nb-1) bit for bit. Skip it —
+                        // the owner's update is copied into this rank's
+                        // shard after the join.
+                        continue;
+                    }
                     // Local block orthogonalization (lines 11-13), RMS-
                     // matched with the *block* dims (paper §3.2).
+                    ns_calls.fetch_add(1, Ordering::Relaxed);
                     match backend {
                         DistBackend::Host { steps, coeffs } => {
                             arena.ns.load(&momenta[ord]);
@@ -344,6 +374,30 @@ impl Optimizer for DistMuon {
                         .scale(rms_match_scale(bm, bn, rms_beta) as f32);
                 }
             });
+        }
+
+        // ---- Phase 1.5 (block steps, clamped grids): copy the owner's
+        // orthogonalized update into the replica rank shards. Replica
+        // ranks skipped their NS in phase 1 — it would have recomputed
+        // rank nb-1's result bit for bit (the ROADMAP dedup follow-up).
+        // Phase 3 assembles the delta from block ids 0..nb only, so the
+        // copy is replica-state hygiene (what a real replica device
+        // would hold after a broadcast), not a correctness input — which
+        // is exactly why the duplicated NS work was pure waste.
+        if !full {
+            for (ord, &pidx) in self.matrix_idx.iter().enumerate() {
+                let spec = self.specs[pidx].as_ref().unwrap();
+                let nb = spec.num_blocks();
+                if nb >= self.mesh.tp {
+                    continue;
+                }
+                let (owners, replicas) =
+                    self.rank_updates.split_at_mut(nb);
+                let src = owners[nb - 1][ord].data();
+                for rep in replicas.iter_mut() {
+                    rep[ord].data_mut().copy_from_slice(src);
+                }
+            }
         }
 
         // ---- Phase 2 (full steps): leader orthogonalization OUTSIDE the
@@ -370,6 +424,8 @@ impl Optimizer for DistMuon {
                         .charge_collective(CollectiveKind::Gather, real_bytes);
                 }
                 let DistScratch { full: m_full, update } = sc;
+                // One leader orthogonalization per matrix per full step.
+                self.ns_calls.fetch_add(1, Ordering::Relaxed);
                 match &self.backend {
                     DistBackend::Host { steps, coeffs } => {
                         Muon::full_orth_into(
@@ -555,6 +611,49 @@ mod tests {
                 assert_params_match(&p_dist, &p_ref, &period, step);
             }
         }
+    }
+
+    /// Regression for the clamped-grid replica-orthogonalization dedup:
+    /// with tp=4 over a 9x2 matrix (TpColumn clamps its 2 columns to 2
+    /// blocks) and a 2x9 matrix (4 blocks), a block step must run
+    /// Newton–Schulz once per *distinct* block — 2 + 4 = 6 calls — not
+    /// once per rank task (4 + 4 = 8, the pre-dedup schedule, where
+    /// ranks 2-3 re-ran rank 1's NS on replicas of the same 9x1 block).
+    /// Full steps run exactly one leader NS per matrix.
+    #[test]
+    fn clamped_grid_dedups_replica_ns() {
+        let metas = [
+            ParamMeta::new("thin", &[9, 2], ParamKind::Matrix),
+            ParamMeta::new("wide", &[2, 9], ParamKind::Matrix),
+        ];
+        let thin_nb =
+            ShardSpec::new(Layout::TpColumn, 4, 9, 2).num_blocks();
+        let wide_nb =
+            ShardSpec::new(Layout::TpColumn, 4, 2, 9).num_blocks();
+        assert_eq!(thin_nb, 2, "9x2 must clamp to 2 column blocks");
+        assert_eq!(wide_nb, 4);
+        let mut dist = builder(1, 4, Period::Every(2)).build(&metas);
+        let mut rng = Rng::new(71);
+        let mut params = vec![
+            Tensor::randn(&[9, 2], 1.0, &mut rng),
+            Tensor::randn(&[2, 9], 1.0, &mut rng),
+        ];
+        let grads = vec![
+            Tensor::randn(&[9, 2], 1.0, &mut rng),
+            Tensor::randn(&[2, 9], 1.0, &mut rng),
+        ];
+        dist.step(&mut params, &grads, 0.01); // t=0: full step
+        assert_eq!(dist.ns_calls(), 2, "one leader NS per matrix");
+        dist.step(&mut params, &grads, 0.01); // t=1: block step
+        assert_eq!(
+            dist.ns_calls() - 2,
+            (thin_nb + wide_nb) as u64,
+            "block step must orthogonalize each distinct block once"
+        );
+        // Two more steps: the counts are per-step stable.
+        dist.step(&mut params, &grads, 0.01); // t=2: full
+        dist.step(&mut params, &grads, 0.01); // t=3: block
+        assert_eq!(dist.ns_calls(), 2 * (2 + (thin_nb + wide_nb) as u64));
     }
 
     /// Regression for the clamped-shard byte over-accounting bug: tp=4

@@ -4,54 +4,97 @@
 //! Everything Newton–Schulz touches funnels through two primitives:
 //!
 //! - [`gemm_into`]: C = op(A)·op(B) (+ optional fused `alpha·S` writeback),
-//!   built from a 4×16 register-accumulator microkernel over *packed*
-//!   operand panels. Packing rewrites A into MR-row column-interleaved
-//!   panels and B into NR-column row-interleaved panels so the microkernel
-//!   inner loop is two contiguous streams feeding 64 independent FMA
-//!   accumulators — a shape LLVM reliably autovectorizes via
-//!   `chunks_exact`.
+//!   built from a runtime-dispatched **explicit-SIMD microkernel** over
+//!   *packed* operand panels. Packing rewrites A into MR-row
+//!   column-interleaved panels and B into NR-column row-interleaved panels
+//!   so the microkernel inner loop is two contiguous streams feeding a grid
+//!   of independent FMA accumulators.
 //! - [`syrk_into`]: C = X·Xᵀ exploiting symmetry — only tiles touching the
 //!   upper triangle are computed and the strict lower triangle is mirrored,
 //!   halving the Gram-matrix FLOPs of every NS iteration (`A = X Xᵀ` and,
 //!   because A is symmetric, `A² = A·Aᵀ` too).
 //!
-//! On top of the microkernel sits BLIS-style **MC/KC cache blocking**: the
-//! k extent is cut into [`KC`]-deep slabs and the rows into [`MC`]-row
-//! blocks, so one A block (MC×KC ≈ 64 KiB) lives in L2 and one B panel
-//! (KC×NR ≈ 16 KiB) stays in L1 across the row sweep, instead of the
-//! full-k panels thrashing cache on ≥1k matrices. Partial products are
-//! accumulated into C per k-slab (first slab writes — fused with the
-//! optional `alpha·S` term — later slabs add).
+//! # Microkernel dispatch
+//!
+//! The tile shape and inner loop are a [`MicroKernel`], selected **once per
+//! process** by [`active_kernel`]:
+//!
+//! | detected feature      | kernel        | tile  | panel widths    |
+//! |-----------------------|---------------|-------|-----------------|
+//! | x86_64 AVX2 + FMA     | `avx2+fma 8x8`| 8×8   | A: 8-row, B: 8-col |
+//! | anything else         | `scalar 4x16` | 4×16  | A: 4-row, B: 16-col |
+//!
+//! `MUONBP_FORCE_SCALAR` (any value but `0`/empty) pins the scalar kernel
+//! regardless of detection — the A/B-bench and numerics-debugging escape
+//! hatch; ci.sh tier-1 runs the lib tests under it so both dispatch paths
+//! stay exercised. The scalar kernel is the bit-exactness oracle: it is the
+//! PR-1 autovectorized 4×16 loop, unchanged, and the SIMD kernels differ
+//! from it only by the FMA's fused single rounding (property-tested to
+//! per-step-ULP bounds). Packing layouts derive from the selected `mr`/`nr`,
+//! so the dispatch decision also fixes the panel geometry for the whole
+//! call — the partition never depends on thread count, and each kernel's
+//! results are **bit-identical for any thread count**.
+//!
+//! # Blocking hierarchy (BLIS-style NC/KC/MC)
+//!
+//! ```text
+//! for jc in 0..n  step NC    # B column block: NC×KC panel group resident
+//!   for kb in 0..k step KC   #   k slab: first slab writes C (fused
+//!                            #   alpha·S), later slabs accumulate
+//!     for q  in jc..jc+NC step NR   # B micro-panel: KC×NR, L1-resident
+//!       for pl in rows step MR      # A micro-panel: MR×KC
+//!         MR×NR register tile (microkernel, software prefetch)
+//! ```
+//!
+//! The MC row loop sits *outside* this nest: rows are cut into [`MC`]-row
+//! blocks, the unit of pool work. B is packed once per call (kk-major per
+//! panel, so every NC×KC sub-panel is a set of contiguous slab ranges —
+//! blocking never re-packs) and shared read-only by all row blocks; each
+//! row block's A panels are packed **by the worker that owns the block**
+//! into its `WorkerArena` pack scratch (parallel packing; the arena's
+//! high-water mark is one MC×k panel set instead of all of A).
 //!
 //! Large products fan MC row blocks out across the **persistent worker
-//! pool** ([`crate::runtime::pool::Pool`]) instead of re-spawning scoped
-//! threads per call. The row-block partition depends only on the problem
-//! shape — never on the worker count — so results are **bit-identical for
-//! any thread count**, including the sequential and nested-inline paths.
+//! pool** ([`crate::runtime::pool::Pool`]). The row-block partition depends
+//! only on the problem shape — never on the worker count — so results are
+//! bit-identical for any thread count, including the sequential and
+//! nested-inline paths.
 //!
-//! All scratch (packed panels) lives in caller-provided grow-only `Vec`s,
-//! and the pool dispatch itself is allocation-free, so the NS iteration
-//! loop runs allocation-free after warm-up even when multithreaded (see
-//! `linalg::newton_schulz::NsWorkspace` and `tests/ns_zero_alloc.rs`).
-//! The naive kernels these replace survive in `matmul::reference` as
-//! property-test oracles.
+//! All scratch (packed panels) lives in grow-only buffers — the caller's
+//! for B and the sequential path, the per-worker arenas for pooled A
+//! packing — and the pool dispatch itself is allocation-free, so the NS
+//! iteration loop runs allocation-free after warm-up even when
+//! multithreaded (see `linalg::newton_schulz::NsWorkspace` and
+//! `tests/ns_zero_alloc.rs`). The naive kernels these replace survive in
+//! `matmul::reference` as property-test oracles.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
 
 use crate::runtime::pool::{Pool, SendPtr};
 
-/// Microkernel tile rows (A panel height).
+/// Scalar microkernel tile rows (A panel height of the fallback kernel).
 pub const MR: usize = 4;
-/// Microkernel tile columns (B panel width): 16 f32 = four 128-bit or two
-/// 256-bit SIMD lanes per accumulator row.
+/// Scalar microkernel tile columns: 16 f32 = four 128-bit lanes per
+/// accumulator row — the shape LLVM reliably autovectorizes.
 pub const NR: usize = 16;
+/// Upper bound on any kernel's `mr` (accumulator tile sizing).
+pub const MR_MAX: usize = 8;
+/// Upper bound on any kernel's `nr` (accumulator tile sizing).
+pub const NR_MAX: usize = 16;
+/// Flat accumulator tile: row r of an mr×nr tile at `acc[r*nr..r*nr+nr]`.
+const ACC_LEN: usize = MR_MAX * NR_MAX;
 /// Cache-blocking depth: k is processed in KC-deep slabs so a packed B
-/// panel (KC×NR f32 = 16 KiB) fits L1 and an A block (MC×KC = 64 KiB)
-/// fits L2.
+/// micro-panel (KC×NR f32 ≤ 16 KiB) fits L1 and an A block (MC×KC =
+/// 64 KiB) fits L2.
 pub const KC: usize = 256;
-/// Cache-blocking height: rows are processed in MC-row blocks (multiple of
-/// MR); one MC block is also the unit of work a pool worker claims.
+/// Cache-blocking height: rows are processed in MC-row blocks (a multiple
+/// of every kernel's mr); one MC block is also the unit of pool work.
 pub const MC: usize = 64;
+/// Cache-blocking width: columns are processed in NC-wide groups (a
+/// multiple of every kernel's nr) so the C working set per row block is
+/// MC×NC and one NC×KC packed-B group (256 KiB) stays cache-resident
+/// across the row sweep instead of streaming all n columns per k slab.
+pub const NC: usize = 256;
 
 /// FLOP threshold below which threading overhead beats the speedup.
 const MT_MIN_FLOPS: f64 = 4.0e6;
@@ -61,184 +104,451 @@ fn div_up(x: usize, d: usize) -> usize {
     (x + d - 1) / d
 }
 
-/// Threads worth spawning for a kernel of `flops` floating point ops.
-/// Called inside the NS hot loop, so the core count is cached: on Linux
-/// `available_parallelism` re-reads /proc (and heap-allocates) per call,
-/// which would tick the counting allocator the zero-alloc proof relies on.
+/// Threads worth using for a kernel of `flops` floating point ops: 1 below
+/// the FLOP floor, otherwise the persistent pool's *compute* width
+/// ([`Pool::compute_workers`]: the pinned size for `MUONBP_POOL_THREADS`
+/// pools — an explicit operator instruction — and the live size capped at
+/// the core count for growable pools, so rendezvous-grown blocked workers
+/// don't oversubscribe the GEMM fan-out). The old heuristic hard-capped at
+/// `min(available_parallelism, 8)` and ignored the pool entirely, so
+/// pinned, degraded, and grown pools all disagreed with the fan-out
+/// decision. A pure sizing query — it never instantiates the pool
+/// ([`Pool::global_compute_width`] falls back to the cached core count
+/// until a fan-out actually creates it) and is allocation-free (atomic
+/// loads only), which the NS hot loop's zero-alloc proof relies on.
 pub fn suggested_threads(flops: f64) -> usize {
     if flops < MT_MIN_FLOPS {
         return 1;
     }
-    static CORES: AtomicUsize = AtomicUsize::new(0);
-    let cores = match CORES.load(Ordering::Relaxed) {
-        0 => {
-            let n = std::thread::available_parallelism()
-                .map(|n| n.get())
-                .unwrap_or(1);
-            CORES.store(n, Ordering::Relaxed);
-            n
-        }
-        n => n,
-    };
-    cores.min(8)
+    Pool::global_compute_width().max(1)
 }
 
-/// Pack `a` (logical m×k; stored k×m when `trans`) into MR-row panels:
-/// panel p holds rows [p·MR, p·MR+MR) column-interleaved as
-/// `out[p·k·MR + kk·MR + r]`, zero-padded past row m so the microkernel
-/// never branches on the edge. Within a panel the layout is kk-major, so
-/// the KC-slab [k0, k1) of panel p is the contiguous subrange
-/// `[p·k·MR + k0·MR, p·k·MR + k1·MR)` — cache blocking never re-packs.
-fn pack_a(a: &[f32], m: usize, k: usize, trans: bool, out: &mut Vec<f32>) {
-    let panels = div_up(m, MR);
-    // Grow-only resize: new tail is zero-filled, surviving prefix keeps
-    // stale data. The pack loops below overwrite every non-padding entry,
-    // so only the ragged last panel's padding rows — the one region the
-    // microkernel reads but the loops don't write — need explicit zeroing
-    // (a full clear+refill would re-zero O(m·k) per call on the hot loop).
-    out.resize(panels * k * MR, 0.0);
-    let tail_rows = m - (panels - 1) * MR;
-    if tail_rows < MR {
-        let dst = &mut out[(panels - 1) * k * MR..];
+/// Signature shared by every microkernel body: accumulate one mr×nr tile
+/// over a packed k-slab (`ap.len() == kext·mr`, `bp.len() == kext·nr`),
+/// overwriting `acc` rows `0..mr` at stride `nr`.
+type MicroFn = unsafe fn(&mut [f32; ACC_LEN], &[f32], &[f32]);
+
+/// One register-tile microkernel implementation: the tile shape, the
+/// k-slab accumulation routine, and a display name for the dispatch table.
+/// Selecting a kernel also selects the packing panel widths (`mr`/`nr`),
+/// so a kernel choice is made once per [`gemm_into`]/[`syrk_into`] call
+/// and threaded through packing, blocking, and writeback together.
+pub struct MicroKernel {
+    /// Dispatch-table name (README hot-path section).
+    pub name: &'static str,
+    /// Tile rows = packed-A panel height.
+    pub mr: usize,
+    /// Tile columns = packed-B panel width.
+    pub nr: usize,
+    /// SAFETY contract: caller passes matching-kext slabs and has verified
+    /// (at dispatch) any ISA feature the kernel body was compiled with.
+    run: MicroFn,
+}
+
+/// The portable fallback tile — the PR-1 autovectorized 4×16 loop,
+/// bit-for-bit. Mul-then-add accumulation in kk order: the oracle the
+/// SIMD kernels are property-tested against.
+fn scalar_body(acc: &mut [f32; ACC_LEN], ap: &[f32], bp: &[f32]) {
+    let mut tile = [[0.0f32; NR]; MR];
+    for (a4, b16) in ap.chunks_exact(MR).zip(bp.chunks_exact(NR)) {
+        for r in 0..MR {
+            let ar = a4[r];
+            let accr = &mut tile[r];
+            for c in 0..NR {
+                accr[c] += ar * b16[c];
+            }
+        }
+    }
+    for (r, row) in tile.iter().enumerate() {
+        acc[r * NR..(r + 1) * NR].copy_from_slice(row);
+    }
+}
+
+/// SAFETY: no ISA requirement — `unsafe fn` only to share [`MicroFn`]'s
+/// signature with the feature-gated kernels.
+unsafe fn scalar_run(acc: &mut [f32; ACC_LEN], ap: &[f32], bp: &[f32]) {
+    scalar_body(acc, ap, bp);
+}
+
+static SCALAR_KERNEL: MicroKernel =
+    MicroKernel { name: "scalar 4x16", mr: MR, nr: NR, run: scalar_run };
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    //! AVX2+FMA 8×8 microkernel: 8 ymm accumulators (one row each, 8 f32
+    //! lanes), per k step one B load + 8 broadcast-FMAs — 10 of 16 ymm
+    //! registers live, leaving headroom for the two-step unroll below.
+    //! Lane c of accumulator r sums a[r]·b[c] in kk order — the same
+    //! summation association as the scalar oracle, differing only by the
+    //! FMA's fused single rounding per step.
+
+    use std::arch::x86_64::*;
+
+    use super::{MicroKernel, ACC_LEN};
+
+    pub(super) static KERNEL: MicroKernel =
+        MicroKernel { name: "avx2+fma 8x8", mr: 8, nr: 8, run };
+
+    /// SAFETY: dispatch ([`super::active_kernel`] / [`super::simd_kernel`])
+    /// only hands this kernel out after `is_x86_feature_detected!` proved
+    /// avx2+fma at runtime.
+    unsafe fn run(acc: &mut [f32; ACC_LEN], ap: &[f32], bp: &[f32]) {
+        tile_8x8(acc, ap, bp);
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn tile_8x8(acc: &mut [f32; ACC_LEN], ap: &[f32], bp: &[f32]) {
+        let kext = bp.len() / 8;
+        debug_assert_eq!(ap.len(), kext * 8);
+        debug_assert_eq!(bp.len(), kext * 8);
+        let mut a = ap.as_ptr();
+        let mut b = bp.as_ptr();
+        let mut c0 = _mm256_setzero_ps();
+        let mut c1 = _mm256_setzero_ps();
+        let mut c2 = _mm256_setzero_ps();
+        let mut c3 = _mm256_setzero_ps();
+        let mut c4 = _mm256_setzero_ps();
+        let mut c5 = _mm256_setzero_ps();
+        let mut c6 = _mm256_setzero_ps();
+        let mut c7 = _mm256_setzero_ps();
+        macro_rules! kstep {
+            ($av:expr, $bv:expr) => {{
+                let av = $av;
+                let bv = $bv;
+                c0 = _mm256_fmadd_ps(_mm256_broadcast_ss(&*av), bv, c0);
+                c1 = _mm256_fmadd_ps(
+                    _mm256_broadcast_ss(&*av.add(1)),
+                    bv,
+                    c1,
+                );
+                c2 = _mm256_fmadd_ps(
+                    _mm256_broadcast_ss(&*av.add(2)),
+                    bv,
+                    c2,
+                );
+                c3 = _mm256_fmadd_ps(
+                    _mm256_broadcast_ss(&*av.add(3)),
+                    bv,
+                    c3,
+                );
+                c4 = _mm256_fmadd_ps(
+                    _mm256_broadcast_ss(&*av.add(4)),
+                    bv,
+                    c4,
+                );
+                c5 = _mm256_fmadd_ps(
+                    _mm256_broadcast_ss(&*av.add(5)),
+                    bv,
+                    c5,
+                );
+                c6 = _mm256_fmadd_ps(
+                    _mm256_broadcast_ss(&*av.add(6)),
+                    bv,
+                    c6,
+                );
+                c7 = _mm256_fmadd_ps(
+                    _mm256_broadcast_ss(&*av.add(7)),
+                    bv,
+                    c7,
+                );
+            }};
+        }
+        // Two k steps per iteration: each packed stream advances one
+        // 64-byte line per iteration, so one prefetch pair keeps the
+        // lines PF floats (= 4 iterations) ahead in flight. The hint
+        // pointer uses wrapping_add — prefetch never faults and the
+        // address is never dereferenced, so running past the panel end
+        // is safe.
+        const PF: usize = 64;
+        let mut i = 0;
+        while i + 2 <= kext {
+            _mm_prefetch::<_MM_HINT_T0>(a.wrapping_add(PF) as *const i8);
+            _mm_prefetch::<_MM_HINT_T0>(b.wrapping_add(PF) as *const i8);
+            kstep!(a, _mm256_loadu_ps(b));
+            kstep!(a.add(8), _mm256_loadu_ps(b.add(8)));
+            a = a.add(16);
+            b = b.add(16);
+            i += 2;
+        }
+        if i < kext {
+            kstep!(a, _mm256_loadu_ps(b));
+        }
+        let o = acc.as_mut_ptr();
+        _mm256_storeu_ps(o, c0);
+        _mm256_storeu_ps(o.add(8), c1);
+        _mm256_storeu_ps(o.add(16), c2);
+        _mm256_storeu_ps(o.add(24), c3);
+        _mm256_storeu_ps(o.add(32), c4);
+        _mm256_storeu_ps(o.add(40), c5);
+        _mm256_storeu_ps(o.add(48), c6);
+        _mm256_storeu_ps(o.add(56), c7);
+    }
+}
+
+/// The portable scalar microkernel — always available, and the
+/// property-test oracle every SIMD path is checked against.
+pub fn scalar_kernel() -> &'static MicroKernel {
+    &SCALAR_KERNEL
+}
+
+/// The best explicit-SIMD microkernel this CPU supports, if any (runtime
+/// feature detection; independent of `MUONBP_FORCE_SCALAR`). Tests use
+/// this to exercise the SIMD path explicitly even when dispatch is pinned
+/// to scalar.
+pub fn simd_kernel() -> Option<&'static MicroKernel> {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2")
+            && std::arch::is_x86_feature_detected!("fma")
+        {
+            return Some(&avx2::KERNEL);
+        }
+    }
+    None
+}
+
+/// The microkernel every auto-dispatched entry point uses, selected once
+/// per process: `MUONBP_FORCE_SCALAR` (any value but `0`/empty) pins the
+/// scalar fallback; otherwise the best detected SIMD kernel; otherwise
+/// scalar. The env read and feature probe happen only on the first call
+/// (OnceLock), so steady-state dispatch is a single load — no heap
+/// traffic, no re-detection inside the NS loop.
+pub fn active_kernel() -> &'static MicroKernel {
+    static ACTIVE: OnceLock<&'static MicroKernel> = OnceLock::new();
+    *ACTIVE.get_or_init(|| {
+        let forced = match std::env::var("MUONBP_FORCE_SCALAR") {
+            Ok(v) => {
+                let v = v.trim();
+                !v.is_empty() && v != "0"
+            }
+            Err(_) => false,
+        };
+        if forced {
+            return &SCALAR_KERNEL;
+        }
+        simd_kernel().unwrap_or(&SCALAR_KERNEL)
+    })
+}
+
+/// Best-effort L1 prefetch of the cache line holding `p` (no-op off
+/// x86_64). The pointer is a hint, never dereferenced — prefetch cannot
+/// fault, so a line past a panel's end is safe.
+#[inline(always)]
+fn prefetch_read(p: *const f32) {
+    #[cfg(target_arch = "x86_64")]
+    // SAFETY: _mm_prefetch performs no faulting access; SSE is baseline
+    // on x86_64.
+    unsafe {
+        use std::arch::x86_64::{_mm_prefetch, _MM_HINT_T0};
+        _mm_prefetch::<_MM_HINT_T0>(p as *const i8);
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    let _ = p;
+}
+
+/// Pack rows `[row0, row0+rows)` of `a` (logical m×k; stored k×m when
+/// `trans`) into mr-row panels with *block-local* panel indices: panel p
+/// holds rows `[row0 + p·mr, row0 + p·mr + mr)` column-interleaved as
+/// `out[p·k·mr + kk·mr + r]`, zero-padded past the block's last row so
+/// the microkernel never branches on the edge. Within a panel the layout
+/// is kk-major, so the KC slab `[k0, k1)` of panel p is the contiguous
+/// subrange `[p·k·mr + k0·mr, p·k·mr + k1·mr)` — cache blocking never
+/// re-packs.
+///
+/// `out` is grow-only (len never shrinks; stale tail beyond this block's
+/// panels is never read) — the pooled fan-out packs each worker's row
+/// blocks into its arena scratch, whose high-water mark is one MC×k panel
+/// set instead of all of A. Every non-padding entry is overwritten each
+/// call and the ragged last panel's padding rows are re-zeroed explicitly,
+/// so buffer reuse across shapes is safe.
+#[allow(clippy::too_many_arguments)]
+fn pack_a_block(
+    a: &[f32],
+    m: usize,
+    k: usize,
+    trans: bool,
+    row0: usize,
+    rows: usize,
+    mr: usize,
+    out: &mut Vec<f32>,
+) {
+    let panels = div_up(rows, mr);
+    if panels == 0 {
+        // Degenerate block (callers guard m/rows > 0; kept so a future
+        // caller cannot underflow the tail computation below).
+        return;
+    }
+    let need = panels * k * mr;
+    if out.len() < need {
+        out.resize(need, 0.0);
+    }
+    let tail_rows = rows - (panels - 1) * mr;
+    if tail_rows < mr {
+        let dst = &mut out[(panels - 1) * k * mr..need];
         for kk in 0..k {
-            for r in tail_rows..MR {
-                dst[kk * MR + r] = 0.0;
+            for r in tail_rows..mr {
+                dst[kk * mr + r] = 0.0;
             }
         }
     }
     for p in 0..panels {
-        let dst = &mut out[p * k * MR..(p + 1) * k * MR];
-        let rows = MR.min(m - p * MR);
+        let dst = &mut out[p * k * mr..(p + 1) * k * mr];
+        let prows = mr.min(rows - p * mr);
         if !trans {
-            for r in 0..rows {
-                let row = &a[(p * MR + r) * k..(p * MR + r + 1) * k];
+            for r in 0..prows {
+                let i = row0 + p * mr + r;
+                let row = &a[i * k..(i + 1) * k];
                 for (kk, &v) in row.iter().enumerate() {
-                    dst[kk * MR + r] = v;
+                    dst[kk * mr + r] = v;
                 }
             }
         } else {
             // a is stored k×m: logical A[i][kk] = a[kk·m + i].
             for kk in 0..k {
                 let arow = &a[kk * m..(kk + 1) * m];
-                for r in 0..rows {
-                    dst[kk * MR + r] = arow[p * MR + r];
+                for r in 0..prows {
+                    dst[kk * mr + r] = arow[row0 + p * mr + r];
                 }
             }
         }
     }
 }
 
-/// Pack `b` (logical k×n; stored n×k when `trans`) into NR-column panels:
-/// panel q holds columns [q·NR, q·NR+NR) row-interleaved as
-/// `out[q·k·NR + kk·NR + c]`, zero-padded past column n. kk-major like
-/// `pack_a`, so KC slabs are contiguous subranges of each panel.
-fn pack_b(b: &[f32], k: usize, n: usize, trans: bool, out: &mut Vec<f32>) {
-    let panels = div_up(n, NR);
-    // Grow-only resize + explicit padding zeroing of the ragged last
-    // panel's columns only — see the matching comment in `pack_a`.
-    out.resize(panels * k * NR, 0.0);
-    let tail_cols = n - (panels - 1) * NR;
-    if tail_cols < NR {
-        let dst = &mut out[(panels - 1) * k * NR..];
+/// Pack `b` (logical k×n; stored n×k when `trans`) into nr-column panels:
+/// panel q holds columns `[q·nr, q·nr+nr)` row-interleaved as
+/// `out[q·k·nr + kk·nr + c]`, zero-padded past column n. kk-major like
+/// [`pack_a_block`], so KC slabs are contiguous subranges of each panel
+/// and an NC group is `NC/nr` consecutive panels. Grow-only like
+/// `pack_a_block`; packed once per call by the submitter and shared
+/// read-only across every row block and worker.
+fn pack_b(
+    b: &[f32],
+    k: usize,
+    n: usize,
+    trans: bool,
+    nr: usize,
+    out: &mut Vec<f32>,
+) {
+    let panels = div_up(n, nr);
+    if panels == 0 {
+        // Degenerate width (callers guard n > 0; kept so a future
+        // caller cannot underflow the tail computation below).
+        return;
+    }
+    let need = panels * k * nr;
+    if out.len() < need {
+        out.resize(need, 0.0);
+    }
+    let tail_cols = n - (panels - 1) * nr;
+    if tail_cols < nr {
+        let dst = &mut out[(panels - 1) * k * nr..need];
         for kk in 0..k {
-            for c in tail_cols..NR {
-                dst[kk * NR + c] = 0.0;
+            for c in tail_cols..nr {
+                dst[kk * nr + c] = 0.0;
             }
         }
     }
     for q in 0..panels {
-        let dst = &mut out[q * k * NR..(q + 1) * k * NR];
-        let cols = NR.min(n - q * NR);
+        let dst = &mut out[q * k * nr..(q + 1) * k * nr];
+        let cols = nr.min(n - q * nr);
         if !trans {
             for kk in 0..k {
                 let brow = &b[kk * n..(kk + 1) * n];
-                dst[kk * NR..kk * NR + cols]
-                    .copy_from_slice(&brow[q * NR..q * NR + cols]);
+                dst[kk * nr..kk * nr + cols]
+                    .copy_from_slice(&brow[q * nr..q * nr + cols]);
             }
         } else {
             // b is stored n×k: logical B[kk][j] = b[j·k + kk].
             for c in 0..cols {
-                let brow = &b[(q * NR + c) * k..(q * NR + c + 1) * k];
+                let brow = &b[(q * nr + c) * k..(q * nr + c + 1) * k];
                 for (kk, &v) in brow.iter().enumerate() {
-                    dst[kk * NR + c] = v;
+                    dst[kk * nr + c] = v;
                 }
-            }
-        }
-    }
-}
-
-/// The register-tiled heart: accumulate one MR×NR tile over the given
-/// k-slab of a packed A panel (len·MR) and packed B panel (len·NR). The
-/// paired `chunks_exact` streams plus the fixed-size accumulator array are
-/// the autovectorization contract.
-#[inline]
-fn microkernel_acc(acc: &mut [[f32; NR]; MR], ap: &[f32], bp: &[f32]) {
-    for (a4, b16) in ap.chunks_exact(MR).zip(bp.chunks_exact(NR)) {
-        for r in 0..MR {
-            let ar = a4[r];
-            let accr = &mut acc[r];
-            for c in 0..NR {
-                accr[c] += ar * b16[c];
             }
         }
     }
 }
 
 /// Compute rows [row0, row0+rows) of C — one MC row block, the unit of
-/// pool work. Loops k-slabs outermost (cache blocking), then column
-/// panels, then the MR micro-panels of the block, accumulating partial
-/// products into C (`kb == 0` writes, later slabs add). `fuse` is
-/// `(alpha, s)` with `s` the full m×n source: the first slab's writeback
-/// becomes `C = acc + alpha·S` (the fused `X' = B·X + a·X` NS update).
+/// pool work. NC/KC loop nest (see module docs): column groups outermost,
+/// then k slabs (`kb == 0` writes — fused with the optional `alpha·S`
+/// term — later slabs add), then the NR panels of the group, then the MR
+/// micro-panels of the block. Per C element the accumulation order is
+/// k-slab order exactly as before the NC loop existed, so the nest change
+/// is bit-neutral. `pa_block` holds this row block's packed A panels
+/// (block-local indices); `pb` is the full packed B.
 #[allow(clippy::too_many_arguments)]
 fn run_row_block(
+    kern: &MicroKernel,
     cblock: &mut [f32],
     row0: usize,
     rows: usize,
     k: usize,
     n: usize,
-    pa: &[f32],
+    pa_block: &[f32],
     pb: &[f32],
     fuse: Option<(f32, &[f32])>,
     kc: usize,
+    nc: usize,
 ) {
-    let col_panels = div_up(n, NR);
-    let panels = div_up(rows, MR);
-    let p0 = row0 / MR; // row0 is a multiple of MC, hence of MR
+    let (mr, nr) = (kern.mr, kern.nr);
+    let panels = div_up(rows, mr);
+    let col_panels = div_up(n, nr);
+    let panels_per_jc = nc / nr;
+    let njc = div_up(n, nc);
     let nkb = div_up(k, kc);
-    for kb in 0..nkb {
-        let k0 = kb * kc;
-        let kext = kc.min(k - k0);
-        for q in 0..col_panels {
-            let cols = NR.min(n - q * NR);
-            let bp = &pb[q * k * NR + k0 * NR..q * k * NR + (k0 + kext) * NR];
-            for pl in 0..panels {
-                let p = p0 + pl;
-                let prow = pl * MR;
-                let prows = MR.min(rows - prow);
-                let ap =
-                    &pa[p * k * MR + k0 * MR..p * k * MR + (k0 + kext) * MR];
-                let mut acc = [[0.0f32; NR]; MR];
-                microkernel_acc(&mut acc, ap, bp);
-                for r in 0..prows {
-                    let off = (prow + r) * n + q * NR;
-                    let dst = &mut cblock[off..off + cols];
-                    if kb == 0 {
-                        match fuse {
-                            Some((alpha, s)) => {
-                                let soff = (row0 + prow + r) * n + q * NR;
-                                let src = &s[soff..soff + cols];
-                                for ((d, &a), &sv) in
-                                    dst.iter_mut().zip(&acc[r][..cols]).zip(src)
-                                {
-                                    *d = a + alpha * sv;
+    let mut acc = [0.0f32; ACC_LEN];
+    for jc in 0..njc {
+        let q0 = jc * panels_per_jc;
+        let q1 = col_panels.min(q0 + panels_per_jc);
+        for kb in 0..nkb {
+            let k0 = kb * kc;
+            let kext = kc.min(k - k0);
+            for q in q0..q1 {
+                let cols = nr.min(n - q * nr);
+                let bp = &pb
+                    [q * k * nr + k0 * nr..q * k * nr + (k0 + kext) * nr];
+                for pl in 0..panels {
+                    // Kick off the next micro-panel's slab head while
+                    // this tile computes (panels are contiguous).
+                    if pl + 1 < panels {
+                        prefetch_read(
+                            pa_block
+                                .as_ptr()
+                                .wrapping_add((pl + 1) * k * mr + k0 * mr),
+                        );
+                    }
+                    let ap = &pa_block
+                        [pl * k * mr + k0 * mr..pl * k * mr + (k0 + kext) * mr];
+                    // SAFETY: slabs share kext and dispatch verified the
+                    // kernel's ISA features (MicroKernel::run contract).
+                    unsafe { (kern.run)(&mut acc, ap, bp) };
+                    let prow = pl * mr;
+                    let prows = mr.min(rows - prow);
+                    for r in 0..prows {
+                        let off = (prow + r) * n + q * nr;
+                        let dst = &mut cblock[off..off + cols];
+                        let accr = &acc[r * nr..r * nr + cols];
+                        if kb == 0 {
+                            match fuse {
+                                Some((alpha, s)) => {
+                                    let soff =
+                                        (row0 + prow + r) * n + q * nr;
+                                    let src = &s[soff..soff + cols];
+                                    for ((d, &a), &sv) in dst
+                                        .iter_mut()
+                                        .zip(accr)
+                                        .zip(src)
+                                    {
+                                        *d = a + alpha * sv;
+                                    }
                                 }
+                                None => dst.copy_from_slice(accr),
                             }
-                            None => dst.copy_from_slice(&acc[r][..cols]),
-                        }
-                    } else {
-                        for (d, &a) in dst.iter_mut().zip(&acc[r][..cols]) {
-                            *d += a;
+                        } else {
+                            for (d, &a) in dst.iter_mut().zip(accr) {
+                                *d += a;
+                            }
                         }
                     }
                 }
@@ -253,10 +563,13 @@ fn run_row_block(
 /// - `b` is k×n row-major, or n×k when `trans_b` (computes A·Bᵀ shapes).
 /// - `fuse_axpy = Some((alpha, s))` with `s.len() == m·n` writes
 ///   `C = op(A)·op(B) + alpha·S` in one pass over C.
-/// - `pa`/`pb` are grow-only packing scratch; no other heap use.
+/// - `pa`/`pb` are grow-only packing scratch; no other heap use (pooled
+///   runs pack A in the workers' arenas instead of `pa`).
 /// - `threads > 1` fans MC row blocks out across the persistent pool; the
 ///   block partition depends only on the shape, so results are
 ///   bit-identical for any thread count (and to the sequential path).
+///
+/// The microkernel is chosen once per call by [`active_kernel`].
 #[allow(clippy::too_many_arguments)]
 pub fn gemm_into(
     c: &mut [f32],
@@ -272,14 +585,33 @@ pub fn gemm_into(
     pb: &mut Vec<f32>,
     threads: usize,
 ) {
-    gemm_into_blocked(
-        c, m, k, n, a, trans_a, b, trans_b, fuse_axpy, pa, pb, threads, KC, MC,
+    gemm_into_with(
+        active_kernel(),
+        c,
+        m,
+        k,
+        n,
+        a,
+        trans_a,
+        b,
+        trans_b,
+        fuse_axpy,
+        pa,
+        pb,
+        threads,
+        KC,
+        MC,
+        NC,
     );
 }
 
 /// [`gemm_into`] with explicit cache-blocking parameters — the bench /
-/// tuning escape hatch (`kc >= k`, `mc >= m` reproduces the unblocked
-/// full-k kernel). `mc` must be a positive multiple of [`MR`].
+/// tuning escape hatch (`kc >= k`, `mc >= m`, `nc >= n` reproduces the
+/// unblocked full-k kernel). `mc`/`nc` must be positive and are rounded
+/// up to the dispatched kernel's tile multiples here, so any positive
+/// values are valid on any CPU — the tile shape is a runtime dispatch
+/// decision a caller cannot know. ([`gemm_into_with`] is strict instead:
+/// an explicit kernel means the caller chose the tile.)
 #[allow(clippy::too_many_arguments)]
 pub fn gemm_into_blocked(
     c: &mut [f32],
@@ -296,12 +628,70 @@ pub fn gemm_into_blocked(
     threads: usize,
     kc: usize,
     mc: usize,
+    nc: usize,
+) {
+    let kern = active_kernel();
+    let mc = div_up(mc, kern.mr) * kern.mr;
+    let nc = div_up(nc, kern.nr) * kern.nr;
+    gemm_into_with(
+        kern,
+        c,
+        m,
+        k,
+        n,
+        a,
+        trans_a,
+        b,
+        trans_b,
+        fuse_axpy,
+        pa,
+        pb,
+        threads,
+        kc,
+        mc,
+        nc,
+    );
+}
+
+/// [`gemm_into_blocked`] with the microkernel made explicit — how the
+/// property tests and the perf harness pit the scalar and SIMD paths
+/// against each other inside one process, bypassing the process-wide
+/// dispatch decision.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_into_with(
+    kern: &'static MicroKernel,
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    trans_a: bool,
+    b: &[f32],
+    trans_b: bool,
+    fuse_axpy: Option<(f32, &[f32])>,
+    pa: &mut Vec<f32>,
+    pb: &mut Vec<f32>,
+    threads: usize,
+    kc: usize,
+    mc: usize,
+    nc: usize,
 ) {
     assert_eq!(c.len(), m * n, "gemm output size");
     assert_eq!(a.len(), m * k, "gemm A size");
     assert_eq!(b.len(), k * n, "gemm B size");
+    assert!(
+        kern.mr <= MR_MAX && kern.nr <= NR_MAX,
+        "microkernel tile exceeds the accumulator bound"
+    );
     assert!(kc > 0, "gemm kc blocking must be positive");
-    assert!(mc > 0 && mc % MR == 0, "gemm mc must be a multiple of MR");
+    assert!(
+        mc > 0 && mc % kern.mr == 0,
+        "gemm mc must be a multiple of the kernel's mr"
+    );
+    assert!(
+        nc > 0 && nc % kern.nr == 0,
+        "gemm nc must be a multiple of the kernel's nr"
+    );
     if let Some((_, s)) = fuse_axpy {
         assert_eq!(s.len(), m * n, "gemm fuse source size");
     }
@@ -319,39 +709,47 @@ pub fn gemm_into_blocked(
         }
         return;
     }
-    pack_a(a, m, k, trans_a, pa);
-    pack_b(b, k, n, trans_b, pb);
-    let pa_s: &[f32] = pa;
+    pack_b(b, k, n, trans_b, kern.nr, pb);
     let pb_s: &[f32] = pb;
     let nblocks = div_up(m, mc);
     if threads <= 1 || nblocks <= 1 {
         for t in 0..nblocks {
             let row0 = t * mc;
             let rows = mc.min(m - row0);
+            pack_a_block(a, m, k, trans_a, row0, rows, kern.mr, pa);
             run_row_block(
+                kern,
                 &mut c[row0 * n..(row0 + rows) * n],
                 row0,
                 rows,
                 k,
                 n,
-                pa_s,
+                pa,
                 pb_s,
                 fuse_axpy,
                 kc,
+                nc,
             );
         }
     } else {
         let cptr = SendPtr(c.as_mut_ptr());
-        Pool::global().fanout_limited(nblocks, threads, &|t, _arena| {
+        Pool::global().fanout_limited(nblocks, threads, &|t, arena| {
             let row0 = t * mc;
             let rows = mc.min(m - row0);
+            // Each worker packs the A panels of the blocks it owns into
+            // its arena scratch — packing is parallel and the per-worker
+            // high-water mark is one MC×k panel set. Packed values do
+            // not depend on who packs them, so the partition stays
+            // bit-identical for any thread count.
+            pack_a_block(a, m, k, trans_a, row0, rows, kern.mr, &mut arena.pa);
             // SAFETY: row blocks are disjoint slices of C, one per task,
             // and the fan-out joins before `c` is touched again.
             let cblock = unsafe {
                 std::slice::from_raw_parts_mut(cptr.0.add(row0 * n), rows * n)
             };
             run_row_block(
-                cblock, row0, rows, k, n, pa_s, pb_s, fuse_axpy, kc,
+                kern, cblock, row0, rows, k, n, &arena.pa, pb_s, fuse_axpy,
+                kc, nc,
             );
         });
     }
@@ -360,9 +758,10 @@ pub fn gemm_into_blocked(
 /// C (m×m) = X·Xᵀ for row-major X (m×k), computing only tiles that touch
 /// the upper triangle and mirroring the rest — ≈½ the FLOPs of a full
 /// GEMM. Also serves `A²` for symmetric A (A·A = A·Aᵀ), which is exactly
-/// the other Gram-shaped product in a Newton–Schulz iteration. Same KC/MC
-/// cache blocking and pool fan-out as [`gemm_into`]; `threads > 1` splits
-/// MC row blocks across the pool, bit-identical to sequential.
+/// the other Gram-shaped product in a Newton–Schulz iteration. Same
+/// NC/KC/MC blocking, microkernel dispatch, and pool fan-out as
+/// [`gemm_into`]; `threads > 1` splits MC row blocks across the pool,
+/// bit-identical to sequential.
 #[allow(clippy::too_many_arguments)]
 pub fn syrk_into(
     c: &mut [f32],
@@ -373,8 +772,29 @@ pub fn syrk_into(
     pb: &mut Vec<f32>,
     threads: usize,
 ) {
+    syrk_into_with(active_kernel(), c, x, m, k, pa, pb, threads);
+}
+
+/// [`syrk_into`] with the microkernel made explicit (tests / benches).
+#[allow(clippy::too_many_arguments)]
+pub fn syrk_into_with(
+    kern: &'static MicroKernel,
+    c: &mut [f32],
+    x: &[f32],
+    m: usize,
+    k: usize,
+    pa: &mut Vec<f32>,
+    pb: &mut Vec<f32>,
+    threads: usize,
+) {
     assert_eq!(c.len(), m * m, "syrk output size");
     assert_eq!(x.len(), m * k, "syrk input size");
+    assert!(
+        kern.mr <= MR_MAX && kern.nr <= NR_MAX,
+        "microkernel tile exceeds the accumulator bound"
+    );
+    assert_eq!(MC % kern.mr, 0, "MC must be a multiple of the kernel's mr");
+    assert_eq!(NC % kern.nr, 0, "NC must be a multiple of the kernel's nr");
     if m == 0 {
         return;
     }
@@ -382,36 +802,37 @@ pub fn syrk_into(
         c.fill(0.0);
         return;
     }
-    pack_a(x, m, k, false, pa);
     // B = Xᵀ (k×m), packed straight from X's rows.
-    pack_b(x, k, m, true, pb);
-    let pa_s: &[f32] = pa;
+    pack_b(x, k, m, true, kern.nr, pb);
     let pb_s: &[f32] = pb;
     let nblocks = div_up(m, MC);
     if threads <= 1 || nblocks <= 1 {
         for t in 0..nblocks {
             let row0 = t * MC;
             let rows = MC.min(m - row0);
+            pack_a_block(x, m, k, false, row0, rows, kern.mr, pa);
             syrk_row_block(
+                kern,
                 &mut c[row0 * m..(row0 + rows) * m],
                 row0,
                 rows,
                 k,
                 m,
-                pa_s,
+                pa,
                 pb_s,
             );
         }
     } else {
         let cptr = SendPtr(c.as_mut_ptr());
-        Pool::global().fanout_limited(nblocks, threads, &|t, _arena| {
+        Pool::global().fanout_limited(nblocks, threads, &|t, arena| {
             let row0 = t * MC;
             let rows = MC.min(m - row0);
+            pack_a_block(x, m, k, false, row0, rows, kern.mr, &mut arena.pa);
             // SAFETY: disjoint row blocks, joined before further use of c.
             let cblock = unsafe {
                 std::slice::from_raw_parts_mut(cptr.0.add(row0 * m), rows * m)
             };
-            syrk_row_block(cblock, row0, rows, k, m, pa_s, pb_s);
+            syrk_row_block(kern, cblock, row0, rows, k, m, &arena.pa, pb_s);
         });
     }
     // Mirror the computed upper triangle into the strict lower triangle.
@@ -422,50 +843,67 @@ pub fn syrk_into(
     }
 }
 
-/// One MC row block of the syrk upper triangle (KC-blocked like
+/// One MC row block of the syrk upper triangle (NC/KC-blocked like
 /// [`run_row_block`], with the below-diagonal tile skip).
+#[allow(clippy::too_many_arguments)]
 fn syrk_row_block(
+    kern: &MicroKernel,
     cblock: &mut [f32],
     row0: usize,
     rows: usize,
     k: usize,
     m: usize,
-    pa: &[f32],
+    pa_block: &[f32],
     pb: &[f32],
 ) {
-    let col_panels = div_up(m, NR);
-    let panels = div_up(rows, MR);
-    let p0 = row0 / MR;
+    let (mr, nr) = (kern.mr, kern.nr);
+    let panels = div_up(rows, mr);
+    let col_panels = div_up(m, nr);
+    let panels_per_jc = NC / nr;
+    let njc = div_up(m, NC);
     let nkb = div_up(k, KC);
-    for kb in 0..nkb {
-        let k0 = kb * KC;
-        let kext = KC.min(k - k0);
-        for q in 0..col_panels {
-            let cols = NR.min(m - q * NR);
-            let bp = &pb[q * k * NR + k0 * NR..q * k * NR + (k0 + kext) * NR];
-            for pl in 0..panels {
-                let p = p0 + pl;
-                // Tile columns are [q·NR, q·NR+NR); skip tiles entirely
-                // below the diagonal (max column index < first row index).
-                if (q + 1) * NR <= p * MR {
-                    continue;
-                }
-                let prow = pl * MR;
-                let prows = MR.min(rows - prow);
-                let ap =
-                    &pa[p * k * MR + k0 * MR..p * k * MR + (k0 + kext) * MR];
-                let mut acc = [[0.0f32; NR]; MR];
-                microkernel_acc(&mut acc, ap, bp);
-                for r in 0..prows {
-                    let i = row0 + prow + r;
-                    for cc in 0..cols {
-                        let j = q * NR + cc;
-                        if j >= i {
-                            let off = (prow + r) * m + j;
-                            if kb == 0 {
-                                cblock[off] = acc[r][cc];
-                            } else {
-                                cblock[off] += acc[r][cc];
+    let mut acc = [0.0f32; ACC_LEN];
+    for jc in 0..njc {
+        let q0 = jc * panels_per_jc;
+        let q1 = col_panels.min(q0 + panels_per_jc);
+        for kb in 0..nkb {
+            let k0 = kb * KC;
+            let kext = KC.min(k - k0);
+            for q in q0..q1 {
+                let cols = nr.min(m - q * nr);
+                let bp = &pb
+                    [q * k * nr + k0 * nr..q * k * nr + (k0 + kext) * nr];
+                for pl in 0..panels {
+                    // Tile columns are [q·nr, q·nr+nr); skip tiles
+                    // entirely below the diagonal (max column index <
+                    // first row index).
+                    if (q + 1) * nr <= row0 + pl * mr {
+                        continue;
+                    }
+                    if pl + 1 < panels {
+                        prefetch_read(
+                            pa_block
+                                .as_ptr()
+                                .wrapping_add((pl + 1) * k * mr + k0 * mr),
+                        );
+                    }
+                    let ap = &pa_block
+                        [pl * k * mr + k0 * mr..pl * k * mr + (k0 + kext) * mr];
+                    // SAFETY: see `run_row_block`.
+                    unsafe { (kern.run)(&mut acc, ap, bp) };
+                    let prow = pl * mr;
+                    let prows = mr.min(rows - prow);
+                    for r in 0..prows {
+                        let i = row0 + prow + r;
+                        for cc in 0..cols {
+                            let j = q * nr + cc;
+                            if j >= i {
+                                let off = (prow + r) * m + j;
+                                if kb == 0 {
+                                    cblock[off] = acc[r * nr + cc];
+                                } else {
+                                    cblock[off] += acc[r * nr + cc];
+                                }
                             }
                         }
                     }
@@ -483,11 +921,27 @@ mod tests {
     use crate::utils::prop;
     use crate::utils::rng::Rng;
 
-    fn packed(a: &Tensor, b: &Tensor, threads: usize) -> Tensor {
+    /// Every kernel available on this machine: scalar always, SIMD when
+    /// the CPU supports it.
+    fn kernels() -> Vec<&'static MicroKernel> {
+        let mut v = vec![scalar_kernel()];
+        if let Some(k) = simd_kernel() {
+            v.push(k);
+        }
+        v
+    }
+
+    fn packed_with(
+        kern: &'static MicroKernel,
+        a: &Tensor,
+        b: &Tensor,
+        threads: usize,
+    ) -> Tensor {
         let (m, k, n) = (a.m(), a.n(), b.n());
         let mut c = Tensor::zeros(&[m, n]);
         let (mut pa, mut pb) = (Vec::new(), Vec::new());
-        gemm_into(
+        gemm_into_with(
+            kern,
             c.data_mut(),
             m,
             k,
@@ -500,8 +954,15 @@ mod tests {
             &mut pa,
             &mut pb,
             threads,
+            KC,
+            MC,
+            NC,
         );
         c
+    }
+
+    fn packed(a: &Tensor, b: &Tensor, threads: usize) -> Tensor {
+        packed_with(active_kernel(), a, b, threads)
     }
 
     fn assert_close(a: &Tensor, b: &Tensor, tol: f32) {
@@ -512,6 +973,24 @@ mod tests {
     }
 
     #[test]
+    fn dispatch_kernel_is_consistent() {
+        // Whatever dispatch picked, it must be one of the maintained
+        // kernels and fit the blocking constants (MC multiple of mr, NC
+        // multiple of nr) — the invariants the auto entry points assert.
+        for k in kernels() {
+            assert!(k.mr <= MR_MAX && k.nr <= NR_MAX, "{}", k.name);
+            assert_eq!(MC % k.mr, 0, "{}", k.name);
+            assert_eq!(NC % k.nr, 0, "{}", k.name);
+        }
+        let active = active_kernel();
+        assert!(
+            kernels().iter().any(|k| std::ptr::eq(*k, active)),
+            "active kernel {} is not in the maintained set",
+            active.name
+        );
+    }
+
+    #[test]
     fn packed_matches_reference_property() {
         prop::check("packed-gemm==reference", 30, |rng| {
             let m = rng.gen_range(1, 70);
@@ -519,11 +998,16 @@ mod tests {
             let n = rng.gen_range(1, 70);
             let a = Tensor::randn(&[m, k], 1.0, rng);
             let b = Tensor::randn(&[k, n], 1.0, rng);
-            let got = packed(&a, &b, 1);
             let want = reference::matmul(&a, &b);
-            for (x, y) in got.data().iter().zip(want.data()) {
-                if (x - y).abs() > 1e-4 * (1.0 + x.abs()) {
-                    return Err(format!("({m},{k},{n}): {x} vs {y}"));
+            for kern in kernels() {
+                let got = packed_with(kern, &a, &b, 1);
+                for (x, y) in got.data().iter().zip(want.data()) {
+                    if (x - y).abs() > 1e-4 * (1.0 + x.abs()) {
+                        return Err(format!(
+                            "{} ({m},{k},{n}): {x} vs {y}",
+                            kern.name
+                        ));
+                    }
                 }
             }
             Ok(())
@@ -531,9 +1015,10 @@ mod tests {
     }
 
     #[test]
-    fn adversarial_shapes() {
+    fn adversarial_shapes_every_kernel() {
         // Degenerate vectors, single tiles, and every remainder class
-        // around the MR=4 / NR=16 tile sizes.
+        // around both tile shapes (scalar 4×16 and SIMD 8×8): m/n tails
+        // not divisible by mr/nr, k straddling the KC slab edge.
         let mut rng = Rng::new(7);
         for (m, k, n) in [
             (1, 1, 1),
@@ -544,12 +1029,115 @@ mod tests {
             (5, 17, 17),
             (3, 2, 15),
             (8, 1, 32),
+            (9, 5, 9),
+            (7, 19, 23),
+            (17, 31, 9),
             (19, 23, 31),
             (64, 64, 64),
+            (65, KC + 1, 65),
         ] {
             let a = Tensor::randn(&[m, k], 1.0, &mut rng);
             let b = Tensor::randn(&[k, n], 1.0, &mut rng);
-            assert_close(&packed(&a, &b, 1), &reference::matmul(&a, &b), 1e-4);
+            let want = reference::matmul(&a, &b);
+            for kern in kernels() {
+                assert_close(&packed_with(kern, &a, &b, 1), &want, 2e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn simd_matches_scalar_within_ulp_bound() {
+        // The SIMD kernels differ from the scalar oracle only by the
+        // FMA's fused single rounding. Each accumulation step seeds at
+        // most one rounding of the product, and once the two running
+        // sums diverge every later addition re-rounds independently, so
+        // the divergence is a random walk over k steps: bounded in
+        // expectation by O(√k) ULPs of the absolute-value product
+        // Σ|a||b| (the worst case is O(k), never approached with random
+        // data). The √k-scaled bound below is ~50x over the typical
+        // walk while staying far tighter than the generic reference
+        // tolerance.
+        let Some(simd) = simd_kernel() else {
+            return; // nothing to compare on this CPU
+        };
+        let mut rng = Rng::new(101);
+        for (m, k, n) in
+            [(33, 7, 9), (17, KC + 9, 31), (65, 2 * KC + 5, 15)]
+        {
+            let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+            let b = Tensor::randn(&[k, n], 1.0, &mut rng);
+            let scalar = packed_with(scalar_kernel(), &a, &b, 1);
+            let vec = packed_with(simd, &a, &b, 1);
+            // |A|·|B| bounds the accumulated rounding difference.
+            let mut aa = a.clone();
+            for v in aa.data_mut() {
+                *v = v.abs();
+            }
+            let mut bb = b.clone();
+            for v in bb.data_mut() {
+                *v = v.abs();
+            }
+            let l1 = reference::matmul(&aa, &bb);
+            for ((s, v), l) in scalar
+                .data()
+                .iter()
+                .zip(vec.data())
+                .zip(l1.data())
+            {
+                let tol = (4.0 + 2.0 * (k as f32).sqrt())
+                    * f32::EPSILON
+                    * (1.0 + l);
+                assert!(
+                    (s - v).abs() <= tol,
+                    "({m},{k},{n}): scalar {s} vs simd {v} (tol {tol})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn nc_blocking_crosses_panel_boundaries() {
+        // Small nc so modest shapes straddle several NC groups, with kc
+        // cutting slabs inside each group and a fused alpha·S writeback:
+        // the jc/kb/q nest must apply the fuse exactly once per element
+        // and accumulate the rest, for both kernels.
+        let mut rng = Rng::new(57);
+        for kern in kernels() {
+            let nc = 2 * kern.nr; // tiny NC group: 2 panels
+            let mc = 2 * kern.mr;
+            for (m, k, n) in [
+                (kern.mr + 1, 37, 2 * nc + 3),
+                (3 * kern.mr, 16, nc - 1),
+                (13, 33, nc + 1),
+                (9, 70, 3 * nc),
+            ] {
+                let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+                let b = Tensor::randn(&[k, n], 1.0, &mut rng);
+                let s = Tensor::randn(&[m, n], 1.0, &mut rng);
+                let mut c = Tensor::zeros(&[m, n]);
+                let (mut pa, mut pb) = (Vec::new(), Vec::new());
+                gemm_into_with(
+                    kern,
+                    c.data_mut(),
+                    m,
+                    k,
+                    n,
+                    a.data(),
+                    false,
+                    b.data(),
+                    false,
+                    Some((-0.625, s.data())),
+                    &mut pa,
+                    &mut pb,
+                    1,
+                    16, // kc: several slabs
+                    mc,
+                    nc,
+                );
+                let mut want = reference::matmul(&a, &b);
+                want.axpy(-0.625, &s);
+                assert_close(&c, &want, 2e-4);
+            }
         }
     }
 
@@ -573,32 +1161,37 @@ mod tests {
 
     #[test]
     fn blocked_equals_unblocked_within_tolerance() {
-        // kc >= k / mc >= m reproduces the unblocked full-k kernel; the
-        // blocked path differs only in f32 summation association.
+        // kc >= k / mc >= m / nc >= n reproduces the unblocked full-k
+        // kernel; the blocked path differs only in f32 summation
+        // association.
         let mut rng = Rng::new(41);
         let (m, k, n) = (97, 2 * KC + 19, 53);
         let a = Tensor::randn(&[m, k], 1.0, &mut rng);
         let b = Tensor::randn(&[k, n], 1.0, &mut rng);
-        let blocked = packed(&a, &b, 1);
-        let mut un = Tensor::zeros(&[m, n]);
-        let (mut pa, mut pb) = (Vec::new(), Vec::new());
-        gemm_into_blocked(
-            un.data_mut(),
-            m,
-            k,
-            n,
-            a.data(),
-            false,
-            b.data(),
-            false,
-            None,
-            &mut pa,
-            &mut pb,
-            1,
-            k,
-            div_up(m, MR) * MR,
-        );
-        assert_close(&blocked, &un, 1e-4);
+        for kern in kernels() {
+            let blocked = packed_with(kern, &a, &b, 1);
+            let mut un = Tensor::zeros(&[m, n]);
+            let (mut pa, mut pb) = (Vec::new(), Vec::new());
+            gemm_into_with(
+                kern,
+                un.data_mut(),
+                m,
+                k,
+                n,
+                a.data(),
+                false,
+                b.data(),
+                false,
+                None,
+                &mut pa,
+                &mut pb,
+                1,
+                k,
+                div_up(m, kern.mr) * kern.mr,
+                div_up(n, kern.nr) * kern.nr,
+            );
+            assert_close(&blocked, &un, 1e-4);
+        }
     }
 
     #[test]
@@ -607,42 +1200,54 @@ mod tests {
         // A·Bᵀ with B stored n×k.
         let a = Tensor::randn(&[13, 21], 1.0, &mut rng);
         let b = Tensor::randn(&[18, 21], 1.0, &mut rng);
-        let mut c = Tensor::zeros(&[13, 18]);
-        let (mut pa, mut pb) = (Vec::new(), Vec::new());
-        gemm_into(
-            c.data_mut(),
-            13,
-            21,
-            18,
-            a.data(),
-            false,
-            b.data(),
-            true,
-            None,
-            &mut pa,
-            &mut pb,
-            1,
-        );
-        assert_close(&c, &reference::matmul(&a, &b.transpose()), 1e-4);
+        let want_nt = reference::matmul(&a, &b.transpose());
         // Aᵀ·B with A stored k×m.
         let at = Tensor::randn(&[21, 13], 1.0, &mut rng);
         let b2 = Tensor::randn(&[21, 17], 1.0, &mut rng);
-        let mut c2 = Tensor::zeros(&[13, 17]);
-        gemm_into(
-            c2.data_mut(),
-            13,
-            21,
-            17,
-            at.data(),
-            true,
-            b2.data(),
-            false,
-            None,
-            &mut pa,
-            &mut pb,
-            1,
-        );
-        assert_close(&c2, &reference::matmul(&at.transpose(), &b2), 1e-4);
+        let want_tn = reference::matmul(&at.transpose(), &b2);
+        for kern in kernels() {
+            let mut c = Tensor::zeros(&[13, 18]);
+            let (mut pa, mut pb) = (Vec::new(), Vec::new());
+            gemm_into_with(
+                kern,
+                c.data_mut(),
+                13,
+                21,
+                18,
+                a.data(),
+                false,
+                b.data(),
+                true,
+                None,
+                &mut pa,
+                &mut pb,
+                1,
+                KC,
+                MC,
+                NC,
+            );
+            assert_close(&c, &want_nt, 1e-4);
+            let mut c2 = Tensor::zeros(&[13, 17]);
+            gemm_into_with(
+                kern,
+                c2.data_mut(),
+                13,
+                21,
+                17,
+                at.data(),
+                true,
+                b2.data(),
+                false,
+                None,
+                &mut pa,
+                &mut pb,
+                1,
+                KC,
+                MC,
+                NC,
+            );
+            assert_close(&c2, &want_tn, 1e-4);
+        }
     }
 
     #[test]
@@ -680,37 +1285,54 @@ mod tests {
         let a = Tensor::randn(&[m, k], 1.0, &mut rng);
         let b = Tensor::randn(&[k, n], 1.0, &mut rng);
         let s = Tensor::randn(&[m, n], 1.0, &mut rng);
-        let mut c = Tensor::zeros(&[m, n]);
-        let (mut pa, mut pb) = (Vec::new(), Vec::new());
-        gemm_into(
-            c.data_mut(),
-            m,
-            k,
-            n,
-            a.data(),
-            false,
-            b.data(),
-            false,
-            Some((-0.75, s.data())),
-            &mut pa,
-            &mut pb,
-            1,
-        );
         let mut want = reference::matmul(&a, &b);
         want.axpy(-0.75, &s);
-        assert_close(&c, &want, 2e-4);
+        for kern in kernels() {
+            let mut c = Tensor::zeros(&[m, n]);
+            let (mut pa, mut pb) = (Vec::new(), Vec::new());
+            gemm_into_with(
+                kern,
+                c.data_mut(),
+                m,
+                k,
+                n,
+                a.data(),
+                false,
+                b.data(),
+                false,
+                Some((-0.75, s.data())),
+                &mut pa,
+                &mut pb,
+                1,
+                KC,
+                MC,
+                NC,
+            );
+            assert_close(&c, &want, 2e-4);
+        }
     }
 
     #[test]
-    fn multithreaded_bit_identical() {
+    fn multithreaded_bit_identical_every_kernel() {
         let mut rng = Rng::new(13);
-        // Several MC row blocks so the pool actually fans out.
-        let a = Tensor::randn(&[3 * MC + 5, 55], 1.0, &mut rng);
-        let b = Tensor::randn(&[55, 83], 1.0, &mut rng);
-        let base = packed(&a, &b, 1);
-        for threads in [2, 3, 8, 64] {
-            let c = packed(&a, &b, threads);
-            assert_eq!(base, c, "threads={threads} drifted");
+        // Several MC row blocks so the pool actually fans out, plus a
+        // second shape so per-worker pack scratch is reused across
+        // differently-sized blocks.
+        let shapes = [(3 * MC + 5, 55, 83), (2 * MC + 1, 40, 33)];
+        for kern in kernels() {
+            for &(m, k, n) in &shapes {
+                let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+                let b = Tensor::randn(&[k, n], 1.0, &mut rng);
+                let base = packed_with(kern, &a, &b, 1);
+                for threads in [2, 3, 8, 64] {
+                    let c = packed_with(kern, &a, &b, threads);
+                    assert_eq!(
+                        base, c,
+                        "{} threads={threads} drifted",
+                        kern.name
+                    );
+                }
+            }
         }
     }
 
@@ -720,20 +1342,37 @@ mod tests {
             let m = rng.gen_range(1, 60);
             let k = rng.gen_range(1, 60);
             let x = Tensor::randn(&[m, k], 1.0, rng);
-            let mut c = Tensor::zeros(&[m, m]);
-            let (mut pa, mut pb) = (Vec::new(), Vec::new());
-            syrk_into(c.data_mut(), x.data(), m, k, &mut pa, &mut pb, 1);
             let want = reference::matmul_nt(&x, &x);
-            for (a, b) in c.data().iter().zip(want.data()) {
-                if (a - b).abs() > 1e-4 * (1.0 + a.abs()) {
-                    return Err(format!("({m},{k}): {a} vs {b}"));
+            for kern in kernels() {
+                let mut c = Tensor::zeros(&[m, m]);
+                let (mut pa, mut pb) = (Vec::new(), Vec::new());
+                syrk_into_with(
+                    kern,
+                    c.data_mut(),
+                    x.data(),
+                    m,
+                    k,
+                    &mut pa,
+                    &mut pb,
+                    1,
+                );
+                for (a, b) in c.data().iter().zip(want.data()) {
+                    if (a - b).abs() > 1e-4 * (1.0 + a.abs()) {
+                        return Err(format!(
+                            "{} ({m},{k}): {a} vs {b}",
+                            kern.name
+                        ));
+                    }
                 }
-            }
-            // Exact symmetry by construction.
-            for i in 0..m {
-                for j in 0..m {
-                    if c.at(i, j) != c.at(j, i) {
-                        return Err(format!("asymmetric at ({i},{j})"));
+                // Exact symmetry by construction.
+                for i in 0..m {
+                    for j in 0..m {
+                        if c.at(i, j) != c.at(j, i) {
+                            return Err(format!(
+                                "{} asymmetric at ({i},{j})",
+                                kern.name
+                            ));
+                        }
                     }
                 }
             }
@@ -747,42 +1386,75 @@ mod tests {
         // m spans several MC blocks; k spans several KC slabs.
         let x = Tensor::randn(&[2 * MC + 11, KC + 40], 1.0, &mut rng);
         let (m, k) = (x.m(), x.n());
-        let mut base = Tensor::zeros(&[m, m]);
-        let (mut pa, mut pb) = (Vec::new(), Vec::new());
-        syrk_into(base.data_mut(), x.data(), m, k, &mut pa, &mut pb, 1);
-        for threads in [2, 4, 16] {
-            let mut c = Tensor::zeros(&[m, m]);
-            syrk_into(c.data_mut(), x.data(), m, k, &mut pa, &mut pb, threads);
-            assert_eq!(base, c, "threads={threads} drifted");
-        }
         let want = reference::matmul_nt(&x, &x);
-        assert_close(&base, &want, 2e-4);
-    }
-
-    #[test]
-    fn scratch_reuse_across_shapes() {
-        // The same grow-only buffers must serve shrinking/growing shapes.
-        let mut rng = Rng::new(17);
-        let (mut pa, mut pb) = (Vec::new(), Vec::new());
-        for (m, k, n) in [(40, 40, 40), (3, 50, 7), (64, 2, 64), (5, 5, 5)] {
-            let a = Tensor::randn(&[m, k], 1.0, &mut rng);
-            let b = Tensor::randn(&[k, n], 1.0, &mut rng);
-            let mut c = Tensor::zeros(&[m, n]);
-            gemm_into(
-                c.data_mut(),
+        for kern in kernels() {
+            let mut base = Tensor::zeros(&[m, m]);
+            let (mut pa, mut pb) = (Vec::new(), Vec::new());
+            syrk_into_with(
+                kern,
+                base.data_mut(),
+                x.data(),
                 m,
                 k,
-                n,
-                a.data(),
-                false,
-                b.data(),
-                false,
-                None,
                 &mut pa,
                 &mut pb,
                 1,
             );
-            assert_close(&c, &reference::matmul(&a, &b), 1e-4);
+            for threads in [2, 4, 16] {
+                let mut c = Tensor::zeros(&[m, m]);
+                syrk_into_with(
+                    kern,
+                    c.data_mut(),
+                    x.data(),
+                    m,
+                    k,
+                    &mut pa,
+                    &mut pb,
+                    threads,
+                );
+                assert_eq!(
+                    base, c,
+                    "{} threads={threads} drifted",
+                    kern.name
+                );
+            }
+            assert_close(&base, &want, 2e-4);
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_across_shapes() {
+        // The same grow-only buffers must serve shrinking/growing shapes
+        // (including the stale-tail regions grow-only packing leaves).
+        let mut rng = Rng::new(17);
+        for kern in kernels() {
+            let (mut pa, mut pb) = (Vec::new(), Vec::new());
+            for (m, k, n) in
+                [(40, 40, 40), (3, 50, 7), (64, 2, 64), (5, 5, 5)]
+            {
+                let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+                let b = Tensor::randn(&[k, n], 1.0, &mut rng);
+                let mut c = Tensor::zeros(&[m, n]);
+                gemm_into_with(
+                    kern,
+                    c.data_mut(),
+                    m,
+                    k,
+                    n,
+                    a.data(),
+                    false,
+                    b.data(),
+                    false,
+                    None,
+                    &mut pa,
+                    &mut pb,
+                    1,
+                    KC,
+                    MC,
+                    NC,
+                );
+                assert_close(&c, &reference::matmul(&a, &b), 1e-4);
+            }
         }
     }
 }

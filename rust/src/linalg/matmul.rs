@@ -2,10 +2,11 @@
 //! in [`crate::linalg::gemm`].
 //!
 //! `matmul` / `matmul_nt` / `matmul_tn` keep their seed signatures but now
-//! route through `gemm_into` (packed panels + 4×16 microkernel, MC/KC
-//! cache blocking, persistent-pool fan-out for large products;
-//! `matmul_nt(x, x)` is detected by pointer identity and served by the
-//! symmetric `syrk_into` at half the FLOPs).
+//! route through `gemm_into` (packed panels + the runtime-dispatched
+//! explicit-SIMD microkernel — AVX2+FMA 8×8 when detected, scalar 4×16
+//! otherwise — with NC/KC/MC cache blocking and persistent-pool fan-out
+//! for large products; `matmul_nt(x, x)` is detected by pointer identity
+//! and served by the symmetric `syrk_into` at half the FLOPs).
 //! Packing scratch is thread-local and grow-only, so repeated calls do not
 //! allocate beyond the output tensor.
 //!

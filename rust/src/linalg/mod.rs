@@ -6,11 +6,14 @@
 //! shape has no AOT artifact and runtime XLA JIT is disabled.
 //!
 //! Hot-path layering (see README "Hot path architecture"):
-//! - `gemm` — packed register-tiled microkernels with MC/KC cache
-//!   blocking: `gemm_into` (persistent-pool row-block parallelism, fused
-//!   axpy writeback) and the symmetric `syrk_into` (upper triangle +
-//!   mirror, half the FLOPs). Results are bit-identical for any thread
-//!   count — the row-block partition depends only on the shape.
+//! - `gemm` — packed register-tiled microkernels (runtime-dispatched
+//!   explicit SIMD: AVX2+FMA 8×8 on x86_64, scalar 4×16 oracle elsewhere
+//!   or under `MUONBP_FORCE_SCALAR`) with NC/KC/MC cache blocking:
+//!   `gemm_into` (persistent-pool row-block parallelism, per-worker A
+//!   packing, fused axpy writeback) and the symmetric `syrk_into` (upper
+//!   triangle + mirror, half the FLOPs). Results are bit-identical for
+//!   any thread count — the row-block partition depends only on the
+//!   shape — and each kernel is property-tested against the oracles.
 //! - `matmul` — seed-compatible allocating entry points over `gemm`, with
 //!   the naive seed kernels kept in `matmul::reference` as oracles.
 //! - `newton_schulz` — the fused zero-alloc NS loop over an `NsWorkspace`

@@ -11,10 +11,14 @@
 //! (`tests/ns_zero_alloc.rs` proves it with a counting allocator). Per
 //! iteration it issues two symmetric syrk products (X·Xᵀ, and A·Aᵀ = A²
 //! since the Gram matrix is symmetric — half the FLOPs each) plus one
-//! packed GEMM whose writeback fuses the `+ a·X` term. Large iterations
-//! fan their row blocks across the persistent worker pool — full-step
-//! orthogonalization is multicore, still allocation-free, and bit-identical
-//! to the single-thread kernel for any pool size. The free
+//! packed GEMM whose writeback fuses the `+ a·X` term — all three served
+//! by the runtime-dispatched explicit-SIMD microkernel (`linalg::gemm`:
+//! AVX2+FMA when detected, the scalar oracle otherwise or under
+//! `MUONBP_FORCE_SCALAR`). Large iterations fan their row blocks across
+//! the persistent worker pool (each worker packing its blocks' A panels
+//! in its own arena) — full-step orthogonalization is multicore, still
+//! allocation-free, and bit-identical to the single-thread kernel for any
+//! pool size. The free
 //! [`newton_schulz`] keeps the seed signature and routes through a
 //! thread-local workspace, so every caller — `Muon`, the coordinator rank
 //! threads, `NsEngine`'s host fallback — reuses buffers across params

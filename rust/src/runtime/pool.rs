@@ -13,7 +13,10 @@
 //!
 //! - **Long-lived parked workers**, created once ([`Pool::global`]), each
 //!   owning a preallocated [`WorkerArena`] (`NsWorkspace` + GEMM packing
-//!   scratch) that stays warm across optimizer steps.
+//!   scratch) that stays warm across optimizer steps. The pooled GEMM
+//!   packs each row block's A panels in the owning worker's arena, so
+//!   per-worker pack scratch tops out at one MC×k panel set (see the
+//!   `WorkerArena::pa` docs) and packing itself runs in parallel.
 //! - **Allocation-free dispatch**: a fan-out publishes one type-erased
 //!   `(data, trampoline)` pointer pair under a mutex and wakes the workers;
 //!   no boxing, no channels, no per-task heap traffic. After pool warm-up,
@@ -57,15 +60,19 @@ use crate::linalg::newton_schulz::NsWorkspace;
 pub struct WorkerArena {
     /// Newton–Schulz ping-pong arena (block orthogonalizations).
     pub ns: NsWorkspace,
-    /// GEMM packing scratch (A panels).
+    /// GEMM A-panel packing scratch. The pooled `gemm_into`/`syrk_into`
+    /// row-block fan-out packs each MC row block's A panels *in the
+    /// worker that owns the block* (parallel packing), so the high-water
+    /// size is one MC × k panel set — `MC · k_max` floats padded to the
+    /// dispatched microkernel's `mr` — rather than all of A. The shared
+    /// packed B (NC×KC panel groups, padded to `nr`) is packed once by
+    /// the submitting thread and read-only from workers.
     pub pa: Vec<f32>,
-    /// GEMM packing scratch (B panels).
-    pub pb: Vec<f32>,
 }
 
 impl WorkerArena {
     pub fn new() -> WorkerArena {
-        WorkerArena { ns: NsWorkspace::new(), pa: Vec::new(), pb: Vec::new() }
+        WorkerArena { ns: NsWorkspace::new(), pa: Vec::new() }
     }
 }
 
@@ -282,6 +289,40 @@ impl Pool {
         self.size.load(Ordering::Acquire)
     }
 
+    /// Worker count a *compute* fan-out (GEMM/syrk row blocks, block
+    /// orthogonalizations) should budget for. Operator-pinned pools
+    /// (`MUONBP_POOL_THREADS`) return the pinned size — an explicit
+    /// instruction. Growable pools return the live size capped at the
+    /// core count: rendezvous phases may grow the pool past the cores
+    /// because collective tasks mostly block, but those extra workers
+    /// add no compute throughput — fanning row blocks across them would
+    /// only thrash caches and context-switch. Allocation-free after the
+    /// first call (the core count is cached; on Linux
+    /// `available_parallelism` re-reads /proc and heap-allocates per
+    /// call, which the zero-alloc proof would see).
+    pub fn compute_workers(&self) -> usize {
+        let w = self.workers();
+        if !self.growable {
+            return w;
+        }
+        w.min(cached_cores())
+    }
+
+    /// [`Pool::compute_workers`] of the global pool *if it exists*, else
+    /// the core count a default pool would be built with. A pure sizing
+    /// query: it never instantiates the pool, so library consumers that
+    /// ask for a thread budget but never actually fan out (single
+    /// row-block products) don't pay for N parked worker threads. Before
+    /// the pool exists a `MUONBP_POOL_THREADS` pin is not visible here —
+    /// harmless, because every fan-out is capped by the real pool at
+    /// dispatch time and results are thread-count-invariant anyway.
+    pub fn global_compute_width() -> usize {
+        match GLOBAL.get() {
+            Some(p) => p.compute_workers(),
+            None => cached_cores(),
+        }
+    }
+
     fn spawn_workers(&self, total: usize) {
         let mut handles = self.handles.lock().unwrap();
         let cur = self.size.load(Ordering::Acquire);
@@ -460,6 +501,21 @@ impl Drop for Pool {
         for h in self.handles.get_mut().unwrap().drain(..) {
             let _ = h.join();
         }
+    }
+}
+
+/// Cached `available_parallelism` (see [`Pool::compute_workers`]).
+fn cached_cores() -> usize {
+    static CORES: AtomicUsize = AtomicUsize::new(0);
+    match CORES.load(Ordering::Relaxed) {
+        0 => {
+            let n = thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1);
+            CORES.store(n, Ordering::Relaxed);
+            n
+        }
+        n => n,
     }
 }
 
