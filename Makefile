@@ -1,6 +1,6 @@
 # Convenience targets; tier-1 verify is `make verify` (== ROADMAP.md).
 
-.PHONY: build test verify ci perf pool-stress artifacts clean
+.PHONY: build test verify ci ci-env perf pool-stress zero1 artifacts clean
 
 build:
 	cargo build --release
@@ -13,10 +13,34 @@ verify: build test
 ci:
 	./ci.sh
 
+# Toolchain + CPU provenance for bench runs: rustc/cargo versions and the
+# SIMD features the GEMM dispatcher will detect (AVX2/FMA). Record this
+# output alongside any populated results/BENCH_hotpath.json.
+ci-env:
+	@command -v rustc >/dev/null 2>&1 && rustc --version || echo "rustc: NOT FOUND"
+	@command -v cargo >/dev/null 2>&1 && cargo --version || echo "cargo: NOT FOUND"
+	@echo "cpu: $$( (grep -m1 'model name' /proc/cpuinfo 2>/dev/null | cut -d: -f2- | sed 's/^ //') || echo unknown)"
+	@if grep -qwm1 avx2 /proc/cpuinfo 2>/dev/null; then echo "avx2: yes"; else echo "avx2: no/unknown"; fi
+	@if grep -qwm1 fma /proc/cpuinfo 2>/dev/null; then echo "fma: yes"; else echo "fma: no/unknown"; fi
+	@echo "pool: MUONBP_POOL_THREADS=$${MUONBP_POOL_THREADS-unset}  MUONBP_FORCE_SCALAR=$${MUONBP_FORCE_SCALAR-unset}"
+
 # Hot-path microbenchmarks -> results/BENCH_hotpath.json (host sections
 # always run; XLA/train-step sections need `make artifacts` first).
+# Refuses to clobber a POPULATED results file: the first real bench run
+# (entries != []) is provenance that a later placeholder regeneration
+# must not silently overwrite — rerun with PERF_FORCE=1 to replace it.
 perf:
+	@if [ "$${PERF_FORCE-}" != "1" ] && [ -f results/BENCH_hotpath.json ] \
+	    && ! grep -q '"entries": \[\]' results/BENCH_hotpath.json; then \
+	    echo "make perf: results/BENCH_hotpath.json already holds real bench entries;"; \
+	    echo "           refusing to overwrite. Rerun as: PERF_FORCE=1 make perf"; \
+	    exit 1; \
+	fi
 	cargo bench --bench perf_hotpath
+
+# ZeRO-1 equivalence suite under contention (see ci.sh tier-1).
+zero1:
+	RUST_TEST_THREADS=16 cargo test --test zero1_equivalence -- --nocapture
 
 # Worker-pool stress tests (concurrent submitters, rendezvous growth,
 # drop ordering) with the libtest thread count forced high so the test

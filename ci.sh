@@ -2,8 +2,25 @@
 # CI gate: tier-1 verify (build + tests) plus formatting and lint checks.
 # Usage: ./ci.sh            — run everything, fail fast on tier-1,
 #                              report fmt/clippy at the end.
+# Exit codes:
+#   0   all green
+#   1   build/test/lint failure (a red gate on a working toolchain)
+#   90  no Rust toolchain on PATH — machine-distinguishable from a red
+#       build, so automation can tell "cannot verify here" from "broken".
 set -uo pipefail
 cd "$(dirname "$0")"
+
+# Toolchain preflight: four consecutive PR containers had no cargo, which
+# made "ci.sh failed" ambiguous. Make the no-toolchain case loud, exact,
+# and distinct.
+if ! command -v cargo >/dev/null 2>&1; then
+    echo "ci.sh: no Rust toolchain ('cargo' not found on PATH)." >&2
+    echo "bootstrap:" >&2
+    echo "  curl --proto '=https' --tlsv1.2 -sSf https://sh.rustup.rs | sh -s -- -y" >&2
+    echo "  source \"\$HOME/.cargo/env\"" >&2
+    echo "then rerun: ./ci.sh   (and 'make perf' to populate results/BENCH_hotpath.json)" >&2
+    exit 90
+fi
 
 fail=0
 
@@ -32,6 +49,12 @@ step "tier-1: pool-stress suite (RUST_TEST_THREADS=16)"
 # high libtest thread count makes the test binaries themselves fight for
 # the pool while each test spawns its own submitter threads.
 RUST_TEST_THREADS=16 cargo test -q --test pool_stress || exit 1
+
+step "tier-1: ZeRO-1 equivalence suite (RUST_TEST_THREADS=16)"
+# Same contention rationale as pool_stress: the Zero1 schedule adds two
+# pool-native collectives (reduce_scatter_mean_into / all_gather_into)
+# whose rendezvous must stay bit-identical while tests fight for workers.
+RUST_TEST_THREADS=16 cargo test -q --test zero1_equivalence || exit 1
 
 step "tier-1: cargo bench --no-run (benches must keep compiling)"
 cargo bench --no-run || exit 1

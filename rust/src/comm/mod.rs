@@ -229,7 +229,103 @@ impl Communicator {
         }
         dst.scale(1.0 / self.n as f32);
         self.phase.wait();
-        self.charge(rank, CollectiveKind::AllReduce, bytes);
+        if self.n > 1 {
+            self.charge(rank, CollectiveKind::AllReduce, bytes);
+        }
+    }
+
+    /// Allocation-free reduce-scatter-mean over ZeRO-1 row slices: every
+    /// rank deposits the address of its full-size `src`, rendezvouses,
+    /// reduces **only the row slice it owns** (`shard_range(m, n_ranks,
+    /// rank)`) into its preallocated `dst`, and rendezvouses again before
+    /// returning. The per-element schedule — zero-fill, rank-order sum,
+    /// `1/n` scale — is exactly [`Communicator::all_reduce_mean_into`]'s,
+    /// so a ZeRO-1 slice is bit-identical to the matching rows of the
+    /// replicated all-reduce. `dst` may be empty (0 rows) when the group
+    /// outnumbers the matrix rows; the rank still rendezvouses. A
+    /// single-rank group moves nothing and charges nothing.
+    pub fn reduce_scatter_mean_into(
+        &self,
+        rank: usize,
+        src: &Tensor,
+        dst: &mut Tensor,
+    ) {
+        assert!(rank < self.n);
+        let n_cols = src.n();
+        let (r0, r1) = crate::shard::shard_range(src.m(), self.n, rank);
+        assert_eq!(
+            (dst.m(), dst.n()),
+            (r1 - r0, n_cols),
+            "reduce_scatter_mean_into shape"
+        );
+        let bytes = src.numel() * 4;
+        self.deposit_slots[rank]
+            .store(src as *const Tensor as usize, Ordering::Release);
+        self.phase.wait();
+        let off = r0 * n_cols;
+        let len = (r1 - r0) * n_cols;
+        let d = dst.data_mut();
+        d.fill(0.0);
+        for r in 0..self.n {
+            let p =
+                self.deposit_slots[r].load(Ordering::Acquire) as *const Tensor;
+            // SAFETY: every deposited reference outlives the closing
+            // rendezvous below, and slots are only rewritten after it —
+            // the shared borrow is valid for the whole read loop.
+            let s = unsafe { &*p }.data();
+            for (di, si) in d.iter_mut().zip(&s[off..off + len]) {
+                // The all-reduce path does `axpy(1.0, ..)`; f32 `1.0 * x`
+                // is exactly `x`, so the plain sum matches it bit for bit.
+                *di += *si;
+            }
+        }
+        dst.scale(1.0 / self.n as f32);
+        self.phase.wait();
+        if self.n > 1 {
+            self.charge(rank, CollectiveKind::ReduceScatter, bytes);
+        }
+    }
+
+    /// Allocation-free all-gather of ZeRO-1 row slices: every rank
+    /// deposits the address of its owned slice, rendezvouses, copies
+    /// every slice into its own preallocated full `dst` at the owner's
+    /// row offset, and rendezvouses again before returning. Slices tile
+    /// the matrix exactly (empty slices of clamped groups move nothing),
+    /// so the charged payload is the full gathered matrix — the same
+    /// accounting as [`Communicator::all_gather`]. A single-rank group
+    /// moves nothing and charges nothing.
+    pub fn all_gather_into(
+        &self,
+        rank: usize,
+        src: &Tensor,
+        dst: &mut Tensor,
+    ) {
+        assert!(rank < self.n);
+        let n_cols = dst.n();
+        let m_rows = dst.m();
+        let (r0, r1) = crate::shard::shard_range(m_rows, self.n, rank);
+        assert_eq!(
+            (src.m(), src.n()),
+            (r1 - r0, n_cols),
+            "all_gather_into shape"
+        );
+        let bytes = dst.numel() * 4;
+        self.deposit_slots[rank]
+            .store(src as *const Tensor as usize, Ordering::Release);
+        self.phase.wait();
+        let d = dst.data_mut();
+        for r in 0..self.n {
+            let p =
+                self.deposit_slots[r].load(Ordering::Acquire) as *const Tensor;
+            // SAFETY: as in reduce_scatter_mean_into above.
+            let s = unsafe { &*p }.data();
+            let (q0, q1) = crate::shard::shard_range(m_rows, self.n, r);
+            d[q0 * n_cols..q1 * n_cols].copy_from_slice(s);
+        }
+        self.phase.wait();
+        if self.n > 1 {
+            self.charge(rank, CollectiveKind::AllGather, bytes);
+        }
     }
 
     /// Record a collective whose rendezvous happened out-of-band: phased
@@ -650,6 +746,99 @@ mod tests {
         assert_eq!(stats.calls(CollectiveKind::AllReduce), 10);
         assert_eq!(stats.bytes(CollectiveKind::AllReduce), 10 * 4 * 4);
         assert!(stats.total_sim_time() > 0.0);
+    }
+
+    #[test]
+    fn reduce_scatter_mean_into_matches_allreduce_rows() {
+        // Each rank's ZeRO-1 slice must equal the matching rows of the
+        // allocating all-reduce-mean, bit for bit, over many rounds —
+        // including a ragged partition (5 rows over 3 ranks).
+        let comm = Communicator::new(3, NetModel::a100_nvlink());
+        let check = Communicator::new(3, NetModel::a100_nvlink());
+        thread::scope(|s| {
+            for r in 0..3 {
+                let c = comm.clone();
+                let c2 = check.clone();
+                s.spawn(move |_| {
+                    let src = Tensor::from_vec(
+                        &[5, 2],
+                        (0..10)
+                            .map(|x| (x as f32 + 1.0) * (r as f32 - 0.5))
+                            .collect(),
+                    )
+                    .unwrap();
+                    let (r0, r1) = crate::shard::shard_range(5, 3, r);
+                    let mut dst = Tensor::zeros(&[r1 - r0, 2]);
+                    for _ in 0..10 {
+                        c.reduce_scatter_mean_into(r, &src, &mut dst);
+                    }
+                    let want = c2.all_reduce_mean(r, src.clone());
+                    let want_rows = &want.data()[r0 * 2..r1 * 2];
+                    assert_eq!(dst.data(), want_rows, "rank {r} slice");
+                });
+            }
+        })
+        .unwrap();
+        let stats = comm.stats();
+        assert_eq!(stats.calls(CollectiveKind::ReduceScatter), 10);
+        assert_eq!(stats.bytes(CollectiveKind::ReduceScatter), 10 * 5 * 2 * 4);
+        assert!(stats.total_sim_time() > 0.0);
+    }
+
+    #[test]
+    fn all_gather_into_reassembles_row_slices() {
+        // Every rank deposits its owned row slice; every rank's dst must be
+        // the full matrix. 2 rows over 4 ranks: ranks 2-3 own EMPTY slices
+        // and still rendezvous (the clamped ZeRO-1 case).
+        let comm = Communicator::new(4, NetModel::a100_nvlink());
+        thread::scope(|s| {
+            for r in 0..4 {
+                let c = comm.clone();
+                s.spawn(move |_| {
+                    let (r0, r1) = crate::shard::shard_range(2, 4, r);
+                    let src = Tensor::from_vec(
+                        &[r1 - r0, 3],
+                        (r0..r1)
+                            .flat_map(|i| {
+                                (0..3).map(move |j| (i * 3 + j) as f32)
+                            })
+                            .collect(),
+                    )
+                    .unwrap();
+                    let mut dst = Tensor::zeros(&[2, 3]);
+                    for _ in 0..5 {
+                        c.all_gather_into(r, &src, &mut dst);
+                    }
+                    let want: Vec<f32> = (0..6).map(|x| x as f32).collect();
+                    assert_eq!(dst.data(), &want[..], "rank {r} gather");
+                });
+            }
+        })
+        .unwrap();
+        let stats = comm.stats();
+        assert_eq!(stats.calls(CollectiveKind::AllGather), 5);
+        // Payload = the full gathered matrix, once per collective.
+        assert_eq!(stats.bytes(CollectiveKind::AllGather), 5 * 6 * 4);
+    }
+
+    #[test]
+    fn single_rank_into_collectives_are_free() {
+        // A 1-rank "group" is a degenerate collective: correct results,
+        // nothing on the wire, nothing charged (the dp=1 ZeRO-1 path).
+        let comm = Communicator::new(1, NetModel::ib_hdr());
+        let src =
+            Tensor::from_vec(&[2, 2], vec![1.0, -2.0, 3.0, 0.5]).unwrap();
+        let mut dst = Tensor::zeros(&[2, 2]);
+        comm.reduce_scatter_mean_into(0, &src, &mut dst);
+        assert_eq!(dst, src, "mean over one rank is the identity");
+        let mut full = Tensor::zeros(&[2, 2]);
+        comm.all_gather_into(0, &dst, &mut full);
+        assert_eq!(full, src);
+        let mut ar = Tensor::zeros(&[2, 2]);
+        comm.all_reduce_mean_into(0, &src, &mut ar);
+        assert_eq!(ar, src);
+        assert_eq!(comm.stats().total_bytes(), 0);
+        assert_eq!(comm.stats().total_sim_time(), 0.0);
     }
 
     #[test]

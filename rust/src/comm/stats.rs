@@ -84,6 +84,23 @@ impl CommStats {
         self.entries.iter().map(|e| e.bytes).sum()
     }
 
+    /// Charged payload bytes of the DP gradient-sync path: the sum of
+    /// the three collective kinds that path uses (all-reduce in
+    /// replicated mode; reduce-scatter + all-gather, plus all-reduce for
+    /// AdamW-scope params, under ZeRO-1). This is a bookkeeping
+    /// convenience — "did the sync charge anything, and through which
+    /// kinds" (e.g. the dp=1 ZeRO-1 regression asserts it is zero) —
+    /// NOT a cross-mode cost metric: each collective is charged at its
+    /// full logical payload, so ZeRO-1 records two charges where the
+    /// all-reduce records one even though ring wire volume is identical
+    /// (see `costmodel::netmodel::grad_sync_time`; for the per-rank
+    /// tradeoff use `grad_sync_bytes_per_rank`).
+    pub fn grad_sync_bytes(&self) -> u64 {
+        self.bytes(CollectiveKind::AllReduce)
+            + self.bytes(CollectiveKind::ReduceScatter)
+            + self.bytes(CollectiveKind::AllGather)
+    }
+
     pub fn total_sim_time(&self) -> f64 {
         self.entries.iter().map(|e| e.sim_time).sum()
     }
@@ -133,6 +150,16 @@ mod tests {
         assert_eq!(s.bytes(CollectiveKind::AllReduce), 1500);
         assert_eq!(s.total_bytes(), 1700);
         assert!((s.total_sim_time() - 0.85).abs() < 1e-12);
+    }
+
+    #[test]
+    fn grad_sync_bytes_spans_modes() {
+        let mut s = CommStats::default();
+        s.record(CollectiveKind::AllReduce, 100, 0.0);
+        s.record(CollectiveKind::ReduceScatter, 40, 0.0);
+        s.record(CollectiveKind::AllGather, 40, 0.0);
+        s.record(CollectiveKind::Gather, 7, 0.0); // TP traffic: excluded
+        assert_eq!(s.grad_sync_bytes(), 180);
     }
 
     #[test]

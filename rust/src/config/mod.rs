@@ -5,8 +5,8 @@ use std::path::Path;
 
 use anyhow::Result;
 
-use crate::mesh::Layout;
-use crate::optim::Schedule;
+use crate::mesh::{Layout, StateSharding};
+use crate::optim::{MuonCfg, Schedule};
 use crate::utils::cli::Args;
 use crate::utils::json::Json;
 
@@ -22,11 +22,19 @@ pub struct RunConfig {
     pub schedule: Schedule,
     /// Orthogonalization period P (muonbp only).
     pub period: usize,
-    /// η_block / η_full ratio.
+    /// η_block / η_full ratio. Ignored when `eta_block_theory` is set.
     pub eta_block_ratio: f64,
+    /// `--eta-block-ratio theory`: resolve the ratio to the §3.2 optimum
+    /// bracket endpoint `1/√(rc)` for this run's block grid (deferred to
+    /// [`RunConfig::effective_eta_block_ratio`], since layout/tp may be
+    /// overridden after the flag is parsed).
+    pub eta_block_theory: bool,
     pub dp: usize,
     pub tp: usize,
     pub layout: Layout,
+    /// Optimizer-state residency across the DP group (ZeRO-1 vs
+    /// replicated momentum).
+    pub state_sharding: StateSharding,
     /// Run the real thread-per-rank cluster instead of the single-process
     /// reference optimizer.
     pub distributed: bool,
@@ -46,9 +54,11 @@ impl Default for RunConfig {
             schedule: Schedule::paper_wsd(),
             period: 5,
             eta_block_ratio: 1.0,
+            eta_block_theory: false,
             dp: 2,
             tp: 4,
             layout: Layout::TpColumn,
+            state_sharding: StateSharding::Replicated,
             distributed: false,
             seed: 0,
             eval_every: 20,
@@ -85,7 +95,13 @@ impl RunConfig {
             c.period = v.as_usize()?;
         }
         if let Some(v) = j.get("eta_block_ratio") {
-            c.eta_block_ratio = v.as_f64()?;
+            // Number, or the string "theory" for the §3.2 endpoint.
+            if v.as_str().map(|s| s == "theory").unwrap_or(false) {
+                c.eta_block_theory = true;
+            } else {
+                c.eta_block_ratio = v.as_f64()?;
+                c.eta_block_theory = false;
+            }
         }
         if let Some(v) = j.get("dp") {
             c.dp = v.as_usize()?;
@@ -95,6 +111,9 @@ impl RunConfig {
         }
         if let Some(v) = j.get("layout") {
             c.layout = Layout::parse(v.as_str()?)?;
+        }
+        if let Some(v) = j.get("state_sharding") {
+            c.state_sharding = StateSharding::parse(v.as_str()?)?;
         }
         if let Some(v) = j.get("distributed") {
             c.distributed = v.as_bool()?;
@@ -125,12 +144,22 @@ impl RunConfig {
             self.schedule = Schedule::parse(v)?;
         }
         self.period = args.get_usize("period", self.period)?;
-        self.eta_block_ratio =
-            args.get_f64("eta-block-ratio", self.eta_block_ratio)?;
+        if args.is_keyword("eta-block-ratio", "theory") {
+            self.eta_block_theory = true;
+        } else {
+            if args.get("eta-block-ratio").is_some() {
+                self.eta_block_theory = false;
+            }
+            self.eta_block_ratio =
+                args.get_f64("eta-block-ratio", self.eta_block_ratio)?;
+        }
         self.dp = args.get_usize("dp", self.dp)?;
         self.tp = args.get_usize("tp", self.tp)?;
         if let Some(v) = args.get("layout") {
             self.layout = Layout::parse(v)?;
+        }
+        if let Some(v) = args.get("state-sharding") {
+            self.state_sharding = StateSharding::parse(v)?;
         }
         if args.flag("distributed") {
             self.distributed = true;
@@ -141,6 +170,30 @@ impl RunConfig {
             self.out = v.to_string();
         }
         Ok(())
+    }
+
+    /// Block count `rc` of this run's TP partition — the `r·c` the §3.2
+    /// bracket `[1/√(rc), 1]` refers to (`tp` for the 1-D column/row
+    /// layouts, `rows·cols` for an explicit grid, 1 when nothing splits).
+    fn block_rc(&self) -> usize {
+        match self.layout {
+            Layout::TpGrid { rows, cols } => rows * cols,
+            Layout::Replicated | Layout::ZeroLayer => 1,
+            _ => self.tp,
+        }
+    }
+
+    /// η_block/η_full this run should use: the literal
+    /// `eta_block_ratio`, or — under `--eta-block-ratio theory` — the
+    /// §3.2 optimum bracket endpoint `1/√(rc)` for the resolved
+    /// layout/tp. Resolved lazily so CLI/JSON override order between the
+    /// ratio, `--tp` and `--layout` never matters.
+    pub fn effective_eta_block_ratio(&self) -> f64 {
+        if self.eta_block_theory {
+            MuonCfg::theory_eta_block_ratio(self.block_rc())
+        } else {
+            self.eta_block_ratio
+        }
     }
 }
 
@@ -177,5 +230,55 @@ mod tests {
     fn bad_values_rejected() {
         let j = Json::parse(r#"{"layout":"bogus"}"#).unwrap();
         assert!(RunConfig::from_json(&j).is_err());
+        let j = Json::parse(r#"{"state_sharding":"zero9"}"#).unwrap();
+        assert!(RunConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn state_sharding_plumbing() {
+        let j = Json::parse(r#"{"state_sharding":"zero1"}"#).unwrap();
+        let mut c = RunConfig::from_json(&j).unwrap();
+        assert_eq!(c.state_sharding, StateSharding::Zero1);
+        let args = Args::parse(
+            ["--state-sharding", "replicated"].iter().map(|s| s.to_string()),
+        )
+        .unwrap();
+        c.apply_args(&args).unwrap();
+        assert_eq!(c.state_sharding, StateSharding::Replicated);
+        let bad = Args::parse(
+            ["--state-sharding", "zero9"].iter().map(|s| s.to_string()),
+        )
+        .unwrap();
+        assert!(c.apply_args(&bad).is_err());
+    }
+
+    #[test]
+    fn eta_block_ratio_theory_keyword() {
+        // `theory` resolves AFTER tp/layout overrides, whatever the flag
+        // order: rc = tp for 1-D layouts, rows*cols for grids.
+        let args = Args::parse(
+            ["--eta-block-ratio", "theory", "--tp", "4"]
+                .iter()
+                .map(|s| s.to_string()),
+        )
+        .unwrap();
+        let mut c = RunConfig::default();
+        c.apply_args(&args).unwrap();
+        assert!(c.eta_block_theory);
+        assert_eq!(c.effective_eta_block_ratio(), 0.5); // 1/sqrt(4)
+        c.layout = Layout::TpGrid { rows: 2, cols: 8 };
+        assert_eq!(c.effective_eta_block_ratio(), 0.25); // 1/sqrt(16)
+        // A later numeric value wins over the keyword.
+        let num = Args::parse(
+            ["--eta-block-ratio", "0.7"].iter().map(|s| s.to_string()),
+        )
+        .unwrap();
+        c.apply_args(&num).unwrap();
+        assert!(!c.eta_block_theory);
+        assert_eq!(c.effective_eta_block_ratio(), 0.7);
+        // JSON accepts the keyword too.
+        let j = Json::parse(r#"{"eta_block_ratio":"theory","tp":16}"#).unwrap();
+        let c = RunConfig::from_json(&j).unwrap();
+        assert_eq!(c.effective_eta_block_ratio(), 0.25);
     }
 }

@@ -9,9 +9,21 @@
 //! idled at the scatter rendezvous. The step is now a phased schedule:
 //!
 //! ```text
-//! phase 0  DP sync     pooled rank tasks; pool-native all_reduce_mean_into
-//!                      (rendezvous barrier, preallocated accumulators)
-//! phase 1  TP ranks    pooled fan-out: momentum shard update; on block
+//! phase 0  DP sync     pooled rank tasks; pool-native collectives
+//!                      (rendezvous barrier, preallocated accumulators).
+//!                      Replicated: all_reduce_mean_into per param.
+//!                      ZeRO-1:     per matrix, reduce_scatter_mean_into
+//!                                  (each DP rank receives the mean-
+//!                                  gradient rows it owns) → slice-local
+//!                                  momentum update (the rank touches
+//!                                  ONLY its 1/dp row-slice, the whole
+//!                                  point of ZeRO-1) → all_gather_into
+//!                                  reassembling the updated momentum
+//!                                  for the TP phases; non-matrix params
+//!                                  keep the all-reduce (AdamW).
+//! phase 1  TP ranks    pooled fan-out: momentum shard update (or, under
+//!                      ZeRO-1, shard load from the gathered matrix — the
+//!                      state already advanced in phase 0); on block
 //!                      steps, per-block NS in the worker's arena —
 //!                      once per DISTINCT block: replica ranks of a
 //!                      clamped grid (rank >= num_blocks) skip the NS
@@ -33,6 +45,22 @@
 //! rendezvous-in-task schedule, and `matches_reference_muon_exactly`
 //! pins them to the single-process `Muon` across layouts and periods.
 //!
+//! # State sharding (ZeRO-1)
+//!
+//! `StateSharding::Zero1` moves momentum residency from "replicated on
+//! every DP rank" to "each DP rank owns its `1/dp` row-slice of every
+//! momentum matrix" — the paper's system setup ("eight-way tensor
+//! parallelism and ZeRO optimizer state sharding"). Momentum rows are
+//! disjoint across ranks and the recurrence `M_t = μ M_{t-1} + G_t` is
+//! elementwise, so the sharded update is **bit-identical** to the
+//! replicated one (`zero1_matches_replicated_exactly` pins it across
+//! layouts, clamped meshes, dp degrees and periods); the per-matrix
+//! gradient sync swaps one all-reduce for a reduce-scatter + all-gather
+//! pair (`costmodel::netmodel::grad_sync_bytes_per_rank` predicts both,
+//! and per-rank traffic strictly decreases for dp ≥ 2). All collectives
+//! stay pool-native and allocation-free, so warm `Zero1` steps allocate
+//! nothing, same as replicated ones.
+//!
 //! # Byte accounting
 //!
 //! Payloads move through shared arenas, but `CommStats` still records what
@@ -40,7 +68,10 @@
 //! the momentum shards and scatter of the update shards on full steps,
 //! nothing on block steps. Ranks beyond a clamped block grid
 //! (`dim < tp`) hold *replicas*; their deposits move no payload and are
-//! excluded from the charge.
+//! excluded from the charge. DP-side: replicated mode charges one
+//! all-reduce per param; ZeRO-1 charges reduce-scatter + all-gather per
+//! matrix (all-reduce for non-matrix params), each at the full logical
+//! payload, matching the existing full-replica DP model.
 //!
 //! # Zero allocations in steady state
 //!
@@ -59,14 +90,14 @@ use std::sync::Arc;
 use crate::comm::{CollectiveKind, CommStats, Communicator};
 use crate::costmodel::netmodel::NetModel;
 use crate::linalg::newton_schulz::{NsCoeffs, NsWorkspace};
-use crate::mesh::{Layout, Mesh};
+use crate::mesh::{Layout, Mesh, StateSharding};
 use crate::optim::adamw::AdamW;
-use crate::optim::muon::{Muon, MuonCfg, OrthFn, Period};
+use crate::optim::muon::{momentum_update, Muon, MuonCfg, OrthFn, Period};
 use crate::optim::scaling::rms_match_scale;
 use crate::optim::{Optimizer, ParamKind, ParamMeta};
 use crate::runtime::pool::{Pool, SendPtr};
 use crate::runtime::NsEngine;
-use crate::shard::{shard_into, unshard_from, ShardSpec};
+use crate::shard::{row_slice_zeros, shard_into, unshard_from, ShardSpec};
 use crate::tensor::Tensor;
 
 /// Builder for the distributed coordinator.
@@ -76,6 +107,7 @@ pub struct DistMuonBuilder {
     pub tp_net: NetModel,
     pub dp_net: NetModel,
     pub ns: Option<Arc<NsEngine>>,
+    pub sharding: StateSharding,
 }
 
 impl DistMuonBuilder {
@@ -88,11 +120,21 @@ impl DistMuonBuilder {
             tp_net: NetModel::a100_nvlink(),
             dp_net: NetModel::ib_hdr(),
             ns: None,
+            sharding: StateSharding::Replicated,
         }
     }
 
     pub fn layout(mut self, layout: Layout) -> Self {
         self.cfg.layout = layout;
+        self
+    }
+
+    /// Optimizer-state residency across the DP group (ZeRO-1 momentum
+    /// sharding vs the replicated baseline). Bit-identical results either
+    /// way; what changes is who stores which momentum rows and which
+    /// collectives the gradient sync uses.
+    pub fn state_sharding(mut self, sharding: StateSharding) -> Self {
+        self.sharding = sharding;
         self
     }
 
@@ -144,10 +186,45 @@ impl DistMuonBuilder {
                 })
                 .collect()
         };
+        let zero1 = self.sharding == StateSharding::Zero1;
         let rank_momenta: Vec<Vec<Tensor>> =
             (0..self.mesh.tp).map(rank_blocks).collect();
-        let rank_grads = rank_momenta.clone();
+        // Grad-shard staging exists only in replicated mode: under ZeRO-1
+        // the momentum is updated slice-locally in the DP phase and the TP
+        // ranks load their blocks from the gathered matrix instead.
+        let rank_grads: Vec<Vec<Tensor>> = if zero1 {
+            (0..self.mesh.tp).map(|_| Vec::new()).collect()
+        } else {
+            rank_momenta.clone()
+        };
         let rank_updates = rank_momenta.clone();
+        // ZeRO-1 arenas: each DP rank owns the 1/dp row-slice of every
+        // momentum matrix (the authoritative optimizer state in that
+        // mode) plus a same-shape staging slice for the reduce-scattered
+        // mean gradient. Empty slices (dp > m) still rendezvous.
+        let zero1_slices = || -> Vec<Vec<Tensor>> {
+            (0..self.mesh.dp)
+                .map(|r| {
+                    metas
+                        .iter()
+                        .filter(|p| p.kind == ParamKind::Matrix)
+                        .map(|p| {
+                            row_slice_zeros(
+                                p.shape[0],
+                                p.shape[1],
+                                self.mesh.dp,
+                                r,
+                            )
+                        })
+                        .collect()
+                })
+                .collect()
+        };
+        let (dp_momenta, dp_grad_slices) = if zero1 {
+            (zero1_slices(), zero1_slices())
+        } else {
+            (Vec::new(), Vec::new())
+        };
         // Per-matrix leader-phase arenas (full momentum + update delta).
         let scratch: Vec<Option<DistScratch>> = specs
             .iter()
@@ -158,10 +235,16 @@ impl DistMuonBuilder {
                 })
             })
             .collect();
-        // DP all-reduce accumulators: one full param set per DP rank
-        // (every rank reduces, like a real cluster; rank 0's result is
-        // consumed). Empty when dp == 1 — the input grads are used as-is.
-        let dp_acc: Vec<Vec<Tensor>> = if self.mesh.dp > 1 {
+        // DP sync destinations: one full param set per DP rank (every
+        // rank participates, like a real cluster; rank 0's result is
+        // consumed). In replicated mode each entry receives the
+        // all-reduced mean gradient; under ZeRO-1 the *matrix* entries
+        // instead receive the all-gathered updated momentum (the
+        // non-matrix entries stay mean gradients for AdamW). Empty when
+        // dp == 1 in replicated mode — the input grads are used as-is —
+        // but always allocated under ZeRO-1, whose momentum state lives
+        // in the DP phase even at dp = 1.
+        let dp_acc: Vec<Vec<Tensor>> = if self.mesh.dp > 1 || zero1 {
             (0..self.mesh.dp)
                 .map(|_| {
                     metas.iter().map(|p| Tensor::zeros(&p.shape)).collect()
@@ -190,6 +273,9 @@ impl DistMuonBuilder {
             rank_updates,
             scratch,
             dp_acc,
+            dp_momenta,
+            dp_grad_slices,
+            sharding: self.sharding,
             ws: NsWorkspace::new(),
             adam: AdamW::new(metas),
             backend,
@@ -238,8 +324,19 @@ pub struct DistMuon {
     rank_updates: Vec<Vec<Tensor>>,
     /// Per-matrix leader arenas, aligned with params (None = AdamW scope).
     scratch: Vec<Option<DistScratch>>,
-    /// [dp_rank][param] all-reduce accumulators (empty when dp == 1).
+    /// [dp_rank][param] DP sync destinations (empty when dp == 1 and
+    /// replicated): all-reduced mean gradients, except matrix entries
+    /// under ZeRO-1, which hold the all-gathered updated momentum.
     dp_acc: Vec<Vec<Tensor>>,
+    /// [dp_rank][matrix_ordinal] ZeRO-1 momentum row-slices — the
+    /// authoritative optimizer state in `Zero1` mode (empty otherwise).
+    /// Rank r owns rows `shard_range(m, dp, r)` of each matrix.
+    dp_momenta: Vec<Vec<Tensor>>,
+    /// [dp_rank][matrix_ordinal] reduce-scattered mean-gradient slices
+    /// (ZeRO-1 staging; empty otherwise).
+    dp_grad_slices: Vec<Vec<Tensor>>,
+    /// Optimizer-state residency across the DP group.
+    sharding: StateSharding,
     /// Leader-phase NS arena; its GEMM/syrk row blocks fan out across the
     /// pool because the leader runs on the main thread, not a rank task.
     ws: NsWorkspace,
@@ -265,6 +362,11 @@ impl DistMuon {
 
     pub fn cfg_mut(&mut self) -> &mut MuonCfg {
         &mut self.cfg
+    }
+
+    /// Optimizer-state residency across the DP group.
+    pub fn state_sharding(&self) -> StateSharding {
+        self.sharding
     }
 
     /// Accumulated communication stats (TP = optimizer traffic, DP = grad
@@ -293,37 +395,87 @@ impl Optimizer for DistMuon {
         let eta = if full { lr } else { lr * self.cfg.eta_block_ratio };
         let tp_before = self.tp_comm.stats().total_bytes();
 
-        // ---- Phase 0: DP gradient sync. Every DP rank holds the same
-        // replica (batch-split grads average to exactly the full-batch
-        // grad), so payloads are real and results bit-identical. Rank
-        // tasks run concurrently on the pool and rendezvous inside the
-        // allocation-free pool-native collective.
-        if self.mesh.dp > 1 {
+        // ---- Phase 0: DP sync. Every DP rank holds the same replica
+        // (batch-split grads average to exactly the full-batch grad), so
+        // payloads are real and results bit-identical. Rank tasks run
+        // concurrently on the pool and rendezvous inside the
+        // allocation-free pool-native collectives.
+        //
+        // Replicated: one all-reduce-mean per param; every rank
+        // redundantly holds the full mean gradient (and, implicitly, the
+        // full momentum updated later in the TP phase).
+        //
+        // ZeRO-1: per matrix, the sync is reduce-scatter-mean (rank r
+        // receives exactly the mean-gradient rows it owns), a slice-local
+        // momentum update (the ONLY momentum write in this mode — the
+        // rank updates nothing it does not own), and an all-gather that
+        // reassembles the updated momentum for the TP phases. Non-matrix
+        // params keep the all-reduce (AdamW runs replicated). All ranks
+        // issue the collectives in identical param order — the same
+        // contract a real NCCL group requires.
+        let zero1 = self.sharding == StateSharding::Zero1;
+        if self.mesh.dp > 1 || zero1 {
             let comm = &self.dp_comm;
+            let specs = &self.specs;
+            let mu = self.cfg.momentum;
             let acc_ptr = SendPtr(self.dp_acc.as_mut_ptr());
+            let dpm_ptr = SendPtr(self.dp_momenta.as_mut_ptr());
+            let dpg_ptr = SendPtr(self.dp_grad_slices.as_mut_ptr());
             Pool::global().run_concurrent(self.mesh.dp, |r, _arena| {
-                // SAFETY: task r is the sole user of `dp_acc[r]`; the map
-                // joins all tasks before `dp_acc` is touched again.
+                // SAFETY: task r is the sole user of row r of `dp_acc`,
+                // `dp_momenta` and `dp_grad_slices`; the fan-out joins
+                // all tasks before any row is touched again.
                 let acc: &mut Vec<Tensor> = unsafe { &mut *acc_ptr.0.add(r) };
-                for (g, dst) in grads.iter().zip(acc.iter_mut()) {
-                    comm.all_reduce_mean_into(r, g, dst);
+                if zero1 {
+                    let msl: &mut Vec<Tensor> =
+                        unsafe { &mut *dpm_ptr.0.add(r) };
+                    let gsl: &mut Vec<Tensor> =
+                        unsafe { &mut *dpg_ptr.0.add(r) };
+                    let mut ord = 0;
+                    for (i, g) in grads.iter().enumerate() {
+                        if specs[i].is_some() {
+                            comm.reduce_scatter_mean_into(
+                                r,
+                                g,
+                                &mut gsl[ord],
+                            );
+                            momentum_update(&mut msl[ord], mu, &gsl[ord]);
+                            comm.all_gather_into(r, &msl[ord], &mut acc[i]);
+                            ord += 1;
+                        } else {
+                            comm.all_reduce_mean_into(r, g, &mut acc[i]);
+                        }
+                    }
+                } else {
+                    for (g, dst) in grads.iter().zip(acc.iter_mut()) {
+                        comm.all_reduce_mean_into(r, g, dst);
+                    }
                 }
             });
         }
-        let grads: &[Tensor] =
-            if self.mesh.dp > 1 { &self.dp_acc[0] } else { grads };
+        // What the TP phases consume: mean gradients (replicated), except
+        // matrix entries under ZeRO-1, which are the gathered updated
+        // momenta. The dp == 1 replicated fast path feeds the input grads
+        // through untouched.
+        let synced: &[Tensor] = if self.mesh.dp > 1 || zero1 {
+            &self.dp_acc[0]
+        } else {
+            grads
+        };
 
-        // ---- Phase 1: pooled TP rank tasks — momentum shard update, and
-        // on block steps the per-block orthogonalization (each rank in
-        // its worker's warm arena). No task rendezvous is needed: ranks
-        // touch disjoint arenas, and the fan-out join *is* the gather
-        // rendezvous for the leader phase.
+        // ---- Phase 1: pooled TP rank tasks — momentum shard update
+        // (replicated mode) or momentum shard *load* from the gathered
+        // matrix (ZeRO-1 — the state was already advanced slice-locally
+        // in phase 0), and on block steps the per-block orthogonalization
+        // (each rank in its worker's warm arena). No task rendezvous is
+        // needed: ranks touch disjoint arenas, and the fan-out join *is*
+        // the gather rendezvous for the leader phase.
         {
             let specs = &self.specs;
             let matrix_idx = &self.matrix_idx;
             let backend = &self.backend;
             let ns_calls = &self.ns_calls;
-            let mu = self.cfg.momentum as f32;
+            let mu = self.cfg.momentum;
             let rms_beta = self.cfg.rms_beta;
             let momenta_ptr = SendPtr(self.rank_momenta.as_mut_ptr());
             let grads_ptr = SendPtr(self.rank_grads.as_mut_ptr());
@@ -339,9 +491,29 @@ impl Optimizer for DistMuon {
                     let spec = specs[pidx].as_ref().unwrap();
                     let nb = spec.num_blocks();
                     let block_id = rank.min(nb - 1);
-                    // M_t^(m) = μ M_{t-1}^(m) + G_t^(m)
-                    shard_into(&grads[pidx], spec, block_id, &mut gbufs[ord]);
-                    momenta[ord].scale_add(mu, 1.0, &gbufs[ord]);
+                    if zero1 {
+                        // ZeRO-1: `synced[pidx]` is the momentum already
+                        // updated in phase 0 (M_t = μ M_{t-1} + G_t on
+                        // disjoint row slices, then all-gathered) — load
+                        // this rank's TP block of it. Bit-identical to
+                        // the replicated in-place update below because
+                        // the recurrence is elementwise.
+                        shard_into(
+                            &synced[pidx],
+                            spec,
+                            block_id,
+                            &mut momenta[ord],
+                        );
+                    } else {
+                        // M_t^(m) = μ M_{t-1}^(m) + G_t^(m)
+                        shard_into(
+                            &synced[pidx],
+                            spec,
+                            block_id,
+                            &mut gbufs[ord],
+                        );
+                        momentum_update(&mut momenta[ord], mu, &gbufs[ord]);
+                    }
                     if full {
                         // Full step: the leader phase orthogonalizes
                         // after the join (Alg. 1 lines 6-9).
@@ -475,10 +647,12 @@ impl Optimizer for DistMuon {
                 }
                 None => {
                     let t = self.t;
+                    // Non-matrix entries of `synced` are mean gradients
+                    // in BOTH sharding modes.
                     self.adam.step_param(
                         i,
                         &mut params[i],
-                        &grads[i],
+                        &synced[i],
                         lr * self.cfg.adam_lr_ratio,
                         t,
                     );
@@ -495,7 +669,14 @@ impl Optimizer for DistMuon {
             Period::Every(p) => format!("MuonBP(P={p})"),
             Period::Never => "BlockMuon".to_string(),
         };
-        format!("Dist{base}[dp={},tp={}]", self.mesh.dp, self.mesh.tp)
+        let sharding = match self.sharding {
+            StateSharding::Replicated => "",
+            StateSharding::Zero1 => ",zero1",
+        };
+        format!(
+            "Dist{base}[dp={},tp={}{}]",
+            self.mesh.dp, self.mesh.tp, sharding
+        )
     }
 
     fn last_comm_bytes(&self) -> u64 {
@@ -654,6 +835,41 @@ mod tests {
         dist.step(&mut params, &grads, 0.01); // t=2: full
         dist.step(&mut params, &grads, 0.01); // t=3: block
         assert_eq!(dist.ns_calls(), 2 * (2 + (thin_nb + wide_nb) as u64));
+    }
+
+    /// ZeRO-1 smoke: momentum row-slice residency + RS/AG gradient sync
+    /// must be bit-identical to the replicated coordinator (the full
+    /// matrix of layouts × dp × periods lives in
+    /// `tests/zero1_equivalence.rs`).
+    #[test]
+    fn zero1_smoke_matches_replicated_bitwise() {
+        for period in [Period::Every(2), Period::Never] {
+            let quad = Quad::new(23);
+            let mut z1 = builder(2, 4, period)
+                .state_sharding(StateSharding::Zero1)
+                .build(&quad.metas);
+            let mut rep = builder(2, 4, period).build(&quad.metas);
+            assert_eq!(z1.state_sharding(), StateSharding::Zero1);
+            assert!(z1.name().contains("zero1"), "{}", z1.name());
+            assert!(!rep.name().contains("zero1"), "{}", rep.name());
+            let mut p_z1 = quad.init(9);
+            let mut p_rep = quad.init(9);
+            for step in 0..6 {
+                let g1 = quad.grads(&p_z1);
+                z1.step(&mut p_z1, &g1, 0.02);
+                let g2 = quad.grads(&p_rep);
+                rep.step(&mut p_rep, &g2, 0.02);
+                for (a, b) in p_z1.iter().zip(&p_rep) {
+                    assert_eq!(a, b, "{period:?} step {step} drifted");
+                }
+            }
+            // The DP stats switched collective kinds: RS+AG for the two
+            // matrices, all-reduce only for the AdamW-scope params.
+            let (_, dp) = z1.comm_stats();
+            assert_eq!(dp.calls(CollectiveKind::ReduceScatter), 2 * 6);
+            assert_eq!(dp.calls(CollectiveKind::AllGather), 2 * 6);
+            assert_eq!(dp.calls(CollectiveKind::AllReduce), 2 * 6);
+        }
     }
 
     /// Regression for the clamped-shard byte over-accounting bug: tp=4

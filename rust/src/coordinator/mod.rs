@@ -4,10 +4,15 @@
 //!
 //! Step anatomy (Alg. 1 + §3.2 "Communication cost of MuonBP"), run as a
 //! **phased schedule** (see `cluster.rs` module docs for who runs where):
-//! 1. DP phase — gradient all-reduce across the DP group (always present,
+//! 1. DP phase — gradient sync across the DP group (always present,
 //!    charged to the training stack, not the optimizer). Pooled rank
 //!    tasks rendezvous on the communicator's pool-native barrier and
-//!    reduce into preallocated accumulators.
+//!    reduce into preallocated accumulators. With
+//!    `StateSharding::Zero1` each DP rank owns only its `1/dp`
+//!    row-slice of every momentum matrix: the sync becomes
+//!    reduce-scatter (mean-gradient slice) → slice-local momentum
+//!    update → all-gather of the updated momentum, bit-identical to the
+//!    replicated all-reduce path because momentum rows are disjoint.
 //! 2. TP phase — per hidden matrix, each TP rank owns a momentum *shard*
 //!    (exactly its model-parallel block):
 //!      block step: rank tasks update shard momentum and orthogonalize

@@ -19,10 +19,10 @@ use muonbp::coordinator::DistMuonBuilder;
 use muonbp::costmodel::throughput::{throughput_tflops, HwPreset, Method};
 use muonbp::costmodel::ModelDims;
 use muonbp::data::CorpusCfg;
-use muonbp::mesh::Mesh;
+use muonbp::mesh::{Mesh, StateSharding};
 use muonbp::metrics::{ppl, render_table};
 use muonbp::optim::muon::Period;
-use muonbp::optim::{by_name, Optimizer};
+use muonbp::optim::{by_name, Muon, MuonCfg, Optimizer};
 use muonbp::runtime::{NsEngine, Runtime};
 use muonbp::train::{TrainCfg, Trainer};
 use muonbp::utils::cli::Args;
@@ -30,6 +30,8 @@ use muonbp::utils::cli::Args;
 const USAGE: &str = "usage: muonbp <train|throughput|info> [--key value ...]
   train options: --model tiny|bench|e2e  --optimizer adamw|muon|blockmuon|muonbp|dion
                  --steps N --lr F --period P --dp N --tp N --distributed
+                 --state-sharding replicated|zero1 (ZeRO-1 momentum rows)
+                 --eta-block-ratio F|theory (theory = 1/sqrt(rc), paper §3.2)
                  --schedule constant|cosine|wsd --seed N --out results/run.csv
                  --config path.json (JSON file, CLI overrides win)";
 
@@ -56,7 +58,8 @@ fn cmd_train(args: &Args) -> Result<()> {
     let runtime = Arc::new(Runtime::open_default()?);
     let entry = runtime.manifest.config(&cfg.model)?.clone();
     println!(
-        "model={} ({} params)  optimizer={}  steps={}  lr={}  dp={} tp={} distributed={}",
+        "model={} ({} params)  optimizer={}  steps={}  lr={}  dp={} tp={} \
+         distributed={}  state-sharding={}  eta-block-ratio={:.4}",
         cfg.model,
         entry.n_params,
         cfg.optimizer,
@@ -64,29 +67,54 @@ fn cmd_train(args: &Args) -> Result<()> {
         cfg.lr,
         cfg.dp,
         cfg.tp,
-        cfg.distributed
+        cfg.distributed,
+        cfg.state_sharding.name(),
+        cfg.effective_eta_block_ratio()
     );
 
     let mut trainer =
         Trainer::new(Arc::clone(&runtime), &cfg.model, CorpusCfg::default(), cfg.seed)?;
     let metas = trainer.state.metas.clone();
 
+    let period = match cfg.optimizer.as_str() {
+        "muon" => Period::Every(1),
+        "blockmuon" => Period::Never,
+        _ => Period::Every(cfg.period),
+    };
     let mut opt: Box<dyn Optimizer> = if cfg.distributed {
         let ns = Arc::new(NsEngine::new(Some(Arc::clone(&runtime))));
-        let period = match cfg.optimizer.as_str() {
-            "muon" => Period::Every(1),
-            "blockmuon" => Period::Never,
-            _ => Period::Every(cfg.period),
-        };
+        let eta_ratio = cfg.effective_eta_block_ratio();
         Box::new(
             DistMuonBuilder::new(Mesh::new(cfg.dp, cfg.tp)?, period)
                 .layout(cfg.layout)
+                .state_sharding(cfg.state_sharding)
                 .ns_engine(ns)
-                .cfg(|c| c.eta_block_ratio = cfg.eta_block_ratio)
+                .cfg(|c| c.eta_block_ratio = eta_ratio)
                 .build(&metas),
         )
     } else {
-        by_name(&cfg.optimizer, &metas, cfg.tp)?
+        // Single-process path: ZeRO-1 shards optimizer state across the
+        // DP group, which only exists under --distributed — accepting
+        // the flag silently here would misreport the run.
+        if cfg.state_sharding == StateSharding::Zero1 {
+            eprintln!(
+                "warning: --state-sharding zero1 applies to the \
+                 distributed coordinator; this single-process run \
+                 ignores it (add --distributed)"
+            );
+        }
+        // Muon-family runs must honor --period / --layout /
+        // --eta-block-ratio here too, not only under --distributed (the
+        // by_name constructors use tied defaults).
+        match cfg.optimizer.as_str() {
+            "muon" | "blockmuon" | "muonbp" => {
+                let mut mcfg = MuonCfg::default_with(period, cfg.tp);
+                mcfg.layout = cfg.layout;
+                mcfg.eta_block_ratio = cfg.effective_eta_block_ratio();
+                Box::new(Muon::new(&metas, mcfg))
+            }
+            _ => by_name(&cfg.optimizer, &metas, cfg.tp)?,
+        }
     };
 
     let tcfg = TrainCfg {

@@ -55,6 +55,48 @@ impl Mesh {
     }
 }
 
+/// Optimizer-state residency across the DP group — the second, orthogonal
+/// sharding axis of the paper's system setup ("eight-way tensor parallelism
+/// and ZeRO optimizer state sharding"). Orthogonal to [`Layout`]: a layout
+/// partitions a matrix across the TP group for *compute*; `StateSharding`
+/// decides which DP rank *stores* the momentum for which rows.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum StateSharding {
+    /// Every DP rank holds the full momentum (baseline DDP): gradients are
+    /// synchronized with one all-reduce, each rank redundantly updates a
+    /// full momentum replica.
+    #[default]
+    Replicated,
+    /// ZeRO-1: each DP rank owns only its `1/dp` row-slice of every
+    /// momentum matrix. The gradient sync becomes a reduce-scatter (each
+    /// rank receives exactly the mean-gradient rows it owns), the rank
+    /// updates only its owned slice, and an all-gather reassembles the
+    /// updated momentum before the TP orthogonalization phases. Momentum
+    /// rows are disjoint across ranks, so the sharded update is
+    /// *bit-identical* to the replicated one — only residency and the
+    /// collective schedule change.
+    Zero1,
+}
+
+impl StateSharding {
+    pub fn parse(s: &str) -> Result<StateSharding> {
+        Ok(match s {
+            "replicated" => StateSharding::Replicated,
+            "zero1" => StateSharding::Zero1,
+            other => bail!(
+                "unknown state sharding '{other}' (want replicated|zero1)"
+            ),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            StateSharding::Replicated => "replicated",
+            StateSharding::Zero1 => "zero1",
+        }
+    }
+}
+
 /// How a matrix parameter is sharded across the TP group (Table 1).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Layout {
@@ -158,6 +200,21 @@ mod tests {
         assert_eq!(Layout::ZeroLayer.block_grid(8, 128, 64), (1, 1));
         // degree larger than dim clamps
         assert_eq!(Layout::TpColumn.block_grid(16, 4, 8), (1, 8));
+    }
+
+    #[test]
+    fn parse_state_sharding() {
+        assert_eq!(
+            StateSharding::parse("replicated").unwrap(),
+            StateSharding::Replicated
+        );
+        assert_eq!(
+            StateSharding::parse("zero1").unwrap(),
+            StateSharding::Zero1
+        );
+        assert!(StateSharding::parse("zero3").is_err());
+        assert_eq!(StateSharding::default(), StateSharding::Replicated);
+        assert_eq!(StateSharding::Zero1.name(), "zero1");
     }
 
     #[test]

@@ -20,7 +20,7 @@ use crate::tensor::Tensor;
 pub use adamw::AdamW;
 pub use dion::Dion;
 pub use lion::Lion;
-pub use muon::{Muon, MuonCfg, Period};
+pub use muon::{momentum_update, Muon, MuonCfg, Period};
 pub use schedule::Schedule;
 pub use scaling::{clip_global_norm, rms_match_scale};
 pub use sgdm::SgdM;

@@ -67,6 +67,17 @@ impl Period {
     }
 }
 
+/// The momentum recurrence `M_t = μ·M_{t-1} + G_t` (paper Alg. 1 line 5).
+/// Elementwise, which is exactly why it is the **shared code path for
+/// every momentum residency**: full matrices (single-process `Muon`), TP
+/// block shards (the replicated coordinator), and ZeRO-1 row slices
+/// (each DP rank updates only the `1/dp` slice it owns). Slices are
+/// disjoint and the op touches each element independently, so the
+/// sharded update is bit-identical to the replicated one.
+pub fn momentum_update(momentum: &mut Tensor, mu: f64, grad: &Tensor) {
+    momentum.scale_add(mu as f32, 1.0, grad);
+}
+
 /// Muon-family hyperparameters.
 #[derive(Clone)]
 pub struct MuonCfg {
@@ -129,7 +140,30 @@ impl MuonCfg {
                 self.rms_beta
             );
         }
+        if self.eta_block_ratio > 1.0 {
+            // Not an error — sweeps may probe it deliberately — but never
+            // silent: Theorem 2's optimum bracket is [1/√(rc), 1], so a
+            // ratio above 1 overdrives block steps relative to full ones.
+            eprintln!(
+                "warning: MuonCfg.eta_block_ratio = {} > 1.0 lies outside \
+                 the §3.2 optimum bracket [1/sqrt(rc), 1]; block steps \
+                 will overshoot relative to full steps",
+                self.eta_block_ratio
+            );
+        }
         Ok(())
+    }
+
+    /// The §3.2 lower bracket endpoint of the optimal η_block/η_full
+    /// ratio: Theorem 2 places the optimum in `[1/√(rc), 1]` for an r×c
+    /// block grid, where `rc` is the number of TP shards the matrix
+    /// splits into (the tp-shard aspect of the partition: `tp` for the
+    /// 1-D column/row layouts, `rows·cols` for a grid). The repo default
+    /// stays tied (`eta_block_ratio = 1.0`, the bracket's upper end);
+    /// `--eta-block-ratio theory` on the CLI resolves to this endpoint.
+    pub fn theory_eta_block_ratio(rc: usize) -> f64 {
+        assert!(rc >= 1, "theory_eta_block_ratio: rc must be >= 1");
+        1.0 / (rc as f64).sqrt()
     }
 
     pub fn default_with(period: Period, tp: usize) -> MuonCfg {
@@ -508,9 +542,11 @@ impl Optimizer for Muon {
         for i in 0..params.len() {
             match self.specs[i] {
                 Some(spec) => {
-                    // M_t = μ M_{t-1} + G_t  (paper Alg. 1 line 5)
-                    self.momenta[i]
-                        .scale_add(self.cfg.momentum as f32, 1.0, &grads[i]);
+                    momentum_update(
+                        &mut self.momenta[i],
+                        self.cfg.momentum,
+                        &grads[i],
+                    );
                     let decay =
                         (1.0 - eta * self.cfg.weight_decay) as f32;
                     match &self.backend {
@@ -629,6 +665,55 @@ mod tests {
     #[should_panic(expected = "Period::Every(0)")]
     fn zero_period_not_silently_coerced_on_hot_path() {
         let _ = Period::Every(0).is_full_step(3);
+    }
+
+    #[test]
+    fn momentum_update_is_residency_invariant() {
+        // Updating a full matrix vs updating its disjoint row slices must
+        // give bitwise-identical state — the ZeRO-1 determinism contract.
+        let mut rng = Rng::new(41);
+        let g = Tensor::randn(&[9, 4], 1.0, &mut rng);
+        let mut full = Tensor::randn(&[9, 4], 1.0, &mut rng);
+        let dp = 4;
+        let mut slices: Vec<Tensor> = (0..dp)
+            .map(|r| {
+                let mut s = crate::shard::row_slice_zeros(9, 4, dp, r);
+                crate::shard::row_slice_into(&full, dp, r, &mut s);
+                s
+            })
+            .collect();
+        for step in 0..3 {
+            momentum_update(&mut full, 0.95, &g);
+            let mut reassembled = Tensor::zeros(&[9, 4]);
+            for (r, s) in slices.iter_mut().enumerate() {
+                let mut gs = crate::shard::row_slice_zeros(9, 4, dp, r);
+                crate::shard::row_slice_into(&g, dp, r, &mut gs);
+                momentum_update(s, 0.95, &gs);
+                crate::shard::write_row_slice(&mut reassembled, dp, r, s);
+            }
+            assert_eq!(reassembled, full, "step {step} drifted");
+        }
+    }
+
+    #[test]
+    fn theory_eta_block_ratio_bracket() {
+        assert_eq!(MuonCfg::theory_eta_block_ratio(1), 1.0);
+        assert_eq!(MuonCfg::theory_eta_block_ratio(4), 0.5);
+        let r8 = MuonCfg::theory_eta_block_ratio(8);
+        assert!((r8 - 1.0 / 8f64.sqrt()).abs() < 1e-15);
+        // The endpoint always lies in the theorem's bracket (0, 1].
+        for rc in [1, 2, 4, 16, 64] {
+            let r = MuonCfg::theory_eta_block_ratio(rc);
+            assert!(r > 0.0 && r <= 1.0, "rc={rc}: {r}");
+        }
+    }
+
+    #[test]
+    fn eta_ratio_above_one_warns_but_validates() {
+        // > 1.0 is outside the §3.2 bracket: warn (stderr), don't reject.
+        let mut cfg = MuonCfg::default_with(Period::Every(2), 4);
+        cfg.eta_block_ratio = 1.5;
+        assert!(cfg.validate().is_ok());
     }
 
     #[test]

@@ -128,6 +128,51 @@ pub fn unshard_from<'a>(
     }
 }
 
+// -- ZeRO-1 row slices -------------------------------------------------------
+//
+// Optimizer-state sharding partitions a matrix by *rows of the full
+// matrix*, independently of the TP block layout: dp rank r owns rows
+// `shard_range(m, dp, r)` of every momentum matrix. Row slices of a
+// row-major tensor are contiguous, so every slice op below is a straight
+// memcpy and the reduce-scatter/all-gather collectives built on them touch
+// each element exactly once. When `dp > m`, trailing ranks own zero rows —
+// an empty slice is a valid (0 x n) tensor that still participates in the
+// collective rendezvous but moves no payload.
+
+/// Rows `[start, end)` of the ZeRO-1 slice dp rank `r` owns in an
+/// `m`-row matrix (balanced partition, same as [`shard_range`]).
+pub fn row_slice_range(m: usize, dp: usize, r: usize) -> (usize, usize) {
+    shard_range(m, dp, r)
+}
+
+/// Allocate dp rank `r`'s (possibly empty) momentum row-slice buffer for
+/// an `m x n` matrix.
+pub fn row_slice_zeros(m: usize, n: usize, dp: usize, r: usize) -> Tensor {
+    let (r0, r1) = row_slice_range(m, dp, r);
+    Tensor::zeros(&[r1 - r0, n])
+}
+
+/// Copy dp rank `r`'s row slice of `t` into a preallocated slice tensor
+/// (zero-alloc; one contiguous memcpy).
+pub fn row_slice_into(t: &Tensor, dp: usize, r: usize, out: &mut Tensor) {
+    let (r0, r1) = row_slice_range(t.m(), dp, r);
+    let n = t.n();
+    assert_eq!((out.m(), out.n()), (r1 - r0, n), "row_slice_into shape");
+    out.data_mut().copy_from_slice(&t.data()[r0 * n..r1 * n]);
+}
+
+/// Write dp rank `r`'s row slice back into the full matrix in place.
+pub fn write_row_slice(t: &mut Tensor, dp: usize, r: usize, slice: &Tensor) {
+    let (r0, r1) = row_slice_range(t.m(), dp, r);
+    let n = t.n();
+    assert_eq!(
+        (slice.m(), slice.n()),
+        (r1 - r0, n),
+        "write_row_slice shape"
+    );
+    t.data_mut()[r0 * n..r1 * n].copy_from_slice(slice.data());
+}
+
 /// Write one block back into the full matrix in place.
 pub fn write_shard(t: &mut Tensor, spec: &ShardSpec, idx: usize, block: &Tensor) {
     let ((r0, r1), (c0, c1)) = spec.ranges(idx);
@@ -232,6 +277,32 @@ mod tests {
         assert_eq!(t.at(3, 5), 3.0);
         assert_eq!(t.at(0, 3), 0.0);
         assert_eq!(t.at(0, 6), 0.0);
+    }
+
+    #[test]
+    fn row_slices_tile_the_matrix() {
+        // Slice out + write back must reconstruct the matrix exactly, for
+        // balanced, ragged and clamped (dp > m) partitions alike.
+        let mut rng = Rng::new(17);
+        for (m, n, dp) in [(8, 6, 2), (9, 4, 4), (2, 9, 4), (5, 3, 1)] {
+            let t = Tensor::randn(&[m, n], 1.0, &mut rng);
+            let mut back = Tensor::zeros(&[m, n]);
+            let mut covered = 0;
+            for r in 0..dp {
+                let (r0, r1) = row_slice_range(m, dp, r);
+                assert_eq!(r0, covered, "gap before rank {r}");
+                covered = r1;
+                let mut slice = row_slice_zeros(m, n, dp, r);
+                row_slice_into(&t, dp, r, &mut slice);
+                write_row_slice(&mut back, dp, r, &slice);
+            }
+            assert_eq!(covered, m);
+            assert_eq!(back, t, "({m},{n},dp={dp}) roundtrip");
+        }
+        // dp > m: trailing ranks own empty slices.
+        let empty = row_slice_zeros(2, 9, 4, 3);
+        assert_eq!((empty.m(), empty.n()), (0, 9));
+        assert_eq!(empty.numel(), 0);
     }
 
     #[test]

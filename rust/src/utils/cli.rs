@@ -73,6 +73,14 @@ impl Args {
             Some(v) => Ok(v.parse()?),
         }
     }
+
+    /// True when `--key` was given the literal keyword `word` — for
+    /// options that accept a named value in place of a number (e.g.
+    /// `--eta-block-ratio theory`). Callers check this before the typed
+    /// getters, which would fail to parse the keyword.
+    pub fn is_keyword(&self, key: &str, word: &str) -> bool {
+        self.get(key) == Some(word)
+    }
 }
 
 #[cfg(test)]
@@ -111,5 +119,15 @@ mod tests {
     fn bad_parse() {
         let a = args(&["--steps", "abc"]);
         assert!(a.get_usize("steps", 0).is_err());
+    }
+
+    #[test]
+    fn keyword_values() {
+        let a = args(&["--eta-block-ratio", "theory", "--lr", "0.5"]);
+        assert!(a.is_keyword("eta-block-ratio", "theory"));
+        assert!(!a.is_keyword("lr", "theory"));
+        assert!(!a.is_keyword("missing", "theory"));
+        // The typed getter would reject the keyword — callers must branch.
+        assert!(a.get_f64("eta-block-ratio", 1.0).is_err());
     }
 }

@@ -13,7 +13,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 
 use muonbp::coordinator::DistMuonBuilder;
 use muonbp::linalg::newton_schulz::{NsCoeffs, NsWorkspace};
-use muonbp::mesh::Mesh;
+use muonbp::mesh::{Mesh, StateSharding};
 use muonbp::optim::muon::Period;
 use muonbp::optim::{Muon, MuonCfg, Optimizer, ParamKind, ParamMeta};
 use muonbp::tensor::Tensor;
@@ -159,4 +159,38 @@ fn hot_paths_are_alloc_free_after_warmup() {
     );
     // Sanity: the warm steps moved the parameters.
     assert!(dparams[0].frobenius() > 0.0);
+
+    // ---- Phase 4: whole ZeRO-1 `DistMuon::step` calls. `Zero1` swaps
+    // the DP all-reduce for reduce_scatter_mean_into (mean-gradient row
+    // slices) + a slice-local momentum update + all_gather_into (updated
+    // momentum) — all pool-native pointer-deposit collectives over
+    // buffers preallocated at build (per-DP-rank momentum/grad slices,
+    // full gather destinations). Warm dp2(zero1) x tp2 steps covering a
+    // full period of both step kinds must allocate NOTHING, exactly like
+    // the replicated schedule above.
+    let mut zdist =
+        DistMuonBuilder::new(Mesh::new(2, 2).unwrap(), Period::Every(2))
+            .state_sharding(StateSharding::Zero1)
+            .build(&dmetas);
+    let mut zparams =
+        vec![Tensor::zeros(&[16, 32]), Tensor::zeros(&[32, 16])];
+    let zgrads = vec![
+        Tensor::randn(&[16, 32], 0.1, &mut rng),
+        Tensor::randn(&[32, 16], 0.1, &mut rng),
+    ];
+    for _ in 0..4 {
+        zdist.step(&mut zparams, &zgrads, 0.01); // warm two full periods
+    }
+    let before = allocs();
+    for _ in 0..4 {
+        zdist.step(&mut zparams, &zgrads, 0.01); // full, block, full, block
+    }
+    let after = allocs();
+    assert_eq!(
+        after - before,
+        0,
+        "Zero1 DistMuon::step allocated {} time(s) across 4 warm steps",
+        after - before
+    );
+    assert!(zparams[0].frobenius() > 0.0);
 }

@@ -1,0 +1,227 @@
+//! The ZeRO-1 acceptance suite (run by ci.sh under `RUST_TEST_THREADS=16`,
+//! same contention rationale as the pool-stress suite: the libtest harness
+//! runs these binaries' tests concurrently, so the coordinator's pooled DP
+//! rendezvous phases fight for workers exactly as a loaded machine would).
+//!
+//! Two invariants are pinned here:
+//!
+//! 1. **Bit-identity** — `StateSharding::Zero1` must produce *bitwise*
+//!    identical parameters to the replicated coordinator across every TP
+//!    layout (column / row / 2-D grid / clamped `dim < tp` meshes), every
+//!    DP degree (1, 2, 4 — including slices that are EMPTY because
+//!    `dp > m`), and both step kinds (block and full periods). Momentum
+//!    rows are disjoint across DP ranks and the recurrence is
+//!    elementwise, so sharded update == replicated update exactly; any
+//!    drift is a bug, not tolerance.
+//! 2. **Byte accounting** — the per-matrix gradient sync swaps one
+//!    all-reduce for a reduce-scatter + all-gather pair. `CommStats`
+//!    must record the new kinds with full logical payloads, and the
+//!    per-rank predictor (`grad_sync_bytes_per_rank`) must show ZeRO-1
+//!    strictly below the all-reduce for every dp >= 2.
+
+use muonbp::comm::CollectiveKind;
+use muonbp::coordinator::DistMuonBuilder;
+use muonbp::costmodel::netmodel::grad_sync_bytes_per_rank;
+use muonbp::mesh::{Layout, Mesh, StateSharding};
+use muonbp::optim::muon::Period;
+use muonbp::optim::{Optimizer, ParamKind, ParamMeta};
+use muonbp::tensor::Tensor;
+use muonbp::utils::rng::Rng;
+
+/// Quadratic toy problem: loss 0.5||X - X*||^2 per param, so grads are
+/// deterministic functions of the params and any drift compounds.
+struct Quad {
+    metas: Vec<ParamMeta>,
+    targets: Vec<Tensor>,
+}
+
+impl Quad {
+    fn new(metas: Vec<ParamMeta>, seed: u64) -> Quad {
+        let mut rng = Rng::new(seed);
+        let targets = metas
+            .iter()
+            .map(|m| Tensor::randn(&m.shape, 1.0, &mut rng))
+            .collect();
+        Quad { metas, targets }
+    }
+
+    fn init(&self, seed: u64) -> Vec<Tensor> {
+        let mut rng = Rng::new(seed);
+        self.metas
+            .iter()
+            .map(|m| Tensor::randn(&m.shape, 1.0, &mut rng))
+            .collect()
+    }
+
+    fn grads(&self, params: &[Tensor]) -> Vec<Tensor> {
+        params
+            .iter()
+            .zip(&self.targets)
+            .map(|(p, t)| {
+                let mut g = p.clone();
+                g.axpy(-1.0, t);
+                g
+            })
+            .collect()
+    }
+}
+
+fn mixed_metas() -> Vec<ParamMeta> {
+    vec![
+        ParamMeta::new("w1", &[8, 16], ParamKind::Matrix),
+        ParamMeta::new("w2", &[16, 8], ParamKind::Matrix),
+        ParamMeta::new("emb", &[12, 8], ParamKind::Embed),
+        ParamMeta::new("g", &[8], ParamKind::Vector),
+    ]
+}
+
+/// Thin/wide matrices that clamp a tp=4 partition (9x2 -> 2 column
+/// blocks; 2x9 full 4 blocks) AND clamp dp=4 ZeRO row slices (the 2x9
+/// matrix leaves DP ranks 2-3 with EMPTY momentum slices).
+fn clamped_metas() -> Vec<ParamMeta> {
+    vec![
+        ParamMeta::new("thin", &[9, 2], ParamKind::Matrix),
+        ParamMeta::new("wide", &[2, 9], ParamKind::Matrix),
+    ]
+}
+
+fn run_pair(
+    metas: Vec<ParamMeta>,
+    layout: Layout,
+    dp: usize,
+    tp: usize,
+    period: Period,
+    steps: usize,
+) {
+    let quad = Quad::new(metas, 29);
+    let mesh = Mesh::new(dp, tp).unwrap();
+    let mut z1 = DistMuonBuilder::new(mesh, period)
+        .layout(layout)
+        .state_sharding(StateSharding::Zero1)
+        .build(&quad.metas);
+    let mut rep = DistMuonBuilder::new(mesh, period)
+        .layout(layout)
+        .build(&quad.metas);
+    let mut p_z1 = quad.init(7);
+    let mut p_rep = quad.init(7);
+    for step in 0..steps {
+        let g1 = quad.grads(&p_z1);
+        z1.step(&mut p_z1, &g1, 0.02);
+        let g2 = quad.grads(&p_rep);
+        rep.step(&mut p_rep, &g2, 0.02);
+        for (i, (a, b)) in p_z1.iter().zip(&p_rep).enumerate() {
+            assert_eq!(
+                a, b,
+                "{layout:?} dp={dp} tp={tp} {period:?} step {step} \
+                 param {i}: zero1 drifted from replicated"
+            );
+        }
+    }
+    // Same orthogonalization schedule in both modes.
+    assert_eq!(z1.ns_calls(), rep.ns_calls(), "{layout:?} dp={dp} ns_calls");
+}
+
+/// The tentpole equivalence: Zero1 == Replicated, bit for bit, across
+/// layouts x dp x periods.
+#[test]
+fn zero1_matches_replicated_exactly() {
+    let layouts =
+        [Layout::TpColumn, Layout::TpRow, Layout::TpGrid { rows: 2, cols: 2 }];
+    for layout in layouts {
+        for dp in [1, 2, 4] {
+            for period in
+                [Period::Every(1), Period::Every(3), Period::Never]
+            {
+                run_pair(mixed_metas(), layout, dp, 4, period, 7);
+            }
+        }
+    }
+}
+
+/// Clamped meshes: 9x2 + 2x9 at tp=4 clamp the TP block grid, and at
+/// dp=4 the 2x9 matrix leaves trailing DP ranks with EMPTY momentum
+/// slices that still rendezvous in the collectives.
+#[test]
+fn zero1_matches_replicated_on_clamped_meshes() {
+    for dp in [1, 2, 4] {
+        for period in [Period::Every(2), Period::Never] {
+            run_pair(clamped_metas(), Layout::TpColumn, dp, 4, period, 5);
+        }
+    }
+}
+
+/// Byte-accounting regression: per step, ZeRO-1 charges one
+/// reduce-scatter + one all-gather per matrix (full logical payload
+/// each) instead of one all-reduce, and the per-rank predictor puts the
+/// RS+AG schedule at s·(1/dp + 2(dp-1)/dp) = s·(2dp-1)/dp — strictly
+/// below the all-reduce's 2·s for every dp >= 2.
+#[test]
+fn zero1_grad_sync_byte_accounting() {
+    let steps = 3usize;
+    let matrix_bytes: u64 = (8 * 16 + 16 * 8) * 4; // w1 + w2, f32
+    let adam_bytes: u64 = (12 * 8 + 8) * 4; // emb + g, f32
+    for dp in [2usize, 4] {
+        let quad = Quad::new(mixed_metas(), 3);
+        let mesh = Mesh::new(dp, 2).unwrap();
+        let mut z1 = DistMuonBuilder::new(mesh, Period::Every(2))
+            .state_sharding(StateSharding::Zero1)
+            .build(&quad.metas);
+        let mut rep = DistMuonBuilder::new(mesh, Period::Every(2))
+            .build(&quad.metas);
+        let mut p_z1 = quad.init(1);
+        let mut p_rep = quad.init(1);
+        for _ in 0..steps {
+            let g1 = quad.grads(&p_z1);
+            z1.step(&mut p_z1, &g1, 0.01);
+            let g2 = quad.grads(&p_rep);
+            rep.step(&mut p_rep, &g2, 0.01);
+        }
+        let (_, dp_z1) = z1.comm_stats();
+        let (_, dp_rep) = rep.comm_stats();
+        let s = steps as u64;
+        // Zero1: RS + AG per matrix step, all-reduce for AdamW params.
+        assert_eq!(dp_z1.calls(CollectiveKind::ReduceScatter), 2 * s);
+        assert_eq!(dp_z1.bytes(CollectiveKind::ReduceScatter), matrix_bytes * s);
+        assert_eq!(dp_z1.calls(CollectiveKind::AllGather), 2 * s);
+        assert_eq!(dp_z1.bytes(CollectiveKind::AllGather), matrix_bytes * s);
+        assert_eq!(dp_z1.bytes(CollectiveKind::AllReduce), adam_bytes * s);
+        // Replicated: everything is all-reduce.
+        assert_eq!(dp_rep.calls(CollectiveKind::ReduceScatter), 0);
+        assert_eq!(dp_rep.calls(CollectiveKind::AllGather), 0);
+        assert_eq!(
+            dp_rep.bytes(CollectiveKind::AllReduce),
+            (matrix_bytes + adam_bytes) * s
+        );
+        // Per-rank predictor: strict decrease for the matrix sync, with
+        // the exact (2dp-1)/dp vs 2 factors.
+        let ar = grad_sync_bytes_per_rank(
+            StateSharding::Replicated,
+            matrix_bytes as usize,
+            dp,
+        );
+        let zb = grad_sync_bytes_per_rank(
+            StateSharding::Zero1,
+            matrix_bytes as usize,
+            dp,
+        );
+        assert!(zb < ar, "dp={dp}: {zb} !< {ar}");
+        let want =
+            matrix_bytes as f64 * (2.0 * dp as f64 - 1.0) / dp as f64;
+        assert!((zb - want).abs() < 1e-9, "dp={dp}: {zb} vs {want}");
+        assert_eq!(ar, 2.0 * matrix_bytes as f64);
+    }
+    // dp=1: a single-rank "group" must move and charge nothing in either
+    // mode (Zero1 still runs its slice-update machinery).
+    let quad = Quad::new(mixed_metas(), 3);
+    let mut z1 = DistMuonBuilder::new(Mesh::new(1, 2).unwrap(), Period::Every(2))
+        .state_sharding(StateSharding::Zero1)
+        .build(&quad.metas);
+    let mut params = quad.init(1);
+    for _ in 0..2 {
+        let g = quad.grads(&params);
+        z1.step(&mut params, &g, 0.01);
+    }
+    let (_, dp_stats) = z1.comm_stats();
+    assert_eq!(dp_stats.total_bytes(), 0, "dp=1 zero1 charged DP bytes");
+    assert_eq!(dp_stats.grad_sync_bytes(), 0);
+}
