@@ -1,6 +1,6 @@
 # Convenience targets; tier-1 verify is `make verify` (== ROADMAP.md).
 
-.PHONY: build test verify ci ci-env perf pool-stress zero1 artifacts clean
+.PHONY: build test verify ci ci-env perf pool-stress zero1 fault artifacts clean
 
 build:
 	cargo build --release
@@ -47,6 +47,12 @@ zero1:
 # binaries themselves contend for the pool.
 pool-stress:
 	RUST_TEST_THREADS=16 cargo test --test pool_stress -- --nocapture
+
+# Fault-injection suite: rank panics in every schedule phase, step
+# atomicity under injected NaNs / NS divergence, escalate-full-orth
+# equivalence, straggler determinism (see ci.sh tier-1).
+fault:
+	RUST_TEST_THREADS=16 cargo test --test fault_injection -- --nocapture
 
 # Build the L1/L2 HLO-text artifacts (requires the python toolchain with
 # jax; see python/compile/aot.py).

@@ -7,6 +7,8 @@
 #   1   build/test/lint failure (a red gate on a working toolchain)
 #   90  no Rust toolchain on PATH — machine-distinguishable from a red
 #       build, so automation can tell "cannot verify here" from "broken".
+#   124 a test step hit its hard timeout (a hang, e.g. a deadlocked
+#       rendezvous, is distinguishable from a plain red test)
 set -uo pipefail
 cd "$(dirname "$0")"
 
@@ -29,11 +31,32 @@ step() {
     echo "== $1 =="
 }
 
+# Hard wall-clock cap around every test invocation: the fault-injection
+# suite deliberately panics ranks inside pooled collectives, and the
+# failure mode a poisoning bug produces is a DEADLOCK, not a red test.
+# Without a timeout a hang eats the whole CI budget; with one it exits
+# 124 quickly and points at the step that wedged. Falls back to plain
+# execution where coreutils `timeout` is unavailable (macOS dev boxes).
+with_timeout() {
+    local secs="$1"
+    shift
+    if command -v timeout >/dev/null 2>&1; then
+        timeout --kill-after=30 "$secs" "$@"
+        local rc=$?
+        if [ "$rc" -eq 124 ] || [ "$rc" -eq 137 ]; then
+            echo "ci.sh: step timed out after ${secs}s (deadlock?): $*" >&2
+            exit 124
+        fi
+        return $rc
+    fi
+    "$@"
+}
+
 step "tier-1: cargo build --release"
-cargo build --release || exit 1
+with_timeout 1800 cargo build --release || exit 1
 
 step "tier-1: cargo test -q"
-cargo test -q || exit 1
+with_timeout 1200 cargo test -q || exit 1
 
 step "tier-1: forced-scalar dispatch (MUONBP_FORCE_SCALAR=1, lib tests)"
 # The GEMM microkernel dispatch is decided once per process, so the
@@ -42,22 +65,29 @@ step "tier-1: forced-scalar dispatch (MUONBP_FORCE_SCALAR=1, lib tests)"
 # fallback so BOTH maintained kernel bodies stay green: the in-process
 # property tests cover scalar-vs-SIMD agreement, this covers the
 # dispatch-level scalar path end to end.
-MUONBP_FORCE_SCALAR=1 cargo test -q --lib || exit 1
+with_timeout 1200 env MUONBP_FORCE_SCALAR=1 cargo test -q --lib || exit 1
 
 step "tier-1: pool-stress suite (RUST_TEST_THREADS=16)"
 # Rendezvous / pool changes must not land untested under contention: the
 # high libtest thread count makes the test binaries themselves fight for
 # the pool while each test spawns its own submitter threads.
-RUST_TEST_THREADS=16 cargo test -q --test pool_stress || exit 1
+with_timeout 600 env RUST_TEST_THREADS=16 cargo test -q --test pool_stress || exit 1
 
 step "tier-1: ZeRO-1 equivalence suite (RUST_TEST_THREADS=16)"
 # Same contention rationale as pool_stress: the Zero1 schedule adds two
 # pool-native collectives (reduce_scatter_mean_into / all_gather_into)
 # whose rendezvous must stay bit-identical while tests fight for workers.
-RUST_TEST_THREADS=16 cargo test -q --test zero1_equivalence || exit 1
+with_timeout 600 env RUST_TEST_THREADS=16 cargo test -q --test zero1_equivalence || exit 1
+
+step "tier-1: fault-injection suite (RUST_TEST_THREADS=16)"
+# Panics injected into every phase of the distributed step schedule: the
+# suite pins step atomicity (failed attempts leave params/momentum
+# bit-identical) and barrier poisoning (no deadlock — which is exactly
+# what the with_timeout wrapper would catch if poisoning regressed).
+with_timeout 600 env RUST_TEST_THREADS=16 cargo test -q --test fault_injection || exit 1
 
 step "tier-1: cargo bench --no-run (benches must keep compiling)"
-cargo bench --no-run || exit 1
+with_timeout 1800 cargo bench --no-run || exit 1
 
 step "cargo fmt --check"
 if ! cargo fmt --check; then
@@ -66,7 +96,7 @@ if ! cargo fmt --check; then
 fi
 
 step "cargo clippy --all-targets -- -D warnings"
-if ! cargo clippy --all-targets -- -D warnings; then
+if ! with_timeout 1800 cargo clippy --all-targets -- -D warnings; then
     echo "FAIL: clippy"
     fail=1
 fi

@@ -1,0 +1,392 @@
+//! Checkpoint/restore of optimizer + parameter state (ROADMAP: "elastic
+//! checkpoint/restore of sharded optimizer state").
+//!
+//! A [`Snapshot`] is a flat list of named tensors plus the step count.
+//! Producers decide the naming (`param.<name>`, `momentum.<name>`,
+//! `adam.m.<name>`, ...); this module only handles durability:
+//!
+//! - **Atomic writes** — serialize to `.tmp-ckpt-<step>.bin` in the
+//!   target directory, fsync, then `rename` to `ckpt-<step>.bin`. A
+//!   crash mid-write leaves the previous checkpoint untouched and at
+//!   worst a stale temp file (ignored by the loader).
+//! - **Per-tensor CRC32** — each tensor's payload carries an IEEE CRC32
+//!   so corruption is detected at the tensor that rotted, not as a
+//!   mystery NaN ten steps after restore.
+//! - **Fallback** — [`latest_valid`] scans newest-first and falls back
+//!   to the previous good checkpoint when the newest fails CRC or
+//!   framing checks.
+//!
+//! Snapshots store *canonical* (fully assembled) tensors: the producer
+//! reassembles sharded state on save and redistributes on restore, so a
+//! checkpoint written under one sharding/mesh restores into any other
+//! (shard/unshard are exact copies — restore is bit-identical).
+//!
+//! Binary layout (all little-endian):
+//! `"MBCK" | version u32 | step u64 | n_entries u32` then per entry
+//! `name_len u32 | name | rank u32 | dims u64 x rank | payload f32 x n |
+//! crc32 u32`.
+
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::Tensor;
+
+const MAGIC: [u8; 4] = *b"MBCK";
+const VERSION: u32 = 1;
+
+/// IEEE 802.3 CRC32 table, built at compile time (no crates available
+/// offline; the polynomial is the reflected 0xEDB88320).
+const fn crc_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+static CRC_TABLE: [u32; 256] = crc_table();
+
+/// Standard IEEE CRC32 (the zip/png one).
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = !0u32;
+    for &b in bytes {
+        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    !c
+}
+
+/// One checkpoint's worth of state: named canonical tensors + the step
+/// count they were taken at.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Snapshot {
+    pub step: u64,
+    pub entries: Vec<(String, Tensor)>,
+}
+
+impl Snapshot {
+    pub fn new(step: u64) -> Snapshot {
+        Snapshot { step, entries: Vec::new() }
+    }
+
+    pub fn push(&mut self, name: impl Into<String>, t: Tensor) {
+        self.entries.push((name.into(), t));
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Tensor> {
+        self.entries.iter().find(|(n, _)| n == name).map(|(_, t)| t)
+    }
+
+    /// Fetch an entry that must exist with exactly this shape (the
+    /// restore-side validation every consumer needs).
+    pub fn expect(&self, name: &str, shape: &[usize]) -> Result<&Tensor> {
+        let t = self
+            .get(name)
+            .with_context(|| format!("checkpoint missing entry '{name}'"))?;
+        if t.shape() != shape {
+            bail!(
+                "checkpoint entry '{name}' has shape {:?}, want {shape:?}",
+                t.shape()
+            );
+        }
+        Ok(t)
+    }
+}
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn encode(snap: &Snapshot) -> Vec<u8> {
+    let payload: usize =
+        snap.entries.iter().map(|(n, t)| 24 + n.len() + t.numel() * 4).sum();
+    let mut buf = Vec::with_capacity(20 + payload);
+    buf.extend_from_slice(&MAGIC);
+    put_u32(&mut buf, VERSION);
+    put_u64(&mut buf, snap.step);
+    put_u32(&mut buf, snap.entries.len() as u32);
+    for (name, t) in &snap.entries {
+        put_u32(&mut buf, name.len() as u32);
+        buf.extend_from_slice(name.as_bytes());
+        put_u32(&mut buf, t.shape().len() as u32);
+        for &d in t.shape() {
+            put_u64(&mut buf, d as u64);
+        }
+        let start = buf.len();
+        for &x in t.data() {
+            buf.extend_from_slice(&x.to_le_bytes());
+        }
+        let crc = crc32(&buf[start..]);
+        put_u32(&mut buf, crc);
+    }
+    buf
+}
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            bail!(
+                "checkpoint truncated at byte {} (want {n} more of {})",
+                self.pos,
+                self.buf.len()
+            );
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+}
+
+fn decode(buf: &[u8]) -> Result<Snapshot> {
+    let mut r = Reader { buf, pos: 0 };
+    if r.take(4)? != MAGIC {
+        bail!("not a checkpoint (bad magic)");
+    }
+    let version = r.u32()?;
+    if version != VERSION {
+        bail!("checkpoint version {version} unsupported (want {VERSION})");
+    }
+    let step = r.u64()?;
+    let n_entries = r.u32()? as usize;
+    let mut snap = Snapshot::new(step);
+    for i in 0..n_entries {
+        let name_len = r.u32()? as usize;
+        let name = std::str::from_utf8(r.take(name_len)?)
+            .with_context(|| format!("entry {i}: name not utf-8"))?
+            .to_string();
+        let rank = r.u32()? as usize;
+        let mut shape = Vec::with_capacity(rank);
+        for _ in 0..rank {
+            shape.push(r.u64()? as usize);
+        }
+        let numel: usize = shape.iter().product();
+        let payload = r.take(numel * 4)?;
+        let crc_stored = r.u32()?;
+        let crc_actual = crc32(payload);
+        if crc_actual != crc_stored {
+            bail!(
+                "checkpoint entry '{name}' failed CRC \
+                 (stored {crc_stored:08x}, computed {crc_actual:08x})"
+            );
+        }
+        let data: Vec<f32> = payload
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        snap.push(name, Tensor::from_vec(&shape, data)?);
+    }
+    if r.pos != buf.len() {
+        bail!("checkpoint has {} trailing bytes", buf.len() - r.pos);
+    }
+    Ok(snap)
+}
+
+fn file_name(step: u64) -> String {
+    format!("ckpt-{step:08}.bin")
+}
+
+/// Atomically write `snap` to `dir/ckpt-<step>.bin` (temp file + fsync +
+/// rename on the same filesystem). Returns the final path.
+pub fn save(dir: impl AsRef<Path>, snap: &Snapshot) -> Result<PathBuf> {
+    let dir = dir.as_ref();
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("creating checkpoint dir {dir:?}"))?;
+    let tmp = dir.join(format!(".tmp-{}", file_name(snap.step)));
+    let fin = dir.join(file_name(snap.step));
+    let bytes = encode(snap);
+    {
+        let mut f = std::fs::File::create(&tmp)
+            .with_context(|| format!("creating {tmp:?}"))?;
+        f.write_all(&bytes)?;
+        f.sync_all()?;
+    }
+    std::fs::rename(&tmp, &fin)
+        .with_context(|| format!("renaming {tmp:?} -> {fin:?}"))?;
+    Ok(fin)
+}
+
+/// Load one checkpoint file, verifying framing and every tensor's CRC.
+pub fn load(path: impl AsRef<Path>) -> Result<Snapshot> {
+    let path = path.as_ref();
+    let bytes = std::fs::read(path)
+        .with_context(|| format!("reading checkpoint {path:?}"))?;
+    decode(&bytes).with_context(|| format!("decoding checkpoint {path:?}"))
+}
+
+/// Newest loadable checkpoint in `dir`: scans `ckpt-*.bin` newest-first
+/// and falls back past corrupted/truncated files to the previous good
+/// one (warning on stderr for each one skipped). `Ok(None)` when the
+/// directory has no checkpoints at all.
+pub fn latest_valid(dir: impl AsRef<Path>) -> Result<Option<(PathBuf, Snapshot)>> {
+    let dir = dir.as_ref();
+    let mut candidates: Vec<PathBuf> = match std::fs::read_dir(dir) {
+        Ok(rd) => rd
+            .filter_map(|e| e.ok())
+            .map(|e| e.path())
+            .filter(|p| {
+                p.file_name()
+                    .and_then(|n| n.to_str())
+                    .map(|n| n.starts_with("ckpt-") && n.ends_with(".bin"))
+                    .unwrap_or(false)
+            })
+            .collect(),
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+        Err(e) => {
+            return Err(e).with_context(|| format!("listing {dir:?}"));
+        }
+    };
+    // Zero-padded step in the name => lexicographic == numeric order.
+    candidates.sort();
+    for path in candidates.into_iter().rev() {
+        match load(&path) {
+            Ok(snap) => return Ok(Some((path, snap))),
+            Err(e) => {
+                eprintln!(
+                    "warning: skipping corrupt checkpoint {path:?}: {e:#}"
+                );
+            }
+        }
+    }
+    Ok(None)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::utils::rng::Rng;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("muonbp-ckpt-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    fn sample(step: u64) -> Snapshot {
+        let mut rng = Rng::new(step);
+        let mut s = Snapshot::new(step);
+        s.push("param.w", Tensor::randn(&[4, 6], 1.0, &mut rng));
+        s.push("momentum.w", Tensor::randn(&[4, 6], 1.0, &mut rng));
+        s.push("adam.m.g", Tensor::randn(&[5], 1.0, &mut rng));
+        s
+    }
+
+    #[test]
+    fn crc32_check_value() {
+        // The standard CRC32 check value for "123456789".
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn roundtrip_is_bit_exact() {
+        let dir = tmp_dir("roundtrip");
+        let snap = sample(17);
+        let path = save(&dir, &snap).unwrap();
+        assert_eq!(path.file_name().unwrap(), "ckpt-00000017.bin");
+        let back = load(&path).unwrap();
+        assert_eq!(back, snap); // Tensor PartialEq is exact on f32 bits
+        assert!(back.expect("param.w", &[4, 6]).is_ok());
+        assert!(back.expect("param.w", &[6, 4]).is_err());
+        assert!(back.expect("missing", &[1]).is_err());
+        // No temp files left behind.
+        assert!(std::fs::read_dir(&dir)
+            .unwrap()
+            .all(|e| !e
+                .unwrap()
+                .file_name()
+                .to_str()
+                .unwrap()
+                .starts_with(".tmp-")));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn payload_corruption_fails_crc() {
+        let dir = tmp_dir("corrupt");
+        let path = save(&dir, &sample(3)).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        // Flip one bit inside the first tensor's payload (past the
+        // header + entry framing).
+        let idx = bytes.len() / 2;
+        bytes[idx] ^= 0x10;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = format!("{:#}", load(&path).unwrap_err());
+        assert!(err.contains("CRC"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn truncation_is_detected() {
+        let dir = tmp_dir("trunc");
+        let path = save(&dir, &sample(5)).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 6]).unwrap();
+        assert!(load(&path).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn latest_valid_falls_back_past_corruption() {
+        let dir = tmp_dir("fallback");
+        assert!(latest_valid(&dir).unwrap().is_none()); // no dir yet
+        save(&dir, &sample(2)).unwrap();
+        let newest = save(&dir, &sample(4)).unwrap();
+        // Newest wins while intact.
+        let (p, s) = latest_valid(&dir).unwrap().unwrap();
+        assert_eq!((p, s.step), (newest.clone(), 4));
+        // Corrupt the newest: fallback to the previous good one.
+        let mut bytes = std::fs::read(&newest).unwrap();
+        let idx = bytes.len() - 8;
+        bytes[idx] ^= 0xFF;
+        std::fs::write(&newest, bytes).unwrap();
+        let (p, s) = latest_valid(&dir).unwrap().unwrap();
+        assert_eq!(s.step, 2);
+        assert_eq!(p.file_name().unwrap(), "ckpt-00000002.bin");
+        // Corrupt that too: nothing valid left.
+        std::fs::write(&p, b"MBCKgarbage").unwrap();
+        assert!(latest_valid(&dir).unwrap().is_none());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn version_and_magic_guards() {
+        let snap = sample(1);
+        let mut bytes = encode(&snap);
+        bytes[0] = b'X';
+        assert!(decode(&bytes).is_err());
+        let mut bytes = encode(&snap);
+        bytes[4] = 99; // version
+        assert!(decode(&bytes).is_err());
+        // Trailing garbage is rejected, not silently ignored.
+        let mut bytes = encode(&snap);
+        bytes.push(0);
+        assert!(decode(&bytes).is_err());
+    }
+}

@@ -12,10 +12,11 @@
 //! all-gather of arbitrary payloads); every collective is built on it and
 //! charged with the ring-algorithm volume a real implementation would move.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 
 use crate::costmodel::netmodel::NetModel;
+use crate::robust::StepError;
 use crate::tensor::Tensor;
 
 pub mod stats;
@@ -28,10 +29,17 @@ pub use stats::{CollectiveKind, CommStats};
 /// rounds. Callers must guarantee all `n` participants are live
 /// concurrently (`Pool::run_concurrent` provides exactly that), otherwise
 /// the missing rank starves the group.
+///
+/// The barrier is *poisonable*: a rank that fails mid-step calls
+/// [`PhaseBarrier::poison`], which releases every current and future
+/// waiter with `Err(StepError::Poisoned)` instead of letting them starve
+/// on the missing arrival. Once the group is quiescent (all rank tasks
+/// joined), [`PhaseBarrier::heal`] resets it for reuse.
 pub struct PhaseBarrier {
     n: usize,
     arrived: AtomicUsize,
     generation: AtomicUsize,
+    poisoned: AtomicBool,
 }
 
 impl PhaseBarrier {
@@ -40,15 +48,20 @@ impl PhaseBarrier {
             n,
             arrived: AtomicUsize::new(0),
             generation: AtomicUsize::new(0),
+            poisoned: AtomicBool::new(false),
         }
     }
 
     /// Block until all `n` participants have called `wait` for the current
-    /// round. The last arriver resets the count *before* bumping the
-    /// generation, so the barrier is immediately reusable.
-    pub fn wait(&self) {
+    /// round, or until a failing rank poisons the barrier. The last
+    /// arriver resets the count *before* bumping the generation, so the
+    /// barrier is immediately reusable.
+    pub fn wait(&self) -> Result<(), StepError> {
+        if self.poisoned.load(Ordering::Acquire) {
+            return Err(StepError::Poisoned);
+        }
         if self.n <= 1 {
-            return;
+            return Ok(());
         }
         let round = self.generation.load(Ordering::Acquire);
         if self.arrived.fetch_add(1, Ordering::AcqRel) + 1 == self.n {
@@ -57,6 +70,9 @@ impl PhaseBarrier {
         } else {
             let mut spins = 0u32;
             while self.generation.load(Ordering::Acquire) == round {
+                if self.poisoned.load(Ordering::Acquire) {
+                    return Err(StepError::Poisoned);
+                }
                 spins = spins.wrapping_add(1);
                 if spins < 128 {
                     std::hint::spin_loop();
@@ -65,6 +81,36 @@ impl PhaseBarrier {
                 }
             }
         }
+        // The poison store happens-before the releasing generation bump,
+        // so a waiter freed by poison (rather than by group completion)
+        // observes the flag here.
+        if self.poisoned.load(Ordering::Acquire) {
+            return Err(StepError::Poisoned);
+        }
+        Ok(())
+    }
+
+    /// Release every current and future waiter with
+    /// `Err(StepError::Poisoned)`. Callable from any rank (including a
+    /// panic handler); idempotent.
+    pub fn poison(&self) {
+        self.poisoned.store(true, Ordering::Release);
+        // Bump the generation so spinners parked on the current round
+        // exit their wait loop and see the flag.
+        self.generation.fetch_add(1, Ordering::Release);
+    }
+
+    pub fn is_poisoned(&self) -> bool {
+        self.poisoned.load(Ordering::Acquire)
+    }
+
+    /// Reset a poisoned barrier for reuse. Only sound once the group is
+    /// quiescent — every rank task has returned (the coordinator calls
+    /// this after the pool join that ends a failed step).
+    pub fn heal(&self) {
+        self.arrived.store(0, Ordering::Relaxed);
+        self.generation.store(0, Ordering::Relaxed);
+        self.poisoned.store(false, Ordering::Release);
     }
 }
 
@@ -196,8 +242,50 @@ impl Communicator {
     /// substrate the phased coordinator schedule and the `_into`
     /// collectives hand off on. For a *modeled* barrier collective that
     /// charges α-time, use [`Communicator::barrier`].
-    pub fn rendezvous(&self) {
-        self.phase.wait();
+    ///
+    /// Errors with `StepError::Poisoned` when a peer poisoned the phase
+    /// barrier instead of arriving.
+    pub fn rendezvous(&self) -> Result<(), StepError> {
+        self.phase.wait()
+    }
+
+    /// Poison the phase barrier: release every rank currently (or later)
+    /// parked in a `_into` collective or `rendezvous` with
+    /// `Err(StepError::Poisoned)`.
+    pub fn poison(&self) {
+        self.phase.poison();
+    }
+
+    pub fn is_poisoned(&self) -> bool {
+        self.phase.is_poisoned()
+    }
+
+    /// Reset a poisoned phase barrier once the group is quiescent (all
+    /// rank tasks joined). See [`PhaseBarrier::heal`].
+    pub fn heal(&self) {
+        self.phase.heal();
+    }
+
+    /// Run one rank's phase body, converting a panic into a structured
+    /// [`StepError::RankPanicked`] *after poisoning the barrier*, so
+    /// peers parked in this group's collectives are released instead of
+    /// deadlocking. This is the panic-safety boundary of the phased
+    /// schedule: the pool never observes the panic (both the dispatch
+    /// and scoped-thread fallback paths behave identically), and the
+    /// non-panicking path adds no allocation.
+    pub fn run_fallible<R>(
+        &self,
+        rank: usize,
+        phase: u8,
+        f: impl FnOnce() -> Result<R, StepError>,
+    ) -> Result<R, StepError> {
+        match std::panic::catch_unwind(std::panic::AssertUnwindSafe(f)) {
+            Ok(res) => res,
+            Err(_payload) => {
+                self.poison();
+                Err(StepError::RankPanicked { rank, phase })
+            }
+        }
     }
 
     /// Allocation-free all-reduce-mean: every rank deposits the address of
@@ -211,27 +299,30 @@ impl Communicator {
         rank: usize,
         src: &Tensor,
         dst: &mut Tensor,
-    ) {
+    ) -> Result<(), StepError> {
         assert!(rank < self.n);
         assert_eq!(src.shape(), dst.shape(), "all_reduce_mean_into shape");
         let bytes = src.numel() * 4;
         self.deposit_slots[rank]
             .store(src as *const Tensor as usize, Ordering::Release);
-        self.phase.wait();
+        self.phase.wait()?;
         dst.data_mut().fill(0.0);
         for r in 0..self.n {
             let p =
                 self.deposit_slots[r].load(Ordering::Acquire) as *const Tensor;
             // SAFETY: every deposited reference outlives the closing
             // rendezvous below, and slots are only rewritten after it —
-            // the shared borrow is valid for the whole read loop.
+            // the shared borrow is valid for the whole read loop. An Ok
+            // from the opening wait means all n ranks deposited this
+            // round, so no slot is stale.
             dst.axpy(1.0, unsafe { &*p });
         }
         dst.scale(1.0 / self.n as f32);
-        self.phase.wait();
+        self.phase.wait()?;
         if self.n > 1 {
             self.charge(rank, CollectiveKind::AllReduce, bytes);
         }
+        Ok(())
     }
 
     /// Allocation-free reduce-scatter-mean over ZeRO-1 row slices: every
@@ -249,7 +340,7 @@ impl Communicator {
         rank: usize,
         src: &Tensor,
         dst: &mut Tensor,
-    ) {
+    ) -> Result<(), StepError> {
         assert!(rank < self.n);
         let n_cols = src.n();
         let (r0, r1) = crate::shard::shard_range(src.m(), self.n, rank);
@@ -261,7 +352,7 @@ impl Communicator {
         let bytes = src.numel() * 4;
         self.deposit_slots[rank]
             .store(src as *const Tensor as usize, Ordering::Release);
-        self.phase.wait();
+        self.phase.wait()?;
         let off = r0 * n_cols;
         let len = (r1 - r0) * n_cols;
         let d = dst.data_mut();
@@ -280,10 +371,11 @@ impl Communicator {
             }
         }
         dst.scale(1.0 / self.n as f32);
-        self.phase.wait();
+        self.phase.wait()?;
         if self.n > 1 {
             self.charge(rank, CollectiveKind::ReduceScatter, bytes);
         }
+        Ok(())
     }
 
     /// Allocation-free all-gather of ZeRO-1 row slices: every rank
@@ -299,7 +391,7 @@ impl Communicator {
         rank: usize,
         src: &Tensor,
         dst: &mut Tensor,
-    ) {
+    ) -> Result<(), StepError> {
         assert!(rank < self.n);
         let n_cols = dst.n();
         let m_rows = dst.m();
@@ -312,7 +404,7 @@ impl Communicator {
         let bytes = dst.numel() * 4;
         self.deposit_slots[rank]
             .store(src as *const Tensor as usize, Ordering::Release);
-        self.phase.wait();
+        self.phase.wait()?;
         let d = dst.data_mut();
         for r in 0..self.n {
             let p =
@@ -322,10 +414,11 @@ impl Communicator {
             let (q0, q1) = crate::shard::shard_range(m_rows, self.n, r);
             d[q0 * n_cols..q1 * n_cols].copy_from_slice(s);
         }
-        self.phase.wait();
+        self.phase.wait()?;
         if self.n > 1 {
             self.charge(rank, CollectiveKind::AllGather, bytes);
         }
+        Ok(())
     }
 
     /// Record a collective whose rendezvous happened out-of-band: phased
@@ -702,7 +795,7 @@ mod tests {
                 s.spawn(move |_| {
                     for round in 0..200usize {
                         arrived.fetch_add(1, Ordering::SeqCst);
-                        c.rendezvous();
+                        c.rendezvous().unwrap();
                         assert!(
                             arrived.load(Ordering::SeqCst) >= 4 * (round + 1),
                             "rendezvous let a rank through early"
@@ -733,7 +826,7 @@ mod tests {
                     .unwrap();
                     let mut dst = Tensor::zeros(&[2, 2]);
                     for _ in 0..10 {
-                        c.all_reduce_mean_into(r, &src, &mut dst);
+                        c.all_reduce_mean_into(r, &src, &mut dst).unwrap();
                     }
                     let want = c2.all_reduce_mean(r, src.clone());
                     assert_eq!(dst, want, "rank {r} drifted");
@@ -770,7 +863,7 @@ mod tests {
                     let (r0, r1) = crate::shard::shard_range(5, 3, r);
                     let mut dst = Tensor::zeros(&[r1 - r0, 2]);
                     for _ in 0..10 {
-                        c.reduce_scatter_mean_into(r, &src, &mut dst);
+                        c.reduce_scatter_mean_into(r, &src, &mut dst).unwrap();
                     }
                     let want = c2.all_reduce_mean(r, src.clone());
                     let want_rows = &want.data()[r0 * 2..r1 * 2];
@@ -807,7 +900,7 @@ mod tests {
                     .unwrap();
                     let mut dst = Tensor::zeros(&[2, 3]);
                     for _ in 0..5 {
-                        c.all_gather_into(r, &src, &mut dst);
+                        c.all_gather_into(r, &src, &mut dst).unwrap();
                     }
                     let want: Vec<f32> = (0..6).map(|x| x as f32).collect();
                     assert_eq!(dst.data(), &want[..], "rank {r} gather");
@@ -829,13 +922,13 @@ mod tests {
         let src =
             Tensor::from_vec(&[2, 2], vec![1.0, -2.0, 3.0, 0.5]).unwrap();
         let mut dst = Tensor::zeros(&[2, 2]);
-        comm.reduce_scatter_mean_into(0, &src, &mut dst);
+        comm.reduce_scatter_mean_into(0, &src, &mut dst).unwrap();
         assert_eq!(dst, src, "mean over one rank is the identity");
         let mut full = Tensor::zeros(&[2, 2]);
-        comm.all_gather_into(0, &dst, &mut full);
+        comm.all_gather_into(0, &dst, &mut full).unwrap();
         assert_eq!(full, src);
         let mut ar = Tensor::zeros(&[2, 2]);
-        comm.all_reduce_mean_into(0, &src, &mut ar);
+        comm.all_reduce_mean_into(0, &src, &mut ar).unwrap();
         assert_eq!(ar, src);
         assert_eq!(comm.stats().total_bytes(), 0);
         assert_eq!(comm.stats().total_sim_time(), 0.0);
@@ -873,6 +966,78 @@ mod tests {
         // charged all 4 deposits (32 bytes).
         assert_eq!(stats.bytes(CollectiveKind::Gather), 16);
         assert_eq!(stats.bytes(CollectiveKind::Scatter), 16);
+    }
+
+    #[test]
+    fn poison_releases_parked_waiters() {
+        // Three ranks park in a collective; the fourth poisons instead of
+        // arriving. All parked ranks must return Err(Poisoned) — the
+        // deadlock this used to be is exactly what PR 6 removes.
+        let comm = Communicator::new(4, NetModel::a100_nvlink());
+        thread::scope(|s| {
+            for r in 0..3 {
+                let c = comm.clone();
+                s.spawn(move |_| {
+                    let src = Tensor::zeros(&[4, 2]);
+                    let mut dst = Tensor::zeros(&[4, 2]);
+                    let got = c.all_reduce_mean_into(r, &src, &mut dst);
+                    assert_eq!(got, Err(StepError::Poisoned), "rank {r}");
+                });
+            }
+            let c = comm.clone();
+            s.spawn(move |_| {
+                // Give peers time to park, then fail the group.
+                std::thread::sleep(std::time::Duration::from_millis(20));
+                c.poison();
+            });
+        })
+        .unwrap();
+        assert!(comm.is_poisoned());
+        // Future waiters bounce immediately, even with nobody parked.
+        assert_eq!(comm.rendezvous(), Err(StepError::Poisoned));
+        // After quiescent heal, the group works again, bit-exact.
+        comm.heal();
+        assert!(!comm.is_poisoned());
+        thread::scope(|s| {
+            for r in 0..4 {
+                let c = comm.clone();
+                s.spawn(move |_| {
+                    let src = Tensor::scalar(r as f32);
+                    let mut dst = Tensor::scalar(0.0);
+                    c.all_reduce_mean_into(r, &src, &mut dst).unwrap();
+                    assert_eq!(dst.data()[0], 1.5);
+                });
+            }
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn run_fallible_converts_panic_and_poisons() {
+        let comm = Communicator::new(2, NetModel::a100_nvlink());
+        // Non-panicking path: transparent.
+        let ok: Result<u32, StepError> =
+            comm.run_fallible(0, 1, || Ok(7));
+        assert_eq!(ok, Ok(7));
+        assert!(!comm.is_poisoned());
+        // Error path: passed through untouched, no poison.
+        let err: Result<(), StepError> = comm.run_fallible(
+            1,
+            0,
+            || Err(StepError::NonFiniteGrad { param: 2 }),
+        );
+        assert_eq!(err, Err(StepError::NonFiniteGrad { param: 2 }));
+        assert!(!comm.is_poisoned());
+        // Panic path: structured error + poisoned barrier.
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(|_| {})); // silence the backtrace
+        let got: Result<(), StepError> =
+            comm.run_fallible(1, 2, || panic!("injected"));
+        std::panic::set_hook(prev);
+        assert_eq!(got, Err(StepError::RankPanicked { rank: 1, phase: 2 }));
+        assert!(comm.is_poisoned());
+        comm.heal();
+        assert!(!comm.is_poisoned());
     }
 
     #[test]

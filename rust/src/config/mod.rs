@@ -7,6 +7,7 @@ use anyhow::Result;
 
 use crate::mesh::{Layout, StateSharding};
 use crate::optim::{MuonCfg, Schedule};
+use crate::robust::{AnomalyPolicy, FaultPlan, PhasePanic, Straggler};
 use crate::utils::cli::Args;
 use crate::utils::json::Json;
 
@@ -42,6 +43,16 @@ pub struct RunConfig {
     pub eval_every: usize,
     /// Output CSV path ("" = don't write).
     pub out: String,
+    /// Anomaly policy: abort | skip-step | escalate-full-orth.
+    pub on_anomaly: AnomalyPolicy,
+    /// Deterministic fault injection plan (inert by default).
+    pub fault: FaultPlan,
+    /// Checkpoint directory ("" = checkpointing off).
+    pub checkpoint_dir: String,
+    /// Save a checkpoint every N steps (0 = only the final one).
+    pub checkpoint_every: usize,
+    /// Resume from the newest valid checkpoint in `checkpoint_dir`.
+    pub resume: bool,
 }
 
 impl Default for RunConfig {
@@ -63,6 +74,11 @@ impl Default for RunConfig {
             seed: 0,
             eval_every: 20,
             out: String::new(),
+            on_anomaly: AnomalyPolicy::Abort,
+            fault: FaultPlan::default(),
+            checkpoint_dir: String::new(),
+            checkpoint_every: 0,
+            resume: false,
         }
     }
 }
@@ -127,6 +143,27 @@ impl RunConfig {
         if let Some(v) = j.get("out") {
             c.out = v.as_str()?.to_string();
         }
+        if let Some(v) = j.get("on_anomaly") {
+            c.on_anomaly = AnomalyPolicy::parse(v.as_str()?)?;
+        }
+        if let Some(v) = j.get("fault_nan_step") {
+            c.fault.nan_grad_step = Some(v.as_usize()? as u64);
+        }
+        if let Some(v) = j.get("fault_panic") {
+            c.fault.panic_at = Some(PhasePanic::parse(v.as_str()?)?);
+        }
+        if let Some(v) = j.get("fault_straggle") {
+            c.fault.straggler = Some(Straggler::parse(v.as_str()?)?);
+        }
+        if let Some(v) = j.get("checkpoint_dir") {
+            c.checkpoint_dir = v.as_str()?.to_string();
+        }
+        if let Some(v) = j.get("checkpoint_every") {
+            c.checkpoint_every = v.as_usize()?;
+        }
+        if let Some(v) = j.get("resume") {
+            c.resume = v.as_bool()?;
+        }
         Ok(c)
     }
 
@@ -168,6 +205,27 @@ impl RunConfig {
         self.eval_every = args.get_usize("eval-every", self.eval_every)?;
         if let Some(v) = args.get("out") {
             self.out = v.to_string();
+        }
+        if let Some(v) = args.get("on-anomaly") {
+            self.on_anomaly = AnomalyPolicy::parse(v)?;
+        }
+        if args.get("fault-nan-step").is_some() {
+            self.fault.nan_grad_step =
+                Some(args.get_usize("fault-nan-step", 0)? as u64);
+        }
+        if let Some(v) = args.get("fault-panic") {
+            self.fault.panic_at = Some(PhasePanic::parse(v)?);
+        }
+        if let Some(v) = args.get("fault-straggle") {
+            self.fault.straggler = Some(Straggler::parse(v)?);
+        }
+        if let Some(v) = args.get("checkpoint-dir") {
+            self.checkpoint_dir = v.to_string();
+        }
+        self.checkpoint_every =
+            args.get_usize("checkpoint-every", self.checkpoint_every)?;
+        if args.flag("resume") {
+            self.resume = true;
         }
         Ok(())
     }

@@ -85,19 +85,26 @@
 //! compat path, since an `OrthFn` returns fresh tensors by contract.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
+use crate::checkpoint::Snapshot;
 use crate::comm::{CollectiveKind, CommStats, Communicator};
 use crate::costmodel::netmodel::NetModel;
 use crate::linalg::newton_schulz::{NsCoeffs, NsWorkspace};
 use crate::mesh::{Layout, Mesh, StateSharding};
 use crate::optim::adamw::AdamW;
-use crate::optim::muon::{momentum_update, Muon, MuonCfg, OrthFn, Period};
+use crate::optim::muon::{
+    momentum_update_into, Muon, MuonCfg, OrthFn, Period,
+};
 use crate::optim::scaling::rms_match_scale;
 use crate::optim::{Optimizer, ParamKind, ParamMeta};
+use crate::robust::{self, AnomalyPolicy, FaultPlan, StepError};
 use crate::runtime::pool::{Pool, SendPtr};
 use crate::runtime::NsEngine;
-use crate::shard::{row_slice_zeros, shard_into, unshard_from, ShardSpec};
+use crate::shard::{
+    row_slice_into, row_slice_zeros, shard_into, unshard_from,
+    write_row_slice, ShardSpec,
+};
 use crate::tensor::Tensor;
 
 /// Builder for the distributed coordinator.
@@ -108,6 +115,8 @@ pub struct DistMuonBuilder {
     pub dp_net: NetModel,
     pub ns: Option<Arc<NsEngine>>,
     pub sharding: StateSharding,
+    pub fault: FaultPlan,
+    pub orth: Option<OrthFn>,
 }
 
 impl DistMuonBuilder {
@@ -121,6 +130,8 @@ impl DistMuonBuilder {
             dp_net: NetModel::ib_hdr(),
             ns: None,
             sharding: StateSharding::Replicated,
+            fault: FaultPlan::default(),
+            orth: None,
         }
     }
 
@@ -140,6 +151,21 @@ impl DistMuonBuilder {
 
     pub fn ns_engine(mut self, ns: Arc<NsEngine>) -> Self {
         self.ns = Some(ns);
+        self
+    }
+
+    /// Deterministic fault injection plan (tests / `--fault-*` flags).
+    /// Default is inert.
+    pub fn fault_plan(mut self, fault: FaultPlan) -> Self {
+        self.fault = fault;
+        self
+    }
+
+    /// Inject a raw orthogonalization callback (test/bench convenience —
+    /// the runtime path uses [`DistMuonBuilder::ns_engine`]). Takes
+    /// precedence over `ns_engine` when both are set.
+    pub fn orth_fn(mut self, f: OrthFn) -> Self {
+        self.orth = Some(f);
         self
     }
 
@@ -220,10 +246,10 @@ impl DistMuonBuilder {
                 })
                 .collect()
         };
-        let (dp_momenta, dp_grad_slices) = if zero1 {
-            (zero1_slices(), zero1_slices())
+        let (dp_momenta, dp_momenta_next, dp_grad_slices) = if zero1 {
+            (zero1_slices(), zero1_slices(), zero1_slices())
         } else {
-            (Vec::new(), Vec::new())
+            (Vec::new(), Vec::new(), Vec::new())
         };
         // Per-matrix leader-phase arenas (full momentum + update delta).
         let scratch: Vec<Option<DistScratch>> = specs
@@ -253,9 +279,10 @@ impl DistMuonBuilder {
         } else {
             Vec::new()
         };
-        let backend = match &self.ns {
-            Some(ns) => DistBackend::Custom(ns.as_orth_fn()),
-            None => DistBackend::Host {
+        let backend = match (&self.orth, &self.ns) {
+            (Some(f), _) => DistBackend::Custom(f.clone()),
+            (None, Some(ns)) => DistBackend::Custom(ns.as_orth_fn()),
+            (None, None) => DistBackend::Host {
                 steps: self.cfg.ns_steps,
                 coeffs: self.cfg.coeffs,
             },
@@ -268,21 +295,41 @@ impl DistMuonBuilder {
             metas: metas.to_vec(),
             specs,
             matrix_idx,
+            rank_momenta_next: rank_momenta.clone(),
             rank_momenta,
             rank_grads,
             rank_updates,
             scratch,
             dp_acc,
             dp_momenta,
+            dp_momenta_next,
             dp_grad_slices,
             sharding: self.sharding,
             ws: NsWorkspace::new(),
             adam: AdamW::new(metas),
             backend,
+            fault: self.fault,
             ns_calls: AtomicU64::new(0),
             t: 0,
+            attempts: 0,
+            escalations: 0,
+            err_slot: Mutex::new(None),
             last_opt_bytes: 0,
         }
+    }
+}
+
+/// Record a phase failure into the preallocated slot. Concrete causes
+/// (a panic, an injected fault, NS divergence) beat the secondary
+/// `Poisoned` releases every peer reports after one rank fails.
+fn record_err(slot: &Mutex<Option<StepError>>, e: StepError) {
+    let mut g = slot.lock().unwrap();
+    match *g {
+        None => *g = Some(e),
+        Some(StepError::Poisoned) if e != StepError::Poisoned => {
+            *g = Some(e)
+        }
+        _ => {}
     }
 }
 
@@ -316,8 +363,15 @@ pub struct DistMuon {
     /// Matrix ordinal -> param index (fixed at build; the step loop never
     /// recomputes it).
     matrix_idx: Vec<usize>,
-    /// [tp_rank][matrix_ordinal] momentum shard.
+    /// [tp_rank][matrix_ordinal] *committed* momentum shard — the
+    /// authoritative optimizer state in replicated mode. The phases only
+    /// ever read it; a successful attempt commits by swapping in
+    /// `rank_momenta_next`.
     rank_momenta: Vec<Vec<Tensor>>,
+    /// [tp_rank][matrix_ordinal] staged next-step momentum shard: every
+    /// phase of an attempt reads/writes these, and a failed attempt is
+    /// discarded wholesale — the step-atomicity contract.
+    rank_momenta_next: Vec<Vec<Tensor>>,
     /// [tp_rank][matrix_ordinal] grad-shard staging buffer.
     rank_grads: Vec<Vec<Tensor>>,
     /// [tp_rank][matrix_ordinal] block-step update shard.
@@ -328,10 +382,14 @@ pub struct DistMuon {
     /// replicated): all-reduced mean gradients, except matrix entries
     /// under ZeRO-1, which hold the all-gathered updated momentum.
     dp_acc: Vec<Vec<Tensor>>,
-    /// [dp_rank][matrix_ordinal] ZeRO-1 momentum row-slices — the
-    /// authoritative optimizer state in `Zero1` mode (empty otherwise).
-    /// Rank r owns rows `shard_range(m, dp, r)` of each matrix.
+    /// [dp_rank][matrix_ordinal] *committed* ZeRO-1 momentum row-slices —
+    /// the authoritative optimizer state in `Zero1` mode (empty
+    /// otherwise). Rank r owns rows `shard_range(m, dp, r)` of each
+    /// matrix. Read-only during the phases; committed by swap.
     dp_momenta: Vec<Vec<Tensor>>,
+    /// [dp_rank][matrix_ordinal] staged next-step ZeRO-1 slices (empty
+    /// unless `Zero1`).
+    dp_momenta_next: Vec<Vec<Tensor>>,
     /// [dp_rank][matrix_ordinal] reduce-scattered mean-gradient slices
     /// (ZeRO-1 staging; empty otherwise).
     dp_grad_slices: Vec<Vec<Tensor>>,
@@ -342,12 +400,24 @@ pub struct DistMuon {
     ws: NsWorkspace,
     adam: AdamW,
     backend: DistBackend,
+    /// Deterministic fault injection plan (inert by default).
+    fault: FaultPlan,
     /// Orthogonalizations issued so far: one per *distinct* block on
     /// block steps (clamped-grid replicas deduplicated), one per matrix
     /// on full steps (the leader). Atomic because block-step increments
-    /// happen inside the pooled rank fan-out.
+    /// happen inside the pooled rank fan-out. Counts *issued* work:
+    /// failed and escalated attempts keep their increments.
     ns_calls: AtomicU64,
     t: u64,
+    /// 1-based `try_step` attempts, failed ones included — the key space
+    /// for fault injection, so an injected fault fires exactly once.
+    attempts: u64,
+    /// Block steps retried as full orthogonalization under the
+    /// `escalate-full-orth` anomaly policy.
+    escalations: u64,
+    /// Preallocated failure slot for the pooled phases (keeps the
+    /// fault-free warm step allocation-free).
+    err_slot: Mutex<Option<StepError>>,
     last_opt_bytes: u64,
 }
 
@@ -381,181 +451,267 @@ impl DistMuon {
     pub fn ns_calls(&self) -> u64 {
         self.ns_calls.load(Ordering::Relaxed)
     }
-}
 
-impl Optimizer for DistMuon {
-    fn step(&mut self, params: &mut [Tensor], grads: &[Tensor], lr: f64) {
-        assert_eq!(params.len(), self.metas.len());
-        // Explicit arity check: with dp > 1 a short grads slice would
-        // otherwise silently zip-truncate against dp_acc and feed stale
-        // accumulator contents to the truncated params.
-        assert_eq!(grads.len(), self.metas.len());
-        self.t += 1;
-        let full = self.cfg.period.is_full_step(self.t - 1);
-        let eta = if full { lr } else { lr * self.cfg.eta_block_ratio };
-        let tp_before = self.tp_comm.stats().total_bytes();
+    /// Block steps retried as full orthogonalization under the
+    /// `escalate-full-orth` anomaly policy.
+    pub fn escalations(&self) -> u64 {
+        self.escalations
+    }
 
-        // ---- Phase 0: DP sync. Every DP rank holds the same replica
-        // (batch-split grads average to exactly the full-batch grad), so
-        // payloads are real and results bit-identical. Rank tasks run
-        // concurrently on the pool and rendezvous inside the
-        // allocation-free pool-native collectives.
-        //
-        // Replicated: one all-reduce-mean per param; every rank
-        // redundantly holds the full mean gradient (and, implicitly, the
-        // full momentum updated later in the TP phase).
-        //
-        // ZeRO-1: per matrix, the sync is reduce-scatter-mean (rank r
-        // receives exactly the mean-gradient rows it owns), a slice-local
-        // momentum update (the ONLY momentum write in this mode — the
-        // rank updates nothing it does not own), and an all-gather that
-        // reassembles the updated momentum for the TP phases. Non-matrix
-        // params keep the all-reduce (AdamW runs replicated). All ranks
-        // issue the collectives in identical param order — the same
-        // contract a real NCCL group requires.
+    /// Phase 0 — fallible DP gradient sync into the staging arenas.
+    ///
+    /// Replicated: one all-reduce-mean per param into `dp_acc`.
+    /// ZeRO-1: per matrix, reduce-scatter-mean into the grad slice, a
+    /// *staged* slice momentum update (`dp_momenta_next` from the
+    /// committed `dp_momenta`), and an all-gather of the staged momentum
+    /// into `dp_acc`. Rank closures run under
+    /// [`Communicator::run_fallible`], so a panicking rank poisons the
+    /// phase barrier (releasing every parked peer with
+    /// [`StepError::Poisoned`]) instead of deadlocking; on any failure
+    /// the barrier is healed and the committed state is untouched.
+    fn dp_sync(
+        &mut self,
+        grads: &[Tensor],
+        attempt: u64,
+    ) -> Result<(), StepError> {
         let zero1 = self.sharding == StateSharding::Zero1;
-        if self.mesh.dp > 1 || zero1 {
+        if self.mesh.dp <= 1 && !zero1 {
+            return Ok(());
+        }
+        {
             let comm = &self.dp_comm;
             let specs = &self.specs;
+            let fault = &self.fault;
+            let err_slot = &self.err_slot;
             let mu = self.cfg.momentum;
             let acc_ptr = SendPtr(self.dp_acc.as_mut_ptr());
-            let dpm_ptr = SendPtr(self.dp_momenta.as_mut_ptr());
+            let dpm_ptr =
+                SendPtr(self.dp_momenta.as_ptr() as *mut Vec<Tensor>);
+            let dpmn_ptr = SendPtr(self.dp_momenta_next.as_mut_ptr());
             let dpg_ptr = SendPtr(self.dp_grad_slices.as_mut_ptr());
             Pool::global().run_concurrent(self.mesh.dp, |r, _arena| {
-                // SAFETY: task r is the sole user of row r of `dp_acc`,
-                // `dp_momenta` and `dp_grad_slices`; the fan-out joins
-                // all tasks before any row is touched again.
-                let acc: &mut Vec<Tensor> = unsafe { &mut *acc_ptr.0.add(r) };
-                if zero1 {
-                    let msl: &mut Vec<Tensor> =
-                        unsafe { &mut *dpm_ptr.0.add(r) };
-                    let gsl: &mut Vec<Tensor> =
-                        unsafe { &mut *dpg_ptr.0.add(r) };
-                    let mut ord = 0;
-                    for (i, g) in grads.iter().enumerate() {
-                        if specs[i].is_some() {
-                            comm.reduce_scatter_mean_into(
-                                r,
-                                g,
-                                &mut gsl[ord],
-                            );
-                            momentum_update(&mut msl[ord], mu, &gsl[ord]);
-                            comm.all_gather_into(r, &msl[ord], &mut acc[i]);
-                            ord += 1;
-                        } else {
-                            comm.all_reduce_mean_into(r, g, &mut acc[i]);
+                let res = comm.run_fallible(r, 0, || {
+                    fault.maybe_straggle(attempt, r);
+                    fault.maybe_panic(attempt, r, 0);
+                    // SAFETY: task r is the sole user of row r of
+                    // `dp_acc`, `dp_momenta{,_next}` and
+                    // `dp_grad_slices` (the committed `dp_momenta` row
+                    // is only read); the fan-out joins all tasks before
+                    // any row is touched again.
+                    let acc: &mut Vec<Tensor> =
+                        unsafe { &mut *acc_ptr.0.add(r) };
+                    if zero1 {
+                        let cur: &Vec<Tensor> =
+                            unsafe { &*dpm_ptr.0.add(r) };
+                        let next: &mut Vec<Tensor> =
+                            unsafe { &mut *dpmn_ptr.0.add(r) };
+                        let gsl: &mut Vec<Tensor> =
+                            unsafe { &mut *dpg_ptr.0.add(r) };
+                        let mut ord = 0;
+                        for (i, g) in grads.iter().enumerate() {
+                            if specs[i].is_some() {
+                                comm.reduce_scatter_mean_into(
+                                    r,
+                                    g,
+                                    &mut gsl[ord],
+                                )?;
+                                momentum_update_into(
+                                    &mut next[ord],
+                                    &cur[ord],
+                                    mu,
+                                    &gsl[ord],
+                                );
+                                comm.all_gather_into(
+                                    r,
+                                    &next[ord],
+                                    &mut acc[i],
+                                )?;
+                                ord += 1;
+                            } else {
+                                comm.all_reduce_mean_into(
+                                    r,
+                                    g,
+                                    &mut acc[i],
+                                )?;
+                            }
+                        }
+                    } else {
+                        for (g, dst) in grads.iter().zip(acc.iter_mut()) {
+                            comm.all_reduce_mean_into(r, g, dst)?;
                         }
                     }
-                } else {
-                    for (g, dst) in grads.iter().zip(acc.iter_mut()) {
-                        comm.all_reduce_mean_into(r, g, dst);
-                    }
+                    Ok(())
+                });
+                if let Err(e) = res {
+                    record_err(err_slot, e);
                 }
             });
         }
-        // What the TP phases consume: mean gradients (replicated), except
-        // matrix entries under ZeRO-1, which are the gathered updated
-        // momenta. The dp == 1 replicated fast path feeds the input grads
-        // through untouched.
-        let synced: &[Tensor] = if self.mesh.dp > 1 || zero1 {
-            &self.dp_acc[0]
-        } else {
-            grads
-        };
+        if let Some(e) = self.err_slot.lock().unwrap().take() {
+            // The join above is the quiescence `heal` requires: every
+            // rank task has returned (poisoning releases parked waiters,
+            // so none are left inside a collective).
+            self.dp_comm.heal();
+            return Err(e);
+        }
+        Ok(())
+    }
 
-        // ---- Phase 1: pooled TP rank tasks — momentum shard update
-        // (replicated mode) or momentum shard *load* from the gathered
-        // matrix (ZeRO-1 — the state was already advanced slice-locally
-        // in phase 0), and on block steps the per-block orthogonalization
-        // (each rank in its worker's warm arena). No task rendezvous is
-        // needed: ranks touch disjoint arenas, and the fan-out join *is*
-        // the gather rendezvous for the leader phase.
+    /// Phases 1–3 of one attempt over already-synced inputs. Reads the
+    /// committed momentum (`rank_momenta`) and writes ONLY staging
+    /// (`rank_momenta_next`, `rank_grads`, `rank_updates`, `scratch`) —
+    /// a failed attempt leaves committed state untouched, and a retry
+    /// overwrites every staging buffer it reads, which is what makes
+    /// the escalate-full-orth retry idempotent.
+    fn run_tp(
+        &mut self,
+        full: bool,
+        synced: &[Tensor],
+        attempt: u64,
+    ) -> Result<(), StepError> {
+        let zero1 = self.sharding == StateSharding::Zero1;
+        // ---- Phase 1: pooled TP rank tasks. Panics inside a rank task
+        // are caught per task (the pool's own panic flag never trips) and
+        // surface as a structured error after the join — there is no
+        // inter-task rendezvous in this phase, so no poisoning is needed.
         {
             let specs = &self.specs;
             let matrix_idx = &self.matrix_idx;
             let backend = &self.backend;
             let ns_calls = &self.ns_calls;
+            let fault = &self.fault;
+            let err_slot = &self.err_slot;
             let mu = self.cfg.momentum;
             let rms_beta = self.cfg.rms_beta;
-            let momenta_ptr = SendPtr(self.rank_momenta.as_mut_ptr());
+            let cur_ptr =
+                SendPtr(self.rank_momenta.as_ptr() as *mut Vec<Tensor>);
+            let next_ptr = SendPtr(self.rank_momenta_next.as_mut_ptr());
             let grads_ptr = SendPtr(self.rank_grads.as_mut_ptr());
             let upd_ptr = SendPtr(self.rank_updates.as_mut_ptr());
             Pool::global().fanout(self.mesh.tp, |rank, arena| {
-                // SAFETY: task `rank` is the sole user of row `rank` of
-                // each per-rank arena; the fan-out joins before any row
-                // is read again.
-                let momenta = unsafe { &mut *momenta_ptr.0.add(rank) };
-                let gbufs = unsafe { &mut *grads_ptr.0.add(rank) };
-                let ups = unsafe { &mut *upd_ptr.0.add(rank) };
-                for (ord, &pidx) in matrix_idx.iter().enumerate() {
-                    let spec = specs[pidx].as_ref().unwrap();
-                    let nb = spec.num_blocks();
-                    let block_id = rank.min(nb - 1);
-                    if zero1 {
-                        // ZeRO-1: `synced[pidx]` is the momentum already
-                        // updated in phase 0 (M_t = μ M_{t-1} + G_t on
-                        // disjoint row slices, then all-gathered) — load
-                        // this rank's TP block of it. Bit-identical to
-                        // the replicated in-place update below because
-                        // the recurrence is elementwise.
-                        shard_into(
-                            &synced[pidx],
-                            spec,
-                            block_id,
-                            &mut momenta[ord],
-                        );
-                    } else {
-                        // M_t^(m) = μ M_{t-1}^(m) + G_t^(m)
-                        shard_into(
-                            &synced[pidx],
-                            spec,
-                            block_id,
-                            &mut gbufs[ord],
-                        );
-                        momentum_update(&mut momenta[ord], mu, &gbufs[ord]);
-                    }
-                    if full {
-                        // Full step: the leader phase orthogonalizes
-                        // after the join (Alg. 1 lines 6-9).
-                        continue;
-                    }
-                    if rank >= nb {
-                        // Clamped grid: this rank holds a *replica* of
-                        // block nb-1, so its Newton–Schulz would repeat
-                        // the owner's (rank nb-1) bit for bit. Skip it —
-                        // the owner's update is copied into this rank's
-                        // shard after the join.
-                        continue;
-                    }
-                    // Local block orthogonalization (lines 11-13), RMS-
-                    // matched with the *block* dims (paper §3.2).
-                    ns_calls.fetch_add(1, Ordering::Relaxed);
-                    match backend {
-                        DistBackend::Host { steps, coeffs } => {
-                            arena.ns.load(&momenta[ord]);
-                            arena.ns.iterate_threads(*steps, *coeffs, 1);
-                            arena.ns.store_into(&mut ups[ord]);
-                        }
-                        DistBackend::Custom(f) => {
-                            let u = f(&momenta[ord]);
-                            ups[ord].data_mut().copy_from_slice(u.data());
-                        }
-                    }
-                    let (bm, bn) = (momenta[ord].m(), momenta[ord].n());
-                    ups[ord]
-                        .scale(rms_match_scale(bm, bn, rms_beta) as f32);
+                let res = std::panic::catch_unwind(
+                    std::panic::AssertUnwindSafe(
+                        || -> Result<(), StepError> {
+                            fault.maybe_panic(attempt, rank, 1);
+                            // SAFETY: task `rank` is the sole user of row
+                            // `rank` of each per-rank arena (the committed
+                            // momentum row is only read); the fan-out
+                            // joins before any row is touched again.
+                            let cur: &Vec<Tensor> =
+                                unsafe { &*cur_ptr.0.add(rank) };
+                            let next =
+                                unsafe { &mut *next_ptr.0.add(rank) };
+                            let gbufs =
+                                unsafe { &mut *grads_ptr.0.add(rank) };
+                            let ups =
+                                unsafe { &mut *upd_ptr.0.add(rank) };
+                            for (ord, &pidx) in
+                                matrix_idx.iter().enumerate()
+                            {
+                                let spec = specs[pidx].as_ref().unwrap();
+                                let nb = spec.num_blocks();
+                                let block_id = rank.min(nb - 1);
+                                if zero1 {
+                                    // ZeRO-1: `synced[pidx]` is the
+                                    // momentum already staged in phase 0
+                                    // (M_t = μ M_{t-1} + G_t on disjoint
+                                    // row slices, then all-gathered) —
+                                    // load this rank's TP block of it.
+                                    shard_into(
+                                        &synced[pidx],
+                                        spec,
+                                        block_id,
+                                        &mut next[ord],
+                                    );
+                                } else {
+                                    // M_t^(m) = μ M_{t-1}^(m) + G_t^(m),
+                                    // staged against the committed shard.
+                                    shard_into(
+                                        &synced[pidx],
+                                        spec,
+                                        block_id,
+                                        &mut gbufs[ord],
+                                    );
+                                    momentum_update_into(
+                                        &mut next[ord],
+                                        &cur[ord],
+                                        mu,
+                                        &gbufs[ord],
+                                    );
+                                }
+                                if full {
+                                    // Full step: the leader phase
+                                    // orthogonalizes after the join
+                                    // (Alg. 1 lines 6-9).
+                                    continue;
+                                }
+                                if rank >= nb {
+                                    // Clamped grid: replica of block
+                                    // nb-1 — the owner's update is
+                                    // copied in after the join.
+                                    continue;
+                                }
+                                // Local block orthogonalization (lines
+                                // 11-13), RMS-matched with the *block*
+                                // dims (paper §3.2).
+                                ns_calls.fetch_add(1, Ordering::Relaxed);
+                                match backend {
+                                    DistBackend::Host { steps, coeffs } => {
+                                        arena.ns.load(&next[ord]);
+                                        arena.ns.iterate_threads(
+                                            *steps, *coeffs, 1,
+                                        );
+                                        arena.ns.store_into(&mut ups[ord]);
+                                    }
+                                    DistBackend::Custom(f) => {
+                                        let u = f(&next[ord]);
+                                        ups[ord]
+                                            .data_mut()
+                                            .copy_from_slice(u.data());
+                                    }
+                                }
+                                let (bm, bn) =
+                                    (next[ord].m(), next[ord].n());
+                                let scale =
+                                    rms_match_scale(bm, bn, rms_beta)
+                                        as f32;
+                                ups[ord].scale(scale);
+                                if let Err((norm, bound)) =
+                                    robust::check_ns_output(
+                                        &ups[ord], scale,
+                                    )
+                                {
+                                    return Err(StepError::NsDiverged {
+                                        param: pidx,
+                                        norm,
+                                        bound,
+                                    });
+                                }
+                            }
+                            Ok(())
+                        },
+                    ),
+                );
+                match res {
+                    Ok(Ok(())) => {}
+                    Ok(Err(e)) => record_err(err_slot, e),
+                    Err(_) => record_err(
+                        err_slot,
+                        StepError::RankPanicked { rank, phase: 1 },
+                    ),
                 }
             });
+            if let Some(e) = self.err_slot.lock().unwrap().take() {
+                return Err(e);
+            }
         }
 
         // ---- Phase 1.5 (block steps, clamped grids): copy the owner's
         // orthogonalized update into the replica rank shards. Replica
         // ranks skipped their NS in phase 1 — it would have recomputed
-        // rank nb-1's result bit for bit (the ROADMAP dedup follow-up).
-        // Phase 3 assembles the delta from block ids 0..nb only, so the
-        // copy is replica-state hygiene (what a real replica device
-        // would hold after a broadcast), not a correctness input — which
-        // is exactly why the duplicated NS work was pure waste.
+        // rank nb-1's result bit for bit. Phase 3 assembles the delta
+        // from block ids 0..nb only, so the copy is replica-state
+        // hygiene, not a correctness input. Pure memcpy — infallible.
         if !full {
             for (ord, &pidx) in self.matrix_idx.iter().enumerate() {
                 let spec = self.specs[pidx].as_ref().unwrap();
@@ -572,22 +728,43 @@ impl Optimizer for DistMuon {
             }
         }
 
-        // ---- Phase 2 (full steps): leader orthogonalization OUTSIDE the
-        // rank tasks. The full-matrix Newton–Schulz threads its GEMM/syrk
-        // row blocks across the entire pool (`NsWorkspace::iterate` via
-        // the shared `Muon::full_orth_into`), instead of running inline
-        // single-core inside a rank task while peers idle.
-        // ---- Phase 3 (block steps): reassemble deltas from rank shards.
+        // ---- Phases 2/3 run on the main thread; a panic there (or an
+        // injected one) is caught and reported as rank 0 of the phase.
+        let phase = if full { 2 } else { 3 };
+        let res = {
+            let this = std::panic::AssertUnwindSafe(&mut *self);
+            std::panic::catch_unwind(move || {
+                let mut this = this;
+                this.0.leader_phases(full, attempt)
+            })
+        };
+        match res {
+            Ok(r) => r,
+            Err(_) => Err(StepError::RankPanicked { rank: 0, phase }),
+        }
+    }
+
+    /// Phase 2 (full steps): leader orthogonalization OUTSIDE the rank
+    /// tasks — the full-matrix Newton–Schulz threads its GEMM/syrk row
+    /// blocks across the entire pool (shared `Muon::full_orth_into`).
+    /// Phase 3 (block steps): reassemble deltas from rank shards. Both
+    /// read the *staged* momentum and write only `scratch`.
+    fn leader_phases(
+        &mut self,
+        full: bool,
+        attempt: u64,
+    ) -> Result<(), StepError> {
         for (ord, &pidx) in self.matrix_idx.iter().enumerate() {
             let spec = self.specs[pidx].as_ref().unwrap();
             let nb = spec.num_blocks();
             let sc = self.scratch[pidx].as_mut().unwrap();
             if full {
-                // Gather: the phase-1 join guarantees every momentum
-                // shard is final; replica deposits (ranks >= nb on a
-                // clamped grid) move no payload and are not charged.
+                self.fault.maybe_panic(attempt, 0, 2);
+                // Gather: the phase-1 join guarantees every staged
+                // momentum shard is final; replica deposits (ranks >= nb
+                // on a clamped grid) move no payload and are not charged.
                 unshard_from(spec, &mut sc.full, |b| {
-                    &self.rank_momenta[b][ord]
+                    &self.rank_momenta_next[b][ord]
                 });
                 let real_bytes: usize =
                     (0..nb).map(|b| spec.block_bytes(b)).sum();
@@ -619,6 +796,18 @@ impl Optimizer for DistMuon {
                         ) as f32);
                     }
                 }
+                let scale =
+                    rms_match_scale(spec.m, spec.n, self.cfg.rms_beta)
+                        as f32;
+                if let Err((norm, bound)) =
+                    robust::check_ns_output(update, scale)
+                {
+                    return Err(StepError::NsDiverged {
+                        param: pidx,
+                        norm,
+                        bound,
+                    });
+                }
                 // Scatter of the update shards back to the owning ranks
                 // (replica ranks excluded, as above). The shards are
                 // read out of `update` directly — an exact-copy
@@ -630,11 +819,115 @@ impl Optimizer for DistMuon {
                     );
                 }
             } else {
+                self.fault.maybe_panic(attempt, 0, 3);
                 unshard_from(spec, &mut sc.update, |b| {
                     &self.rank_updates[b][ord]
                 });
             }
         }
+        Ok(())
+    }
+}
+
+impl Optimizer for DistMuon {
+    fn step(&mut self, params: &mut [Tensor], grads: &[Tensor], lr: f64) {
+        if let Err(e) = self.try_step(params, grads, lr) {
+            panic!("DistMuon::step failed: {e}");
+        }
+    }
+
+    /// Fault-tolerant step. On `Err`, parameters, momentum (replicated
+    /// shards or ZeRO-1 slices), AdamW moments and the step counter are
+    /// bit-identical to their pre-call values: every fallible phase reads
+    /// committed state and writes staging arenas only; the commit
+    /// (swap + apply) is infallible and runs after the last fallible
+    /// phase succeeded.
+    fn try_step(
+        &mut self,
+        params: &mut [Tensor],
+        grads: &[Tensor],
+        lr: f64,
+    ) -> Result<(), StepError> {
+        assert_eq!(params.len(), self.metas.len());
+        // Explicit arity check: with dp > 1 a short grads slice would
+        // otherwise silently zip-truncate against dp_acc and feed stale
+        // accumulator contents to the truncated params.
+        assert_eq!(grads.len(), self.metas.len());
+        self.attempts += 1;
+        let attempt = self.attempts;
+        // Guardrail before any phase runs: NaN/Inf gradients would
+        // poison every staging buffer and collective downstream.
+        if let Some(param) = robust::first_non_finite(grads) {
+            return Err(StepError::NonFiniteGrad { param });
+        }
+        let t_next = self.t + 1;
+        let full = self.cfg.period.is_full_step(t_next - 1);
+        let tp_before = self.tp_comm.stats().total_bytes();
+
+        let zero1 = self.sharding == StateSharding::Zero1;
+        let use_acc = self.mesh.dp > 1 || zero1;
+
+        // ---- Phase 0 (fallible): DP sync into staging (see `dp_sync`).
+        self.dp_sync(grads, attempt)?;
+
+        // What the TP phases consume: mean gradients (replicated),
+        // except matrix entries under ZeRO-1, which are the gathered
+        // *staged* momenta. The dp == 1 replicated fast path feeds the
+        // input grads through untouched. The phases borrow the synced
+        // inputs while also taking &mut self, so the accumulator array
+        // is moved into a local for the duration (an allocation-free
+        // move) and restored afterwards.
+        let acc_opt = if use_acc {
+            Some(std::mem::take(&mut self.dp_acc))
+        } else {
+            None
+        };
+        let result = {
+            let synced: &[Tensor] = match &acc_opt {
+                Some(a) => &a[0],
+                None => grads,
+            };
+            // ---- Phases 1-3 (fallible), with the paper-grounded
+            // degradation: under `escalate-full-orth`, a block step
+            // whose block Newton-Schulz diverges is retried as a full-
+            // orthogonalization step and committed with the full-step
+            // stepsize. The retry is safe because the failed attempt
+            // only wrote staging buffers the retry fully rewrites.
+            match self.run_tp(full, synced, attempt) {
+                Ok(()) => Ok(full),
+                Err(StepError::NsDiverged { .. })
+                    if !full
+                        && self.cfg.on_anomaly
+                            == AnomalyPolicy::EscalateFullOrth =>
+                {
+                    self.escalations += 1;
+                    self.run_tp(true, synced, attempt).map(|()| true)
+                }
+                Err(e) => Err(e),
+            }
+        };
+        if let Some(acc) = acc_opt {
+            self.dp_acc = acc;
+        }
+        let committed_full = result?;
+
+        // ---- Commit: infallible from here on. Staged momentum becomes
+        // authoritative by swap (bit-identical to having updated in
+        // place — `momentum_update_into_matches_in_place` pins the
+        // recurrence); then params and AdamW advance. This is the
+        // step-atomicity boundary.
+        std::mem::swap(&mut self.rank_momenta, &mut self.rank_momenta_next);
+        if zero1 {
+            std::mem::swap(&mut self.dp_momenta, &mut self.dp_momenta_next);
+        }
+        self.t = t_next;
+        let eta = if committed_full {
+            lr
+        } else {
+            lr * self.cfg.eta_block_ratio
+        };
+        let synced: &[Tensor] =
+            if use_acc { &self.dp_acc[0] } else { grads };
 
         // ---- Apply: matrix params take the assembled delta; everything
         // else is delegated to AdamW on the (replicated) leader.
@@ -661,6 +954,109 @@ impl Optimizer for DistMuon {
         }
         self.last_opt_bytes =
             self.tp_comm.stats().total_bytes() - tp_before;
+        Ok(())
+    }
+
+    /// Checkpoint as canonical full-matrix tensors, independent of the
+    /// mesh and sharding mode — a snapshot taken under ZeRO-1 on one
+    /// grid restores bit-identically onto a replicated coordinator on
+    /// another (shard/unshard/row-slice are exact memcpys).
+    fn snapshot(&self) -> Option<Snapshot> {
+        let mut snap = Snapshot::new(self.t);
+        for (ord, &pidx) in self.matrix_idx.iter().enumerate() {
+            let spec = self.specs[pidx].as_ref().unwrap();
+            let mut m_full = Tensor::zeros(&[spec.m, spec.n]);
+            match self.sharding {
+                StateSharding::Replicated => {
+                    unshard_from(spec, &mut m_full, |b| {
+                        &self.rank_momenta[b][ord]
+                    });
+                }
+                StateSharding::Zero1 => {
+                    // DP row slices are authoritative under ZeRO-1.
+                    for r in 0..self.mesh.dp {
+                        write_row_slice(
+                            &mut m_full,
+                            self.mesh.dp,
+                            r,
+                            &self.dp_momenta[r][ord],
+                        );
+                    }
+                }
+            }
+            snap.push(
+                format!("momentum.{}", self.metas[pidx].name),
+                m_full,
+            );
+        }
+        for (i, meta) in self.metas.iter().enumerate() {
+            if self.specs[i].is_some() {
+                continue;
+            }
+            let (m, v) = self.adam.moments(i);
+            snap.push(format!("adam.m.{}", meta.name), m.clone());
+            snap.push(format!("adam.v.{}", meta.name), v.clone());
+        }
+        Some(snap)
+    }
+
+    /// Restore from [`DistMuon::snapshot`]'s canonical layout,
+    /// redistributing onto THIS coordinator's mesh/sharding (elastic
+    /// restore). Validates every entry before touching any state so a
+    /// truncated or mismatched snapshot cannot leave a half-restore.
+    fn restore(&mut self, snap: &Snapshot) -> anyhow::Result<()> {
+        for (i, meta) in self.metas.iter().enumerate() {
+            if self.specs[i].is_some() {
+                snap.expect(
+                    &format!("momentum.{}", meta.name),
+                    &meta.shape,
+                )?;
+            } else {
+                snap.expect(&format!("adam.m.{}", meta.name), &meta.shape)?;
+                snap.expect(&format!("adam.v.{}", meta.name), &meta.shape)?;
+            }
+        }
+        for (ord, &pidx) in self.matrix_idx.iter().enumerate() {
+            let spec = self.specs[pidx].as_ref().unwrap();
+            let nb = spec.num_blocks();
+            let name = format!("momentum.{}", self.metas[pidx].name);
+            let m_full = snap.get(&name).unwrap();
+            for j in 0..self.mesh.tp {
+                // Replica ranks (clamped grids) hold the last block,
+                // matching the steady-state invariant phase 1.5 keeps.
+                shard_into(
+                    m_full,
+                    spec,
+                    j.min(nb - 1),
+                    &mut self.rank_momenta[j][ord],
+                );
+            }
+            if self.sharding == StateSharding::Zero1 {
+                for r in 0..self.mesh.dp {
+                    row_slice_into(
+                        m_full,
+                        self.mesh.dp,
+                        r,
+                        &mut self.dp_momenta[r][ord],
+                    );
+                }
+            }
+        }
+        for (i, meta) in self.metas.iter().enumerate() {
+            if self.specs[i].is_some() {
+                continue;
+            }
+            let m =
+                snap.get(&format!("adam.m.{}", meta.name)).unwrap().clone();
+            let v =
+                snap.get(&format!("adam.v.{}", meta.name)).unwrap().clone();
+            self.adam.set_moments(i, m, v);
+        }
+        self.t = snap.step;
+        // Resumed runs key fault injection off the same attempt space a
+        // never-stopped run would be in.
+        self.attempts = snap.step;
+        Ok(())
     }
 
     fn name(&self) -> String {

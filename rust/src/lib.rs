@@ -23,6 +23,7 @@
 #![allow(clippy::needless_range_loop)]
 
 pub mod bench_util;
+pub mod checkpoint;
 pub mod comm;
 pub mod config;
 pub mod coordinator;
@@ -33,6 +34,7 @@ pub mod mesh;
 pub mod metrics;
 pub mod model;
 pub mod optim;
+pub mod robust;
 pub mod runtime;
 pub mod shard;
 pub mod tensor;

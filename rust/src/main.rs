@@ -33,10 +33,22 @@ const USAGE: &str = "usage: muonbp <train|throughput|info> [--key value ...]
                  --state-sharding replicated|zero1 (ZeRO-1 momentum rows)
                  --eta-block-ratio F|theory (theory = 1/sqrt(rc), paper §3.2)
                  --schedule constant|cosine|wsd --seed N --out results/run.csv
-                 --config path.json (JSON file, CLI overrides win)";
+                 --config path.json (JSON file, CLI overrides win)
+  fault tolerance:
+                 --on-anomaly abort|skip-step|escalate-full-orth
+                 --checkpoint-dir DIR --checkpoint-every N --resume
+                 --fault-nan-step N (inject NaN grads at trainer step N)
+                 --fault-panic A:R:P (panic rank R, phase P, attempt A)
+                 --fault-straggle A:R:MS (delay rank R by MS ms, attempt A)";
 
 fn main() -> Result<()> {
     let args = Args::from_env()?;
+    // Surface a bad MUONBP_POOL_THREADS as a configuration error up
+    // front, instead of a panic from whichever code path first touches
+    // the global pool.
+    if let Err(e) = muonbp::runtime::pool::Pool::try_global() {
+        anyhow::bail!("{e}");
+    }
     match args.positional.first().map(|s| s.as_str()) {
         Some("train") => cmd_train(&args),
         Some("throughput") => cmd_throughput(),
@@ -84,12 +96,17 @@ fn cmd_train(args: &Args) -> Result<()> {
     let mut opt: Box<dyn Optimizer> = if cfg.distributed {
         let ns = Arc::new(NsEngine::new(Some(Arc::clone(&runtime))));
         let eta_ratio = cfg.effective_eta_block_ratio();
+        let on_anomaly = cfg.on_anomaly;
         Box::new(
             DistMuonBuilder::new(Mesh::new(cfg.dp, cfg.tp)?, period)
                 .layout(cfg.layout)
                 .state_sharding(cfg.state_sharding)
                 .ns_engine(ns)
-                .cfg(|c| c.eta_block_ratio = eta_ratio)
+                .fault_plan(cfg.fault)
+                .cfg(move |c| {
+                    c.eta_block_ratio = eta_ratio;
+                    c.on_anomaly = on_anomaly;
+                })
                 .build(&metas),
         )
     } else {
@@ -111,6 +128,7 @@ fn cmd_train(args: &Args) -> Result<()> {
                 let mut mcfg = MuonCfg::default_with(period, cfg.tp);
                 mcfg.layout = cfg.layout;
                 mcfg.eta_block_ratio = cfg.effective_eta_block_ratio();
+                mcfg.on_anomaly = cfg.on_anomaly;
                 Box::new(Muon::new(&metas, mcfg))
             }
             _ => by_name(&cfg.optimizer, &metas, cfg.tp)?,
@@ -126,8 +144,19 @@ fn cmd_train(args: &Args) -> Result<()> {
         grad_clip: 1.0,
         seed: cfg.seed,
         log_param_norm: true,
+        on_anomaly: cfg.on_anomaly,
+        fault: cfg.fault,
+        checkpoint_dir: cfg.checkpoint_dir.clone(),
+        checkpoint_every: cfg.checkpoint_every,
+        resume: cfg.resume,
     };
     let rec = trainer.run(opt.as_mut(), &tcfg)?;
+    if let Some(s) = rec.get("skipped_steps") {
+        let n = s.last().unwrap_or(0.0);
+        if n > 0.0 {
+            println!("skipped {n} step(s) under --on-anomaly skip policy");
+        }
+    }
 
     let train = rec.get("train_loss").unwrap();
     let val = rec.get("val_loss");

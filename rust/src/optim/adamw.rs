@@ -3,6 +3,7 @@
 //! Decoupled weight decay, bias-corrected moments. This is also the inner
 //! optimizer the Muon family delegates embeddings / 1-D params to (§4.1).
 
+use crate::checkpoint::Snapshot;
 use crate::optim::{Optimizer, ParamMeta};
 use crate::tensor::Tensor;
 
@@ -38,6 +39,21 @@ impl AdamW {
             weight_decay,
             t: 0,
         }
+    }
+
+    /// First/second moment of param `idx` (checkpointing — the Muon
+    /// family serializes the moments of its AdamW-delegated params).
+    pub fn moments(&self, idx: usize) -> (&Tensor, &Tensor) {
+        (&self.m[idx], &self.v[idx])
+    }
+
+    /// Overwrite the moments of param `idx` from a checkpoint. Panics on
+    /// a shape mismatch — callers validate via `Snapshot::expect` first.
+    pub fn set_moments(&mut self, idx: usize, m: Tensor, v: Tensor) {
+        assert_eq!(m.shape(), self.m[idx].shape());
+        assert_eq!(v.shape(), self.v[idx].shape());
+        self.m[idx] = m;
+        self.v[idx] = v;
     }
 
     /// Update a single parameter by index (used by the Muon family to run
@@ -85,6 +101,30 @@ impl Optimizer for AdamW {
 
     fn name(&self) -> String {
         "AdamW".into()
+    }
+
+    fn snapshot(&self) -> Option<Snapshot> {
+        // AdamW has no param names of its own; index-based entry names
+        // are stable because metas order is fixed per run config.
+        let mut snap = Snapshot::new(self.t);
+        for (i, (m, v)) in self.m.iter().zip(&self.v).enumerate() {
+            snap.push(format!("adam.m.{i}"), m.clone());
+            snap.push(format!("adam.v.{i}"), v.clone());
+        }
+        Some(snap)
+    }
+
+    fn restore(&mut self, snap: &Snapshot) -> anyhow::Result<()> {
+        for (i, m) in self.m.iter().enumerate() {
+            snap.expect(&format!("adam.m.{i}"), m.shape())?;
+            snap.expect(&format!("adam.v.{i}"), m.shape())?;
+        }
+        for i in 0..self.m.len() {
+            self.m[i] = snap.get(&format!("adam.m.{i}")).unwrap().clone();
+            self.v[i] = snap.get(&format!("adam.v.{i}")).unwrap().clone();
+        }
+        self.t = snap.step;
+        Ok(())
     }
 }
 

@@ -15,6 +15,8 @@ pub mod schedule;
 pub mod scaling;
 pub mod sgdm;
 
+use crate::checkpoint::Snapshot;
+use crate::robust::StepError;
 use crate::tensor::Tensor;
 
 pub use adamw::AdamW;
@@ -74,6 +76,34 @@ pub trait Optimizer: Send {
     /// Muon variants report what the distributed run would move).
     fn last_comm_bytes(&self) -> u64 {
         0
+    }
+
+    /// Fault-tolerant step: on `Err` the optimizer guarantees that neither
+    /// `params` nor any internal state (momentum, moments, step counter)
+    /// changed — the caller may skip the step or retry. Optimizers without
+    /// guardrails inherit the infallible `step`.
+    fn try_step(
+        &mut self,
+        params: &mut [Tensor],
+        grads: &[Tensor],
+        lr: f64,
+    ) -> Result<(), StepError> {
+        self.step(params, grads, lr);
+        Ok(())
+    }
+
+    /// Serialize the optimizer state (momentum etc.) for checkpointing, as
+    /// canonical full-matrix tensors regardless of internal sharding.
+    /// `None` means the optimizer does not support checkpointing.
+    fn snapshot(&self) -> Option<Snapshot> {
+        None
+    }
+
+    /// Restore state captured by [`Optimizer::snapshot`]. The default
+    /// rejects restores so stateless/unsupported optimizers fail loudly
+    /// rather than silently resuming with fresh state.
+    fn restore(&mut self, _snap: &Snapshot) -> anyhow::Result<()> {
+        anyhow::bail!("{}: checkpoint restore not supported", self.name())
     }
 }
 

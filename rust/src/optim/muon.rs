@@ -24,10 +24,12 @@
 
 use std::sync::Arc;
 
+use crate::checkpoint::Snapshot;
 use crate::linalg::gemm;
 use crate::linalg::newton_schulz::{ns_flops, NsCoeffs, NsWorkspace};
 use crate::mesh::Layout;
 use crate::optim::adamw::AdamW;
+use crate::robust::AnomalyPolicy;
 use crate::optim::scaling::rms_match_scale;
 use crate::optim::{Optimizer, ParamKind, ParamMeta};
 use crate::runtime::pool::{Pool, SendPtr};
@@ -78,6 +80,31 @@ pub fn momentum_update(momentum: &mut Tensor, mu: f64, grad: &Tensor) {
     momentum.scale_add(mu as f32, 1.0, grad);
 }
 
+/// [`momentum_update`] into a *separate* staging buffer:
+/// `next = μ·cur + grad`, leaving `cur` untouched. This is the
+/// fault-tolerant coordinator's form of the recurrence — a failed step
+/// discards `next` and the authoritative momentum never changed. Each
+/// element computes the exact expression `scale_add(μ, 1, grad)` uses
+/// (`alpha·a + beta·b` in f32), so committing `next` by swap is
+/// bit-identical to having updated in place; pinned by
+/// `momentum_update_into_matches_in_place`.
+pub fn momentum_update_into(
+    next: &mut Tensor,
+    cur: &Tensor,
+    mu: f64,
+    grad: &Tensor,
+) {
+    assert_eq!(next.shape(), cur.shape());
+    assert_eq!(cur.shape(), grad.shape());
+    let alpha = mu as f32;
+    let beta = 1.0f32;
+    for ((n, c), g) in
+        next.data_mut().iter_mut().zip(cur.data()).zip(grad.data())
+    {
+        *n = alpha * *c + beta * *g;
+    }
+}
+
 /// Muon-family hyperparameters.
 #[derive(Clone)]
 pub struct MuonCfg {
@@ -102,6 +129,10 @@ pub struct MuonCfg {
     pub layout: Layout,
     /// TP degree (block count along the layout's split dims).
     pub tp: usize,
+    /// What the fault-tolerant step does when a numeric guardrail trips
+    /// (non-finite gradient, NS divergence). Honored by the distributed
+    /// coordinator's `try_step`; the infallible `step` path aborts.
+    pub on_anomaly: AnomalyPolicy,
 }
 
 impl MuonCfg {
@@ -178,6 +209,7 @@ impl MuonCfg {
             adam_lr_ratio: 1.0,
             layout: Layout::TpColumn,
             tp,
+            on_anomaly: AnomalyPolicy::default(),
         }
     }
 }
@@ -616,6 +648,57 @@ impl Optimizer for Muon {
     fn last_comm_bytes(&self) -> u64 {
         self.last_comm
     }
+
+    fn snapshot(&self) -> Option<Snapshot> {
+        let mut snap = Snapshot::new(self.t);
+        for (i, meta) in self.metas.iter().enumerate() {
+            if self.specs[i].is_some() {
+                snap.push(
+                    format!("momentum.{}", meta.name),
+                    self.momenta[i].clone(),
+                );
+            } else {
+                let (m, v) = self.adam.moments(i);
+                snap.push(format!("adam.m.{}", meta.name), m.clone());
+                snap.push(format!("adam.v.{}", meta.name), v.clone());
+            }
+        }
+        Some(snap)
+    }
+
+    fn restore(&mut self, snap: &Snapshot) -> anyhow::Result<()> {
+        // Validate every entry before touching any state: a restore that
+        // fails halfway would corrupt exactly the state checkpointing is
+        // meant to protect.
+        for (i, meta) in self.metas.iter().enumerate() {
+            if self.specs[i].is_some() {
+                snap.expect(&format!("momentum.{}", meta.name), &meta.shape)?;
+            } else {
+                snap.expect(&format!("adam.m.{}", meta.name), &meta.shape)?;
+                snap.expect(&format!("adam.v.{}", meta.name), &meta.shape)?;
+            }
+        }
+        for (i, meta) in self.metas.iter().enumerate() {
+            if self.specs[i].is_some() {
+                self.momenta[i] = snap
+                    .get(&format!("momentum.{}", meta.name))
+                    .unwrap()
+                    .clone();
+            } else {
+                let m = snap
+                    .get(&format!("adam.m.{}", meta.name))
+                    .unwrap()
+                    .clone();
+                let v = snap
+                    .get(&format!("adam.v.{}", meta.name))
+                    .unwrap()
+                    .clone();
+                self.adam.set_moments(i, m, v);
+            }
+        }
+        self.t = snap.step;
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -693,6 +776,55 @@ mod tests {
             }
             assert_eq!(reassembled, full, "step {step} drifted");
         }
+    }
+
+    #[test]
+    fn momentum_update_into_matches_in_place() {
+        // The staging form must be bit-identical to the in-place
+        // recurrence — the coordinator commits staged momentum by swap, so
+        // any drift here would break the fault-free equivalence contract.
+        let mut rng = Rng::new(77);
+        let mut in_place = Tensor::randn(&[7, 5], 1.0, &mut rng);
+        let mut cur = in_place.clone();
+        let mut next = Tensor::zeros(&[7, 5]);
+        for step in 0..4 {
+            let g = Tensor::randn(&[7, 5], 1.0, &mut rng);
+            momentum_update(&mut in_place, 0.95, &g);
+            momentum_update_into(&mut next, &cur, 0.95, &g);
+            std::mem::swap(&mut cur, &mut next);
+            assert_eq!(cur, in_place, "step {step} drifted");
+        }
+    }
+
+    #[test]
+    fn snapshot_restore_resumes_bit_identically() {
+        // Restoring into a *fresh* optimizer must continue exactly as if
+        // the run never stopped — momentum, AdamW moments and the step
+        // counter (which gates the full/block period) all round-trip.
+        let quad = Quad::new(23);
+        let mut a = Muon::block_periodic(&quad.metas, 4, 3);
+        let mut pa = quad.init(6);
+        for _ in 0..4 {
+            let g = quad.grads(&pa);
+            a.step(&mut pa, &g, 0.02);
+        }
+        let snap = a.snapshot().unwrap();
+        assert_eq!(snap.step, 4);
+        let mut b = Muon::block_periodic(&quad.metas, 4, 3);
+        b.restore(&snap).unwrap();
+        let mut pb = pa.clone();
+        for step in 0..5 {
+            let ga = quad.grads(&pa);
+            a.step(&mut pa, &ga, 0.02);
+            let gb = quad.grads(&pb);
+            b.step(&mut pb, &gb, 0.02);
+            assert_eq!(pa, pb, "step {step} after restore drifted");
+        }
+        // A snapshot with a wrong shape is rejected before any state moves.
+        let mut bad = a.snapshot().unwrap();
+        bad.entries.retain(|(n, _)| n != "momentum.w1");
+        bad.push("momentum.w1", Tensor::zeros(&[2, 2]));
+        assert!(b.restore(&bad).is_err());
     }
 
     #[test]

@@ -1,0 +1,364 @@
+//! Fault-tolerance primitives: structured step failures, anomaly
+//! policies, deterministic fault injection, and numeric guardrails.
+//!
+//! The paper's stability argument (§3: periodic full orthogonalization
+//! exists "to maintain training stability at scale") presumes the step
+//! itself survives long enough to reach the next full step. This module
+//! supplies the failure model the rest of the crate threads through:
+//!
+//! - [`StepError`] — what one distributed optimizer step can report
+//!   instead of panicking or deadlocking. `Copy` on purpose: the
+//!   coordinator records it through a preallocated slot on the
+//!   zero-allocation steady-state path.
+//! - [`AnomalyPolicy`] — what the caller does about it
+//!   (`--on-anomaly {abort,skip-step,escalate-full-orth}`). The
+//!   escalation path is the paper-grounded degradation: a blockwise step
+//!   whose block Newton–Schulz misbehaves is retried as a
+//!   full-orthogonalization step with the full-step stepsize.
+//! - [`FaultPlan`] — deterministic fault injection (NaN gradients at a
+//!   chosen step, a rank panicking in a chosen phase, a straggler
+//!   delay), so every recovery path is exercised by tests rather than
+//!   trusted.
+//! - Guardrail helpers — non-finite gradient detection and the
+//!   NS-divergence bound check on orthogonalized output.
+
+use std::fmt;
+
+use anyhow::{bail, Result};
+
+use crate::tensor::Tensor;
+
+/// Structured failure from one distributed optimizer step. The step's
+/// atomicity contract guarantees that whenever `try_step` returns one of
+/// these, parameters and momentum are bit-identical to their pre-step
+/// values.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum StepError {
+    /// A gradient tensor contained NaN/Inf (detected before any state
+    /// was touched).
+    NonFiniteGrad { param: usize },
+    /// The Newton–Schulz output for this parameter violated the
+    /// spectral-norm-derived Frobenius bound (or went non-finite).
+    NsDiverged { param: usize, norm: f32, bound: f32 },
+    /// A rank panicked in the given phase of the step schedule
+    /// (0 = DP grad sync, 1 = TP fanout, 2 = leader full-orth,
+    /// 3 = reassembly).
+    RankPanicked { rank: usize, phase: u8 },
+    /// This rank was released from a poisoned barrier: a *peer* failed
+    /// mid-collective and poisoned the phase barrier to free all
+    /// waiters.
+    Poisoned,
+}
+
+impl fmt::Display for StepError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match *self {
+            StepError::NonFiniteGrad { param } => {
+                write!(f, "non-finite gradient in param {param}")
+            }
+            StepError::NsDiverged { param, norm, bound } => write!(
+                f,
+                "newton-schulz diverged on param {param}: \
+                 ||U||_F = {norm} exceeds bound {bound}"
+            ),
+            StepError::RankPanicked { rank, phase } => {
+                write!(f, "rank {rank} panicked in phase {phase}")
+            }
+            StepError::Poisoned => {
+                write!(f, "released from a poisoned barrier (a peer failed)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for StepError {}
+
+/// What to do when a numeric guardrail trips during training.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum AnomalyPolicy {
+    /// Stop the run with a structured error (no state corrupted).
+    #[default]
+    Abort,
+    /// Drop the batch: leave params/momentum untouched, count the skip,
+    /// continue with the next batch.
+    SkipStep,
+    /// Paper-grounded degradation: retry a misbehaving *block* step as a
+    /// full-orthogonalization step with the full-step stepsize; other
+    /// failures fall back to skip-step semantics.
+    EscalateFullOrth,
+}
+
+impl AnomalyPolicy {
+    pub fn parse(s: &str) -> Result<AnomalyPolicy> {
+        Ok(match s {
+            "abort" => AnomalyPolicy::Abort,
+            "skip-step" => AnomalyPolicy::SkipStep,
+            "escalate-full-orth" => AnomalyPolicy::EscalateFullOrth,
+            other => bail!(
+                "unknown anomaly policy '{other}' \
+                 (want abort|skip-step|escalate-full-orth)"
+            ),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            AnomalyPolicy::Abort => "abort",
+            AnomalyPolicy::SkipStep => "skip-step",
+            AnomalyPolicy::EscalateFullOrth => "escalate-full-orth",
+        }
+    }
+}
+
+/// Panic a chosen rank in a chosen phase of a chosen optimizer attempt.
+/// `attempt` is 1-based: the k-th `try_step` call (failed attempts
+/// count, so an injected fault fires exactly once).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PhasePanic {
+    pub attempt: u64,
+    pub rank: usize,
+    pub phase: u8,
+}
+
+impl PhasePanic {
+    /// Parse `"attempt:rank:phase"` (e.g. `--fault-panic 3:1:0`).
+    pub fn parse(s: &str) -> Result<PhasePanic> {
+        let parts: Vec<&str> = s.split(':').collect();
+        let [a, r, p] = parts[..] else {
+            bail!("bad fault spec '{s}' (want attempt:rank:phase)");
+        };
+        let panic = PhasePanic {
+            attempt: a.parse()?,
+            rank: r.parse()?,
+            phase: p.parse()?,
+        };
+        if panic.phase > 3 {
+            bail!("bad fault phase {} (schedule has phases 0..=3)", panic.phase);
+        }
+        Ok(panic)
+    }
+}
+
+/// Delay a chosen rank by `delay_ms` at the start of phase 0 of a chosen
+/// attempt (a straggler, not a failure: the step must still be
+/// bit-identical to an undelayed run).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Straggler {
+    pub attempt: u64,
+    pub rank: usize,
+    pub delay_ms: u64,
+}
+
+impl Straggler {
+    /// Parse `"attempt:rank:delay_ms"` (e.g. `--fault-straggle 2:1:50`).
+    pub fn parse(s: &str) -> Result<Straggler> {
+        let parts: Vec<&str> = s.split(':').collect();
+        let [a, r, d] = parts[..] else {
+            bail!("bad straggler spec '{s}' (want attempt:rank:delay_ms)");
+        };
+        Ok(Straggler {
+            attempt: a.parse()?,
+            rank: r.parse()?,
+            delay_ms: d.parse()?,
+        })
+    }
+}
+
+/// Deterministic fault injection plan. Default is inert; every injected
+/// fault is keyed so it fires exactly once, making the recovery paths
+/// reproducible in tests and from the CLI.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct FaultPlan {
+    /// Inject NaN into the gradients at this 0-based *trainer* step.
+    pub nan_grad_step: Option<u64>,
+    /// Panic a rank in a phase of a 1-based optimizer attempt.
+    pub panic_at: Option<PhasePanic>,
+    /// Delay a rank in phase 0 of a 1-based optimizer attempt.
+    pub straggler: Option<Straggler>,
+}
+
+impl FaultPlan {
+    pub fn is_inert(&self) -> bool {
+        self.nan_grad_step.is_none()
+            && self.panic_at.is_none()
+            && self.straggler.is_none()
+    }
+
+    /// Should the trainer corrupt this step's gradients?
+    pub fn maybe_nan(&self, step: u64) -> bool {
+        self.nan_grad_step == Some(step)
+    }
+
+    /// Called from inside the step schedule; panics iff this
+    /// (attempt, rank, phase) matches the plan.
+    pub fn maybe_panic(&self, attempt: u64, rank: usize, phase: u8) {
+        if let Some(p) = self.panic_at {
+            if p.attempt == attempt && p.rank == rank && p.phase == phase {
+                panic!(
+                    "injected fault: rank {rank} phase {phase} \
+                     attempt {attempt}"
+                );
+            }
+        }
+    }
+
+    /// Called at the start of phase 0; sleeps iff this (attempt, rank)
+    /// matches the plan.
+    pub fn maybe_straggle(&self, attempt: u64, rank: usize) {
+        if let Some(s) = self.straggler {
+            if s.attempt == attempt && s.rank == rank {
+                std::thread::sleep(std::time::Duration::from_millis(
+                    s.delay_ms,
+                ));
+            }
+        }
+    }
+}
+
+/// Index of the first gradient tensor with a non-finite entry, if any
+/// (f64-accumulated Frobenius norm, so NaN/Inf anywhere propagates).
+pub fn first_non_finite(grads: &[Tensor]) -> Option<usize> {
+    grads.iter().position(|g| !g.frobenius().is_finite())
+}
+
+/// Corrupt the gradients in place (the `nan_grad_step` injection): one
+/// NaN in the first non-empty tensor is enough to trip every downstream
+/// guardrail.
+pub fn inject_nan(grads: &mut [Tensor]) {
+    for g in grads.iter_mut() {
+        if g.numel() > 0 {
+            g.data_mut()[0] = f32::NAN;
+            return;
+        }
+    }
+}
+
+/// Frobenius-norm bound for a *healthy* Newton–Schulz output of shape
+/// (m, n): the Jordan-coefficient iteration keeps singular values in a
+/// band below ~1.4 (pinned by `jordan_coeffs_band_property`), so
+/// ||U||_F <= sigma_max * sqrt(min(m, n)). The factor 2.0 leaves margin
+/// over the band so only genuine divergence (blown-up or non-finite
+/// iterates) trips the check.
+pub fn ns_divergence_bound(m: usize, n: usize) -> f32 {
+    2.0 * (m.min(n).max(1) as f32).sqrt()
+}
+
+/// NS-divergence guardrail on an orthogonalized output `u`, with the
+/// caller's post-NS scaling (RMS matching) folded into the bound.
+/// Returns `Err((norm, bound))` when the output is non-finite or
+/// exceeds the scaled bound.
+pub fn check_ns_output(u: &Tensor, scale: f32) -> std::result::Result<(), (f32, f32)> {
+    let bound = ns_divergence_bound(u.m(), u.n()) * scale.abs();
+    let norm = u.frobenius();
+    if !norm.is_finite() || norm > bound {
+        Err((norm, bound))
+    } else {
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::utils::rng::Rng;
+
+    #[test]
+    fn step_error_display_and_copy() {
+        let e = StepError::NsDiverged { param: 3, norm: 9.0, bound: 4.0 };
+        let copy = e; // Copy: usable through a preallocated slot
+        assert_eq!(e, copy);
+        assert!(format!("{e}").contains("param 3"));
+        assert!(format!("{}", StepError::Poisoned).contains("poisoned"));
+        assert!(format!(
+            "{}",
+            StepError::RankPanicked { rank: 2, phase: 1 }
+        )
+        .contains("rank 2"));
+    }
+
+    #[test]
+    fn anomaly_policy_parse_roundtrip() {
+        for p in [
+            AnomalyPolicy::Abort,
+            AnomalyPolicy::SkipStep,
+            AnomalyPolicy::EscalateFullOrth,
+        ] {
+            assert_eq!(AnomalyPolicy::parse(p.name()).unwrap(), p);
+        }
+        assert!(AnomalyPolicy::parse("retry-harder").is_err());
+        assert_eq!(AnomalyPolicy::default(), AnomalyPolicy::Abort);
+    }
+
+    #[test]
+    fn fault_plan_parse_and_keys() {
+        let p = PhasePanic::parse("3:1:2").unwrap();
+        assert_eq!(p, PhasePanic { attempt: 3, rank: 1, phase: 2 });
+        assert!(PhasePanic::parse("3:1").is_err());
+        assert!(PhasePanic::parse("3:1:9").is_err());
+        assert!(PhasePanic::parse("x:1:2").is_err());
+        let s = Straggler::parse("2:0:15").unwrap();
+        assert_eq!(s, Straggler { attempt: 2, rank: 0, delay_ms: 15 });
+
+        let plan = FaultPlan {
+            nan_grad_step: Some(4),
+            panic_at: Some(p),
+            straggler: Some(s),
+        };
+        assert!(!plan.is_inert());
+        assert!(FaultPlan::default().is_inert());
+        assert!(plan.maybe_nan(4));
+        assert!(!plan.maybe_nan(3));
+        // Non-matching keys are no-ops (would panic/sleep otherwise).
+        plan.maybe_panic(3, 1, 1);
+        plan.maybe_panic(2, 1, 2);
+        plan.maybe_straggle(2, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "injected fault")]
+    fn fault_plan_panics_on_exact_match() {
+        let plan = FaultPlan {
+            panic_at: Some(PhasePanic { attempt: 1, rank: 0, phase: 0 }),
+            ..Default::default()
+        };
+        plan.maybe_panic(1, 0, 0);
+    }
+
+    #[test]
+    fn non_finite_detection_and_injection() {
+        let mut grads =
+            vec![Tensor::zeros(&[2, 2]), Tensor::zeros(&[3])];
+        assert_eq!(first_non_finite(&grads), None);
+        inject_nan(&mut grads);
+        assert_eq!(first_non_finite(&grads), Some(0));
+        grads[0] = Tensor::zeros(&[2, 2]);
+        grads[1].data_mut()[1] = f32::INFINITY;
+        assert_eq!(first_non_finite(&grads), Some(1));
+    }
+
+    #[test]
+    fn ns_bound_accepts_healthy_rejects_diverged() {
+        // A healthy NS output has singular values <= ~1.4; an orthonormal
+        // matrix (sigma = 1) sits well inside the bound.
+        let mut rng = Rng::new(7);
+        let u = crate::linalg::newton_schulz::newton_schulz(
+            &Tensor::randn(&[12, 6], 1.0, &mut rng),
+            5,
+            crate::linalg::newton_schulz::NsCoeffs::jordan(),
+        );
+        assert!(check_ns_output(&u, 1.0).is_ok());
+        // The caller's RMS scaling is folded into the bound.
+        let mut scaled = u.clone();
+        scaled.scale(3.0);
+        assert!(check_ns_output(&scaled, 3.0).is_ok());
+        assert!(check_ns_output(&scaled, 1.0).is_err());
+        // Blow-up and non-finite outputs both trip it.
+        let mut big = Tensor::zeros(&[12, 6]);
+        big.add_scalar(10.0);
+        assert!(check_ns_output(&big, 1.0).is_err());
+        let mut nan = Tensor::zeros(&[12, 6]);
+        nan.data_mut()[0] = f32::NAN;
+        let (norm, _) = check_ns_output(&nan, 1.0).unwrap_err();
+        assert!(!norm.is_finite());
+    }
+}

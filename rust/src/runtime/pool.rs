@@ -229,6 +229,52 @@ pub struct Pool {
 
 static GLOBAL: OnceLock<Pool> = OnceLock::new();
 
+/// Bad `MUONBP_POOL_THREADS` configuration: carries the offending value so
+/// the launcher can report exactly what the operator set, instead of the
+/// `panic!` this used to be.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PoolConfigError {
+    /// The raw value (lossily decoded when not valid unicode).
+    pub value: String,
+    pub reason: String,
+}
+
+impl std::fmt::Display for PoolConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "MUONBP_POOL_THREADS={:?}: {} (want a thread count, e.g. 8; \
+             0 or 1 disables pooled parallelism)",
+            self.value, self.reason
+        )
+    }
+}
+
+impl std::error::Error for PoolConfigError {}
+
+/// Parse a raw `MUONBP_POOL_THREADS` lookup result: `Ok(None)` when the
+/// variable is unset (use the per-core default), `Ok(Some(n))` for an
+/// explicit pin, `Err` — with the offending value — when it is set but
+/// unreadable or not a number.
+fn parse_pool_threads(
+    raw: Result<String, std::env::VarError>,
+) -> Result<Option<usize>, PoolConfigError> {
+    match raw {
+        Ok(v) => match v.trim().parse::<usize>() {
+            Ok(n) => Ok(Some(n)),
+            Err(e) => Err(PoolConfigError {
+                value: v,
+                reason: format!("not a thread count ({e})"),
+            }),
+        },
+        Err(std::env::VarError::NotPresent) => Ok(None),
+        Err(std::env::VarError::NotUnicode(os)) => Err(PoolConfigError {
+            value: os.to_string_lossy().into_owned(),
+            reason: "not valid unicode".into(),
+        }),
+    }
+}
+
 impl Pool {
     /// Pool with `workers` persistent threads (fewer if spawning fails);
     /// may grow on demand for rendezvous fan-outs.
@@ -263,25 +309,36 @@ impl Pool {
     /// pins the size instead (`0` or `1` disables pooled parallelism —
     /// every fan-out then runs inline or on throwaway scoped threads,
     /// still bit-identical — and a pinned pool never grows).
+    ///
+    /// A malformed pin panics here; launchers should preflight with
+    /// [`Pool::try_global`] to turn that into a reportable configuration
+    /// error before any hot path runs.
     pub fn global() -> &'static Pool {
-        GLOBAL.get_or_init(|| match std::env::var("MUONBP_POOL_THREADS") {
-            // A pin the operator set must be honored or rejected loudly —
-            // silently falling back to a growable per-core pool would
-            // re-enable exactly the parallelism the pin disables.
-            Ok(v) => match v.trim().parse::<usize>() {
-                Ok(n) => Pool::build(n, false),
-                Err(_) => panic!(
-                    "MUONBP_POOL_THREADS must be a thread count, got '{v}'"
-                ),
-            },
-            Err(std::env::VarError::NotPresent) => Pool::build(
+        Pool::try_global().unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// [`Pool::global`] that surfaces a bad `MUONBP_POOL_THREADS` as a
+    /// structured [`PoolConfigError`] (with the offending value) instead
+    /// of panicking. The env var is parsed *before* the pool is
+    /// instantiated, so a rejected configuration leaves no half-built
+    /// global behind.
+    pub fn try_global() -> Result<&'static Pool, PoolConfigError> {
+        if let Some(pool) = GLOBAL.get() {
+            return Ok(pool);
+        }
+        // A pin the operator set must be honored or rejected loudly —
+        // silently falling back to a growable per-core pool would
+        // re-enable exactly the parallelism the pin disables.
+        let pinned = parse_pool_threads(std::env::var("MUONBP_POOL_THREADS"))?;
+        Ok(GLOBAL.get_or_init(|| match pinned {
+            Some(n) => Pool::build(n, false),
+            None => Pool::build(
                 thread::available_parallelism()
                     .map(|n| n.get())
                     .unwrap_or(1),
                 true,
             ),
-            Err(e) => panic!("MUONBP_POOL_THREADS unreadable: {e}"),
-        })
+        }))
     }
 
     /// Number of live workers.
@@ -643,6 +700,40 @@ mod tests {
         });
         drop(pool); // must not hang or leak panics
         assert_eq!(out, vec![1; 4]);
+    }
+
+    #[test]
+    fn parse_pool_threads_accepts_counts_and_absence() {
+        assert_eq!(parse_pool_threads(Ok("8".into())), Ok(Some(8)));
+        assert_eq!(parse_pool_threads(Ok(" 0 ".into())), Ok(Some(0)));
+        assert_eq!(
+            parse_pool_threads(Err(std::env::VarError::NotPresent)),
+            Ok(None)
+        );
+    }
+
+    #[test]
+    fn parse_pool_threads_reports_offending_value() {
+        let err = parse_pool_threads(Ok("lots".into())).unwrap_err();
+        assert_eq!(err.value, "lots");
+        let msg = err.to_string();
+        assert!(msg.contains("lots"), "message must name the value: {msg}");
+        assert!(msg.contains("MUONBP_POOL_THREADS"));
+
+        let err = parse_pool_threads(Ok("-3".into())).unwrap_err();
+        assert_eq!(err.value, "-3");
+
+        #[cfg(unix)]
+        {
+            use std::os::unix::ffi::OsStringExt;
+            let os = std::ffi::OsString::from_vec(vec![b'a', 0xff, b'b']);
+            let err = parse_pool_threads(Err(
+                std::env::VarError::NotUnicode(os),
+            ))
+            .unwrap_err();
+            assert!(err.reason.contains("unicode"));
+            assert!(err.value.contains('a') && err.value.contains('b'));
+        }
     }
 
     #[test]

@@ -3,15 +3,18 @@
 //! and metrics. Works with any `Optimizer`, including the distributed
 //! coordinator (`coordinator::DistMuon`).
 
+use std::path::Path;
 use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{Context, Result};
 
+use crate::checkpoint::{self, Snapshot};
 use crate::data::{synth_corpus, Batcher, CorpusCfg};
 use crate::metrics::Recorder;
 use crate::model::ModelState;
 use crate::optim::{clip_global_norm, Optimizer, ParamKind, Schedule};
+use crate::robust::{self, AnomalyPolicy, FaultPlan};
 use crate::runtime::{
     literal_to_tensor, tensor_to_literal, tokens_to_literal, Executable,
     Runtime,
@@ -30,6 +33,21 @@ pub struct TrainCfg {
     pub grad_clip: f64,
     pub seed: u64,
     pub log_param_norm: bool,
+    /// What to do when a numeric guardrail trips (non-finite gradients,
+    /// NS divergence, a failed distributed attempt). The old behavior
+    /// was a hard panic; `abort` keeps that failure *visible* but
+    /// structured, `skip-step` / `escalate-full-orth` degrade gracefully.
+    pub on_anomaly: AnomalyPolicy,
+    /// Deterministic fault injection (inert by default; tests / CLI).
+    pub fault: FaultPlan,
+    /// Checkpoint directory; empty string disables checkpointing.
+    pub checkpoint_dir: String,
+    /// Save every N steps (0 disables periodic saves; a final save still
+    /// happens when a directory is configured).
+    pub checkpoint_every: usize,
+    /// Resume from the newest valid checkpoint in `checkpoint_dir`
+    /// before training (no-op when none exists).
+    pub resume: bool,
 }
 
 impl Default for TrainCfg {
@@ -43,6 +61,11 @@ impl Default for TrainCfg {
             grad_clip: 1.0,
             seed: 0,
             log_param_norm: true,
+            on_anomaly: AnomalyPolicy::Abort,
+            fault: FaultPlan::default(),
+            checkpoint_dir: String::new(),
+            checkpoint_every: 0,
+            resume: false,
         }
     }
 }
@@ -130,8 +153,51 @@ impl Trainer {
         Ok(total / n.max(1) as f64)
     }
 
+    /// Capture a full training checkpoint: the optimizer snapshot plus
+    /// every parameter as `param.<name>`, stamped with the number of
+    /// *data* steps consumed (so a resumed run replays the batch stream
+    /// from exactly where it stopped).
+    fn capture(
+        &self,
+        opt: &dyn Optimizer,
+        data_steps: usize,
+    ) -> Result<Snapshot> {
+        let mut snap = opt.snapshot().with_context(|| {
+            format!("{}: optimizer does not support checkpointing", opt.name())
+        })?;
+        snap.step = data_steps as u64;
+        for (p, meta) in self.state.params.iter().zip(&self.state.metas) {
+            snap.push(format!("param.{}", meta.name), p.clone());
+        }
+        Ok(snap)
+    }
+
+    /// Restore params + optimizer state from `snap`; returns the data
+    /// step to resume from. Validates every param entry before writing
+    /// any (`Optimizer::restore` does the same for its own state).
+    fn restore(
+        &mut self,
+        opt: &mut dyn Optimizer,
+        snap: &Snapshot,
+    ) -> Result<usize> {
+        for meta in &self.state.metas {
+            snap.expect(&format!("param.{}", meta.name), &meta.shape)?;
+        }
+        opt.restore(snap)?;
+        for (p, meta) in
+            self.state.params.iter_mut().zip(&self.state.metas)
+        {
+            let src =
+                snap.get(&format!("param.{}", meta.name)).unwrap();
+            p.data_mut().copy_from_slice(src.data());
+        }
+        Ok(snap.step as usize)
+    }
+
     /// Run the full loop with the given optimizer; series recorded:
-    /// `train_loss`, `val_loss`, `param_norm`, `opt_comm_bytes`, `lr`.
+    /// `train_loss`, `val_loss`, `param_norm`, `opt_comm_bytes`, `lr`,
+    /// and `skipped_steps` (cumulative count of batches dropped by the
+    /// `skip-step` anomaly policy).
     pub fn run(
         &mut self,
         opt: &mut dyn Optimizer,
@@ -139,9 +205,47 @@ impl Trainer {
     ) -> Result<Recorder> {
         let mut rec = Recorder::new();
         let t0 = Instant::now();
-        for step in 0..cfg.steps {
+        let ckpt_on = !cfg.checkpoint_dir.is_empty();
+        let mut start_step = 0;
+        if cfg.resume && ckpt_on {
+            if let Some((path, snap)) =
+                checkpoint::latest_valid(&cfg.checkpoint_dir)?
+            {
+                start_step = self.restore(opt, &snap).with_context(|| {
+                    format!("restoring from {path:?}")
+                })?;
+                // Fast-forward the data stream: a resumed run must see
+                // the same batches a never-stopped run would.
+                for _ in 0..start_step {
+                    self.batcher.next_train();
+                }
+            }
+        }
+        let mut skipped: u64 = 0;
+        for step in start_step..cfg.steps {
             let tokens = self.batcher.next_train();
             let (loss, mut grads) = self.forward_backward(&tokens)?;
+            if cfg.fault.maybe_nan(step as u64) {
+                robust::inject_nan(&mut grads);
+            }
+            // Guardrail: what used to be a hard in-loop assertion is now
+            // the anomaly policy. The same check runs inside the
+            // fault-tolerant optimizers; this one catches non-finite
+            // gradients even for optimizers without guardrails.
+            if let Some(p) = robust::first_non_finite(&grads) {
+                if cfg.on_anomaly == AnomalyPolicy::Abort {
+                    anyhow::bail!(
+                        "step {step}: non-finite gradient in param {p} \
+                         ('{}'); rerun with --on-anomaly skip-step to \
+                         drop such batches",
+                        self.state.metas[p].name
+                    );
+                }
+                skipped += 1;
+                rec.push_timed("train_loss", step, loss, t0.elapsed().as_secs_f64());
+                rec.push("skipped_steps", step, skipped as f64);
+                continue;
+            }
             if cfg.grad_clip > 0.0 {
                 // Clip AdamW-scope grads (1-D + embeddings), as in §B.
                 let mut adam_grads: Vec<&mut Tensor> = grads
@@ -153,7 +257,20 @@ impl Trainer {
                 clip_global_norm(&mut adam_grads, cfg.grad_clip);
             }
             let lr = cfg.lr * cfg.schedule.at(step, cfg.steps);
-            opt.step(&mut self.state.params, &grads, lr);
+            if let Err(e) =
+                opt.try_step(&mut self.state.params, &grads, lr)
+            {
+                // try_step's atomicity contract: params/momentum are
+                // untouched here, so skipping is safe.
+                if cfg.on_anomaly == AnomalyPolicy::Abort {
+                    return Err(anyhow::Error::new(e)
+                        .context(format!("optimizer step {step} failed")));
+                }
+                skipped += 1;
+                rec.push_timed("train_loss", step, loss, t0.elapsed().as_secs_f64());
+                rec.push("skipped_steps", step, skipped as f64);
+                continue;
+            }
             let wall = t0.elapsed().as_secs_f64();
             rec.push_timed("train_loss", step, loss, wall);
             rec.push("lr", step, lr);
@@ -169,7 +286,19 @@ impl Trainer {
                 let wall = t0.elapsed().as_secs_f64();
                 rec.push_timed("val_loss", step, val, wall);
             }
+            if ckpt_on
+                && cfg.checkpoint_every > 0
+                && (step + 1) % cfg.checkpoint_every == 0
+            {
+                let snap = self.capture(opt, step + 1)?;
+                checkpoint::save(Path::new(&cfg.checkpoint_dir), &snap)?;
+            }
         }
+        if ckpt_on && cfg.steps > start_step {
+            let snap = self.capture(opt, cfg.steps)?;
+            checkpoint::save(Path::new(&cfg.checkpoint_dir), &snap)?;
+        }
+        rec.push("skipped_steps", cfg.steps.saturating_sub(1), skipped as f64);
         Ok(rec)
     }
 }

@@ -1,0 +1,291 @@
+//! Fault-tolerance acceptance suite (run by ci.sh): deterministic fault
+//! injection against the distributed coordinator.
+//!
+//! Pinned invariants:
+//!
+//! 1. **Step atomicity** — a rank panicking in ANY phase of the step
+//!    schedule (0 = DP sync, 1 = TP fanout, 2 = leader full-orth,
+//!    3 = reassembly) makes `try_step` return a structured
+//!    `StepError::RankPanicked` with parameters, momentum, AdamW moments
+//!    and the step counter bit-identical to their pre-call values — and
+//!    the next clean step matches a never-faulted run exactly.
+//! 2. **Numeric guardrails** — non-finite gradients are rejected before
+//!    any state is touched; a diverged Newton–Schulz output surfaces as
+//!    `NsDiverged`.
+//! 3. **Escalate-full-orth** — under the paper-grounded degradation
+//!    policy, a block step whose block NS diverges is retried as a full-
+//!    orthogonalization step and committed with the FULL-step stepsize:
+//!    bitwise identical to a `Period::Every(1)` coordinator.
+//! 4. **Stragglers are not faults** — a delayed rank changes nothing.
+
+use std::sync::Arc;
+
+use muonbp::coordinator::DistMuonBuilder;
+use muonbp::linalg::newton_schulz::{newton_schulz, NsCoeffs};
+use muonbp::mesh::Mesh;
+use muonbp::optim::muon::{OrthFn, Period};
+use muonbp::optim::{Optimizer, ParamKind, ParamMeta};
+use muonbp::robust::{
+    AnomalyPolicy, FaultPlan, PhasePanic, StepError, Straggler,
+};
+use muonbp::tensor::Tensor;
+use muonbp::utils::rng::Rng;
+
+/// Quadratic toy problem (loss 0.5||X - X*||^2 per param): grads are
+/// deterministic functions of the params, so any state corruption from a
+/// mishandled fault compounds into visible drift.
+struct Quad {
+    metas: Vec<ParamMeta>,
+    targets: Vec<Tensor>,
+}
+
+impl Quad {
+    fn new(metas: Vec<ParamMeta>, seed: u64) -> Quad {
+        let mut rng = Rng::new(seed);
+        let targets = metas
+            .iter()
+            .map(|m| Tensor::randn(&m.shape, 1.0, &mut rng))
+            .collect();
+        Quad { metas, targets }
+    }
+
+    fn init(&self, seed: u64) -> Vec<Tensor> {
+        let mut rng = Rng::new(seed);
+        self.metas
+            .iter()
+            .map(|m| Tensor::randn(&m.shape, 1.0, &mut rng))
+            .collect()
+    }
+
+    fn grads(&self, params: &[Tensor]) -> Vec<Tensor> {
+        params
+            .iter()
+            .zip(&self.targets)
+            .map(|(p, t)| {
+                let mut g = p.clone();
+                g.axpy(-1.0, t);
+                g
+            })
+            .collect()
+    }
+}
+
+fn mixed_metas() -> Vec<ParamMeta> {
+    vec![
+        ParamMeta::new("w1", &[8, 16], ParamKind::Matrix),
+        ParamMeta::new("w2", &[16, 8], ParamKind::Matrix),
+        ParamMeta::new("emb", &[12, 8], ParamKind::Embed),
+        ParamMeta::new("g", &[8], ParamKind::Vector),
+    ]
+}
+
+/// A rank panic in each of the four phases: the attempt fails with the
+/// structured error, every piece of optimizer state is bit-identical to
+/// its pre-call value (snapshot compare), the retry succeeds, and the
+/// whole run stays bitwise equal to a never-faulted twin.
+#[test]
+fn rank_panic_in_each_phase_is_atomic() {
+    // Period::Every(2) with dp=2, tp=4: attempt 1 is a full step (phase 2
+    // exists), attempt 2 a block step (phase 3 exists). Phase 0 panics a
+    // DP rank, phase 1 a TP rank, phases 2/3 run on the leader (rank 0).
+    let cases = [
+        PhasePanic { attempt: 1, rank: 1, phase: 0 },
+        PhasePanic { attempt: 1, rank: 2, phase: 1 },
+        PhasePanic { attempt: 1, rank: 0, phase: 2 },
+        PhasePanic { attempt: 2, rank: 0, phase: 3 },
+    ];
+    for pp in cases {
+        let quad = Quad::new(mixed_metas(), 41);
+        let mesh = Mesh::new(2, 4).unwrap();
+        let mut clean =
+            DistMuonBuilder::new(mesh, Period::Every(2)).build(&quad.metas);
+        let mut faulty = DistMuonBuilder::new(mesh, Period::Every(2))
+            .fault_plan(FaultPlan {
+                panic_at: Some(pp),
+                ..FaultPlan::default()
+            })
+            .build(&quad.metas);
+        let mut p_c = quad.init(5);
+        let mut p_f = quad.init(5);
+        let mut faulted = false;
+        for step in 0..4 {
+            let g_c = quad.grads(&p_c);
+            clean.step(&mut p_c, &g_c, 0.02);
+            let g_f = quad.grads(&p_f);
+            let p_before = p_f.clone();
+            let s_before = faulty.snapshot().unwrap();
+            match faulty.try_step(&mut p_f, &g_f, 0.02) {
+                Ok(()) => {}
+                Err(e) => {
+                    assert!(!faulted, "{pp:?}: fault fired twice");
+                    faulted = true;
+                    assert_eq!(
+                        e,
+                        StepError::RankPanicked {
+                            rank: pp.rank,
+                            phase: pp.phase
+                        },
+                        "{pp:?}"
+                    );
+                    // Atomicity: params AND optimizer state untouched.
+                    assert_eq!(p_f, p_before, "{pp:?}: params moved");
+                    assert_eq!(
+                        faulty.snapshot().unwrap(),
+                        s_before,
+                        "{pp:?}: optimizer state moved"
+                    );
+                    // The injected fault fired; the retry must be clean
+                    // (same grads — params did not move).
+                    faulty
+                        .try_step(&mut p_f, &g_f, 0.02)
+                        .unwrap_or_else(|e| panic!("{pp:?} retry: {e}"));
+                }
+            }
+            for (i, (a, b)) in p_f.iter().zip(&p_c).enumerate() {
+                assert_eq!(
+                    a, b,
+                    "{pp:?} step {step} param {i}: drifted from the \
+                     never-faulted run"
+                );
+            }
+        }
+        assert!(faulted, "{pp:?}: injected fault never fired");
+    }
+}
+
+/// Non-finite gradients are rejected before any phase runs; state is
+/// untouched and the recovery step matches a never-faulted twin.
+#[test]
+fn non_finite_grads_rejected_atomically() {
+    let quad = Quad::new(mixed_metas(), 17);
+    let mesh = Mesh::new(1, 2).unwrap();
+    let mut opt =
+        DistMuonBuilder::new(mesh, Period::Every(2)).build(&quad.metas);
+    let mut twin =
+        DistMuonBuilder::new(mesh, Period::Every(2)).build(&quad.metas);
+    let mut p = quad.init(3);
+    let mut p_twin = quad.init(3);
+    // One clean step so there is real momentum to corrupt.
+    let g = quad.grads(&p);
+    opt.step(&mut p, &g, 0.02);
+    twin.step(&mut p_twin, &quad.grads(&p_twin), 0.02);
+
+    let mut bad = quad.grads(&p);
+    bad[1].data_mut()[0] = f32::NAN;
+    let p_before = p.clone();
+    let s_before = opt.snapshot().unwrap();
+    let err = opt.try_step(&mut p, &bad, 0.02).unwrap_err();
+    assert_eq!(err, StepError::NonFiniteGrad { param: 1 });
+    assert_eq!(p, p_before);
+    assert_eq!(opt.snapshot().unwrap(), s_before);
+
+    // Recovery: a clean step now must match the twin that never saw the
+    // poisoned batch (note the twin also consumed only 2 optimizer
+    // steps — the faulted attempt advanced nothing).
+    opt.try_step(&mut p, &quad.grads(&p), 0.02).unwrap();
+    twin.step(&mut p_twin, &quad.grads(&p_twin), 0.02);
+    assert_eq!(p, p_twin);
+}
+
+/// An orthogonalizer that blows up on TP-block shapes (n == 8 here) but
+/// behaves on full matrices — the shape discrimination lets one callback
+/// serve both the failing block path and the healthy full path.
+fn block_diverging_orth() -> OrthFn {
+    Arc::new(|t: &Tensor| {
+        if t.n() == 8 {
+            let mut u = t.clone();
+            u.data_mut().fill(1e6);
+            u
+        } else {
+            newton_schulz(t, 5, NsCoeffs::jordan())
+        }
+    })
+}
+
+/// The paper-grounded degradation: under `escalate-full-orth`, a block
+/// step whose block NS diverges is retried as a full-orthogonalization
+/// step and committed with the FULL-step stepsize — bitwise identical to
+/// a Period::Every(1) coordinator. eta_block_ratio != 1 would expose any
+/// use of the block stepsize.
+#[test]
+fn escalate_full_orth_matches_full_step_coordinator() {
+    let metas = vec![ParamMeta::new("w", &[8, 16], ParamKind::Matrix)];
+    let quad = Quad::new(metas.clone(), 59);
+    let mesh = Mesh::new(1, 2).unwrap();
+    let mut esc = DistMuonBuilder::new(mesh, Period::Never)
+        .orth_fn(block_diverging_orth())
+        .cfg(|c| {
+            c.on_anomaly = AnomalyPolicy::EscalateFullOrth;
+            c.eta_block_ratio = 0.5;
+        })
+        .build(&metas);
+    let mut full = DistMuonBuilder::new(mesh, Period::Every(1))
+        .orth_fn(block_diverging_orth())
+        .cfg(|c| c.eta_block_ratio = 0.5)
+        .build(&metas);
+    let mut p_esc = quad.init(2);
+    let mut p_full = quad.init(2);
+    for step in 0..4 {
+        esc.try_step(&mut p_esc, &quad.grads(&p_esc), 0.02).unwrap();
+        full.try_step(&mut p_full, &quad.grads(&p_full), 0.02).unwrap();
+        assert_eq!(
+            p_esc, p_full,
+            "step {step}: escalated block step != full step"
+        );
+    }
+    assert_eq!(esc.escalations(), 4, "every block step must escalate");
+    assert_eq!(full.escalations(), 0);
+}
+
+/// A full step cannot escalate further: divergence there surfaces as
+/// `NsDiverged` even under the escalate policy, atomically.
+#[test]
+fn full_step_divergence_surfaces_error() {
+    let metas = vec![ParamMeta::new("w", &[8, 16], ParamKind::Matrix)];
+    let quad = Quad::new(metas.clone(), 7);
+    let orth: OrthFn = Arc::new(|t: &Tensor| {
+        let mut u = t.clone();
+        u.data_mut().fill(1e6);
+        u
+    });
+    let mut opt = DistMuonBuilder::new(Mesh::new(1, 2).unwrap(), Period::Every(1))
+        .orth_fn(orth)
+        .cfg(|c| c.on_anomaly = AnomalyPolicy::EscalateFullOrth)
+        .build(&metas);
+    let mut p = quad.init(1);
+    let p_before = p.clone();
+    let s_before = opt.snapshot().unwrap();
+    match opt.try_step(&mut p, &quad.grads(&p), 0.02) {
+        Err(StepError::NsDiverged { param, norm, bound }) => {
+            assert_eq!(param, 0);
+            assert!(norm > bound, "{norm} !> {bound}");
+        }
+        other => panic!("want NsDiverged, got {other:?}"),
+    }
+    assert_eq!(p, p_before);
+    assert_eq!(opt.snapshot().unwrap(), s_before);
+    assert_eq!(opt.escalations(), 0);
+}
+
+/// A straggler is a delay, not a failure: the run is bit-identical to an
+/// undelayed one and every step succeeds.
+#[test]
+fn straggler_delay_is_bit_identical() {
+    let quad = Quad::new(mixed_metas(), 23);
+    let mesh = Mesh::new(2, 2).unwrap();
+    let mut slow = DistMuonBuilder::new(mesh, Period::Every(2))
+        .fault_plan(FaultPlan {
+            straggler: Some(Straggler { attempt: 1, rank: 1, delay_ms: 20 }),
+            ..FaultPlan::default()
+        })
+        .build(&quad.metas);
+    let mut fast =
+        DistMuonBuilder::new(mesh, Period::Every(2)).build(&quad.metas);
+    let mut p_s = quad.init(9);
+    let mut p_f = quad.init(9);
+    for step in 0..3 {
+        slow.try_step(&mut p_s, &quad.grads(&p_s), 0.02).unwrap();
+        fast.try_step(&mut p_f, &quad.grads(&p_f), 0.02).unwrap();
+        assert_eq!(p_s, p_f, "step {step}: straggler changed the math");
+    }
+}

@@ -5,11 +5,15 @@
 //! top of the submitter threads each test spawns.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 
+use muonbp::comm::Communicator;
+use muonbp::costmodel::netmodel::NetModel;
 use muonbp::linalg::gemm::gemm_into;
 use muonbp::linalg::newton_schulz::{newton_schulz, NsCoeffs};
 use muonbp::mesh::Layout;
 use muonbp::optim::muon::{Muon, OrthFn};
+use muonbp::robust::StepError;
 use muonbp::runtime::pool::{Pool, SendPtr};
 use muonbp::shard::ShardSpec;
 use muonbp::tensor::Tensor;
@@ -146,6 +150,75 @@ fn run_concurrent_rendezvous_without_results() {
         assert_eq!(out, want, "round {round}");
     }
     assert!(pool.workers() >= n);
+}
+
+#[test]
+fn rank_panic_mid_collective_poisons_without_deadlock() {
+    // A rank panicking mid-collective must NOT deadlock its peers parked
+    // at the rendezvous: `run_fallible` poisons the phase barrier, every
+    // waiter is released with `StepError::Poisoned`, the panicking rank
+    // reports `RankPanicked`, and after `heal` the same communicator and
+    // pool run a clean round bit-identically.
+    let n = 4;
+    let comm = Communicator::new(n, NetModel::a100_nvlink());
+    let pool = Pool::new(2); // smaller than n: forces growth + reuse
+    let mut rng = Rng::new(31);
+    let srcs: Vec<Tensor> =
+        (0..n).map(|_| Tensor::randn(&[6, 5], 1.0, &mut rng)).collect();
+    let mut dsts: Vec<Tensor> =
+        (0..n).map(|_| Tensor::zeros(&[6, 5])).collect();
+    let results: Mutex<Vec<(usize, Result<(), StepError>)>> =
+        Mutex::new(Vec::new());
+    {
+        let dst_ptr = SendPtr(dsts.as_mut_ptr());
+        let (comm, srcs, results) = (&comm, &srcs, &results);
+        pool.run_concurrent(n, |r, _| {
+            let res = comm.run_fallible(r, 0, || {
+                if r == 2 {
+                    panic!("injected: rank 2 dies before depositing");
+                }
+                // SAFETY: rank r is the sole writer of dsts[r]; the
+                // rendezvous joins before dsts is read again.
+                let dst = unsafe { &mut *dst_ptr.0.add(r) };
+                comm.all_reduce_mean_into(r, &srcs[r], dst)
+            });
+            results.lock().unwrap().push((r, res));
+        });
+    }
+    let mut got = results.into_inner().unwrap();
+    got.sort_by_key(|(r, _)| *r);
+    assert_eq!(got.len(), n, "every rank must return, none may hang");
+    for (r, res) in &got {
+        match r {
+            2 => assert_eq!(
+                *res,
+                Err(StepError::RankPanicked { rank: 2, phase: 0 })
+            ),
+            _ => assert_eq!(*res, Err(StepError::Poisoned), "rank {r}"),
+        }
+    }
+    assert!(comm.is_poisoned());
+
+    // Quiescent now (run_concurrent joined) -> heal, then a clean round
+    // on the SAME pool and communicator must match the sequential mean.
+    comm.heal();
+    assert!(!comm.is_poisoned());
+    let mut want = Tensor::zeros(&[6, 5]);
+    for s in &srcs {
+        want.axpy(1.0, s);
+    }
+    want.scale(1.0 / n as f32);
+    {
+        let dst_ptr = SendPtr(dsts.as_mut_ptr());
+        let (comm, srcs) = (&comm, &srcs);
+        pool.run_concurrent(n, |r, _| {
+            let dst = unsafe { &mut *dst_ptr.0.add(r) };
+            comm.all_reduce_mean_into(r, &srcs[r], dst).unwrap();
+        });
+    }
+    for (r, d) in dsts.iter().enumerate() {
+        assert_eq!(d, &want, "rank {r} after heal");
+    }
 }
 
 #[test]

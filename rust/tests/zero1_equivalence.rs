@@ -19,6 +19,9 @@
 //!    per-rank predictor (`grad_sync_bytes_per_rank`) must show ZeRO-1
 //!    strictly below the all-reduce for every dp >= 2.
 
+use std::path::PathBuf;
+
+use muonbp::checkpoint;
 use muonbp::comm::CollectiveKind;
 use muonbp::coordinator::DistMuonBuilder;
 use muonbp::costmodel::netmodel::grad_sync_bytes_per_rank;
@@ -224,4 +227,128 @@ fn zero1_grad_sync_byte_accounting() {
     let (_, dp_stats) = z1.comm_stats();
     assert_eq!(dp_stats.total_bytes(), 0, "dp=1 zero1 charged DP bytes");
     assert_eq!(dp_stats.grad_sync_bytes(), 0);
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir()
+        .join(format!("muonbp-z1ckpt-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+/// Save -> restore of ZeRO-1-sharded optimizer state through disk must be
+/// bit-identical to never stopping — and, because snapshots store
+/// canonical full matrices, the same checkpoint restores into a
+/// REPLICATED coordinator (elastic restore) with the same guarantee.
+#[test]
+fn zero1_checkpoint_restore_is_bit_identical_to_never_stopping() {
+    let dir = tmp_dir("roundtrip");
+    let quad = Quad::new(mixed_metas(), 47);
+    let mesh = Mesh::new(2, 4).unwrap();
+    let build_z1 = || {
+        DistMuonBuilder::new(mesh, Period::Every(2))
+            .state_sharding(StateSharding::Zero1)
+            .build(&quad.metas)
+    };
+    let mut orig = build_z1();
+    let mut p_orig = quad.init(7);
+    for _ in 0..3 {
+        let g = quad.grads(&p_orig);
+        orig.step(&mut p_orig, &g, 0.02);
+    }
+    // Checkpoint optimizer state + params, through the real file path.
+    let mut snap = orig.snapshot().unwrap();
+    assert_eq!(snap.step, 3);
+    for (p, meta) in p_orig.iter().zip(&quad.metas) {
+        snap.push(format!("param.{}", meta.name), p.clone());
+    }
+    let path = checkpoint::save(&dir, &snap).unwrap();
+    let loaded = checkpoint::load(&path).unwrap();
+    assert_eq!(loaded, snap, "disk roundtrip must be lossless");
+
+    // Restore into a FRESH zero1 coordinator and a fresh replicated one.
+    let mut resumed = build_z1();
+    resumed.restore(&loaded).unwrap();
+    let mut rep =
+        DistMuonBuilder::new(mesh, Period::Every(2)).build(&quad.metas);
+    rep.restore(&loaded).unwrap();
+    let restore_params = || -> Vec<Tensor> {
+        quad.metas
+            .iter()
+            .map(|m| {
+                loaded.get(&format!("param.{}", m.name)).unwrap().clone()
+            })
+            .collect()
+    };
+    let mut p_res = restore_params();
+    let mut p_rep = restore_params();
+    assert_eq!(p_res, p_orig);
+
+    // Continue all three; the resumed runs must track the never-stopped
+    // one bit for bit (same period phase: t was restored too).
+    for step in 3..7 {
+        let g = quad.grads(&p_orig);
+        orig.step(&mut p_orig, &g, 0.02);
+        let g = quad.grads(&p_res);
+        resumed.step(&mut p_res, &g, 0.02);
+        let g = quad.grads(&p_rep);
+        rep.step(&mut p_rep, &g, 0.02);
+        assert_eq!(p_res, p_orig, "step {step}: zero1 resume drifted");
+        assert_eq!(
+            p_rep, p_orig,
+            "step {step}: elastic zero1->replicated resume drifted"
+        );
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A corrupted newest checkpoint must be detected by its per-tensor CRC
+/// and skipped: `latest_valid` falls back to the previous good one.
+#[test]
+fn corrupted_checkpoint_falls_back_to_previous_good() {
+    let dir = tmp_dir("corrupt");
+    let quad = Quad::new(mixed_metas(), 53);
+    let mut opt = DistMuonBuilder::new(Mesh::new(2, 2).unwrap(), Period::Every(2))
+        .state_sharding(StateSharding::Zero1)
+        .build(&quad.metas);
+    let mut params = quad.init(4);
+    let mut good_snap = None;
+    let mut newest_path = None;
+    for step in 0..4 {
+        let g = quad.grads(&params);
+        opt.step(&mut params, &g, 0.02);
+        if step == 1 || step == 3 {
+            let mut snap = opt.snapshot().unwrap();
+            for (p, meta) in params.iter().zip(&quad.metas) {
+                snap.push(format!("param.{}", meta.name), p.clone());
+            }
+            let path = checkpoint::save(&dir, &snap).unwrap();
+            if step == 1 {
+                good_snap = Some(snap);
+            } else {
+                newest_path = Some(path);
+            }
+        }
+    }
+    let (good_snap, newest_path) =
+        (good_snap.unwrap(), newest_path.unwrap());
+
+    // Flip one byte of the LAST entry's payload (the file tail is
+    // `payload | crc32`, so len-6 is always inside the payload — unlike
+    // a midpoint flip, which could land on framing and fail differently).
+    let mut bytes = std::fs::read(&newest_path).unwrap();
+    let off = bytes.len() - 6;
+    bytes[off] ^= 0xFF;
+    std::fs::write(&newest_path, &bytes).unwrap();
+
+    let err = checkpoint::load(&newest_path).unwrap_err();
+    assert!(
+        format!("{err:#}").contains("CRC"),
+        "corruption must be reported as a CRC failure, got: {err:#}"
+    );
+    let (path, snap) = checkpoint::latest_valid(&dir).unwrap().unwrap();
+    assert_ne!(path, newest_path, "must not return the corrupt file");
+    assert_eq!(snap, good_snap, "fallback must be the previous good one");
+    assert_eq!(snap.step, 2);
+    let _ = std::fs::remove_dir_all(&dir);
 }
