@@ -1,6 +1,6 @@
 # Convenience targets; tier-1 verify is `make verify` (== ROADMAP.md).
 
-.PHONY: build test verify ci ci-env perf pool-stress zero1 fault artifacts clean
+.PHONY: build test verify ci ci-env perf pool-stress zero1 fault transport soak artifacts clean
 
 build:
 	cargo build --release
@@ -53,6 +53,30 @@ pool-stress:
 # equivalence, straggler determinism (see ci.sh tier-1).
 fault:
 	RUST_TEST_THREADS=16 cargo test --test fault_injection -- --nocapture
+
+# Transport-seam acceptance suite: LocalTransport vs TcpTransport
+# bit-equivalence (loopback + two OS processes), deadline exit codes,
+# degrade-block commit (see ci.sh tier-1).
+transport:
+	cargo test --test transport_equivalence -- --nocapture
+
+# Randomized fault soak: repeated dist-smoke runs under degrade-block
+# with a randomly seeded slow-link fault. Every iteration prints its
+# seed and an exact replay command line, so a red run is reproducible.
+# Knobs: SOAK_ITERS (default 10), SOAK_SEED (pin one seed, 1 iteration).
+soak:
+	@cargo build --release -q
+	@n=$${SOAK_ITERS-10}; \
+	for i in $$(seq 1 $$n); do \
+	    seed=$${SOAK_SEED-$$RANDOM}; \
+	    attempt=$$(( seed % 4 + 1 )); \
+	    delay=$$(( 600 + seed % 900 )); \
+	    echo "soak[$$i/$$n]: seed=$$seed fault-slow-link=$$attempt:1:$$delay" \
+	         "(replay: SOAK_SEED=$$seed SOAK_ITERS=1 make soak)"; \
+	    ./target/release/muonbp dist-smoke --steps 6 --period 2 \
+	        --seed $$seed --deadline-ms 250 --on-anomaly degrade-block \
+	        --fault-slow-link $$attempt:1:$$delay || exit 1; \
+	done
 
 # Build the L1/L2 HLO-text artifacts (requires the python toolchain with
 # jax; see python/compile/aot.py).

@@ -86,6 +86,16 @@ step "tier-1: fault-injection suite (RUST_TEST_THREADS=16)"
 # what the with_timeout wrapper would catch if poisoning regressed).
 with_timeout 600 env RUST_TEST_THREADS=16 cargo test -q --test fault_injection || exit 1
 
+step "tier-1: transport-equivalence suite (local vs tcp, multi-process)"
+# The transport seam's acceptance gate: the five collectives and a
+# dp2xtp2 DistMuon run must be bit-identical on LocalTransport and
+# TcpTransport (loopback threads AND two real OS processes via
+# dist-smoke), deadlines must fire as exit code 45 instead of hanging,
+# and degrade-block must commit a blockwise step through a slow link.
+# The suite spawns the muonbp binary itself (CARGO_BIN_EXE), so a
+# wedged rendezvous shows up here as a 124, not an eaten CI budget.
+with_timeout 600 cargo test -q --test transport_equivalence || exit 1
+
 step "tier-1: cargo bench --no-run (benches must keep compiling)"
 with_timeout 1800 cargo bench --no-run || exit 1
 

@@ -6,9 +6,12 @@
 //! `adam.m.<name>`, ...); this module only handles durability:
 //!
 //! - **Atomic writes** — serialize to `.tmp-ckpt-<step>.bin` in the
-//!   target directory, fsync, then `rename` to `ckpt-<step>.bin`. A
-//!   crash mid-write leaves the previous checkpoint untouched and at
-//!   worst a stale temp file (ignored by the loader).
+//!   target directory, fsync, then `rename` to `ckpt-<step>.bin`, then
+//!   fsync the parent directory (on Unix) so the rename itself is
+//!   durable — without it a power loss can forget the directory entry
+//!   even though the file's blocks hit disk. A crash mid-write leaves
+//!   the previous checkpoint untouched and at worst a stale temp file
+//!   (ignored by the loader).
 //! - **Per-tensor CRC32** — each tensor's payload carries an IEEE CRC32
 //!   so corruption is detected at the tensor that rotted, not as a
 //!   mystery NaN ten steps after restore.
@@ -212,7 +215,8 @@ fn file_name(step: u64) -> String {
 }
 
 /// Atomically write `snap` to `dir/ckpt-<step>.bin` (temp file + fsync +
-/// rename on the same filesystem). Returns the final path.
+/// rename on the same filesystem + directory fsync). Returns the final
+/// path.
 pub fn save(dir: impl AsRef<Path>, snap: &Snapshot) -> Result<PathBuf> {
     let dir = dir.as_ref();
     std::fs::create_dir_all(dir)
@@ -228,6 +232,17 @@ pub fn save(dir: impl AsRef<Path>, snap: &Snapshot) -> Result<PathBuf> {
     }
     std::fs::rename(&tmp, &fin)
         .with_context(|| format!("renaming {tmp:?} -> {fin:?}"))?;
+    // The rename only becomes durable once the parent directory's entry
+    // hits disk; fsync it where the platform allows opening a directory
+    // (a crash before this can resurface the pre-rename state, which a
+    // supervisor restarting from `latest_valid` must not trust).
+    #[cfg(unix)]
+    {
+        let d = std::fs::File::open(dir)
+            .with_context(|| format!("opening {dir:?} for dir fsync"))?;
+        d.sync_all()
+            .with_context(|| format!("fsyncing checkpoint dir {dir:?}"))?;
+    }
     Ok(fin)
 }
 

@@ -1,8 +1,13 @@
-//! Per-collective accounting: calls, payload bytes, simulated α–β time.
+//! Per-collective accounting: calls, payload bytes, simulated α–β time,
+//! and (where the transport measures it) real wall-clock.
 //!
 //! These counters are the measured side of the paper's communication-volume
 //! claims: MuonBP's optimizer traffic is `O(mn/P)` per step vs Muon's
 //! `O(mn)` (Appendix C), and Table 4's throughput deltas derive from them.
+//! `sim_time` stays the modeled α–β cost (machine-independent, what the
+//! figures use); `wall_time` is what the collective actually took on this
+//! host/transport — near-zero for pointer deposits, real network time
+//! over TCP.
 
 /// Collective operation kinds.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -52,6 +57,7 @@ struct Entry {
     calls: u64,
     bytes: u64,
     sim_time: f64,
+    wall_time: f64,
 }
 
 /// Accumulated communication statistics for one communicator.
@@ -62,10 +68,23 @@ pub struct CommStats {
 
 impl CommStats {
     pub fn record(&mut self, kind: CollectiveKind, bytes: usize, time: f64) {
+        self.record_timed(kind, bytes, time, 0.0);
+    }
+
+    /// [`CommStats::record`] plus the measured wall-clock seconds of the
+    /// collective.
+    pub fn record_timed(
+        &mut self,
+        kind: CollectiveKind,
+        bytes: usize,
+        sim_time: f64,
+        wall_time: f64,
+    ) {
         let e = &mut self.entries[kind.index()];
         e.calls += 1;
         e.bytes += bytes as u64;
-        e.sim_time += time;
+        e.sim_time += sim_time;
+        e.wall_time += wall_time;
     }
 
     pub fn calls(&self, kind: CollectiveKind) -> u64 {
@@ -78,6 +97,12 @@ impl CommStats {
 
     pub fn sim_time(&self, kind: CollectiveKind) -> f64 {
         self.entries[kind.index()].sim_time
+    }
+
+    /// Measured wall-clock seconds spent in this collective kind (0.0
+    /// when recorded through the untimed path).
+    pub fn wall_time(&self, kind: CollectiveKind) -> f64 {
+        self.entries[kind.index()].wall_time
     }
 
     pub fn total_bytes(&self) -> u64 {
@@ -105,19 +130,25 @@ impl CommStats {
         self.entries.iter().map(|e| e.sim_time).sum()
     }
 
+    pub fn total_wall_time(&self) -> f64 {
+        self.entries.iter().map(|e| e.wall_time).sum()
+    }
+
     /// Merge another stats block into this one.
     pub fn merge(&mut self, other: &CommStats) {
         for (a, b) in self.entries.iter_mut().zip(&other.entries) {
             a.calls += b.calls;
             a.bytes += b.bytes;
             a.sim_time += b.sim_time;
+            a.wall_time += b.wall_time;
         }
     }
 
     /// Human-readable summary table.
     pub fn summary(&self) -> String {
         let mut out = String::from(
-            "collective        calls        bytes     sim_time_s\n",
+            "collective        calls        bytes     sim_time_s    \
+             wall_time_s\n",
         );
         for kind in ALL_KINDS {
             let e = self.entries[kind.index()];
@@ -125,11 +156,12 @@ impl CommStats {
                 continue;
             }
             out.push_str(&format!(
-                "{:<16} {:>6} {:>12} {:>14.6}\n",
+                "{:<16} {:>6} {:>12} {:>14.6} {:>14.6}\n",
                 kind.name(),
                 e.calls,
                 e.bytes,
-                e.sim_time
+                e.sim_time,
+                e.wall_time
             ));
         }
         out
@@ -150,6 +182,23 @@ mod tests {
         assert_eq!(s.bytes(CollectiveKind::AllReduce), 1500);
         assert_eq!(s.total_bytes(), 1700);
         assert!((s.total_sim_time() - 0.85).abs() < 1e-12);
+        // Untimed records leave wall_time at zero.
+        assert_eq!(s.total_wall_time(), 0.0);
+    }
+
+    #[test]
+    fn wall_time_rides_alongside_sim_time() {
+        let mut s = CommStats::default();
+        s.record_timed(CollectiveKind::AllReduce, 100, 0.5, 0.002);
+        s.record_timed(CollectiveKind::AllReduce, 100, 0.5, 0.003);
+        assert_eq!(s.calls(CollectiveKind::AllReduce), 2);
+        assert!((s.wall_time(CollectiveKind::AllReduce) - 0.005).abs() < 1e-12);
+        assert!((s.sim_time(CollectiveKind::AllReduce) - 1.0).abs() < 1e-12);
+        let mut b = CommStats::default();
+        b.record_timed(CollectiveKind::AllReduce, 50, 0.1, 0.001);
+        s.merge(&b);
+        assert!((s.total_wall_time() - 0.006).abs() < 1e-12);
+        assert!(s.summary().contains("wall_time_s"));
     }
 
     #[test]

@@ -1,0 +1,825 @@
+//! TCP backend for the [`Transport`] seam: one OS process per rank over
+//! a full mesh of sockets, so the phased `DistMuon` schedule runs across
+//! real process boundaries (`--transport tcp --rank N --peers ...`).
+//!
+//! # Wire format
+//!
+//! Every frame is `[len: u32 le][kind: u8][round: u64 le][payload]
+//! [crc32: u32 le]` — length prefix first, CRC-32 (IEEE, the same
+//! polynomial and table as the MBCK checkpoint format) over the payload
+//! last. `kind` is DATA (collective payload, `round` = the sender's
+//! collective counter), HEARTBEAT (empty payload on the out-of-band
+//! beat connection), or HELLO (handshake: `[rank: u32 le][conn: u8]`).
+//! DATA payloads are raw little-endian `f32`s.
+//!
+//! # Topology and liveness
+//!
+//! Each rank pair holds TWO connections: a data stream (collectives)
+//! and a beat stream (background heartbeats), so a collective stuck
+//! behind a large payload cannot starve liveness detection. The lower
+//! rank of a pair accepts; the higher rank connects (with capped
+//! exponential backoff until `TcpCfg::connect_timeout`). A heartbeat
+//! sender thread beats every `heartbeat_interval`; one reader thread
+//! per peer stamps `last_seen`, feeding [`Transport::health`]:
+//! beats older than `straggle_after` ⇒ `Straggling`, older than
+//! `dead_after` (or a dropped connection) ⇒ `Dead`.
+//!
+//! # Failure semantics
+//!
+//! Reads and writes run in short timeout slices so a deadline or poison
+//! flag is polled even mid-transfer; transient `WouldBlock`/`TimedOut`/
+//! `Interrupted` errors are retried within the deadline. A receiver
+//! skips DATA frames whose round is *older* than the current collective
+//! (leftovers of a round a peer finished after this rank timed out), so
+//! the group re-synchronizes after an asymmetric timeout. A timeout
+//! that lands mid-frame leaves the stream desynchronized; the stream is
+//! marked dirty and later collectives fail fast with a `Protocol`
+//! error — the supervisor-facing recovery for a wedged TCP group is the
+//! structured exit code + checkpoint restart, not an in-place heal
+//! (see README "Failure model & recovery").
+//!
+//! Unlike [`LocalTransport`](super::transport::LocalTransport), this
+//! backend allocates (amortized, reused buffers) — the zero-allocation
+//! contract is a property of the in-process transport only.
+
+use std::io::{Read, Write};
+use std::net::{Shutdown, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::transport::{
+    ArmedFault, Deadline, RankHealth, Transport, TransportError,
+};
+use crate::checkpoint::crc32;
+
+const KIND_DATA: u8 = 1;
+const KIND_HEARTBEAT: u8 = 2;
+const KIND_HELLO: u8 = 3;
+
+const CONN_DATA: u8 = 0;
+const CONN_BEAT: u8 = 1;
+
+/// Frame header: len(4) + kind(1) + round(8).
+const HEADER_LEN: usize = 13;
+/// Sanity cap on a frame payload (a corrupt length prefix must not
+/// drive a multi-gigabyte read).
+const MAX_FRAME: usize = 1 << 30;
+/// I/O timeout slice: how often a blocked read/write polls the deadline
+/// and the poison/shutdown flags.
+const IO_SLICE: Duration = Duration::from_millis(50);
+
+/// Tuning knobs for the TCP backend.
+#[derive(Debug, Clone, Copy)]
+pub struct TcpCfg {
+    /// Total budget for establishing the full mesh at startup.
+    pub connect_timeout: Duration,
+    /// Heartbeat send period.
+    pub heartbeat_interval: Duration,
+    /// A peer whose last beat is older than this is `Straggling`.
+    pub straggle_after: Duration,
+    /// ... older than this is `Dead`.
+    pub dead_after: Duration,
+}
+
+impl Default for TcpCfg {
+    fn default() -> TcpCfg {
+        TcpCfg {
+            connect_timeout: Duration::from_secs(10),
+            heartbeat_interval: Duration::from_millis(100),
+            straggle_after: Duration::from_millis(300),
+            dead_after: Duration::from_millis(1000),
+        }
+    }
+}
+
+/// State shared with the heartbeat threads.
+struct Shared {
+    start: Instant,
+    /// ms since `start` of the last intact frame from each peer.
+    last_seen: Vec<AtomicU64>,
+    /// Sticky dead flags (connection drop, heartbeat EOF, injected
+    /// drop-rank). Survive `heal`.
+    dead: Vec<AtomicBool>,
+    shutdown: AtomicBool,
+    poisoned: AtomicBool,
+}
+
+/// Reused I/O buffers (one collective at a time per transport).
+#[derive(Default)]
+struct Bufs {
+    frame: Vec<u8>,
+    scratch: Vec<u8>,
+    floats: Vec<f32>,
+}
+
+enum IoFail {
+    /// Deadline expired; `dirty` = the frame was partially transferred
+    /// (the stream is no longer at a frame boundary).
+    TimedOut { dirty: bool },
+    /// The stop flag (poison/shutdown) was raised.
+    Stopped,
+    /// EOF or a hard socket error: the peer is gone.
+    Closed,
+    /// Framing or checksum violation.
+    Protocol,
+}
+
+fn now_ms(start: &Instant) -> u64 {
+    start.elapsed().as_millis() as u64
+}
+
+fn io_transient(k: std::io::ErrorKind) -> bool {
+    matches!(
+        k,
+        std::io::ErrorKind::WouldBlock
+            | std::io::ErrorKind::TimedOut
+            | std::io::ErrorKind::Interrupted
+    )
+}
+
+fn io_slice(deadline: Deadline) -> Duration {
+    match deadline.remaining() {
+        Some(rem) => IO_SLICE.min(rem).max(Duration::from_millis(1)),
+        None => IO_SLICE,
+    }
+}
+
+fn encode_frame(buf: &mut Vec<u8>, kind: u8, round: u64, payload: &[u8]) {
+    buf.clear();
+    buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    buf.push(kind);
+    buf.extend_from_slice(&round.to_le_bytes());
+    buf.extend_from_slice(payload);
+    buf.extend_from_slice(&crc32(payload).to_le_bytes());
+}
+
+/// Read exactly `out.len()` bytes in deadline slices, polling `stop`
+/// between slices. `consumed` accumulates across the calls that make up
+/// one frame, so a timeout can report whether it left the stream
+/// mid-frame.
+fn read_exact_deadline(
+    s: &mut TcpStream,
+    out: &mut [u8],
+    deadline: Deadline,
+    stop: Option<&AtomicBool>,
+    consumed: &mut usize,
+) -> Result<(), IoFail> {
+    let mut done = 0;
+    while done < out.len() {
+        if let Some(st) = stop {
+            if st.load(Ordering::Acquire) {
+                return Err(IoFail::Stopped);
+            }
+        }
+        if deadline.expired() {
+            return Err(IoFail::TimedOut { dirty: *consumed > 0 });
+        }
+        let _ = s.set_read_timeout(Some(io_slice(deadline)));
+        match s.read(&mut out[done..]) {
+            Ok(0) => return Err(IoFail::Closed),
+            Ok(k) => {
+                done += k;
+                *consumed += k;
+            }
+            Err(e) if io_transient(e.kind()) => continue,
+            Err(_) => return Err(IoFail::Closed),
+        }
+    }
+    Ok(())
+}
+
+fn write_all_deadline(
+    s: &mut TcpStream,
+    buf: &[u8],
+    deadline: Deadline,
+    stop: Option<&AtomicBool>,
+) -> Result<(), IoFail> {
+    let mut done = 0;
+    while done < buf.len() {
+        if let Some(st) = stop {
+            if st.load(Ordering::Acquire) {
+                return Err(IoFail::Stopped);
+            }
+        }
+        if deadline.expired() {
+            return Err(IoFail::TimedOut { dirty: done > 0 });
+        }
+        let _ = s.set_write_timeout(Some(io_slice(deadline)));
+        match s.write(&buf[done..]) {
+            Ok(0) => return Err(IoFail::Closed),
+            Ok(k) => done += k,
+            Err(e) if io_transient(e.kind()) => continue,
+            Err(_) => return Err(IoFail::Closed),
+        }
+    }
+    Ok(())
+}
+
+/// Read one frame; the payload lands in `scratch`. Returns
+/// `(kind, round)`.
+fn read_frame(
+    s: &mut TcpStream,
+    scratch: &mut Vec<u8>,
+    deadline: Deadline,
+    stop: Option<&AtomicBool>,
+) -> Result<(u8, u64), IoFail> {
+    let mut consumed = 0usize;
+    let mut header = [0u8; HEADER_LEN];
+    read_exact_deadline(s, &mut header, deadline, stop, &mut consumed)?;
+    let len = u32::from_le_bytes(header[0..4].try_into().unwrap()) as usize;
+    let kind = header[4];
+    let round = u64::from_le_bytes(header[5..13].try_into().unwrap());
+    if len > MAX_FRAME {
+        return Err(IoFail::Protocol);
+    }
+    scratch.clear();
+    scratch.resize(len, 0);
+    read_exact_deadline(s, scratch, deadline, stop, &mut consumed)?;
+    let mut crc = [0u8; 4];
+    read_exact_deadline(s, &mut crc, deadline, stop, &mut consumed)?;
+    if u32::from_le_bytes(crc) != crc32(scratch) {
+        return Err(IoFail::Protocol);
+    }
+    Ok((kind, round))
+}
+
+/// One rank of a TCP process group. Construct with
+/// [`TcpTransport::bind`] (or [`loopback_group`] for in-process tests),
+/// then hand to `Communicator::with_transport`.
+pub struct TcpTransport {
+    rank: usize,
+    n: usize,
+    cfg: TcpCfg,
+    /// Data streams per peer (`None` at `self.rank`). A `Mutex` each:
+    /// uncontended — only the owning rank's thread runs collectives.
+    data: Vec<Option<Mutex<TcpStream>>>,
+    /// Stream left mid-frame by a timeout: later collectives on it fail
+    /// fast with `Protocol` instead of decoding garbage.
+    dirty: Vec<AtomicBool>,
+    send_round: AtomicU64,
+    shared: Arc<Shared>,
+    bufs: Mutex<Bufs>,
+    threads: Mutex<Vec<JoinHandle<()>>>,
+    fault_armed: AtomicBool,
+    fault: Mutex<ArmedFault>,
+}
+
+impl TcpTransport {
+    /// Bind `addrs[rank]` and establish the full mesh with every peer.
+    /// `addrs` is the whole group, rank-ordered, `host:port` each.
+    pub fn bind(
+        rank: usize,
+        addrs: &[String],
+        cfg: TcpCfg,
+    ) -> std::io::Result<TcpTransport> {
+        let listener = TcpListener::bind(&addrs[rank][..])?;
+        TcpTransport::from_listener(rank, listener, addrs, cfg)
+    }
+
+    /// Mesh setup on an already-bound listener (lets tests bind port 0
+    /// and learn the address before peers connect). Connects to every
+    /// lower rank (data + beat streams, capped exponential backoff) while
+    /// accepting from every higher rank, until the mesh is complete or
+    /// `cfg.connect_timeout` expires.
+    pub fn from_listener(
+        rank: usize,
+        listener: TcpListener,
+        addrs: &[String],
+        cfg: TcpCfg,
+    ) -> std::io::Result<TcpTransport> {
+        let n = addrs.len();
+        assert!(rank < n, "rank {rank} outside group of {n}");
+        let deadline = Deadline::after(cfg.connect_timeout);
+        let mut data: Vec<Option<TcpStream>> = (0..n).map(|_| None).collect();
+        let mut beat: Vec<Option<TcpStream>> = (0..n).map(|_| None).collect();
+        listener.set_nonblocking(true)?;
+        let mut pending: Vec<(usize, u8)> = (0..rank)
+            .flat_map(|j| [(j, CONN_DATA), (j, CONN_BEAT)])
+            .collect();
+        let mut backoff = Duration::from_millis(5);
+        loop {
+            // Drain whatever higher ranks have connected so far.
+            loop {
+                match listener.accept() {
+                    Ok((mut s, _)) => {
+                        s.set_nonblocking(false)?;
+                        let (peer, conn) = read_hello(&mut s)?;
+                        if peer <= rank || peer >= n {
+                            return Err(proto_err(format!(
+                                "unexpected HELLO from rank {peer}"
+                            )));
+                        }
+                        match conn {
+                            CONN_DATA => data[peer] = Some(s),
+                            CONN_BEAT => beat[peer] = Some(s),
+                            other => {
+                                return Err(proto_err(format!(
+                                    "unknown conn kind {other}"
+                                )))
+                            }
+                        }
+                    }
+                    Err(e) if io_transient(e.kind()) => break,
+                    Err(e) => return Err(e),
+                }
+            }
+            // Retry outbound connects to lower ranks.
+            let mut still = Vec::new();
+            for (j, conn) in pending {
+                match try_connect(&addrs[j], rank, conn) {
+                    Ok(s) => match conn {
+                        CONN_DATA => data[j] = Some(s),
+                        _ => beat[j] = Some(s),
+                    },
+                    Err(_) => still.push((j, conn)),
+                }
+            }
+            pending = still;
+            let inbound_done = (rank + 1..n)
+                .all(|j| data[j].is_some() && beat[j].is_some());
+            if pending.is_empty() && inbound_done {
+                break;
+            }
+            if deadline.expired() {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::TimedOut,
+                    format!(
+                        "rank {rank}: mesh incomplete after {:?} \
+                         (still missing {} outbound, inbound done: \
+                         {inbound_done})",
+                        cfg.connect_timeout,
+                        pending.len()
+                    ),
+                ));
+            }
+            std::thread::sleep(backoff);
+            backoff = (backoff * 2).min(Duration::from_millis(250));
+        }
+
+        for s in data.iter().flatten().chain(beat.iter().flatten()) {
+            let _ = s.set_nodelay(true);
+        }
+
+        let shared = Arc::new(Shared {
+            start: Instant::now(),
+            last_seen: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            dead: (0..n).map(|_| AtomicBool::new(false)).collect(),
+            shutdown: AtomicBool::new(false),
+            poisoned: AtomicBool::new(false),
+        });
+
+        let mut threads = Vec::new();
+        // Heartbeat sender: one thread beats every peer on the beat
+        // streams' write halves.
+        let mut writers: Vec<(usize, TcpStream)> = Vec::new();
+        for (peer, s) in beat.iter().enumerate() {
+            if let Some(s) = s {
+                writers.push((peer, s.try_clone()?));
+            }
+        }
+        if !writers.is_empty() {
+            let hb = Arc::clone(&shared);
+            let interval = cfg.heartbeat_interval;
+            threads.push(std::thread::spawn(move || {
+                let mut frame = Vec::new();
+                let mut beats = 0u64;
+                while !hb.shutdown.load(Ordering::Acquire) {
+                    beats += 1;
+                    encode_frame(&mut frame, KIND_HEARTBEAT, beats, &[]);
+                    for (peer, w) in &mut writers {
+                        if hb.dead[*peer].load(Ordering::Acquire) {
+                            continue;
+                        }
+                        if write_all_deadline(
+                            w,
+                            &frame,
+                            Deadline::after(interval),
+                            Some(&hb.shutdown),
+                        )
+                        .is_err()
+                        {
+                            hb.dead[*peer].store(true, Ordering::Release);
+                        }
+                    }
+                    std::thread::sleep(interval);
+                }
+            }));
+        }
+        // One beat-reader thread per peer: stamps last_seen, marks the
+        // peer dead on EOF/corruption.
+        for (peer, s) in beat.iter_mut().enumerate() {
+            let Some(s) = s.take() else { continue };
+            let mut s = s;
+            let hb = Arc::clone(&shared);
+            threads.push(std::thread::spawn(move || {
+                let mut scratch = Vec::new();
+                loop {
+                    match read_frame(
+                        &mut s,
+                        &mut scratch,
+                        Deadline::none(),
+                        Some(&hb.shutdown),
+                    ) {
+                        Ok(_) => hb.last_seen[peer]
+                            .store(now_ms(&hb.start), Ordering::Release),
+                        Err(IoFail::Stopped) => return,
+                        Err(_) => {
+                            hb.dead[peer].store(true, Ordering::Release);
+                            return;
+                        }
+                    }
+                }
+            }));
+        }
+
+        Ok(TcpTransport {
+            rank,
+            n,
+            cfg,
+            data: data.into_iter().map(|s| s.map(Mutex::new)).collect(),
+            dirty: (0..n).map(|_| AtomicBool::new(false)).collect(),
+            send_round: AtomicU64::new(0),
+            shared,
+            bufs: Mutex::new(Bufs::default()),
+            threads: Mutex::new(threads),
+            fault_armed: AtomicBool::new(false),
+            fault: Mutex::new(ArmedFault::default()),
+        })
+    }
+
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn lift_io(&self, e: IoFail, peer: usize, start: &Instant) -> TransportError {
+        match e {
+            IoFail::TimedOut { dirty } => {
+                if dirty {
+                    self.dirty[peer].store(true, Ordering::Release);
+                }
+                TransportError::Timeout {
+                    waiting_on: peer,
+                    elapsed_ms: now_ms(start),
+                }
+            }
+            IoFail::Stopped => TransportError::Poisoned,
+            IoFail::Closed => {
+                self.shared.dead[peer].store(true, Ordering::Release);
+                TransportError::PeerDead { rank: peer }
+            }
+            IoFail::Protocol => TransportError::Protocol { rank: peer },
+        }
+    }
+
+    /// Fire (and disarm) the armed one-shot fault, if it names this
+    /// rank (a process only ever injects faults into itself; peers
+    /// observe the effects through the wire).
+    fn maybe_fault(&self) -> Result<(), TransportError> {
+        if !self.fault_armed.load(Ordering::Acquire) {
+            return Ok(());
+        }
+        let mut g = self.fault.lock().unwrap();
+        if let Some((r, delay_ms)) = g.slow_link {
+            if r == self.rank {
+                g.slow_link = None;
+                if g.is_inert() {
+                    self.fault_armed.store(false, Ordering::Release);
+                }
+                drop(g);
+                std::thread::sleep(Duration::from_millis(delay_ms));
+                return Ok(());
+            }
+        }
+        if let Some(r) = g.drop_rank {
+            if r == self.rank {
+                g.drop_rank = None;
+                if g.is_inert() {
+                    self.fault_armed.store(false, Ordering::Release);
+                }
+                drop(g);
+                self.shared.dead[self.rank].store(true, Ordering::Release);
+                // Drop the data plane so peers see EOF, not a timeout.
+                for m in self.data.iter().flatten() {
+                    let _ = m.lock().unwrap().shutdown(Shutdown::Both);
+                }
+                return Err(TransportError::PeerDead { rank: self.rank });
+            }
+        }
+        Ok(())
+    }
+}
+
+fn proto_err(msg: String) -> std::io::Error {
+    std::io::Error::new(std::io::ErrorKind::InvalidData, msg)
+}
+
+fn try_connect(
+    addr: &str,
+    my_rank: usize,
+    conn: u8,
+) -> std::io::Result<TcpStream> {
+    let sa = addr
+        .to_socket_addrs()?
+        .next()
+        .ok_or_else(|| proto_err(format!("unresolvable peer '{addr}'")))?;
+    let mut s = TcpStream::connect_timeout(&sa, Duration::from_millis(200))?;
+    let mut payload = Vec::with_capacity(5);
+    payload.extend_from_slice(&(my_rank as u32).to_le_bytes());
+    payload.push(conn);
+    let mut frame = Vec::new();
+    encode_frame(&mut frame, KIND_HELLO, 0, &payload);
+    write_all_deadline(
+        &mut s,
+        &frame,
+        Deadline::after(Duration::from_secs(5)),
+        None,
+    )
+    .map_err(|_| proto_err("HELLO write failed".into()))?;
+    Ok(s)
+}
+
+fn read_hello(s: &mut TcpStream) -> std::io::Result<(usize, u8)> {
+    let mut scratch = Vec::new();
+    let (kind, _round) = read_frame(
+        s,
+        &mut scratch,
+        Deadline::after(Duration::from_secs(5)),
+        None,
+    )
+    .map_err(|_| proto_err("HELLO read failed".into()))?;
+    if kind != KIND_HELLO || scratch.len() != 5 {
+        return Err(proto_err("bad HELLO frame".into()));
+    }
+    let peer = u32::from_le_bytes(scratch[0..4].try_into().unwrap()) as usize;
+    Ok((peer, scratch[4]))
+}
+
+impl Transport for TcpTransport {
+    fn world(&self) -> usize {
+        self.n
+    }
+
+    fn is_fully_local(&self) -> bool {
+        false
+    }
+
+    fn gather_map(
+        &self,
+        rank: usize,
+        send: &[f32],
+        deadline: Deadline,
+        f: &mut dyn FnMut(usize, &[f32]),
+    ) -> Result<(), TransportError> {
+        assert_eq!(
+            rank, self.rank,
+            "TcpTransport serves local rank {} only",
+            self.rank
+        );
+        if self.shared.poisoned.load(Ordering::Acquire) {
+            return Err(TransportError::Poisoned);
+        }
+        for r in 0..self.n {
+            if self.shared.dead[r].load(Ordering::Acquire) {
+                return Err(TransportError::PeerDead { rank: r });
+            }
+        }
+        self.maybe_fault()?;
+        let start = Instant::now();
+        let round = self.send_round.fetch_add(1, Ordering::SeqCst) + 1;
+        let mut bufs = self.bufs.lock().unwrap();
+        let Bufs { frame, scratch, floats } = &mut *bufs;
+        // Encode once; raw little-endian f32s as the payload.
+        scratch.clear();
+        for v in send {
+            scratch.extend_from_slice(&v.to_le_bytes());
+        }
+        // `scratch` is reused as the receive buffer below, so the send
+        // frame must own its bytes.
+        encode_frame(frame, KIND_DATA, round, scratch);
+        for r in 0..self.n {
+            if r == self.rank {
+                continue;
+            }
+            let mut s = self.data[r].as_ref().unwrap().lock().unwrap();
+            write_all_deadline(
+                &mut s,
+                frame,
+                deadline,
+                Some(&self.shared.poisoned),
+            )
+            .map_err(|e| self.lift_io(e, r, &start))?;
+        }
+        // Receive and deliver in rank order (TCP buffers out-of-order
+        // arrival for us; per-peer streams are already ordered).
+        for r in 0..self.n {
+            if r == self.rank {
+                f(r, send);
+                continue;
+            }
+            if self.dirty[r].load(Ordering::Acquire) {
+                return Err(TransportError::Protocol { rank: r });
+            }
+            let mut s = self.data[r].as_ref().unwrap().lock().unwrap();
+            loop {
+                match read_frame(
+                    &mut s,
+                    scratch,
+                    deadline,
+                    Some(&self.shared.poisoned),
+                ) {
+                    Ok((KIND_DATA, rnd)) if rnd < round => continue, // stale
+                    Ok((KIND_DATA, rnd)) if rnd == round => break,
+                    Ok((KIND_DATA, _)) => {
+                        return Err(TransportError::Protocol { rank: r })
+                    }
+                    Ok(_) => return Err(TransportError::Protocol { rank: r }),
+                    Err(e) => return Err(self.lift_io(e, r, &start)),
+                }
+            }
+            if scratch.len() % 4 != 0 {
+                return Err(TransportError::Protocol { rank: r });
+            }
+            floats.clear();
+            for chunk in scratch.chunks_exact(4) {
+                floats.push(f32::from_le_bytes(chunk.try_into().unwrap()));
+            }
+            f(r, floats);
+        }
+        Ok(())
+    }
+
+    fn rendezvous(&self, deadline: Deadline) -> Result<(), TransportError> {
+        self.gather_map(self.rank, &[], deadline, &mut |_, _| {})
+    }
+
+    fn poison(&self) {
+        self.shared.poisoned.store(true, Ordering::Release);
+    }
+
+    fn is_poisoned(&self) -> bool {
+        self.shared.poisoned.load(Ordering::Acquire)
+    }
+
+    fn heal(&self) {
+        self.shared.poisoned.store(false, Ordering::Release);
+        // dead and dirty flags stay sticky: a TCP group with a lost or
+        // desynced peer recovers by restart/shrink, not by heal.
+    }
+
+    fn health(&self) -> Vec<RankHealth> {
+        let now = now_ms(&self.shared.start);
+        (0..self.n)
+            .map(|r| {
+                if r == self.rank {
+                    return RankHealth::Alive;
+                }
+                if self.shared.dead[r].load(Ordering::Acquire) {
+                    return RankHealth::Dead;
+                }
+                let gap = now
+                    .saturating_sub(self.shared.last_seen[r].load(Ordering::Acquire));
+                if gap > self.cfg.dead_after.as_millis() as u64 {
+                    RankHealth::Dead
+                } else if gap > self.cfg.straggle_after.as_millis() as u64 {
+                    RankHealth::Straggling
+                } else {
+                    RankHealth::Alive
+                }
+            })
+            .collect()
+    }
+
+    fn arm_fault(&self, fault: ArmedFault) {
+        *self.fault.lock().unwrap() = fault;
+        self.fault_armed.store(!fault.is_inert(), Ordering::Release);
+    }
+}
+
+impl Drop for TcpTransport {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::Release);
+        for t in self.threads.lock().unwrap().drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Build a full in-process group over loopback sockets: `n` transports,
+/// rank-ordered, each on an ephemeral `127.0.0.1` port. Setup runs one
+/// thread per rank because the mesh handshake is a rendezvous.
+pub fn loopback_group(
+    n: usize,
+    cfg: TcpCfg,
+) -> std::io::Result<Vec<TcpTransport>> {
+    let listeners: Vec<TcpListener> = (0..n)
+        .map(|_| TcpListener::bind("127.0.0.1:0"))
+        .collect::<std::io::Result<_>>()?;
+    let addrs: Vec<String> = listeners
+        .iter()
+        .map(|l| l.local_addr().map(|a| a.to_string()))
+        .collect::<std::io::Result<_>>()?;
+    let mut handles = Vec::new();
+    for (r, l) in listeners.into_iter().enumerate() {
+        let addrs = addrs.clone();
+        handles.push(std::thread::spawn(move || {
+            TcpTransport::from_listener(r, l, &addrs, cfg)
+        }));
+    }
+    let mut out = Vec::new();
+    for h in handles {
+        out.push(h.join().map_err(|_| {
+            std::io::Error::other("loopback mesh setup thread panicked")
+        })??);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crossbeam_utils::thread;
+
+    #[test]
+    fn loopback_gather_is_rank_ordered() {
+        let group = loopback_group(3, TcpCfg::default()).unwrap();
+        thread::scope(|s| {
+            for (r, t) in group.iter().enumerate() {
+                s.spawn(move |_| {
+                    let send = vec![r as f32; r + 1]; // ragged lengths
+                    for round in 0..5 {
+                        let mut seen = Vec::new();
+                        t.gather_map(
+                            r,
+                            &send,
+                            Deadline::after(Duration::from_secs(10)),
+                            &mut |peer, p| seen.push((peer, p.to_vec())),
+                        )
+                        .unwrap_or_else(|e| {
+                            panic!("rank {r} round {round}: {e:?}")
+                        });
+                        assert_eq!(
+                            seen.iter().map(|(p, _)| *p).collect::<Vec<_>>(),
+                            vec![0, 1, 2]
+                        );
+                        for (peer, p) in &seen {
+                            assert_eq!(p, &vec![*peer as f32; peer + 1]);
+                        }
+                    }
+                    t.rendezvous(Deadline::after(Duration::from_secs(10)))
+                        .unwrap();
+                });
+            }
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn dropped_peer_turns_dead_in_health_view() {
+        let cfg = TcpCfg {
+            heartbeat_interval: Duration::from_millis(20),
+            straggle_after: Duration::from_millis(60),
+            dead_after: Duration::from_millis(200),
+            ..TcpCfg::default()
+        };
+        let mut group = loopback_group(2, cfg).unwrap();
+        let t1 = group.pop().unwrap();
+        let t0 = group.pop().unwrap();
+        assert_eq!(t0.health(), vec![RankHealth::Alive, RankHealth::Alive]);
+        drop(t1); // rank 1's process "dies": beat stream EOFs
+        let deadline = Instant::now() + Duration::from_secs(5);
+        loop {
+            if t0.health()[1] == RankHealth::Dead {
+                break;
+            }
+            assert!(
+                Instant::now() < deadline,
+                "rank 1 never turned Dead: {:?}",
+                t0.health()
+            );
+            std::thread::sleep(Duration::from_millis(20));
+        }
+    }
+
+    #[test]
+    fn frame_roundtrip_and_crc() {
+        let payload: Vec<u8> =
+            [1.5f32, -2.25, 0.0].iter().flat_map(|v| v.to_le_bytes()).collect();
+        let mut frame = Vec::new();
+        encode_frame(&mut frame, KIND_DATA, 7, &payload);
+        assert_eq!(frame.len(), HEADER_LEN + payload.len() + 4);
+        // Header fields land where the reader expects them.
+        assert_eq!(
+            u32::from_le_bytes(frame[0..4].try_into().unwrap()) as usize,
+            payload.len()
+        );
+        assert_eq!(frame[4], KIND_DATA);
+        assert_eq!(u64::from_le_bytes(frame[5..13].try_into().unwrap()), 7);
+        let crc_off = HEADER_LEN + payload.len();
+        assert_eq!(
+            u32::from_le_bytes(frame[crc_off..].try_into().unwrap()),
+            crc32(&payload)
+        );
+    }
+}

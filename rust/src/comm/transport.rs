@@ -1,0 +1,550 @@
+//! The transport seam: what a collective needs from the wire.
+//!
+//! [`Communicator`](super::Communicator) builds every allocation-free
+//! collective on ONE primitive — [`Transport::gather_map`], an
+//! all-gather of raw `f32` payloads whose callback is invoked **exactly
+//! in rank order** regardless of arrival order. Rank-ordered delivery is
+//! what makes every backend bit-identical: the reduction
+//! `fill(0) → += in rank order → scale(1/n)` sees the same operand
+//! sequence whether the payloads crossed a pointer deposit or a TCP
+//! socket.
+//!
+//! Two backends:
+//! - [`LocalTransport`] — the thread-per-rank pointer-deposit machinery
+//!   (the original `Communicator` internals, extracted verbatim):
+//!   zero-copy, zero-allocation on warm steps, rendezvous on a
+//!   [`PhaseBarrier`].
+//! - [`TcpTransport`](super::tcp::TcpTransport) — one OS process per
+//!   rank over a full TCP mesh (length-prefixed + crc32 frames,
+//!   background heartbeats).
+//!
+//! The seam is *robust*, not just pluggable: every operation takes a
+//! [`Deadline`] and fails with a structured [`TransportError`] instead
+//! of hanging; [`Transport::health`] exposes a per-rank liveness view;
+//! [`Transport::arm_fault`] lets the fault-injection plan drop a rank or
+//! slow a link *inside* the transport, where a deadline can catch it.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use super::PhaseBarrier;
+
+/// An absolute wall-clock budget for one transport operation.
+/// `Deadline::none()` never expires — the default, so existing
+/// single-process schedules keep their "block until the group arrives"
+/// semantics (and their hot path: an unset deadline is never polled).
+#[derive(Debug, Clone, Copy)]
+pub struct Deadline {
+    at: Option<Instant>,
+}
+
+impl Deadline {
+    pub fn none() -> Deadline {
+        Deadline { at: None }
+    }
+
+    pub fn after(d: Duration) -> Deadline {
+        Deadline { at: Some(Instant::now() + d) }
+    }
+
+    pub fn is_none(&self) -> bool {
+        self.at.is_none()
+    }
+
+    pub fn expired(&self) -> bool {
+        matches!(self.at, Some(t) if Instant::now() >= t)
+    }
+
+    /// Time left until expiry (`None` = unbounded).
+    pub fn remaining(&self) -> Option<Duration> {
+        self.at.map(|t| t.saturating_duration_since(Instant::now()))
+    }
+}
+
+/// Why a barrier wait ended without the group completing.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WaitFail {
+    Poisoned,
+    TimedOut,
+}
+
+/// Structured transport failure. `Copy` so the communicator can lift it
+/// into a [`StepError`](crate::robust::StepError) through preallocated
+/// slots.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TransportError {
+    /// Released from a poisoned group (a peer failed mid-step).
+    Poisoned,
+    /// The deadline expired; `waiting_on` is the slowest peer (the first
+    /// rank that had not arrived when the deadline fired).
+    Timeout { waiting_on: usize, elapsed_ms: u64 },
+    /// A peer is confirmed dead (dropped connection / heartbeat loss /
+    /// injected drop), not merely slow.
+    PeerDead { rank: usize },
+    /// A peer sent something unintelligible (framing or checksum
+    /// violation) — treated as that peer being broken.
+    Protocol { rank: usize },
+}
+
+/// Per-rank liveness as seen by the background heartbeat (TCP) or the
+/// sticky dead flags (local).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RankHealth {
+    Alive,
+    /// Heartbeats arriving, but later than the straggle threshold.
+    Straggling,
+    Dead,
+}
+
+/// Transport-level fault injection, armed per optimizer attempt by the
+/// coordinator (from `FaultPlan::{drop_rank, slow_link}`). Fires once,
+/// then disarms.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct ArmedFault {
+    /// This rank vanishes at its next collective (marked dead; the
+    /// collective fails instead of completing).
+    pub drop_rank: Option<usize>,
+    /// `(rank, delay_ms)`: this rank's next collective is delayed inside
+    /// the transport — peers see a slow link, and a deadline catches it.
+    pub slow_link: Option<(usize, u64)>,
+}
+
+impl ArmedFault {
+    pub fn is_inert(&self) -> bool {
+        self.drop_rank.is_none() && self.slow_link.is_none()
+    }
+}
+
+/// What a collective needs from the wire. Object-safe on purpose: the
+/// communicator holds `Arc<dyn Transport>` and the coordinator never
+/// knows which backend it is running on.
+pub trait Transport: Send + Sync {
+    /// Number of ranks in the group.
+    fn world(&self) -> usize;
+
+    /// `true` when every rank lives in this process (threads), so
+    /// pointer-based fast paths (the legacy `exchange` collectives) are
+    /// sound.
+    fn is_fully_local(&self) -> bool;
+
+    /// All-gather of raw payloads: deposit `send`, block until the group
+    /// is complete (or the deadline expires), then invoke `f(r, payload)`
+    /// for every rank `r` **in rank order 0..world()**, including the
+    /// caller's own payload. Per-rank payload lengths may differ (empty
+    /// is fine — a pure rendezvous deposit).
+    ///
+    /// On `Ok(())` every callback ran; on `Err` none may be trusted and
+    /// the caller must treat the step as failed (the coordinator's
+    /// atomicity contract handles the rollback).
+    fn gather_map(
+        &self,
+        rank: usize,
+        send: &[f32],
+        deadline: Deadline,
+        f: &mut dyn FnMut(usize, &[f32]),
+    ) -> Result<(), TransportError>;
+
+    /// Pure group synchronization: no payload, no callback.
+    fn rendezvous(&self, deadline: Deadline) -> Result<(), TransportError>;
+
+    /// Release every current and future waiter with
+    /// [`TransportError::Poisoned`]. Idempotent; callable from panic
+    /// handlers.
+    fn poison(&self);
+
+    fn is_poisoned(&self) -> bool;
+
+    /// Reset a poisoned/timed-out transport for reuse. Only sound at
+    /// group quiescence (every rank task joined). Dead-peer flags are
+    /// sticky: a dead rank stays dead across `heal` (recovery is an
+    /// elastic world shrink, not a heal).
+    fn heal(&self);
+
+    /// Per-rank liveness view (self is always `Alive`).
+    fn health(&self) -> Vec<RankHealth>;
+
+    /// Arm a one-shot transport fault (fault injection). Replaces any
+    /// previously armed fault; `ArmedFault::default()` disarms.
+    fn arm_fault(&self, fault: ArmedFault);
+}
+
+/// One deposit slot: the address and length of the rank's published
+/// `&[f32]` payload for the current round.
+struct Slot {
+    ptr: AtomicUsize,
+    len: AtomicUsize,
+}
+
+/// The in-process backend: the pointer-deposit + [`PhaseBarrier`]
+/// machinery the simulated cluster has always used, now behind the
+/// seam. Zero-allocation on every path a warm step takes (pinned by the
+/// `ns_zero_alloc` suite), bit-identical to the pre-seam collectives.
+///
+/// # Safety contract (deposits)
+///
+/// A deposited slice must stay live until the caller's `gather_map`
+/// returns AND the group round is over — normally the closing barrier
+/// guarantees this, but on a timeout a straggling peer may still read
+/// the slice until the group joins. Every coordinator deposit source
+/// (arena buffers and caller-owned gradient tensors) outlives the
+/// fan-out join, which is why this is sound there; new callers must
+/// preserve the property.
+pub struct LocalTransport {
+    n: usize,
+    barrier: PhaseBarrier,
+    slots: Vec<Slot>,
+    /// Monotonic per-rank deposit counters: rank r bumps `rounds[r]`
+    /// right before depositing, so on a timeout the slowest peer is the
+    /// first rank whose counter lags the max.
+    rounds: Vec<AtomicU64>,
+    /// Sticky dead flags (set by the injected drop-rank fault; a real
+    /// thread cannot vanish). Survive `heal` on purpose.
+    dead: Vec<AtomicBool>,
+    /// Fast-path gate for `fault`: collectives only take the lock when
+    /// a fault is actually armed, so the inert case stays lock-free.
+    fault_armed: AtomicBool,
+    fault: Mutex<ArmedFault>,
+}
+
+impl LocalTransport {
+    pub fn new(n: usize) -> LocalTransport {
+        assert!(n >= 1);
+        LocalTransport {
+            n,
+            barrier: PhaseBarrier::new(n),
+            slots: (0..n)
+                .map(|_| Slot {
+                    ptr: AtomicUsize::new(0),
+                    len: AtomicUsize::new(0),
+                })
+                .collect(),
+            rounds: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            dead: (0..n).map(|_| AtomicBool::new(false)).collect(),
+            fault_armed: AtomicBool::new(false),
+            fault: Mutex::new(ArmedFault::default()),
+        }
+    }
+
+    /// First rank whose deposit counter lags the group maximum — the
+    /// peer a timed-out wait was stuck on. Falls back to rank 0 when
+    /// the counters are level (e.g. a timeout in a rank-less
+    /// rendezvous, where nothing was deposited).
+    fn classify_timeout(&self) -> usize {
+        let max =
+            self.rounds.iter().map(|r| r.load(Ordering::Acquire)).max().unwrap_or(0);
+        self.rounds
+            .iter()
+            .position(|r| r.load(Ordering::Acquire) < max)
+            .unwrap_or(0)
+    }
+
+    /// Fail fast when any peer is already marked dead.
+    fn check_dead(&self) -> Result<(), TransportError> {
+        for (r, d) in self.dead.iter().enumerate() {
+            if d.load(Ordering::Acquire) {
+                return Err(TransportError::PeerDead { rank: r });
+            }
+        }
+        Ok(())
+    }
+
+    /// Fire (and disarm) the armed fault for `rank`, if any. Returns an
+    /// error when the fault kills this rank.
+    fn maybe_fault(&self, rank: usize) -> Result<(), TransportError> {
+        if !self.fault_armed.load(Ordering::Acquire) {
+            return Ok(());
+        }
+        let mut guard = self.fault.lock().unwrap();
+        if let Some((r, delay_ms)) = guard.slow_link {
+            if r == rank {
+                guard.slow_link = None;
+                if guard.is_inert() {
+                    self.fault_armed.store(false, Ordering::Release);
+                }
+                // Sleep BEFORE depositing: peers park at the barrier and
+                // their deadline — not this thread's — decides the
+                // outcome, exactly like a slow NIC.
+                drop(guard);
+                std::thread::sleep(Duration::from_millis(delay_ms));
+                return Ok(());
+            }
+        }
+        if let Some(r) = guard.drop_rank {
+            if r == rank {
+                guard.drop_rank = None;
+                if guard.is_inert() {
+                    self.fault_armed.store(false, Ordering::Release);
+                }
+                drop(guard);
+                // The rank vanishes: sticky dead flag, no deposit, no
+                // barrier arrival. Peers time out (or fail fast on the
+                // flag) and the group must shrink to recover.
+                self.dead[rank].store(true, Ordering::Release);
+                return Err(TransportError::PeerDead { rank });
+            }
+        }
+        Ok(())
+    }
+
+    fn lift_wait(&self, e: WaitFail, start: Option<Instant>) -> TransportError {
+        match e {
+            WaitFail::Poisoned => TransportError::Poisoned,
+            WaitFail::TimedOut => TransportError::Timeout {
+                waiting_on: self.classify_timeout(),
+                elapsed_ms: start
+                    .map(|t| t.elapsed().as_millis() as u64)
+                    .unwrap_or(0),
+            },
+        }
+    }
+}
+
+impl Transport for LocalTransport {
+    fn world(&self) -> usize {
+        self.n
+    }
+
+    fn is_fully_local(&self) -> bool {
+        true
+    }
+
+    fn gather_map(
+        &self,
+        rank: usize,
+        send: &[f32],
+        deadline: Deadline,
+        f: &mut dyn FnMut(usize, &[f32]),
+    ) -> Result<(), TransportError> {
+        assert!(rank < self.n, "gather_map rank {rank} of {}", self.n);
+        self.check_dead()?;
+        self.maybe_fault(rank)?;
+        // Only pay for the clock when a deadline can use it.
+        let start = if deadline.is_none() { None } else { Some(Instant::now()) };
+        self.rounds[rank].fetch_add(1, Ordering::AcqRel);
+        self.slots[rank].ptr.store(send.as_ptr() as usize, Ordering::Relaxed);
+        self.slots[rank].len.store(send.len(), Ordering::Release);
+        self.barrier
+            .wait_deadline(deadline)
+            .map_err(|e| self.lift_wait(e, start))?;
+        for r in 0..self.n {
+            let len = self.slots[r].len.load(Ordering::Acquire);
+            let ptr = self.slots[r].ptr.load(Ordering::Relaxed) as *const f32;
+            if len == 0 {
+                f(r, &[]);
+            } else {
+                // SAFETY: an Ok from the opening wait means all n ranks
+                // deposited this round, and the module-level deposit
+                // contract keeps every published slice live until the
+                // closing wait below (see `LocalTransport` docs for the
+                // timeout caveat).
+                f(r, unsafe { std::slice::from_raw_parts(ptr, len) });
+            }
+        }
+        self.barrier
+            .wait_deadline(deadline)
+            .map_err(|e| self.lift_wait(e, start))?;
+        Ok(())
+    }
+
+    fn rendezvous(&self, deadline: Deadline) -> Result<(), TransportError> {
+        self.check_dead()?;
+        let start = if deadline.is_none() { None } else { Some(Instant::now()) };
+        self.barrier
+            .wait_deadline(deadline)
+            .map_err(|e| self.lift_wait(e, start))
+    }
+
+    fn poison(&self) {
+        self.barrier.poison();
+    }
+
+    fn is_poisoned(&self) -> bool {
+        self.barrier.is_poisoned()
+    }
+
+    fn heal(&self) {
+        self.barrier.heal();
+        // Level the deposit counters: a failed round leaves the fast
+        // ranks one ahead of the rank that never deposited, and a later
+        // genuine timeout must not re-attribute to that stale gap.
+        let max =
+            self.rounds.iter().map(|r| r.load(Ordering::Acquire)).max().unwrap_or(0);
+        for r in &self.rounds {
+            r.store(max, Ordering::Release);
+        }
+    }
+
+    fn health(&self) -> Vec<RankHealth> {
+        self.dead
+            .iter()
+            .map(|d| {
+                if d.load(Ordering::Acquire) {
+                    RankHealth::Dead
+                } else {
+                    RankHealth::Alive
+                }
+            })
+            .collect()
+    }
+
+    fn arm_fault(&self, fault: ArmedFault) {
+        *self.fault.lock().unwrap() = fault;
+        self.fault_armed.store(!fault.is_inert(), Ordering::Release);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crossbeam_utils::thread;
+
+    #[test]
+    fn deadline_none_never_expires() {
+        let d = Deadline::none();
+        assert!(d.is_none());
+        assert!(!d.expired());
+        assert_eq!(d.remaining(), None);
+        let e = Deadline::after(Duration::from_millis(0));
+        assert!(e.expired());
+        let f = Deadline::after(Duration::from_secs(3600));
+        assert!(!f.expired());
+        assert!(f.remaining().unwrap() > Duration::from_secs(3000));
+    }
+
+    #[test]
+    fn gather_map_orders_callbacks_by_rank() {
+        let t = LocalTransport::new(3);
+        thread::scope(|s| {
+            for r in 0..3usize {
+                let t = &t;
+                s.spawn(move |_| {
+                    let send = vec![r as f32; r + 1]; // ragged lengths
+                    for _ in 0..50 {
+                        let mut seen: Vec<(usize, Vec<f32>)> = Vec::new();
+                        t.gather_map(
+                            r,
+                            &send,
+                            Deadline::none(),
+                            &mut |peer, payload| {
+                                seen.push((peer, payload.to_vec()));
+                            },
+                        )
+                        .unwrap();
+                        assert_eq!(
+                            seen.iter().map(|(p, _)| *p).collect::<Vec<_>>(),
+                            vec![0, 1, 2],
+                            "rank {r}: callbacks out of rank order"
+                        );
+                        for (peer, payload) in &seen {
+                            assert_eq!(payload, &vec![*peer as f32; peer + 1]);
+                        }
+                    }
+                });
+            }
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn empty_payloads_are_pure_rendezvous() {
+        let t = LocalTransport::new(2);
+        thread::scope(|s| {
+            for r in 0..2usize {
+                let t = &t;
+                s.spawn(move |_| {
+                    let mut lens = Vec::new();
+                    t.gather_map(r, &[], Deadline::none(), &mut |_, p| {
+                        lens.push(p.len());
+                    })
+                    .unwrap();
+                    assert_eq!(lens, vec![0, 0]);
+                    t.rendezvous(Deadline::none()).unwrap();
+                });
+            }
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn timeout_names_the_missing_rank() {
+        // Rank 1 never shows up: rank 0's wait must expire and attribute
+        // the stall to rank 1 (its deposit counter lags).
+        let t = LocalTransport::new(2);
+        let got = t.gather_map(
+            0,
+            &[1.0],
+            Deadline::after(Duration::from_millis(50)),
+            &mut |_, _| panic!("callback must not run on timeout"),
+        );
+        match got {
+            Err(TransportError::Timeout { waiting_on, elapsed_ms }) => {
+                assert_eq!(waiting_on, 1);
+                assert!(elapsed_ms >= 50, "elapsed {elapsed_ms}ms < deadline");
+            }
+            other => panic!("want Timeout, got {other:?}"),
+        }
+        // Heal levels the counters; a clean round then works.
+        t.heal();
+        thread::scope(|s| {
+            for r in 0..2usize {
+                let t = &t;
+                s.spawn(move |_| {
+                    let send = [r as f32];
+                    let mut sum = 0.0;
+                    t.gather_map(r, &send, Deadline::none(), &mut |_, p| {
+                        sum += p[0];
+                    })
+                    .unwrap();
+                    assert_eq!(sum, 1.0);
+                });
+            }
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn armed_drop_rank_is_sticky_dead() {
+        let t = LocalTransport::new(2);
+        t.arm_fault(ArmedFault { drop_rank: Some(1), ..Default::default() });
+        let got = t.gather_map(1, &[], Deadline::none(), &mut |_, _| {});
+        assert_eq!(got, Err(TransportError::PeerDead { rank: 1 }));
+        assert_eq!(
+            t.health(),
+            vec![RankHealth::Alive, RankHealth::Dead],
+            "drop must show in the health view"
+        );
+        // Dead flags survive heal: peers fail fast instead of hanging.
+        t.heal();
+        let got = t.gather_map(0, &[], Deadline::none(), &mut |_, _| {});
+        assert_eq!(got, Err(TransportError::PeerDead { rank: 1 }));
+        // The fault disarmed after firing.
+        assert!(!t.fault_armed.load(Ordering::Acquire));
+    }
+
+    #[test]
+    fn armed_slow_link_fires_once() {
+        let t = LocalTransport::new(1);
+        t.arm_fault(ArmedFault {
+            slow_link: Some((0, 30)),
+            ..Default::default()
+        });
+        let start = Instant::now();
+        t.gather_map(0, &[], Deadline::none(), &mut |_, _| {}).unwrap();
+        assert!(start.elapsed() >= Duration::from_millis(30));
+        // Disarmed: the second round is fast.
+        let start = Instant::now();
+        t.gather_map(0, &[], Deadline::none(), &mut |_, _| {}).unwrap();
+        assert!(start.elapsed() < Duration::from_millis(30));
+    }
+
+    #[test]
+    fn poison_beats_deadline() {
+        let t = LocalTransport::new(2);
+        t.poison();
+        let got = t.rendezvous(Deadline::after(Duration::from_secs(5)));
+        assert_eq!(got, Err(TransportError::Poisoned));
+        t.heal();
+        assert!(!t.is_poisoned());
+    }
+}

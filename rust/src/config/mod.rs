@@ -7,7 +7,9 @@ use anyhow::Result;
 
 use crate::mesh::{Layout, StateSharding};
 use crate::optim::{MuonCfg, Schedule};
-use crate::robust::{AnomalyPolicy, FaultPlan, PhasePanic, Straggler};
+use crate::robust::{
+    AnomalyPolicy, DropRank, FaultPlan, PhasePanic, SlowLink, Straggler,
+};
 use crate::utils::cli::Args;
 use crate::utils::json::Json;
 
@@ -43,7 +45,19 @@ pub struct RunConfig {
     pub eval_every: usize,
     /// Output CSV path ("" = don't write).
     pub out: String,
-    /// Anomaly policy: abort | skip-step | escalate-full-orth.
+    /// DP transport backend: local (in-process pointer deposits) | tcp
+    /// (one OS process per DP rank over loopback/LAN sockets).
+    pub transport: String,
+    /// This process's DP rank (tcp transport only).
+    pub rank: usize,
+    /// Peer listen addresses, DP-rank order, `host:port` each (tcp only).
+    pub peers: Vec<String>,
+    /// Per-collective deadline in milliseconds (0 = wait forever).
+    pub deadline_ms: u64,
+    /// TCP heartbeat interval in milliseconds (0 = transport default).
+    pub heartbeat_ms: u64,
+    /// Anomaly policy: abort | skip-step | escalate-full-orth |
+    /// degrade-block.
     pub on_anomaly: AnomalyPolicy,
     /// Deterministic fault injection plan (inert by default).
     pub fault: FaultPlan,
@@ -74,6 +88,11 @@ impl Default for RunConfig {
             seed: 0,
             eval_every: 20,
             out: String::new(),
+            transport: "local".into(),
+            rank: 0,
+            peers: Vec::new(),
+            deadline_ms: 0,
+            heartbeat_ms: 0,
             on_anomaly: AnomalyPolicy::Abort,
             fault: FaultPlan::default(),
             checkpoint_dir: String::new(),
@@ -143,6 +162,21 @@ impl RunConfig {
         if let Some(v) = j.get("out") {
             c.out = v.as_str()?.to_string();
         }
+        if let Some(v) = j.get("transport") {
+            c.transport = parse_transport(v.as_str()?)?;
+        }
+        if let Some(v) = j.get("rank") {
+            c.rank = v.as_usize()?;
+        }
+        if let Some(v) = j.get("peers") {
+            c.peers = split_peers(v.as_str()?);
+        }
+        if let Some(v) = j.get("deadline_ms") {
+            c.deadline_ms = v.as_usize()? as u64;
+        }
+        if let Some(v) = j.get("heartbeat_ms") {
+            c.heartbeat_ms = v.as_usize()? as u64;
+        }
         if let Some(v) = j.get("on_anomaly") {
             c.on_anomaly = AnomalyPolicy::parse(v.as_str()?)?;
         }
@@ -154,6 +188,12 @@ impl RunConfig {
         }
         if let Some(v) = j.get("fault_straggle") {
             c.fault.straggler = Some(Straggler::parse(v.as_str()?)?);
+        }
+        if let Some(v) = j.get("fault_drop_rank") {
+            c.fault.drop_rank = Some(DropRank::parse(v.as_str()?)?);
+        }
+        if let Some(v) = j.get("fault_slow_link") {
+            c.fault.slow_link = Some(SlowLink::parse(v.as_str()?)?);
         }
         if let Some(v) = j.get("checkpoint_dir") {
             c.checkpoint_dir = v.as_str()?.to_string();
@@ -206,6 +246,17 @@ impl RunConfig {
         if let Some(v) = args.get("out") {
             self.out = v.to_string();
         }
+        if let Some(v) = args.get("transport") {
+            self.transport = parse_transport(v)?;
+        }
+        self.rank = args.get_usize("rank", self.rank)?;
+        if let Some(v) = args.get("peers") {
+            self.peers = split_peers(v);
+        }
+        self.deadline_ms =
+            args.get_usize("deadline-ms", self.deadline_ms as usize)? as u64;
+        self.heartbeat_ms =
+            args.get_usize("heartbeat-ms", self.heartbeat_ms as usize)? as u64;
         if let Some(v) = args.get("on-anomaly") {
             self.on_anomaly = AnomalyPolicy::parse(v)?;
         }
@@ -218,6 +269,12 @@ impl RunConfig {
         }
         if let Some(v) = args.get("fault-straggle") {
             self.fault.straggler = Some(Straggler::parse(v)?);
+        }
+        if let Some(v) = args.get("fault-drop-rank") {
+            self.fault.drop_rank = Some(DropRank::parse(v)?);
+        }
+        if let Some(v) = args.get("fault-slow-link") {
+            self.fault.slow_link = Some(SlowLink::parse(v)?);
         }
         if let Some(v) = args.get("checkpoint-dir") {
             self.checkpoint_dir = v.to_string();
@@ -253,6 +310,27 @@ impl RunConfig {
             self.eta_block_ratio
         }
     }
+}
+
+/// Validate a `--transport` value. Kept as a plain string in the config
+/// (the launcher owns the actual backend construction) but rejected early
+/// so typos fail at parse time, not mid-launch.
+fn parse_transport(s: &str) -> Result<String> {
+    match s {
+        "local" | "tcp" => Ok(s.to_string()),
+        other => Err(anyhow::anyhow!(
+            "unknown transport {other:?} (expected local | tcp)"
+        )),
+    }
+}
+
+/// Split a `--peers host:port,host:port,...` list, trimming whitespace
+/// and dropping empty segments (trailing commas are harmless).
+fn split_peers(s: &str) -> Vec<String> {
+    s.split(',')
+        .map(|p| p.trim().to_string())
+        .filter(|p| !p.is_empty())
+        .collect()
 }
 
 #[cfg(test)]
@@ -308,6 +386,63 @@ mod tests {
         )
         .unwrap();
         assert!(c.apply_args(&bad).is_err());
+    }
+
+    #[test]
+    fn transport_plumbing() {
+        let j = Json::parse(
+            r#"{"transport":"tcp","rank":1,
+                "peers":"127.0.0.1:7001, 127.0.0.1:7002,",
+                "deadline_ms":250,"heartbeat_ms":50}"#,
+        )
+        .unwrap();
+        let mut c = RunConfig::from_json(&j).unwrap();
+        assert_eq!(c.transport, "tcp");
+        assert_eq!(c.rank, 1);
+        assert_eq!(c.peers, vec!["127.0.0.1:7001", "127.0.0.1:7002"]);
+        assert_eq!(c.deadline_ms, 250);
+        assert_eq!(c.heartbeat_ms, 50);
+        // CLI overrides win; bad transport values are rejected.
+        let args = Args::parse(
+            ["--transport", "local", "--deadline-ms", "0"]
+                .iter()
+                .map(|s| s.to_string()),
+        )
+        .unwrap();
+        c.apply_args(&args).unwrap();
+        assert_eq!(c.transport, "local");
+        assert_eq!(c.deadline_ms, 0);
+        let bad = Args::parse(
+            ["--transport", "carrier-pigeon"].iter().map(|s| s.to_string()),
+        )
+        .unwrap();
+        assert!(c.apply_args(&bad).is_err());
+        let j = Json::parse(r#"{"transport":"mpi"}"#).unwrap();
+        assert!(RunConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn transport_fault_flags() {
+        let args = Args::parse(
+            ["--fault-drop-rank", "2:1", "--fault-slow-link", "1:0:500"]
+                .iter()
+                .map(|s| s.to_string()),
+        )
+        .unwrap();
+        let mut c = RunConfig::default();
+        c.apply_args(&args).unwrap();
+        let d = c.fault.drop_rank.unwrap();
+        assert_eq!((d.attempt, d.rank), (2, 1));
+        let s = c.fault.slow_link.unwrap();
+        assert_eq!((s.attempt, s.rank, s.delay_ms), (1, 0, 500));
+        // JSON spelling of the same plan.
+        let j = Json::parse(
+            r#"{"fault_drop_rank":"3:0","fault_slow_link":"4:1:25"}"#,
+        )
+        .unwrap();
+        let c = RunConfig::from_json(&j).unwrap();
+        assert_eq!(c.fault.drop_rank.unwrap().attempt, 3);
+        assert_eq!(c.fault.slow_link.unwrap().delay_ms, 25);
     }
 
     #[test]

@@ -86,9 +86,13 @@
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 use crate::checkpoint::Snapshot;
-use crate::comm::{CollectiveKind, CommStats, Communicator};
+use crate::comm::{
+    ArmedFault, CollectiveKind, CommStats, Communicator, RankHealth,
+    Transport,
+};
 use crate::costmodel::netmodel::NetModel;
 use crate::linalg::newton_schulz::{NsCoeffs, NsWorkspace};
 use crate::mesh::{Layout, Mesh, StateSharding};
@@ -117,6 +121,12 @@ pub struct DistMuonBuilder {
     pub sharding: StateSharding,
     pub fault: FaultPlan,
     pub orth: Option<OrthFn>,
+    /// Deadline for every DP collective; `None` keeps the historical
+    /// block-forever semantics.
+    pub collective_deadline: Option<Duration>,
+    /// Non-local DP transport (e.g. TCP) and the DP rank this process
+    /// plays. `None` = fully-local simulated group.
+    pub dp_transport: Option<(Arc<dyn Transport>, usize)>,
 }
 
 impl DistMuonBuilder {
@@ -132,6 +142,8 @@ impl DistMuonBuilder {
             sharding: StateSharding::Replicated,
             fault: FaultPlan::default(),
             orth: None,
+            collective_deadline: None,
+            dp_transport: None,
         }
     }
 
@@ -158,6 +170,28 @@ impl DistMuonBuilder {
     /// Default is inert.
     pub fn fault_plan(mut self, fault: FaultPlan) -> Self {
         self.fault = fault;
+        self
+    }
+
+    /// Bound every DP collective: a group that cannot complete within
+    /// `d` surfaces [`StepError::Timeout`] (naming the missing rank and
+    /// the schedule phase) instead of hanging forever.
+    pub fn collective_deadline(mut self, d: Duration) -> Self {
+        self.collective_deadline = Some(d);
+        self
+    }
+
+    /// Run the DP group over an explicit transport backend (e.g.
+    /// [`crate::comm::tcp::TcpTransport`]): this process IS DP rank
+    /// `local_rank`, its peers are separate OS processes, and the DP
+    /// sync runs the local rank's collective schedule inline instead of
+    /// fanning simulated ranks across the pool.
+    pub fn dp_transport(
+        mut self,
+        transport: Arc<dyn Transport>,
+        local_rank: usize,
+    ) -> Self {
+        self.dp_transport = Some((transport, local_rank));
         self
     }
 
@@ -270,8 +304,22 @@ impl DistMuonBuilder {
         // dp == 1 in replicated mode — the input grads are used as-is —
         // but always allocated under ZeRO-1, whose momentum state lives
         // in the DP phase even at dp = 1.
+        let dp_local = self.dp_transport.as_ref().map(|(_, r)| *r);
+        if dp_local.is_some() {
+            // ZeRO-1's reduce-scatter/all-gather schedule is wired for
+            // the pooled simulated group; momentum-sharded multi-process
+            // runs are out of scope for the TCP backend.
+            assert!(
+                !zero1,
+                "ZeRO-1 state sharding requires the fully-local DP \
+                 transport"
+            );
+        }
+        // Over a non-local transport this process hosts exactly one DP
+        // rank, so one accumulator row suffices (row 0 = local rank).
+        let acc_rows = if dp_local.is_some() { 1 } else { self.mesh.dp };
         let dp_acc: Vec<Vec<Tensor>> = if self.mesh.dp > 1 || zero1 {
-            (0..self.mesh.dp)
+            (0..acc_rows)
                 .map(|_| {
                     metas.iter().map(|p| Tensor::zeros(&p.shape)).collect()
                 })
@@ -287,10 +335,26 @@ impl DistMuonBuilder {
                 coeffs: self.cfg.coeffs,
             },
         };
+        let dp_comm = match &self.dp_transport {
+            Some((t, local)) => {
+                assert_eq!(
+                    t.world(),
+                    self.mesh.dp,
+                    "dp_transport world must match mesh.dp"
+                );
+                assert!(*local < self.mesh.dp, "dp_transport local rank");
+                Communicator::with_transport(Arc::clone(t), self.dp_net)
+            }
+            None => Communicator::new(self.mesh.dp, self.dp_net),
+        };
+        dp_comm.set_deadline(self.collective_deadline);
         DistMuon {
             mesh: self.mesh,
             tp_comm: Communicator::new(self.mesh.tp, self.tp_net),
-            dp_comm: Communicator::new(self.mesh.dp, self.dp_net),
+            dp_comm,
+            dp_net: self.dp_net,
+            dp_local,
+            collective_deadline: self.collective_deadline,
             cfg: self.cfg,
             metas: metas.to_vec(),
             specs,
@@ -313,6 +377,8 @@ impl DistMuonBuilder {
             t: 0,
             attempts: 0,
             escalations: 0,
+            degradations: 0,
+            pending_makeup: false,
             err_slot: Mutex::new(None),
             last_opt_bytes: 0,
         }
@@ -357,6 +423,14 @@ pub struct DistMuon {
     mesh: Mesh,
     tp_comm: Communicator,
     dp_comm: Communicator,
+    /// DP net model, kept for elastic rebuilds ([`DistMuon::shrink_dp`]).
+    dp_net: NetModel,
+    /// Local DP rank when the DP group runs over a non-local transport
+    /// (one process per rank); `None` for the fully-local simulated
+    /// group, whose collectives fan every rank across the pool.
+    dp_local: Option<usize>,
+    /// Per-collective deadline, re-applied to rebuilt communicators.
+    collective_deadline: Option<Duration>,
     cfg: MuonCfg,
     metas: Vec<ParamMeta>,
     specs: Vec<Option<ShardSpec>>,
@@ -415,6 +489,14 @@ pub struct DistMuon {
     /// Block steps retried as full orthogonalization under the
     /// `escalate-full-orth` anomaly policy.
     escalations: u64,
+    /// Steps whose DP sync timed out (or lost a peer) and were committed
+    /// as comm-avoiding blockwise-only steps under the `degrade-block`
+    /// anomaly policy.
+    degradations: u64,
+    /// A degraded step swallowed a *scheduled* full orthogonalization;
+    /// the next healthy step runs a makeup full step regardless of the
+    /// period schedule.
+    pending_makeup: bool,
     /// Preallocated failure slot for the pooled phases (keeps the
     /// fault-free warm step allocation-free).
     err_slot: Mutex<Option<StepError>>,
@@ -458,6 +540,44 @@ impl DistMuon {
         self.escalations
     }
 
+    /// Steps committed as comm-avoiding blockwise-only steps (with the
+    /// blockwise stepsize) after their DP sync timed out or lost a peer
+    /// under the `degrade-block` anomaly policy.
+    pub fn degradations(&self) -> u64 {
+        self.degradations
+    }
+
+    /// Per-rank DP liveness as seen by the transport (heartbeats over
+    /// TCP, sticky drop flags locally).
+    pub fn dp_health(&self) -> Vec<RankHealth> {
+        self.dp_comm.health()
+    }
+
+    /// Arm this attempt's transport-level faults (if any) on the DP
+    /// communicator. The fully-local transport hosts every rank, so the
+    /// whole fault is armed once; over TCP each process arms only its
+    /// own rank's fault (a slow link is injected at the sender, a
+    /// dropped rank at the dying process).
+    fn arm_transport_faults(&self, attempt: u64) {
+        let local_is = |rank: usize| {
+            self.dp_local.is_none() || self.dp_local == Some(rank)
+        };
+        let mut armed = ArmedFault::default();
+        if let Some(d) = &self.fault.drop_rank {
+            if d.attempt == attempt && local_is(d.rank) {
+                armed.drop_rank = Some(d.rank);
+            }
+        }
+        if let Some(s) = &self.fault.slow_link {
+            if s.attempt == attempt && local_is(s.rank) {
+                armed.slow_link = Some((s.rank, s.delay_ms));
+            }
+        }
+        if !armed.is_inert() {
+            self.dp_comm.arm_fault(armed);
+        }
+    }
+
     /// Phase 0 — fallible DP gradient sync into the staging arenas.
     ///
     /// Replicated: one all-reduce-mean per param into `dp_acc`.
@@ -476,6 +596,29 @@ impl DistMuon {
     ) -> Result<(), StepError> {
         let zero1 = self.sharding == StateSharding::Zero1;
         if self.mesh.dp <= 1 && !zero1 {
+            return Ok(());
+        }
+        self.dp_comm.set_phase(0);
+        if let Some(local) = self.dp_local {
+            // One OS process per DP rank: run the local rank's
+            // collective schedule inline — its peers execute the same
+            // schedule in their own processes, and the transport is the
+            // rendezvous. Replicated-only (asserted at build).
+            let comm = &self.dp_comm;
+            let fault = &self.fault;
+            let acc = &mut self.dp_acc[0];
+            let res = comm.run_fallible(local, 0, || {
+                fault.maybe_straggle(attempt, local);
+                fault.maybe_panic(attempt, local, 0);
+                for (g, dst) in grads.iter().zip(acc.iter_mut()) {
+                    comm.all_reduce_mean_into(local, g, dst)?;
+                }
+                Ok(())
+            });
+            if let Err(e) = res {
+                self.dp_comm.heal();
+                return Err(e);
+            }
             return Ok(());
         }
         {
@@ -543,6 +686,11 @@ impl DistMuon {
                     Ok(())
                 });
                 if let Err(e) = res {
+                    // A failed rank never reaches this round's barrier:
+                    // release parked peers (who may hold no deadline)
+                    // with Poisoned instead of letting them hang. The
+                    // heal below, after the join, restores the group.
+                    comm.poison();
                     record_err(err_slot, e);
                 }
             });
@@ -763,14 +911,20 @@ impl DistMuon {
                 // Gather: the phase-1 join guarantees every staged
                 // momentum shard is final; replica deposits (ranks >= nb
                 // on a clamped grid) move no payload and are not charged.
+                // The reassembly memcpy is the measured wall-clock of
+                // the in-process gather.
+                let gather_started = Instant::now();
                 unshard_from(spec, &mut sc.full, |b| {
                     &self.rank_momenta_next[b][ord]
                 });
                 let real_bytes: usize =
                     (0..nb).map(|b| spec.block_bytes(b)).sum();
                 if nb > 1 {
-                    self.tp_comm
-                        .charge_collective(CollectiveKind::Gather, real_bytes);
+                    self.tp_comm.charge_collective_timed(
+                        CollectiveKind::Gather,
+                        real_bytes,
+                        gather_started.elapsed().as_secs_f64(),
+                    );
                 }
                 let DistScratch { full: m_full, update } = sc;
                 // One leader orthogonalization per matrix per full step.
@@ -811,11 +965,13 @@ impl DistMuon {
                 // Scatter of the update shards back to the owning ranks
                 // (replica ranks excluded, as above). The shards are
                 // read out of `update` directly — an exact-copy
-                // roundtrip, so skipping the re-assembly is bit-free.
+                // roundtrip that moves nothing in-process, so the
+                // measured wall-clock is zero by construction.
                 if nb > 1 {
-                    self.tp_comm.charge_collective(
+                    self.tp_comm.charge_collective_timed(
                         CollectiveKind::Scatter,
                         real_bytes,
+                        0.0,
                     );
                 }
             } else {
@@ -826,6 +982,89 @@ impl DistMuon {
             }
         }
         Ok(())
+    }
+
+    /// Elastic DP shrink after a confirmed rank death (one
+    /// [`DistMuon::dp_health`] reports `Dead`): snapshot the surviving
+    /// optimizer state through the canonical mesh-independent layout,
+    /// rebuild the DP group — communicator and arenas — at `dp - 1`,
+    /// and restore onto the shrunken mesh. The distributed equivalent
+    /// of a checkpoint/restart without leaving the process. TP arenas,
+    /// the step counter, and the anomaly counters carry over; DP comm
+    /// stats reset with the rebuilt communicator; `dead_rank` is
+    /// validation only (replicated state is rank-symmetric, and ZeRO-1
+    /// slices pass through the canonical full-matrix snapshot).
+    ///
+    /// Only supported on the fully-local transport, where every
+    /// surviving rank's state lives in this process. Over TCP the
+    /// supervisor restarts the survivors from the on-disk checkpoint
+    /// instead (see [`StepError::exit_code`]).
+    pub fn shrink_dp(&mut self, dead_rank: usize) -> anyhow::Result<()> {
+        assert!(
+            self.dp_local.is_none(),
+            "shrink_dp requires the fully-local DP transport; TCP \
+             supervisors restart survivors from a checkpoint"
+        );
+        if dead_rank >= self.mesh.dp {
+            anyhow::bail!(
+                "shrink_dp: rank {dead_rank} out of range (dp={})",
+                self.mesh.dp
+            );
+        }
+        if self.mesh.dp < 2 {
+            anyhow::bail!("shrink_dp: cannot shrink below one DP rank");
+        }
+        let snap = self
+            .snapshot()
+            .expect("DistMuon::snapshot is always available");
+        let mesh = Mesh::new(self.mesh.dp - 1, self.mesh.tp)?;
+        self.mesh = mesh;
+        let dp_comm = Communicator::new(mesh.dp, self.dp_net);
+        dp_comm.set_deadline(self.collective_deadline);
+        self.dp_comm = dp_comm;
+        let zero1 = self.sharding == StateSharding::Zero1;
+        self.dp_acc = if mesh.dp > 1 || zero1 {
+            (0..mesh.dp)
+                .map(|_| {
+                    self.metas
+                        .iter()
+                        .map(|p| Tensor::zeros(&p.shape))
+                        .collect()
+                })
+                .collect()
+        } else {
+            Vec::new()
+        };
+        if zero1 {
+            let slices = |metas: &[ParamMeta]| -> Vec<Vec<Tensor>> {
+                (0..mesh.dp)
+                    .map(|r| {
+                        metas
+                            .iter()
+                            .filter(|p| p.kind == ParamKind::Matrix)
+                            .map(|p| {
+                                row_slice_zeros(
+                                    p.shape[0], p.shape[1], mesh.dp, r,
+                                )
+                            })
+                            .collect()
+                    })
+                    .collect()
+            };
+            self.dp_momenta = slices(&self.metas);
+            self.dp_momenta_next = slices(&self.metas);
+            self.dp_grad_slices = slices(&self.metas);
+        }
+        // restore() realigns `attempts` to the snapshot's committed-step
+        // count (right for a fresh process resuming from disk). Here the
+        // SAME process continues, so keep the live attempt counter: the
+        // failed attempt that killed the rank must stay consumed, or
+        // one-shot injected faults keyed on it would re-fire after the
+        // shrink.
+        let attempts = self.attempts;
+        let out = self.restore(&snap);
+        self.attempts = attempts;
+        out
     }
 }
 
@@ -861,14 +1100,48 @@ impl Optimizer for DistMuon {
             return Err(StepError::NonFiniteGrad { param });
         }
         let t_next = self.t + 1;
-        let full = self.cfg.period.is_full_step(t_next - 1);
+        // A pending makeup means an earlier degraded step swallowed a
+        // scheduled full orthogonalization: run it now, off-schedule.
+        let full =
+            self.cfg.period.is_full_step(t_next - 1) || self.pending_makeup;
         let tp_before = self.tp_comm.stats().total_bytes();
 
         let zero1 = self.sharding == StateSharding::Zero1;
-        let use_acc = self.mesh.dp > 1 || zero1;
+
+        // Transport-level faults (--fault-drop-rank / --fault-slow-link)
+        // key off the same 1-based attempt space as the panic and
+        // straggler plans, so an injected fault fires exactly once.
+        self.arm_transport_faults(attempt);
 
         // ---- Phase 0 (fallible): DP sync into staging (see `dp_sync`).
-        self.dp_sync(grads, attempt)?;
+        // Under `degrade-block` a sync that times out or loses a peer
+        // does NOT fail the step: block steps need no gather/scatter, so
+        // the attempt proceeds as a comm-avoiding blockwise-only step on
+        // the local gradients, committed with the blockwise stepsize —
+        // the paper's §3.2 two-stepsize rule, applied in reverse of the
+        // `escalate-full-orth` policy.
+        let mut degraded = false;
+        if let Err(e) = self.dp_sync(grads, attempt) {
+            let degradable = matches!(
+                e,
+                StepError::Timeout { .. } | StepError::PeerDead { .. }
+            );
+            if degradable
+                && self.cfg.on_anomaly == AnomalyPolicy::DegradeBlock
+                && self.sharding == StateSharding::Replicated
+            {
+                degraded = true;
+            } else {
+                return Err(e);
+            }
+        }
+        // A degraded attempt falls back to the raw local gradients; in
+        // the simulated cluster every DP rank holds the same `grads`, so
+        // skipping the mean is bit-identical to a completed sync. ZeRO-1
+        // cannot degrade (its momentum state lives in the DP phase), so
+        // the policy gate above requires replicated sharding.
+        let use_acc = (self.mesh.dp > 1 || zero1) && !degraded;
+        let run_full = full && !degraded;
 
         // What the TP phases consume: mean gradients (replicated),
         // except matrix entries under ZeRO-1, which are the gathered
@@ -893,10 +1166,10 @@ impl Optimizer for DistMuon {
             // orthogonalization step and committed with the full-step
             // stepsize. The retry is safe because the failed attempt
             // only wrote staging buffers the retry fully rewrites.
-            match self.run_tp(full, synced, attempt) {
-                Ok(()) => Ok(full),
+            match self.run_tp(run_full, synced, attempt) {
+                Ok(()) => Ok(run_full),
                 Err(StepError::NsDiverged { .. })
-                    if !full
+                    if !run_full
                         && self.cfg.on_anomaly
                             == AnomalyPolicy::EscalateFullOrth =>
                 {
@@ -921,6 +1194,16 @@ impl Optimizer for DistMuon {
             std::mem::swap(&mut self.dp_momenta, &mut self.dp_momenta_next);
         }
         self.t = t_next;
+        if degraded {
+            self.degradations += 1;
+            if full {
+                // The scheduled (or already-owed) full orthogonalization
+                // was skipped; owe a makeup on the next healthy step.
+                self.pending_makeup = true;
+            }
+        } else if committed_full {
+            self.pending_makeup = false;
+        }
         let eta = if committed_full {
             lr
         } else {

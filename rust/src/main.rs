@@ -4,6 +4,8 @@
 //!   train        run a training job (see --help text below)
 //!   throughput   print the Table-4-style analytic throughput matrix
 //!   info         print artifact manifest / environment summary
+//!   dist-smoke   tiny fixed-shape DistMuon run on synthetic gradients
+//!                (multi-process transport test harness; no artifacts)
 //!
 //! Examples:
 //!   muonbp train --model bench --optimizer muonbp --period 5 --steps 200 \
@@ -12,8 +14,11 @@
 //!   muonbp info
 
 use std::sync::Arc;
+use std::time::Duration;
 
 use anyhow::Result;
+use muonbp::checkpoint;
+use muonbp::comm::{TcpCfg, TcpTransport, Transport};
 use muonbp::config::RunConfig;
 use muonbp::coordinator::DistMuonBuilder;
 use muonbp::costmodel::throughput::{throughput_tflops, HwPreset, Method};
@@ -22,24 +27,34 @@ use muonbp::data::CorpusCfg;
 use muonbp::mesh::{Mesh, StateSharding};
 use muonbp::metrics::{ppl, render_table};
 use muonbp::optim::muon::Period;
-use muonbp::optim::{by_name, Muon, MuonCfg, Optimizer};
+use muonbp::optim::{by_name, Muon, MuonCfg, Optimizer, ParamKind, ParamMeta};
 use muonbp::runtime::{NsEngine, Runtime};
+use muonbp::tensor::Tensor;
 use muonbp::train::{TrainCfg, Trainer};
 use muonbp::utils::cli::Args;
+use muonbp::utils::rng::Rng;
 
-const USAGE: &str = "usage: muonbp <train|throughput|info> [--key value ...]
+const USAGE: &str = "usage: muonbp <train|throughput|info|dist-smoke> [--key value ...]
   train options: --model tiny|bench|e2e  --optimizer adamw|muon|blockmuon|muonbp|dion
                  --steps N --lr F --period P --dp N --tp N --distributed
                  --state-sharding replicated|zero1 (ZeRO-1 momentum rows)
                  --eta-block-ratio F|theory (theory = 1/sqrt(rc), paper §3.2)
                  --schedule constant|cosine|wsd --seed N --out results/run.csv
                  --config path.json (JSON file, CLI overrides win)
+  transport (distributed runs; default local = in-process):
+                 --transport local|tcp --rank N --peers host:port,host:port,...
+                 --deadline-ms MS (per-collective deadline, 0 = wait forever)
+                 --heartbeat-ms MS (tcp liveness probe interval)
   fault tolerance:
-                 --on-anomaly abort|skip-step|escalate-full-orth
+                 --on-anomaly abort|skip-step|escalate-full-orth|degrade-block
                  --checkpoint-dir DIR --checkpoint-every N --resume
                  --fault-nan-step N (inject NaN grads at trainer step N)
                  --fault-panic A:R:P (panic rank R, phase P, attempt A)
-                 --fault-straggle A:R:MS (delay rank R by MS ms, attempt A)";
+                 --fault-straggle A:R:MS (delay rank R by MS ms, attempt A)
+                 --fault-drop-rank A:R (kill rank R's transport, attempt A)
+                 --fault-slow-link A:R:MS (delay rank R's sends, attempt A)
+  exit codes: 41 NonFiniteGrad  42 NsDiverged  43 RankPanicked
+              44 Poisoned       45 Timeout     46 PeerDead";
 
 fn main() -> Result<()> {
     let args = Args::from_env()?;
@@ -53,6 +68,7 @@ fn main() -> Result<()> {
         Some("train") => cmd_train(&args),
         Some("throughput") => cmd_throughput(),
         Some("info") => cmd_info(),
+        Some("dist-smoke") => cmd_dist_smoke(&args),
         _ => {
             println!("{USAGE}");
             Ok(())
@@ -97,18 +113,22 @@ fn cmd_train(args: &Args) -> Result<()> {
         let ns = Arc::new(NsEngine::new(Some(Arc::clone(&runtime))));
         let eta_ratio = cfg.effective_eta_block_ratio();
         let on_anomaly = cfg.on_anomaly;
-        Box::new(
-            DistMuonBuilder::new(Mesh::new(cfg.dp, cfg.tp)?, period)
-                .layout(cfg.layout)
-                .state_sharding(cfg.state_sharding)
-                .ns_engine(ns)
-                .fault_plan(cfg.fault)
-                .cfg(move |c| {
-                    c.eta_block_ratio = eta_ratio;
-                    c.on_anomaly = on_anomaly;
-                })
-                .build(&metas),
-        )
+        let mut b = DistMuonBuilder::new(Mesh::new(cfg.dp, cfg.tp)?, period)
+            .layout(cfg.layout)
+            .state_sharding(cfg.state_sharding)
+            .ns_engine(ns)
+            .fault_plan(cfg.fault)
+            .cfg(move |c| {
+                c.eta_block_ratio = eta_ratio;
+                c.on_anomaly = on_anomaly;
+            });
+        if cfg.deadline_ms > 0 {
+            b = b.collective_deadline(Duration::from_millis(cfg.deadline_ms));
+        }
+        if cfg.transport == "tcp" {
+            b = b.dp_transport(tcp_transport(&cfg)?, cfg.rank);
+        }
+        Box::new(b.build(&metas))
     } else {
         // Single-process path: ZeRO-1 shards optimizer state across the
         // DP group, which only exists under --distributed — accepting
@@ -150,7 +170,20 @@ fn cmd_train(args: &Args) -> Result<()> {
         checkpoint_every: cfg.checkpoint_every,
         resume: cfg.resume,
     };
-    let rec = trainer.run(opt.as_mut(), &tcfg)?;
+    let rec = match trainer.run(opt.as_mut(), &tcfg) {
+        Ok(rec) => rec,
+        Err(e) => {
+            // Structured optimizer failures get a distinct exit code per
+            // StepError variant (see USAGE) so a supervisor can decide
+            // restart-from-checkpoint vs page-a-human without parsing
+            // stderr. Non-optimizer failures keep the generic code.
+            if let Some(se) = trainer.last_step_error {
+                eprintln!("error: {e}");
+                std::process::exit(se.exit_code());
+            }
+            return Err(e);
+        }
+    };
     if let Some(s) = rec.get("skipped_steps") {
         let n = s.last().unwrap_or(0.0);
         if n > 0.0 {
@@ -177,6 +210,126 @@ fn cmd_train(args: &Args) -> Result<()> {
     if !cfg.out.is_empty() {
         rec.save_csv(&cfg.out)?;
         println!("wrote {}", cfg.out);
+    }
+    Ok(())
+}
+
+/// Build the DP-group TCP transport from `--rank`/`--peers`/`--heartbeat-ms`.
+fn tcp_transport(cfg: &RunConfig) -> Result<Arc<dyn Transport>> {
+    anyhow::ensure!(
+        !cfg.peers.is_empty(),
+        "--transport tcp needs --peers host:port,... (one per DP rank)"
+    );
+    anyhow::ensure!(
+        cfg.peers.len() == cfg.dp,
+        "--peers lists {} addresses but --dp is {} (one per DP rank)",
+        cfg.peers.len(),
+        cfg.dp
+    );
+    anyhow::ensure!(
+        cfg.rank < cfg.peers.len(),
+        "--rank {} out of range for {} peers",
+        cfg.rank,
+        cfg.peers.len()
+    );
+    let mut tc = TcpCfg::default();
+    if cfg.heartbeat_ms > 0 {
+        tc.heartbeat_interval = Duration::from_millis(cfg.heartbeat_ms);
+    }
+    let t = TcpTransport::bind(cfg.rank, &cfg.peers, tc)
+        .map_err(|e| anyhow::anyhow!("binding tcp transport: {e}"))?;
+    Ok(Arc::new(t))
+}
+
+/// Test harness: a tiny fixed-shape DistMuon run on a synthetic quadratic
+/// objective (grad = param − target), no accelerator artifacts involved.
+/// The transport_equivalence suite launches this once per DP rank with
+/// `--transport tcp` and diffs the final-parameter checkpoint against a
+/// single-process `--transport local` run — the two must be bit-identical.
+/// Failures exit with the StepError code band (41..=46, see USAGE).
+fn cmd_dist_smoke(args: &Args) -> Result<()> {
+    let mut cfg = RunConfig::default();
+    cfg.dp = 2;
+    cfg.tp = 2;
+    cfg.steps = 6;
+    cfg.period = 2;
+    cfg.apply_args(args)?;
+
+    let metas = vec![
+        ParamMeta::new("w1", &[8, 16], ParamKind::Matrix),
+        ParamMeta::new("w2", &[16, 8], ParamKind::Matrix),
+        ParamMeta::new("g", &[8], ParamKind::Vector),
+    ];
+    // Every DP rank regenerates the same params/targets from --seed, so
+    // local and tcp runs see identical gradients and must produce
+    // identical trajectories.
+    let gen = |seed: u64| -> Vec<Tensor> {
+        let mut rng = Rng::new(seed);
+        metas
+            .iter()
+            .map(|m| {
+                let mut t = Tensor::zeros(&m.shape);
+                rng.fill_normal(t.data_mut(), 1.0);
+                t
+            })
+            .collect()
+    };
+    let targets = gen(cfg.seed);
+    let mut params = gen(cfg.seed ^ 0x5EED);
+
+    let eta_ratio = cfg.effective_eta_block_ratio();
+    let on_anomaly = cfg.on_anomaly;
+    let mut b =
+        DistMuonBuilder::new(Mesh::new(cfg.dp, cfg.tp)?, Period::Every(cfg.period))
+            .layout(cfg.layout)
+            .state_sharding(cfg.state_sharding)
+            .fault_plan(cfg.fault)
+            .cfg(move |c| {
+                c.eta_block_ratio = eta_ratio;
+                c.on_anomaly = on_anomaly;
+            });
+    if cfg.deadline_ms > 0 {
+        b = b.collective_deadline(Duration::from_millis(cfg.deadline_ms));
+    }
+    if cfg.transport == "tcp" {
+        b = b.dp_transport(tcp_transport(&cfg)?, cfg.rank);
+    }
+    let mut opt = b.build(&metas);
+
+    for step in 0..cfg.steps {
+        let grads: Vec<Tensor> = params
+            .iter()
+            .zip(&targets)
+            .map(|(p, t)| {
+                let mut g = Tensor::zeros(p.shape());
+                for ((gd, pd), td) in
+                    g.data_mut().iter_mut().zip(p.data()).zip(t.data())
+                {
+                    *gd = pd - td;
+                }
+                g
+            })
+            .collect();
+        if let Err(e) = opt.try_step(&mut params, &grads, cfg.lr) {
+            eprintln!("dist-smoke: step {step} failed: {e}");
+            std::process::exit(e.exit_code());
+        }
+    }
+    println!(
+        "dist-smoke: {} steps ok (dp={} tp={} transport={}) degradations={}",
+        cfg.steps,
+        cfg.dp,
+        cfg.tp,
+        cfg.transport,
+        opt.degradations()
+    );
+    if !cfg.out.is_empty() {
+        let mut snap = checkpoint::Snapshot::new(cfg.steps as u64);
+        for (m, p) in metas.iter().zip(&params) {
+            snap.entries.push((m.name.clone(), p.clone()));
+        }
+        let path = checkpoint::save(&cfg.out, &snap)?;
+        println!("wrote {}", path.display());
     }
     Ok(())
 }

@@ -48,6 +48,12 @@ pub enum StepError {
     /// mid-collective and poisoned the phase barrier to free all
     /// waiters.
     Poisoned,
+    /// A collective missed its deadline: `rank` is the peer the
+    /// collective was still waiting on when the deadline expired.
+    Timeout { rank: usize, phase: u8, elapsed_ms: u64 },
+    /// A peer is confirmed dead (heartbeat loss or a dropped
+    /// connection), not merely slow.
+    PeerDead { rank: usize },
 }
 
 impl fmt::Display for StepError {
@@ -67,11 +73,36 @@ impl fmt::Display for StepError {
             StepError::Poisoned => {
                 write!(f, "released from a poisoned barrier (a peer failed)")
             }
+            StepError::Timeout { rank, phase, elapsed_ms } => write!(
+                f,
+                "collective deadline expired in phase {phase} after \
+                 {elapsed_ms}ms waiting on rank {rank}"
+            ),
+            StepError::PeerDead { rank } => {
+                write!(f, "peer rank {rank} is dead (heartbeat lost)")
+            }
         }
     }
 }
 
 impl std::error::Error for StepError {}
+
+impl StepError {
+    /// Distinct process exit code per variant, in a reserved 41..=46
+    /// band, so a supervisor can tell a timed-out collective from a
+    /// diverged Newton–Schulz from a panicked rank without parsing
+    /// stderr. (1 stays "generic failure"; 90/124 belong to ci.sh.)
+    pub fn exit_code(&self) -> i32 {
+        match self {
+            StepError::NonFiniteGrad { .. } => 41,
+            StepError::NsDiverged { .. } => 42,
+            StepError::RankPanicked { .. } => 43,
+            StepError::Poisoned => 44,
+            StepError::Timeout { .. } => 45,
+            StepError::PeerDead { .. } => 46,
+        }
+    }
+}
 
 /// What to do when a numeric guardrail trips during training.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -86,6 +117,13 @@ pub enum AnomalyPolicy {
     /// full-orthogonalization step with the full-step stepsize; other
     /// failures fall back to skip-step semantics.
     EscalateFullOrth,
+    /// Comm-avoiding degradation (escalate-full-orth in reverse): when a
+    /// *full* step's gather/scatter times out, commit the step blockwise
+    /// with the blockwise stepsize (`lr * eta_block_ratio`, the §3.2
+    /// two-stepsize rule) — block steps need no gather/scatter, so the
+    /// run keeps making progress comm-free. A make-up full
+    /// orthogonalization is scheduled on the next healthy step.
+    DegradeBlock,
 }
 
 impl AnomalyPolicy {
@@ -94,9 +132,10 @@ impl AnomalyPolicy {
             "abort" => AnomalyPolicy::Abort,
             "skip-step" => AnomalyPolicy::SkipStep,
             "escalate-full-orth" => AnomalyPolicy::EscalateFullOrth,
+            "degrade-block" => AnomalyPolicy::DegradeBlock,
             other => bail!(
                 "unknown anomaly policy '{other}' \
-                 (want abort|skip-step|escalate-full-orth)"
+                 (want abort|skip-step|escalate-full-orth|degrade-block)"
             ),
         })
     }
@@ -106,6 +145,7 @@ impl AnomalyPolicy {
             AnomalyPolicy::Abort => "abort",
             AnomalyPolicy::SkipStep => "skip-step",
             AnomalyPolicy::EscalateFullOrth => "escalate-full-orth",
+            AnomalyPolicy::DegradeBlock => "degrade-block",
         }
     }
 }
@@ -164,6 +204,53 @@ impl Straggler {
     }
 }
 
+/// Make a chosen rank vanish mid-collective on a chosen attempt: the
+/// transport marks the peer dead and the collective fails with
+/// `PeerDead`/`Timeout` instead of completing. Injected at the
+/// Transport layer (`comm::transport::ArmedFault`), not a thread sleep.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DropRank {
+    pub attempt: u64,
+    pub rank: usize,
+}
+
+impl DropRank {
+    /// Parse `"attempt:rank"` (e.g. `--fault-drop-rank 2:1`).
+    pub fn parse(s: &str) -> Result<DropRank> {
+        let parts: Vec<&str> = s.split(':').collect();
+        let [a, r] = parts[..] else {
+            bail!("bad drop-rank spec '{s}' (want attempt:rank)");
+        };
+        Ok(DropRank { attempt: a.parse()?, rank: r.parse()? })
+    }
+}
+
+/// Delay a chosen rank's transport sends by `delay_ms` on a chosen
+/// attempt — a slow *link*, injected inside the Transport's collective
+/// path (where a deadline can catch it), unlike [`Straggler`] which
+/// sleeps the rank's thread before it enters the collective.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SlowLink {
+    pub attempt: u64,
+    pub rank: usize,
+    pub delay_ms: u64,
+}
+
+impl SlowLink {
+    /// Parse `"attempt:rank:delay_ms"` (e.g. `--fault-slow-link 1:1:500`).
+    pub fn parse(s: &str) -> Result<SlowLink> {
+        let parts: Vec<&str> = s.split(':').collect();
+        let [a, r, d] = parts[..] else {
+            bail!("bad slow-link spec '{s}' (want attempt:rank:delay_ms)");
+        };
+        Ok(SlowLink {
+            attempt: a.parse()?,
+            rank: r.parse()?,
+            delay_ms: d.parse()?,
+        })
+    }
+}
+
 /// Deterministic fault injection plan. Default is inert; every injected
 /// fault is keyed so it fires exactly once, making the recovery paths
 /// reproducible in tests and from the CLI.
@@ -175,6 +262,10 @@ pub struct FaultPlan {
     pub panic_at: Option<PhasePanic>,
     /// Delay a rank in phase 0 of a 1-based optimizer attempt.
     pub straggler: Option<Straggler>,
+    /// Drop a rank mid-collective on a 1-based optimizer attempt.
+    pub drop_rank: Option<DropRank>,
+    /// Slow a rank's transport sends on a 1-based optimizer attempt.
+    pub slow_link: Option<SlowLink>,
 }
 
 impl FaultPlan {
@@ -182,6 +273,8 @@ impl FaultPlan {
         self.nan_grad_step.is_none()
             && self.panic_at.is_none()
             && self.straggler.is_none()
+            && self.drop_rank.is_none()
+            && self.slow_link.is_none()
     }
 
     /// Should the trainer corrupt this step's gradients?
@@ -274,6 +367,33 @@ mod tests {
             StepError::RankPanicked { rank: 2, phase: 1 }
         )
         .contains("rank 2"));
+        assert!(format!(
+            "{}",
+            StepError::Timeout { rank: 1, phase: 0, elapsed_ms: 120 }
+        )
+        .contains("rank 1"));
+        assert!(
+            format!("{}", StepError::PeerDead { rank: 3 }).contains("rank 3")
+        );
+    }
+
+    #[test]
+    fn exit_codes_are_distinct_and_banded() {
+        let errs = [
+            StepError::NonFiniteGrad { param: 0 },
+            StepError::NsDiverged { param: 0, norm: 1.0, bound: 0.5 },
+            StepError::RankPanicked { rank: 0, phase: 0 },
+            StepError::Poisoned,
+            StepError::Timeout { rank: 0, phase: 0, elapsed_ms: 1 },
+            StepError::PeerDead { rank: 0 },
+        ];
+        let codes: Vec<i32> = errs.iter().map(|e| e.exit_code()).collect();
+        for (i, a) in codes.iter().enumerate() {
+            assert!((41..=46).contains(a), "{a} outside the reserved band");
+            for b in &codes[i + 1..] {
+                assert_ne!(a, b, "exit codes must be distinct");
+            }
+        }
     }
 
     #[test]
@@ -282,6 +402,7 @@ mod tests {
             AnomalyPolicy::Abort,
             AnomalyPolicy::SkipStep,
             AnomalyPolicy::EscalateFullOrth,
+            AnomalyPolicy::DegradeBlock,
         ] {
             assert_eq!(AnomalyPolicy::parse(p.name()).unwrap(), p);
         }
@@ -299,13 +420,27 @@ mod tests {
         let s = Straggler::parse("2:0:15").unwrap();
         assert_eq!(s, Straggler { attempt: 2, rank: 0, delay_ms: 15 });
 
+        let d = DropRank::parse("2:1").unwrap();
+        assert_eq!(d, DropRank { attempt: 2, rank: 1 });
+        assert!(DropRank::parse("2").is_err());
+        assert!(DropRank::parse("2:1:0").is_err());
+        let l = SlowLink::parse("1:1:500").unwrap();
+        assert_eq!(l, SlowLink { attempt: 1, rank: 1, delay_ms: 500 });
+        assert!(SlowLink::parse("1:1").is_err());
+
         let plan = FaultPlan {
             nan_grad_step: Some(4),
             panic_at: Some(p),
             straggler: Some(s),
+            drop_rank: Some(d),
+            slow_link: Some(l),
         };
         assert!(!plan.is_inert());
         assert!(FaultPlan::default().is_inert());
+        assert!(!FaultPlan { drop_rank: Some(d), ..Default::default() }
+            .is_inert());
+        assert!(!FaultPlan { slow_link: Some(l), ..Default::default() }
+            .is_inert());
         assert!(plan.maybe_nan(4));
         assert!(!plan.maybe_nan(3));
         // Non-matching keys are no-ops (would panic/sleep otherwise).

@@ -14,7 +14,7 @@ use crate::data::{synth_corpus, Batcher, CorpusCfg};
 use crate::metrics::Recorder;
 use crate::model::ModelState;
 use crate::optim::{clip_global_norm, Optimizer, ParamKind, Schedule};
-use crate::robust::{self, AnomalyPolicy, FaultPlan};
+use crate::robust::{self, AnomalyPolicy, FaultPlan, StepError};
 use crate::runtime::{
     literal_to_tensor, tensor_to_literal, tokens_to_literal, Executable,
     Runtime,
@@ -80,6 +80,11 @@ pub struct Trainer {
     pub state: ModelState,
     batch: usize,
     seq_len: usize,
+    /// The structured [`StepError`] behind the last aborted run, if the
+    /// abort came from the optimizer (vs e.g. an I/O failure). The
+    /// launcher maps this to a distinct process exit code so a
+    /// supervisor can act on the failure class without parsing stderr.
+    pub last_step_error: Option<StepError>,
 }
 
 impl Trainer {
@@ -108,6 +113,7 @@ impl Trainer {
             state,
             batch: entry.batch,
             seq_len: entry.seq_len,
+            last_step_error: None,
         })
     }
 
@@ -263,6 +269,7 @@ impl Trainer {
                 // try_step's atomicity contract: params/momentum are
                 // untouched here, so skipping is safe.
                 if cfg.on_anomaly == AnomalyPolicy::Abort {
+                    self.last_step_error = Some(e);
                     return Err(anyhow::Error::new(e)
                         .context(format!("optimizer step {step} failed")));
                 }

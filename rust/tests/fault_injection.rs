@@ -19,14 +19,17 @@
 //! 4. **Stragglers are not faults** — a delayed rank changes nothing.
 
 use std::sync::Arc;
+use std::time::Duration;
 
+use muonbp::comm::{CollectiveKind, RankHealth};
 use muonbp::coordinator::DistMuonBuilder;
 use muonbp::linalg::newton_schulz::{newton_schulz, NsCoeffs};
 use muonbp::mesh::Mesh;
 use muonbp::optim::muon::{OrthFn, Period};
 use muonbp::optim::{Optimizer, ParamKind, ParamMeta};
 use muonbp::robust::{
-    AnomalyPolicy, FaultPlan, PhasePanic, StepError, Straggler,
+    AnomalyPolicy, DropRank, FaultPlan, PhasePanic, SlowLink, StepError,
+    Straggler,
 };
 use muonbp::tensor::Tensor;
 use muonbp::utils::rng::Rng;
@@ -265,6 +268,122 @@ fn full_step_divergence_surfaces_error() {
     assert_eq!(p, p_before);
     assert_eq!(opt.snapshot().unwrap(), s_before);
     assert_eq!(opt.escalations(), 0);
+}
+
+/// The comm-avoiding degradation (escalate-full-orth in reverse): a full
+/// step whose DP sync times out on a slow link commits as a
+/// blockwise-only step with the BLOCKWISE stepsize (§3.2 two-stepsize
+/// rule) — bit-identical to a `Period::Never` twin, since the simulated
+/// DP ranks hold identical gradients and block steps need no
+/// gather/scatter. The next healthy step then runs the make-up full
+/// orthogonalization even though the period calls for a block step.
+#[test]
+fn degrade_block_commits_blockwise_then_makes_up() {
+    let quad = Quad::new(mixed_metas(), 77);
+    let mesh = Mesh::new(2, 2).unwrap();
+    // Generous deadline vs delay gap so a loaded test host cannot turn
+    // a healthy step into a timeout (or let the slow rank slip under
+    // the deadline).
+    let mut deg = DistMuonBuilder::new(mesh, Period::Every(4))
+        .collective_deadline(Duration::from_millis(150))
+        .fault_plan(FaultPlan {
+            slow_link: Some(SlowLink { attempt: 1, rank: 1, delay_ms: 800 }),
+            ..FaultPlan::default()
+        })
+        .cfg(|c| {
+            c.on_anomaly = AnomalyPolicy::DegradeBlock;
+            c.eta_block_ratio = 0.5;
+        })
+        .build(&quad.metas);
+    let mut block_twin = DistMuonBuilder::new(mesh, Period::Never)
+        .cfg(|c| c.eta_block_ratio = 0.5)
+        .build(&quad.metas);
+    let mut p = quad.init(11);
+    let mut p_twin = quad.init(11);
+
+    // Step 0 (full by period): the sync times out, the step still
+    // commits — blockwise, on the raw local gradients, with the
+    // blockwise stepsize. eta_block_ratio != 1 would expose any use of
+    // the full-step stepsize here.
+    deg.try_step(&mut p, &quad.grads(&p), 0.02).unwrap();
+    block_twin.try_step(&mut p_twin, &quad.grads(&p_twin), 0.02).unwrap();
+    assert_eq!(p, p_twin, "degraded step != blockwise twin");
+    assert_eq!(deg.degradations(), 1);
+
+    // Step 1: the make-up full orthogonalization — leader gather
+    // traffic appears even though the period says block.
+    let gather0 = deg.comm_stats().0.bytes(CollectiveKind::Gather);
+    deg.try_step(&mut p, &quad.grads(&p), 0.02).unwrap();
+    let gather1 = deg.comm_stats().0.bytes(CollectiveKind::Gather);
+    assert!(
+        gather1 > gather0,
+        "make-up step must gather ({gather0} -> {gather1} bytes)"
+    );
+
+    // Steps 2-3: plain block steps again — comm-free.
+    for step in 2..4 {
+        let before = deg.comm_stats().0.bytes(CollectiveKind::Gather);
+        deg.try_step(&mut p, &quad.grads(&p), 0.02).unwrap();
+        let after = deg.comm_stats().0.bytes(CollectiveKind::Gather);
+        assert_eq!(before, after, "step {step} must be gather-free");
+    }
+
+    // Step 4: full again by the period; no further degradations.
+    let before = deg.comm_stats().0.bytes(CollectiveKind::Gather);
+    deg.try_step(&mut p, &quad.grads(&p), 0.02).unwrap();
+    assert!(deg.comm_stats().0.bytes(CollectiveKind::Gather) > before);
+    assert_eq!(deg.degradations(), 1, "only the slow-link step degrades");
+}
+
+/// A dropped DP rank surfaces as a structured error (PeerDead from the
+/// dying rank wins over the secondary Poisoned/Timeout its peers see),
+/// the health view turns Dead, and `shrink_dp` resumes at the smaller
+/// world — bit-identical to a never-faulted dp=1 run, since the
+/// simulated DP ranks hold identical state.
+#[test]
+fn drop_rank_then_shrink_dp_continues() {
+    let quad = Quad::new(mixed_metas(), 31);
+    let mut opt =
+        DistMuonBuilder::new(Mesh::new(2, 2).unwrap(), Period::Every(2))
+            .collective_deadline(Duration::from_millis(500))
+            .fault_plan(FaultPlan {
+                drop_rank: Some(DropRank { attempt: 1, rank: 1 }),
+                ..FaultPlan::default()
+            })
+            .build(&quad.metas);
+    let mut twin =
+        DistMuonBuilder::new(Mesh::new(1, 2).unwrap(), Period::Every(2))
+            .build(&quad.metas);
+    let mut p = quad.init(4);
+    let mut p_twin = quad.init(4);
+
+    let p_before = p.clone();
+    let e = opt.try_step(&mut p, &quad.grads(&p), 0.02).unwrap_err();
+    assert!(
+        matches!(
+            e,
+            StepError::PeerDead { .. } | StepError::Timeout { .. }
+        ),
+        "want PeerDead/Timeout, got {e:?}"
+    );
+    assert_eq!(p, p_before, "failed attempt must not move params");
+    assert_eq!(
+        opt.dp_health(),
+        vec![RankHealth::Alive, RankHealth::Dead],
+        "the dropped rank must show Dead in the health view"
+    );
+    // Dead flags are sticky: without a shrink the next attempt fails
+    // fast instead of hanging.
+    let e2 = opt.try_step(&mut p, &quad.grads(&p), 0.02).unwrap_err();
+    assert!(matches!(e2, StepError::PeerDead { rank: 1 }), "got {e2:?}");
+
+    // Elastic recovery: canonical snapshot -> dp-1 mesh -> restore.
+    opt.shrink_dp(1).unwrap();
+    for step in 0..3 {
+        opt.try_step(&mut p, &quad.grads(&p), 0.02).unwrap();
+        twin.try_step(&mut p_twin, &quad.grads(&p_twin), 0.02).unwrap();
+        assert_eq!(p, p_twin, "step {step}: shrunken run drifted");
+    }
 }
 
 /// A straggler is a delay, not a failure: the run is bit-identical to an

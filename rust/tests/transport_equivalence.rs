@@ -1,0 +1,474 @@
+//! Transport-seam acceptance suite (run by ci.sh): the TCP backend must
+//! be bit-identical to the in-process pointer-deposit backend, and its
+//! failure modes must be structured (deadlines, exit codes) instead of
+//! hangs.
+//!
+//! Pinned invariants:
+//!
+//! 1. **Collective equivalence** — all five transport-routed collectives
+//!    (rendezvous, all-reduce-mean, reduce-scatter-mean, all-gather,
+//!    broadcast) produce bit-identical results on `LocalTransport` and a
+//!    loopback `TcpTransport` group: rank-ordered delivery makes the
+//!    reduction order backend-invariant.
+//! 2. **Coordinator equivalence** — a dp2×tp2 `DistMuon` run over TCP
+//!    (one transport per rank) matches the single-process run exactly,
+//!    both in-process (loopback threads) and across real OS processes
+//!    (`muonbp dist-smoke`, final-parameter checkpoints compared).
+//! 3. **Deadlines fire** — a missing peer turns into
+//!    `TransportError::Timeout` (and exit code 45 through the CLI), never
+//!    a hang; an asymmetric timeout re-synchronizes via the stale-round
+//!    skip.
+//! 4. **Degraded mode commits** — `--on-anomaly degrade-block` turns a
+//!    timed-out full step into a committed blockwise step (counted by
+//!    `degradations()`), so a slow link costs progress quality, not the
+//!    run.
+
+use std::process::Command;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use muonbp::checkpoint;
+use muonbp::comm::tcp::loopback_group;
+use muonbp::comm::{Communicator, Deadline, TcpCfg, Transport, TransportError};
+use muonbp::coordinator::DistMuonBuilder;
+use muonbp::costmodel::netmodel::NetModel;
+use muonbp::mesh::Mesh;
+use muonbp::optim::muon::Period;
+use muonbp::optim::{Optimizer, ParamKind, ParamMeta};
+use muonbp::shard::shard_range;
+use muonbp::tensor::Tensor;
+use muonbp::utils::rng::Rng;
+
+/// Quadratic toy problem, as in fault_injection.rs: grads are
+/// deterministic functions of the params.
+struct Quad {
+    metas: Vec<ParamMeta>,
+    targets: Vec<Tensor>,
+}
+
+impl Quad {
+    fn new(metas: Vec<ParamMeta>, seed: u64) -> Quad {
+        let mut rng = Rng::new(seed);
+        let targets = metas
+            .iter()
+            .map(|m| Tensor::randn(&m.shape, 1.0, &mut rng))
+            .collect();
+        Quad { metas, targets }
+    }
+
+    fn init(&self, seed: u64) -> Vec<Tensor> {
+        let mut rng = Rng::new(seed);
+        self.metas
+            .iter()
+            .map(|m| Tensor::randn(&m.shape, 1.0, &mut rng))
+            .collect()
+    }
+
+    fn grads(&self, params: &[Tensor]) -> Vec<Tensor> {
+        params
+            .iter()
+            .zip(&self.targets)
+            .map(|(p, t)| {
+                let mut g = p.clone();
+                g.axpy(-1.0, t);
+                g
+            })
+            .collect()
+    }
+}
+
+fn metas() -> Vec<ParamMeta> {
+    vec![
+        ParamMeta::new("w1", &[8, 16], ParamKind::Matrix),
+        ParamMeta::new("w2", &[16, 8], ParamKind::Matrix),
+        ParamMeta::new("g", &[8], ParamKind::Vector),
+    ]
+}
+
+/// One rank's collective schedule: every transport-routed `_into`
+/// collective once, deterministic inputs, outputs returned for
+/// cross-backend comparison.
+fn collective_schedule(
+    comm: &Communicator,
+    rank: usize,
+    n: usize,
+) -> Vec<Tensor> {
+    comm.set_deadline(Some(Duration::from_secs(30)));
+    comm.rendezvous().unwrap();
+    let src = Tensor::randn(&[6, 4], 1.0, &mut Rng::new(100 + rank as u64));
+    let mut ar = Tensor::zeros(&[6, 4]);
+    comm.all_reduce_mean_into(rank, &src, &mut ar).unwrap();
+    let (r0, r1) = shard_range(6, n, rank);
+    let mut rs = Tensor::zeros(&[r1 - r0, 4]);
+    comm.reduce_scatter_mean_into(rank, &src, &mut rs).unwrap();
+    let mut ag = Tensor::zeros(&[6, 4]);
+    comm.all_gather_into(rank, &rs, &mut ag).unwrap();
+    let mut bc = Tensor::zeros(&[6, 4]);
+    let root_src = (rank == 1).then_some(&src);
+    comm.broadcast_into(rank, 1, root_src, &mut bc).unwrap();
+    comm.rendezvous().unwrap();
+    vec![ar, rs, ag, bc]
+}
+
+/// Invariant 1: the five collectives, LocalTransport vs a TCP loopback
+/// group, bit-for-bit.
+#[test]
+fn five_collectives_bit_identical_across_backends() {
+    const N: usize = 3;
+    let net = NetModel::a100_nvlink();
+
+    let local = Communicator::new(N, net);
+    let local_out: Vec<Vec<Tensor>> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..N)
+            .map(|r| {
+                let comm = local.clone();
+                s.spawn(move || collective_schedule(&comm, r, N))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+
+    let group = loopback_group(N, TcpCfg::default()).unwrap();
+    let tcp_out: Vec<Vec<Tensor>> = std::thread::scope(|s| {
+        let handles: Vec<_> = group
+            .into_iter()
+            .enumerate()
+            .map(|(r, t)| {
+                s.spawn(move || {
+                    let comm =
+                        Communicator::with_transport(Arc::new(t), net);
+                    collective_schedule(&comm, r, N)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+
+    for (rank, (l, t)) in local_out.iter().zip(&tcp_out).enumerate() {
+        assert_eq!(
+            l, t,
+            "rank {rank}: tcp collective results diverge from local"
+        );
+    }
+    // Sanity: the reductions actually reduced (all ranks agree on the
+    // all-reduce output, and it is none of the raw inputs).
+    assert_eq!(local_out[0][0], local_out[1][0]);
+    assert_eq!(local_out[0][0], local_out[2][0]);
+}
+
+/// Invariant 2 (in-process): a dp2×tp2 DistMuon run where each DP rank
+/// talks through its own loopback TcpTransport matches the fully-local
+/// single-process run bit-for-bit, step by step.
+#[test]
+fn distmuon_over_tcp_loopback_matches_local() {
+    let quad = Quad::new(metas(), 47);
+    let steps = 4;
+
+    let mut local = DistMuonBuilder::new(
+        Mesh::new(2, 2).unwrap(),
+        Period::Every(2),
+    )
+    .build(&quad.metas);
+    let mut p_local = quad.init(5);
+    for _ in 0..steps {
+        local.try_step(&mut p_local, &quad.grads(&p_local), 0.02).unwrap();
+    }
+
+    let group = loopback_group(2, TcpCfg::default()).unwrap();
+    let quad_ref = &quad;
+    let tcp_params: Vec<Vec<Tensor>> = std::thread::scope(|s| {
+        let handles: Vec<_> = group
+            .into_iter()
+            .enumerate()
+            .map(|(r, t)| {
+                s.spawn(move || {
+                    let mut opt = DistMuonBuilder::new(
+                        Mesh::new(2, 2).unwrap(),
+                        Period::Every(2),
+                    )
+                    .collective_deadline(Duration::from_secs(30))
+                    .dp_transport(Arc::new(t), r)
+                    .build(&quad_ref.metas);
+                    let mut p = quad_ref.init(5);
+                    for _ in 0..steps {
+                        opt.try_step(
+                            &mut p,
+                            &quad_ref.grads(&p),
+                            0.02,
+                        )
+                        .unwrap();
+                    }
+                    p
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+
+    for (rank, p) in tcp_params.iter().enumerate() {
+        assert_eq!(
+            p, &p_local,
+            "tcp rank {rank} diverged from the single-process run"
+        );
+    }
+}
+
+/// Invariant 3 (transport level): a peer that never arrives turns into a
+/// structured Timeout at the deadline — not a hang — and the timeout
+/// names the missing peer.
+#[test]
+fn tcp_deadline_fires_instead_of_hanging() {
+    let group = loopback_group(2, TcpCfg::default()).unwrap();
+    let t0 = &group[0];
+    let start = Instant::now();
+    let got = t0.gather_map(
+        0,
+        &[1.0, 2.0],
+        Deadline::after(Duration::from_millis(200)),
+        &mut |_, _| {},
+    );
+    match got {
+        Err(TransportError::Timeout { waiting_on, elapsed_ms }) => {
+            assert_eq!(waiting_on, 1);
+            // `elapsed_ms` is measured from gather entry, which is a
+            // hair after this test stamped the deadline — allow slack.
+            assert!(elapsed_ms >= 150, "elapsed {elapsed_ms}ms < deadline");
+        }
+        other => panic!("want Timeout, got {other:?}"),
+    }
+    assert!(
+        start.elapsed() < Duration::from_secs(5),
+        "deadline overshot by seconds: {:?}",
+        start.elapsed()
+    );
+}
+
+/// Invariant 3 (resync): after an asymmetric timeout (rank 0 gave up on
+/// a round rank 1 later completed), the stale-round skip re-synchronizes
+/// the group and the next round is bit-identical.
+#[test]
+fn tcp_group_resyncs_after_asymmetric_timeout() {
+    let group = loopback_group(2, TcpCfg::default()).unwrap();
+    let (t0, t1) = (&group[0], &group[1]);
+
+    // Round 1: rank 0 sends its frame and times out waiting for rank 1
+    // (a clean timeout: no partial frame was read, so the stream stays
+    // at a frame boundary).
+    let got = t0.gather_map(
+        0,
+        &[10.0],
+        Deadline::after(Duration::from_millis(150)),
+        &mut |_, _| {},
+    );
+    assert!(
+        matches!(got, Err(TransportError::Timeout { .. })),
+        "got {got:?}"
+    );
+    // Rank 1 arrives late and completes round 1 — rank 0's frame is
+    // already buffered in its socket.
+    let mut seen = Vec::new();
+    t1.gather_map(
+        1,
+        &[20.0],
+        Deadline::after(Duration::from_secs(10)),
+        &mut |r, p| seen.push((r, p.to_vec())),
+    )
+    .unwrap();
+    assert_eq!(seen, vec![(0, vec![10.0]), (1, vec![20.0])]);
+
+    // Round 2: both participate; rank 0 must skip rank 1's stale round-1
+    // frame and land on the round-2 payload.
+    std::thread::scope(|s| {
+        let h0 = s.spawn(|| {
+            let mut seen = Vec::new();
+            t0.gather_map(
+                0,
+                &[11.0],
+                Deadline::after(Duration::from_secs(10)),
+                &mut |r, p| seen.push((r, p.to_vec())),
+            )
+            .unwrap();
+            seen
+        });
+        let h1 = s.spawn(|| {
+            let mut seen = Vec::new();
+            t1.gather_map(
+                1,
+                &[21.0],
+                Deadline::after(Duration::from_secs(10)),
+                &mut |r, p| seen.push((r, p.to_vec())),
+            )
+            .unwrap();
+            seen
+        });
+        let want = vec![(0usize, vec![11.0f32]), (1, vec![21.0])];
+        assert_eq!(h0.join().unwrap(), want);
+        assert_eq!(h1.join().unwrap(), want);
+    });
+}
+
+fn smoke_bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_muonbp"))
+}
+
+fn tmp_dir(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir()
+        .join(format!("muonbp-transport-eq-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+/// Two ephemeral loopback addresses. Binding then dropping the listener
+/// leaves a tiny reuse race, acceptable for tests.
+fn two_free_addrs() -> (String, String) {
+    let a = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let b = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    (
+        a.local_addr().unwrap().to_string(),
+        b.local_addr().unwrap().to_string(),
+    )
+}
+
+/// Invariant 2 (across real OS processes): `muonbp dist-smoke` over a
+/// two-process TCP group produces the same final-parameter checkpoint as
+/// the single-process local run.
+#[test]
+fn dist_smoke_two_processes_match_single_process() {
+    let local_dir = tmp_dir("local");
+    let status = smoke_bin()
+        .args([
+            "dist-smoke",
+            "--steps",
+            "4",
+            "--period",
+            "2",
+            "--seed",
+            "7",
+            "--out",
+            local_dir.to_str().unwrap(),
+        ])
+        .status()
+        .expect("spawning local dist-smoke");
+    assert!(status.success(), "local dist-smoke failed: {status:?}");
+
+    let tcp_dir = tmp_dir("tcp");
+    let (a0, a1) = two_free_addrs();
+    let peers = format!("{a0},{a1}");
+    let mut children = Vec::new();
+    for rank in 0..2 {
+        let mut cmd = smoke_bin();
+        cmd.args([
+            "dist-smoke",
+            "--steps",
+            "4",
+            "--period",
+            "2",
+            "--seed",
+            "7",
+            "--transport",
+            "tcp",
+            "--rank",
+            &rank.to_string(),
+            "--peers",
+            &peers,
+            "--deadline-ms",
+            "20000",
+        ]);
+        if rank == 0 {
+            cmd.args(["--out", tcp_dir.to_str().unwrap()]);
+        }
+        children.push(cmd.spawn().expect("spawning tcp dist-smoke"));
+    }
+    for (rank, c) in children.iter_mut().enumerate() {
+        let status = c.wait().expect("waiting on tcp dist-smoke");
+        assert!(status.success(), "tcp rank {rank} failed: {status:?}");
+    }
+
+    let (_, local_snap) = checkpoint::latest_valid(&local_dir)
+        .unwrap()
+        .expect("local run wrote no checkpoint");
+    let (_, tcp_snap) = checkpoint::latest_valid(&tcp_dir)
+        .unwrap()
+        .expect("tcp run wrote no checkpoint");
+    assert_eq!(local_snap.step, tcp_snap.step);
+    assert_eq!(
+        local_snap.entries, tcp_snap.entries,
+        "tcp final parameters diverge from the single-process run"
+    );
+    let _ = std::fs::remove_dir_all(&local_dir);
+    let _ = std::fs::remove_dir_all(&tcp_dir);
+}
+
+/// Invariant 3 (CLI): a slow link plus a deadline exits with the
+/// Timeout code (45) on the waiting rank — never a hang. The slowed rank
+/// dies structured too (Timeout, or PeerDead/46 once its peer exits).
+#[test]
+fn slow_link_exits_with_timeout_code() {
+    let (a0, a1) = two_free_addrs();
+    let peers = format!("{a0},{a1}");
+    let mut children = Vec::new();
+    for rank in 0..2 {
+        let mut cmd = smoke_bin();
+        cmd.args([
+            "dist-smoke",
+            "--steps",
+            "2",
+            "--period",
+            "1",
+            "--transport",
+            "tcp",
+            "--rank",
+            &rank.to_string(),
+            "--peers",
+            &peers,
+            "--deadline-ms",
+            "300",
+            "--fault-slow-link",
+            "1:1:2000",
+        ]);
+        children.push(cmd.spawn().expect("spawning dist-smoke"));
+    }
+    let codes: Vec<i32> = children
+        .iter_mut()
+        .map(|c| c.wait().unwrap().code().expect("killed by signal"))
+        .collect();
+    assert_eq!(codes[0], 45, "waiting rank must exit Timeout, got {codes:?}");
+    assert!(
+        codes[1] == 45 || codes[1] == 46,
+        "slowed rank must exit Timeout/PeerDead, got {codes:?}"
+    );
+}
+
+/// Invariant 4 (CLI): under `--on-anomaly degrade-block` the same slow
+/// link costs one degraded (blockwise, comm-free) step instead of the
+/// run: exit code 0 and a degradation counted.
+#[test]
+fn degrade_block_cli_commits_instead_of_dying() {
+    let out = smoke_bin()
+        .args([
+            "dist-smoke",
+            "--steps",
+            "2",
+            "--period",
+            "2",
+            "--deadline-ms",
+            "250",
+            "--on-anomaly",
+            "degrade-block",
+            "--fault-slow-link",
+            "1:1:1200",
+        ])
+        .output()
+        .expect("spawning dist-smoke");
+    assert!(
+        out.status.success(),
+        "degrade-block run must survive the slow link: {:?}\nstderr: {}",
+        out.status,
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(
+        stdout.contains("degradations=1"),
+        "expected one counted degradation, stdout:\n{stdout}"
+    );
+}

@@ -21,6 +21,12 @@ impl Error {
         Error { msg: m.to_string() }
     }
 
+    /// Wrap a concrete error value (mirrors `anyhow::Error::new`). The
+    /// shim flattens it to its display string, like everything else.
+    pub fn new<E: std::error::Error + Send + Sync + 'static>(e: E) -> Error {
+        Error::msg(e)
+    }
+
     /// Wrap with a leading context line (what `Context::context` does).
     pub fn context<C: fmt::Display>(self, c: C) -> Error {
         Error { msg: format!("{c}: {}", self.msg) }
@@ -132,6 +138,8 @@ mod tests {
         assert!(e.to_string().starts_with("reading config: "));
         let e2 = io_fail().with_context(|| format!("try {}", 2)).unwrap_err();
         assert!(e2.to_string().starts_with("try 2: "));
+        let e3 = Error::new(std::io::Error::other("boom"));
+        assert_eq!(e3.to_string(), "boom");
     }
 
     #[test]
