@@ -1,6 +1,6 @@
 # Convenience targets; tier-1 verify is `make verify` (== ROADMAP.md).
 
-.PHONY: build test verify ci ci-env perf pool-stress zero1 fault transport soak artifacts clean
+.PHONY: build test verify ci ci-env perf pool-stress zero1 fault transport overlap soak artifacts clean
 
 build:
 	cargo build --release
@@ -59,6 +59,13 @@ fault:
 # degrade-block commit (see ci.sh tier-1).
 transport:
 	cargo test --test transport_equivalence -- --nocapture
+
+# Overlap-equivalence suite: the DAG-overlapped step schedule vs the
+# phased barrier schedule, bit-identical across layouts/meshes/periods/
+# shardings, over tcp loopback, under injected panics and escalation
+# (see ci.sh tier-1).
+overlap:
+	RUST_TEST_THREADS=16 cargo test --test overlap_equivalence -- --nocapture
 
 # Randomized fault soak: repeated dist-smoke runs under degrade-block
 # with a randomly seeded slow-link fault. Every iteration prints its

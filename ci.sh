@@ -86,6 +86,23 @@ step "tier-1: fault-injection suite (RUST_TEST_THREADS=16)"
 # what the with_timeout wrapper would catch if poisoning regressed).
 with_timeout 600 env RUST_TEST_THREADS=16 cargo test -q --test fault_injection || exit 1
 
+step "tier-1: overlap-equivalence suite (dag vs barrier, RUST_TEST_THREADS=16)"
+# The DAG-overlapped schedule must stay bit-identical to the phased
+# barrier schedule: layout x dp x period x sharding sweep, tcp loopback,
+# injected rank panics (atomicity + clean retry) and the escalation
+# path. The suite sets .overlap(..) explicitly per run, so it pins both
+# schedules regardless of the MUONBP_OVERLAP cell this shell runs in.
+# A lost-wakeup or mis-ordered-lane bug deadlocks rather than reddens —
+# exactly what with_timeout converts to a fast 124.
+with_timeout 900 env RUST_TEST_THREADS=16 cargo test -q --test overlap_equivalence || exit 1
+
+step "tier-1: barrier-schedule default pass (MUONBP_OVERLAP=0, lib tests)"
+# Everything above ran whatever schedule MUONBP_OVERLAP selects (DAG by
+# default). This pass pins the builder-default plumbing itself: with the
+# env flipped, every coordinator constructed without an explicit
+# .overlap(..) must take the phased barrier path and stay green.
+with_timeout 1200 env MUONBP_OVERLAP=0 cargo test -q --lib || exit 1
+
 step "tier-1: transport-equivalence suite (local vs tcp, multi-process)"
 # The transport seam's acceptance gate: the five collectives and a
 # dp2xtp2 DistMuon run must be bit-identical on LocalTransport and

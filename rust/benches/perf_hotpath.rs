@@ -512,6 +512,56 @@ fn main() {
         }
     }
 
+    // 4e. Step schedule: the DAG executor overlapping DP collectives with
+    //     TP compute vs the phased barrier schedule, on a mesh where there
+    //     is something to overlap (dp=2 gradient sync against per-rank
+    //     block NS). Period 2 puts both step kinds in the timed mix;
+    //     bit-identity between the two schedules is pinned elsewhere
+    //     (tests/overlap_equivalence.rs) — this section only measures the
+    //     bubble the DAG removes.
+    {
+        let (m, n) = (1024usize, 2048usize);
+        let metas = [ParamMeta::new("w", &[m, n], ParamKind::Matrix)];
+        let dgrads = vec![Tensor::randn(&[m, n], 0.1, &mut rng)];
+        for tp in [4usize, 8] {
+            let shape = format!("{m}x{n}/dp2xtp{tp}");
+            let mk = |overlap: bool| {
+                DistMuonBuilder::new(
+                    Mesh::new(2, tp).unwrap(),
+                    Period::Every(2),
+                )
+                .cfg(|c| c.ns_steps = 3)
+                .overlap(overlap)
+                .build(&metas)
+            };
+            let mut off = mk(false);
+            let mut on = mk(true);
+            let mut p_off = vec![Tensor::zeros(&[m, n])];
+            let mut p_on = vec![Tensor::zeros(&[m, n])];
+            for _ in 0..2 {
+                off.step(&mut p_off, &dgrads, 0.01); // warm a full period
+                on.step(&mut p_on, &dgrads, 0.01);
+            }
+            let r_off =
+                time_it(&format!("dist step barrier {shape}"), 1, 4, || {
+                    off.step(&mut p_off, &dgrads, 0.01);
+                });
+            records.push(r_off.to_json("dist-step-barrier", &shape, 0.0, 0.0));
+            let r_on =
+                time_it(&format!("dist step dag-overlap {shape}"), 1, 4, || {
+                    on.step(&mut p_on, &dgrads, 0.01);
+                });
+            let speedup = r_off.mean_s / r_on.mean_s;
+            println!("    -> {speedup:.2}x vs barrier schedule");
+            records.push(r_on.to_json(
+                "dist-step-dag-overlap",
+                &shape,
+                0.0,
+                speedup,
+            ));
+        }
+    }
+
     // Host-side results are complete — persist before the artifact gate so
     // BENCH_hotpath.json exists even without `make artifacts`.
     save_bench_json("BENCH_hotpath", &records);

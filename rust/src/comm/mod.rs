@@ -589,6 +589,170 @@ impl Communicator {
         Ok(())
     }
 
+    // -- chunked (row-slab) sub-collectives ----------------------------------
+    //
+    // The overlapped step schedule (runtime/dag.rs + the coordinator's
+    // DAG path) decomposes each logical collective into per-slab rounds
+    // so a slab's consumer can start while later slabs are still on the
+    // wire. Chunk rounds deliberately charge NOTHING: the coordinator
+    // charges once per *logical* collective after the graph joins, so
+    // `CommStats` calls/bytes stay identical to the barrier schedule.
+    // Every round takes a fresh [`Communicator::set_deadline`] deadline
+    // (per-chunk deadline accounting) and runs in fixed rank/slab
+    // deposit order on both `LocalTransport` and `TcpTransport` — the
+    // reduction order, and therefore the f32 result, is bit-identical
+    // to the un-chunked `_into` collectives.
+
+    /// One slab round of a chunked all-reduce-mean: reduce rows
+    /// `r0..r1` of `src` into the same rows of the full-shape `dst`.
+    /// Per-element schedule (zero-fill, rank-order sum, `1/n` scale)
+    /// matches [`Communicator::all_reduce_mean_into`] exactly, so
+    /// running the rounds over a row partition of the matrix is
+    /// bit-identical to the single-round collective. Not charged — see
+    /// the chunking notes above.
+    pub fn all_reduce_mean_rows_into(
+        &self,
+        rank: usize,
+        src: &Tensor,
+        dst: &mut Tensor,
+        r0: usize,
+        r1: usize,
+    ) -> Result<(), StepError> {
+        assert!(rank < self.n);
+        assert_eq!(src.shape(), dst.shape(), "all_reduce_mean_rows_into");
+        assert!(r0 <= r1 && r1 <= src.m(), "row slab out of range");
+        let n_cols = src.n();
+        let off = r0 * n_cols;
+        let len = (r1 - r0) * n_cols;
+        {
+            let d = &mut dst.data_mut()[off..off + len];
+            d.fill(0.0);
+            self.transport
+                .gather_map(
+                    rank,
+                    &src.data()[off..off + len],
+                    self.deadline(),
+                    &mut |_r, s| {
+                        for (di, si) in d.iter_mut().zip(s) {
+                            *di += *si;
+                        }
+                    },
+                )
+                .map_err(|e| self.lift(e))?;
+            let inv = 1.0 / self.n as f32;
+            for v in d.iter_mut() {
+                // `Tensor::scale` is an elementwise `x * inv`; matching
+                // it per element keeps the slab bit-identical to the
+                // whole-matrix scale of the un-chunked path.
+                *v *= inv;
+            }
+        }
+        Ok(())
+    }
+
+    /// One slice round of a chunked reduce-scatter-mean: every rank
+    /// deposits its `src` rows of DP slice `slice`
+    /// (`shard_range(src.m(), n, slice)`); only the owning rank
+    /// (`rank == slice`, which must pass `Some(dst)`) reduces them.
+    /// Iterating `slice` over `0..n` is bit-identical to
+    /// [`Communicator::reduce_scatter_mean_into`] on every rank — same
+    /// operands, same rank order, same `1/n` scale. Not charged.
+    pub fn reduce_scatter_mean_slice_into(
+        &self,
+        rank: usize,
+        src: &Tensor,
+        slice: usize,
+        dst: Option<&mut Tensor>,
+    ) -> Result<(), StepError> {
+        assert!(rank < self.n && slice < self.n);
+        let n_cols = src.n();
+        let (r0, r1) = crate::shard::shard_range(src.m(), self.n, slice);
+        let off = r0 * n_cols;
+        let len = (r1 - r0) * n_cols;
+        let mut owned = match dst {
+            Some(d) => {
+                assert_eq!(rank, slice, "only the slice owner reduces");
+                assert_eq!(
+                    (d.m(), d.n()),
+                    (r1 - r0, n_cols),
+                    "reduce_scatter_mean_slice_into shape"
+                );
+                Some(d)
+            }
+            None => {
+                assert_ne!(rank, slice, "the slice owner must pass dst");
+                None
+            }
+        };
+        let inv = 1.0 / self.n as f32;
+        if let Some(d) = owned.as_deref_mut() {
+            d.data_mut().fill(0.0);
+        }
+        self.transport
+            .gather_map(
+                rank,
+                &src.data()[off..off + len],
+                self.deadline(),
+                &mut |_r, s| {
+                    if let Some(d) = owned.as_deref_mut() {
+                        for (di, si) in d.data_mut().iter_mut().zip(s) {
+                            *di += *si;
+                        }
+                    }
+                },
+            )
+            .map_err(|e| self.lift(e))?;
+        if let Some(d) = owned {
+            for v in d.data_mut().iter_mut() {
+                *v *= inv;
+            }
+        }
+        Ok(())
+    }
+
+    /// One slice round of a chunked all-gather: the owning rank
+    /// (`rank == slice`) deposits its slice tensor, everyone else
+    /// deposits empty, and every rank copies the owner's rows into its
+    /// full-shape `dst` at the slice's row offset. Iterating `slice`
+    /// over `0..n` is bit-identical to
+    /// [`Communicator::all_gather_into`] (exact memcpys either way).
+    /// Not charged.
+    pub fn all_gather_slice_into(
+        &self,
+        rank: usize,
+        slice: usize,
+        src: Option<&Tensor>,
+        dst: &mut Tensor,
+    ) -> Result<(), StepError> {
+        assert!(rank < self.n && slice < self.n);
+        let n_cols = dst.n();
+        let (r0, r1) = crate::shard::shard_range(dst.m(), self.n, slice);
+        let send: &[f32] = match src {
+            Some(t) => {
+                assert_eq!(rank, slice, "only the slice owner deposits");
+                assert_eq!(
+                    (t.m(), t.n()),
+                    (r1 - r0, n_cols),
+                    "all_gather_slice_into shape"
+                );
+                t.data()
+            }
+            None => {
+                assert_ne!(rank, slice, "the slice owner must pass src");
+                &[]
+            }
+        };
+        let d = dst.data_mut();
+        self.transport
+            .gather_map(rank, send, self.deadline(), &mut |r, s| {
+                if r == slice {
+                    d[r0 * n_cols..r1 * n_cols].copy_from_slice(s);
+                }
+            })
+            .map_err(|e| self.lift(e))?;
+        Ok(())
+    }
+
     /// Record a collective whose rendezvous happened out-of-band: phased
     /// schedules synchronize on the pool join and move payloads through
     /// shared arenas, but must still account the bytes a real cluster

@@ -67,6 +67,12 @@ pub struct RunConfig {
     pub checkpoint_every: usize,
     /// Resume from the newest valid checkpoint in `checkpoint_dir`.
     pub resume: bool,
+    /// Step schedule of the distributed coordinator: `Some(true)` = DAG
+    /// executor overlapping collectives and compute, `Some(false)` =
+    /// phased barrier reference schedule, `None` = builder default
+    /// (`MUONBP_OVERLAP`, overlap on when unset). Over the tcp transport
+    /// every rank must resolve to the same value.
+    pub overlap: Option<bool>,
 }
 
 impl Default for RunConfig {
@@ -98,6 +104,7 @@ impl Default for RunConfig {
             checkpoint_dir: String::new(),
             checkpoint_every: 0,
             resume: false,
+            overlap: None,
         }
     }
 }
@@ -204,6 +211,13 @@ impl RunConfig {
         if let Some(v) = j.get("resume") {
             c.resume = v.as_bool()?;
         }
+        if let Some(v) = j.get("overlap") {
+            // Bool, or the CLI's "on"/"off" spelling.
+            c.overlap = Some(match v.as_bool() {
+                Ok(b) => b,
+                Err(_) => parse_overlap(v.as_str()?)?,
+            });
+        }
         Ok(c)
     }
 
@@ -284,6 +298,9 @@ impl RunConfig {
         if args.flag("resume") {
             self.resume = true;
         }
+        if let Some(v) = args.get("overlap") {
+            self.overlap = Some(parse_overlap(v)?);
+        }
         Ok(())
     }
 
@@ -320,6 +337,18 @@ fn parse_transport(s: &str) -> Result<String> {
         "local" | "tcp" => Ok(s.to_string()),
         other => Err(anyhow::anyhow!(
             "unknown transport {other:?} (expected local | tcp)"
+        )),
+    }
+}
+
+/// Parse a `--overlap` value: `on` selects the DAG-overlapped schedule,
+/// `off` the phased barrier reference.
+fn parse_overlap(s: &str) -> Result<bool> {
+    match s {
+        "on" => Ok(true),
+        "off" => Ok(false),
+        other => Err(anyhow::anyhow!(
+            "unknown overlap mode {other:?} (expected on | off)"
         )),
     }
 }
@@ -443,6 +472,38 @@ mod tests {
         let c = RunConfig::from_json(&j).unwrap();
         assert_eq!(c.fault.drop_rank.unwrap().attempt, 3);
         assert_eq!(c.fault.slow_link.unwrap().delay_ms, 25);
+    }
+
+    #[test]
+    fn overlap_plumbing() {
+        // Unset: defer to the builder default (env-controlled).
+        assert_eq!(RunConfig::default().overlap, None);
+        // JSON: bool or the CLI spelling.
+        let j = Json::parse(r#"{"overlap":false}"#).unwrap();
+        assert_eq!(RunConfig::from_json(&j).unwrap().overlap, Some(false));
+        let j = Json::parse(r#"{"overlap":"on"}"#).unwrap();
+        assert_eq!(RunConfig::from_json(&j).unwrap().overlap, Some(true));
+        let j = Json::parse(r#"{"overlap":"sideways"}"#).unwrap();
+        assert!(RunConfig::from_json(&j).is_err());
+        // CLI overrides win; bad values rejected.
+        let mut c = RunConfig::default();
+        let args = Args::parse(
+            ["--overlap", "off"].iter().map(|s| s.to_string()),
+        )
+        .unwrap();
+        c.apply_args(&args).unwrap();
+        assert_eq!(c.overlap, Some(false));
+        let args = Args::parse(
+            ["--overlap", "on"].iter().map(|s| s.to_string()),
+        )
+        .unwrap();
+        c.apply_args(&args).unwrap();
+        assert_eq!(c.overlap, Some(true));
+        let bad = Args::parse(
+            ["--overlap", "maybe"].iter().map(|s| s.to_string()),
+        )
+        .unwrap();
+        assert!(c.apply_args(&bad).is_err());
     }
 
     #[test]

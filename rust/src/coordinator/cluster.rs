@@ -1,6 +1,43 @@
 //! DistMuon: the distributed MuonBP coordinator (see module docs in mod.rs).
 //!
-//! # Phased step schedule
+//! # DAG-overlapped step schedule (default)
+//!
+//! By default (`DistMuonBuilder::overlap(true)`, env `MUONBP_OVERLAP`,
+//! CLI `--overlap`) a step no longer runs the four phases below
+//! back-to-back. Instead `try_step` builds a [`TaskDag`] of row-slab
+//! granular nodes and runs sync and compute *concurrently*:
+//!
+//! - Each DP rank gets a **lane**: a pinned worker that executes the
+//!   rank's collective rounds in a fixed global order (replicated: one
+//!   `all_reduce_mean_rows_into` per row slab; ZeRO-1: interleaved
+//!   `reduce_scatter_mean_slice_into` / `all_gather_slice_into` per DP
+//!   slice). Every lane enqueues the *identical* round sequence, so
+//!   rendezvous never mismatch.
+//! - TP-side nodes (`ShardSlab` momentum/shard work, `TpNs` per-block
+//!   Newton–Schulz, update copies, full-step gathers) depend only on the
+//!   slabs whose rows they actually read — so rank 0's NS can start while
+//!   lane workers are still streaming later matrices' slabs.
+//! - The schedule is **bit-identical** to the phased barrier schedule
+//!   below for every mesh/period/sharding/transport combination
+//!   (`tests/overlap_equivalence.rs` pins it): each node runs the same
+//!   sequential kernel on the same disjoint region, and dependency edges
+//!   reproduce exactly the ordering the barriers enforced.
+//! - Failure semantics are preserved: a panicking or erroring node
+//!   **poisons** the graph (dependents are taint-skipped, parked lanes
+//!   are released by poisoning the communicator, the step heals and
+//!   reports the same `StepError` the barrier schedule would), NS
+//!   divergence stays soft (skip dependents, escalate/retry as before),
+//!   and degrade-block / `shrink_dp` behave identically.
+//! - Warm overlapped steps stay **zero-allocation**: the graph's node,
+//!   edge and ready storage is grown once per (full/block) shape and
+//!   reused (`tests/ns_zero_alloc.rs`).
+//!
+//! `--overlap off` / `MUONBP_OVERLAP=0` selects the original phased
+//! barrier schedule, kept verbatim as the reference path. Over the TCP
+//! transport all ranks must agree on the setting (the two schedules issue
+//! different collective sequences).
+//!
+//! # Phased barrier schedule (`--overlap off`)
 //!
 //! `DistMuon::step` used to run one monolithic closure per TP rank; on a
 //! full step the leader rank orthogonalized the gathered matrix *inside*
@@ -98,16 +135,18 @@ use crate::linalg::newton_schulz::{NsCoeffs, NsWorkspace};
 use crate::mesh::{Layout, Mesh, StateSharding};
 use crate::optim::adamw::AdamW;
 use crate::optim::muon::{
-    momentum_update_into, Muon, MuonCfg, OrthFn, Period,
+    momentum_update_into, momentum_update_rows_into, Muon, MuonCfg,
+    OrthFn, Period,
 };
 use crate::optim::scaling::rms_match_scale;
 use crate::optim::{Optimizer, ParamKind, ParamMeta};
 use crate::robust::{self, AnomalyPolicy, FaultPlan, StepError};
 use crate::runtime::pool::{Pool, SendPtr};
-use crate::runtime::NsEngine;
+use crate::runtime::{DagFailure, NsEngine, Severity, TaskDag};
 use crate::shard::{
-    row_slice_into, row_slice_zeros, shard_into, unshard_from,
-    write_row_slice, ShardSpec,
+    row_slice_into, row_slice_zeros, shard_into, shard_range,
+    shard_rows_into, unshard_from, write_row_slice, write_shard,
+    ShardSpec,
 };
 use crate::tensor::Tensor;
 
@@ -127,6 +166,22 @@ pub struct DistMuonBuilder {
     /// Non-local DP transport (e.g. TCP) and the DP rank this process
     /// plays. `None` = fully-local simulated group.
     pub dp_transport: Option<(Arc<dyn Transport>, usize)>,
+    /// Step schedule: `true` (default) runs the dependency-graph
+    /// executor that overlaps collectives and compute; `false` keeps
+    /// the phased barrier schedule. Both are bit-identical.
+    pub overlap: bool,
+}
+
+/// Default for [`DistMuonBuilder::overlap`]: the DAG schedule, unless
+/// `MUONBP_OVERLAP=0` opts the process back into the phased barrier
+/// schedule (the `--overlap off` escape hatch). Over a multi-process
+/// transport every rank must agree — the two schedules run different
+/// collective round sequences.
+fn overlap_default() -> bool {
+    match std::env::var("MUONBP_OVERLAP") {
+        Ok(v) => v != "0",
+        Err(_) => true,
+    }
 }
 
 impl DistMuonBuilder {
@@ -144,7 +199,19 @@ impl DistMuonBuilder {
             orth: None,
             collective_deadline: None,
             dp_transport: None,
+            overlap: overlap_default(),
         }
+    }
+
+    /// Select the step schedule: `true` = dependency-graph executor
+    /// (collectives overlap compute, the default), `false` = phased
+    /// barrier schedule. Results are bit-identical either way
+    /// (`tests/overlap_equivalence.rs`); over TCP every rank must pick
+    /// the same mode, since the schedules' collective round sequences
+    /// differ.
+    pub fn overlap(mut self, on: bool) -> Self {
+        self.overlap = on;
+        self
     }
 
     pub fn layout(mut self, layout: Layout) -> Self {
@@ -348,7 +415,33 @@ impl DistMuonBuilder {
             None => Communicator::new(self.mesh.dp, self.dp_net),
         };
         dp_comm.set_deadline(self.collective_deadline);
+        let n_mat = matrix_idx.len();
+        // Row-slab granularity for the DAG schedule: ZeRO-1 chunks at
+        // the DP slice partition (the sync's natural unit); replicated
+        // mode splits each matrix into up to four row slabs. The stride
+        // sizes the flat node-id scratch the graph build writes into.
+        let slab_stride = matrix_idx
+            .iter()
+            .map(|&i| {
+                if zero1 {
+                    self.mesh.dp
+                } else {
+                    metas[i].shape[0].min(4).max(1)
+                }
+            })
+            .max()
+            .unwrap_or(0);
         DistMuon {
+            overlap: self.overlap,
+            dag: TaskDag::new(),
+            sync_wall: (0..2 * n_mat).map(|_| AtomicU64::new(0)).collect(),
+            gather_wall: (0..n_mat).map(|_| AtomicU64::new(0)).collect(),
+            ns_wall: AtomicU64::new(0),
+            dag_sync_ids: vec![0; n_mat * slab_stride],
+            dag_shard_ids: vec![0; self.mesh.tp * n_mat * slab_stride],
+            dag_ns_ids: vec![0; self.mesh.tp * n_mat],
+            dag_tp_ids: vec![0; self.mesh.tp],
+            slab_stride,
             mesh: self.mesh,
             tp_comm: Communicator::new(self.mesh.tp, self.tp_net),
             dp_comm,
@@ -399,6 +492,52 @@ fn record_err(slot: &Mutex<Option<StepError>>, e: StepError) {
     }
 }
 
+/// One task record in the DAG-overlapped step schedule (see
+/// [`DistMuon::run_overlapped`]). Lane-pinned kinds (`SyncBegin`,
+/// `ArSlab`, `ArVec`, `RsSlice`, `AgSlice`) are DP collective rounds —
+/// every lane executes the identical global round sequence, preserving
+/// the fixed rank/slab deposit order. Everything else is shared compute
+/// claimed by any worker the moment its inputs exist.
+#[derive(Debug, Clone, Copy)]
+enum Node {
+    /// Lane `r` entry: straggler / phase-0 panic injection before the
+    /// first collective round.
+    SyncBegin { r: usize },
+    /// Replicated sync: all-reduce-mean of one row slab of matrix
+    /// ordinal `ord` (uncharged chunk round; the logical all-reduce is
+    /// charged once after the join).
+    ArSlab { r: usize, ord: usize, slab: usize },
+    /// Whole-tensor all-reduce-mean for non-matrix param `i` (AdamW
+    /// inputs) — the self-charging collective, as in the barrier path.
+    ArVec { r: usize, i: usize },
+    /// ZeRO-1 sync: reduce-scatter round for DP slice `slice`; the
+    /// owning lane (`r == slice`) also advances its staged momentum
+    /// slice right after the reduction lands.
+    RsSlice { r: usize, ord: usize, slice: usize },
+    /// ZeRO-1 sync: all-gather round rebroadcasting slice `slice`'s
+    /// staged momentum into every lane's accumulator.
+    AgSlice { r: usize, ord: usize, slice: usize },
+    /// TP rank entry: phase-1 panic injection.
+    TpBegin { rank: usize },
+    /// Load row slab `slab`'s intersection with TP `rank`'s block from
+    /// the synced matrix (and, replicated, advance those momentum
+    /// rows). Starts while later slabs are still on the wire — the
+    /// overlap this schedule exists for.
+    ShardSlab { rank: usize, ord: usize, slab: usize },
+    /// Block-step Newton–Schulz on `rank`'s block of matrix `ord`.
+    TpNs { rank: usize, ord: usize },
+    /// Block step: write one block's orthogonalized update shard into
+    /// the assembly scratch (phase-3 work, overlapped with other
+    /// blocks' NS).
+    CopyUpdate { ord: usize, block: usize },
+    /// Clamped grid: copy the owner's update into replica rank `rep`'s
+    /// shard (replica-state hygiene, same as barrier phase 1.5).
+    ReplicaCopy { ord: usize, rep: usize },
+    /// Full step: write one block's staged momentum into the gather
+    /// scratch, overlapping the reassembly with the sync tail.
+    GatherSlab { ord: usize, block: usize },
+}
+
 /// Which engine orthogonalizes momenta.
 enum DistBackend {
     /// Default host Newton–Schulz through preallocated arenas: pooled,
@@ -420,6 +559,39 @@ struct DistScratch {
 
 /// Distributed MuonBP over a simulated DP x TP cluster.
 pub struct DistMuon {
+    /// `true` = DAG-overlapped schedule (default), `false` = phased
+    /// barrier schedule. Bit-identical results either way.
+    overlap: bool,
+    /// Reusable step graph (grow-only node storage; warm rebuilds
+    /// allocate nothing).
+    dag: TaskDag<Node>,
+    /// Measured DP-sync wall-clock per matrix ordinal, accumulated in
+    /// nanos by lane 0's chunk rounds: slot `2*ord` = all-reduce /
+    /// reduce-scatter, `2*ord + 1` = all-gather. Charged once per
+    /// logical collective after the join.
+    sync_wall: Vec<AtomicU64>,
+    /// Measured gather reassembly wall-clock per matrix ordinal
+    /// (full steps; nanos, accumulated by `GatherSlab` nodes).
+    gather_wall: Vec<AtomicU64>,
+    /// Accumulated Newton–Schulz compute wall-clock over the whole run
+    /// (nanos, summed across workers — divide by `tp` for an approximate
+    /// parallel-time figure). Feeds the [`NetModel::overlapped_step_time`]
+    /// comparison in [`Optimizer::comm_report`]. DAG path only; the
+    /// barrier reference path is kept untouched.
+    ns_wall: AtomicU64,
+    /// Graph-build scratch: lane 0's sync node id per (ord, slab),
+    /// `ord * slab_stride + slab`.
+    dag_sync_ids: Vec<u32>,
+    /// Graph-build scratch: `ShardSlab` node id per (rank, ord, slab),
+    /// `(rank * n_mat + ord) * slab_stride + slab`; `u32::MAX` = no
+    /// row intersection, node not created.
+    dag_shard_ids: Vec<u32>,
+    /// Graph-build scratch: `TpNs` node id per (rank, ord).
+    dag_ns_ids: Vec<u32>,
+    /// Graph-build scratch: `TpBegin` node id per TP rank.
+    dag_tp_ids: Vec<u32>,
+    /// Max row-slab count over all matrices (see `n_slabs`).
+    slab_stride: usize,
     mesh: Mesh,
     tp_comm: Communicator,
     dp_comm: Communicator,
@@ -701,6 +873,738 @@ impl DistMuon {
             // so none are left inside a collective).
             self.dp_comm.heal();
             return Err(e);
+        }
+        Ok(())
+    }
+
+    /// Row-slab count for a matrix with `m` rows in the DAG schedule:
+    /// ZeRO-1 chunks at the DP slice partition (the sync's natural
+    /// unit), replicated mode at up to four row slabs per matrix.
+    fn n_slabs(&self, m: usize) -> usize {
+        if self.sharding == StateSharding::Zero1 {
+            self.mesh.dp
+        } else {
+            m.min(4).max(1)
+        }
+    }
+
+    /// Rebuild the step graph into the dag's slot-reused buffers.
+    ///
+    /// Lanes (one per pooled DP rank) hold the collective rounds in an
+    /// identical global order — chunk rounds rendezvous by arrival
+    /// order, so every lane must enqueue the same sequence. Shared
+    /// nodes are the compute: a `ShardSlab` depends on lane 0's sync
+    /// node for exactly its row slab (plus its rank's `TpBegin`), so
+    /// the slab's shard load and momentum update start while later
+    /// slabs are still on the wire; block NS starts when its rank's
+    /// slabs land; reassembly copies overlap the other blocks' NS (or,
+    /// on full steps, the sync tail). The node set depends only on
+    /// (full, n_lanes, shapes), so warm rebuilds allocate nothing.
+    fn build_graph(&mut self, full: bool, n_lanes: usize) {
+        const NO_ID: u32 = u32::MAX;
+        let zero1 = self.sharding == StateSharding::Zero1;
+        let tp = self.mesh.tp;
+        let n_mat = self.matrix_idx.len();
+        let stride = self.slab_stride;
+        self.dag.begin(n_lanes);
+        for r in 0..n_lanes {
+            self.dag.add(Node::SyncBegin { r }, Some(r));
+            let mut ord = 0;
+            for i in 0..self.metas.len() {
+                if self.specs[i].is_some() {
+                    let ns = self.n_slabs(self.metas[i].shape[0]);
+                    for s in 0..ns {
+                        if zero1 {
+                            self.dag.add(
+                                Node::RsSlice { r, ord, slice: s },
+                                Some(r),
+                            );
+                            let ag = self.dag.add(
+                                Node::AgSlice { r, ord, slice: s },
+                                Some(r),
+                            );
+                            if r == 0 {
+                                self.dag_sync_ids[ord * stride + s] = ag;
+                            }
+                        } else {
+                            let id = self.dag.add(
+                                Node::ArSlab { r, ord, slab: s },
+                                Some(r),
+                            );
+                            if r == 0 {
+                                self.dag_sync_ids[ord * stride + s] = id;
+                            }
+                        }
+                    }
+                    ord += 1;
+                } else {
+                    self.dag.add(Node::ArVec { r, i }, Some(r));
+                }
+            }
+        }
+        for rank in 0..tp {
+            self.dag_tp_ids[rank] =
+                self.dag.add(Node::TpBegin { rank }, None);
+        }
+        for ord in 0..n_mat {
+            let pidx = self.matrix_idx[ord];
+            let (m, nb) = {
+                let spec = self.specs[pidx].as_ref().unwrap();
+                (spec.m, spec.num_blocks())
+            };
+            let ns = self.n_slabs(m);
+            for rank in 0..tp {
+                let block = rank.min(nb - 1);
+                let (br0, br1) =
+                    self.specs[pidx].as_ref().unwrap().ranges(block).0;
+                for s in 0..ns {
+                    let (gr0, gr1) = shard_range(m, ns, s);
+                    let slot = (rank * n_mat + ord) * stride + s;
+                    if gr0.max(br0) >= gr1.min(br1) {
+                        // Empty slab, or no row overlap with this
+                        // block: nothing to load.
+                        self.dag_shard_ids[slot] = NO_ID;
+                        continue;
+                    }
+                    let id = self
+                        .dag
+                        .add(Node::ShardSlab { rank, ord, slab: s }, None);
+                    self.dag_shard_ids[slot] = id;
+                    self.dag.dep(self.dag_tp_ids[rank], id);
+                    if n_lanes > 0 {
+                        self.dag
+                            .dep(self.dag_sync_ids[ord * stride + s], id);
+                    }
+                }
+            }
+            if full {
+                for block in 0..nb {
+                    let g = self
+                        .dag
+                        .add(Node::GatherSlab { ord, block }, None);
+                    self.dag.dep(self.dag_tp_ids[block], g);
+                    for s in 0..ns {
+                        let sid = self.dag_shard_ids
+                            [(block * n_mat + ord) * stride + s];
+                        if sid != NO_ID {
+                            self.dag.dep(sid, g);
+                        }
+                    }
+                }
+            } else {
+                for rank in 0..nb {
+                    let id =
+                        self.dag.add(Node::TpNs { rank, ord }, None);
+                    self.dag_ns_ids[rank * n_mat + ord] = id;
+                    self.dag.dep(self.dag_tp_ids[rank], id);
+                    for s in 0..ns {
+                        let sid = self.dag_shard_ids
+                            [(rank * n_mat + ord) * stride + s];
+                        if sid != NO_ID {
+                            self.dag.dep(sid, id);
+                        }
+                    }
+                    let cu = self
+                        .dag
+                        .add(Node::CopyUpdate { ord, block: rank }, None);
+                    self.dag.dep(id, cu);
+                }
+                // Clamped grid: replicas receive the owner's update.
+                for rep in nb..tp {
+                    let rc = self
+                        .dag
+                        .add(Node::ReplicaCopy { ord, rep }, None);
+                    self.dag
+                        .dep(self.dag_ns_ids[(nb - 1) * n_mat + ord], rc);
+                }
+            }
+        }
+    }
+
+    /// One attempt of the DAG-overlapped step schedule: DP sync, shard
+    /// loads, momentum updates, block NS, and reassembly run as a
+    /// single dependency graph at row-slab granularity — a reduced
+    /// slab's slice-local work starts while later slabs are still on
+    /// the wire. Reads committed state and writes staging only (the
+    /// same step-atomicity contract as `dp_sync` + `run_tp`); results
+    /// are bit-identical to the barrier schedule because every slab
+    /// write is a disjoint-row memcpy, chunk rounds keep the fixed
+    /// rank deposit order, and the f32 reductions run in the same
+    /// per-element order (`tests/overlap_equivalence.rs`).
+    ///
+    /// Failure semantics: NS divergence is graded soft — its
+    /// dependents are skipped but every sync lane finishes its rounds,
+    /// so `dp_acc[0]` is complete for the escalate-full-orth retry
+    /// (which reruns through the barrier `run_tp`, rewriting all
+    /// staging). Everything else is hard: the hook poisons the DP
+    /// group (releasing lanes parked in a chunk rendezvous), the graph
+    /// drains, and the group is healed after the join. Hard failures
+    /// skip the post-join collective charges, since the sync may be
+    /// partial and the attempt commits nothing.
+    fn run_overlapped(
+        &mut self,
+        full: bool,
+        grads: &[Tensor],
+        attempt: u64,
+    ) -> Result<(), StepError> {
+        let zero1 = self.sharding == StateSharding::Zero1;
+        let sync = self.mesh.dp > 1 || zero1;
+        if sync {
+            self.dp_comm.set_phase(0);
+        }
+        if let Some(local) = self.dp_local {
+            // One OS process per DP rank (replicated-only, asserted at
+            // build): run the local rank's chunked schedule inline —
+            // every peer process runs the identical round sequence,
+            // each chunk round under a fresh per-chunk deadline — then
+            // feed the graph below with zero lanes.
+            let comm = &self.dp_comm;
+            let fault = &self.fault;
+            let specs = &self.specs;
+            let dp = self.mesh.dp;
+            let acc = &mut self.dp_acc[0];
+            let res = comm.run_fallible(local, 0, || {
+                fault.maybe_straggle(attempt, local);
+                fault.maybe_panic(attempt, local, 0);
+                for (i, g) in grads.iter().enumerate() {
+                    let dst = &mut acc[i];
+                    if specs[i].is_some() {
+                        let started = Instant::now();
+                        let ns = g.m().min(4).max(1);
+                        for j in 0..ns {
+                            let (r0, r1) = shard_range(g.m(), ns, j);
+                            comm.all_reduce_mean_rows_into(
+                                local, g, dst, r0, r1,
+                            )?;
+                        }
+                        // One logical all-reduce per matrix, measured
+                        // across its chunk rounds; rank 0 records, as
+                        // in the whole-tensor collective.
+                        if local == 0 && dp > 1 {
+                            comm.charge_collective_timed(
+                                CollectiveKind::AllReduce,
+                                g.numel() * 4,
+                                started.elapsed().as_secs_f64(),
+                            );
+                        }
+                    } else {
+                        comm.all_reduce_mean_into(local, g, dst)?;
+                    }
+                }
+                Ok(())
+            });
+            if let Err(e) = res {
+                self.dp_comm.heal();
+                return Err(e);
+            }
+        }
+        let n_lanes = if sync && self.dp_local.is_none() {
+            self.mesh.dp
+        } else {
+            0
+        };
+        self.build_graph(full, n_lanes);
+        for w in self.sync_wall.iter().chain(self.gather_wall.iter()) {
+            w.store(0, Ordering::Relaxed);
+        }
+        // Lane workers are always occupied by their pinned rendezvous
+        // sequence (lane nodes have no deps, so a lane worker never steals
+        // shared work until its rounds are exhausted). Overlap therefore
+        // comes from the extra `tp` workers draining shard/NS nodes while
+        // the lanes stream slabs — `run_concurrent` guarantees each task a
+        // live thread (rendezvous tasks mostly block), so oversubscribing
+        // past the core count is the intended regime, same as `dp_sync`.
+        let workers = n_lanes + self.mesh.tp;
+        let use_acc_src = sync;
+        let hard = std::sync::atomic::AtomicBool::new(false);
+        {
+            let dag = &mut self.dag;
+            let comm = &self.dp_comm;
+            let specs = &self.specs;
+            let matrix_idx = &self.matrix_idx;
+            let backend = &self.backend;
+            let ns_calls = &self.ns_calls;
+            let ns_wall = &self.ns_wall;
+            let fault = &self.fault;
+            let err_slot = &self.err_slot;
+            let sync_wall = &self.sync_wall;
+            let gather_wall = &self.gather_wall;
+            let mesh = self.mesh;
+            let mu = self.cfg.momentum;
+            let rms_beta = self.cfg.rms_beta;
+            let acc_ptr = SendPtr(self.dp_acc.as_mut_ptr());
+            let dpm_ptr =
+                SendPtr(self.dp_momenta.as_ptr() as *mut Vec<Tensor>);
+            let dpmn_ptr = SendPtr(self.dp_momenta_next.as_mut_ptr());
+            let dpg_ptr = SendPtr(self.dp_grad_slices.as_mut_ptr());
+            let cur_ptr =
+                SendPtr(self.rank_momenta.as_ptr() as *mut Vec<Tensor>);
+            let next_ptr = SendPtr(self.rank_momenta_next.as_mut_ptr());
+            let grads_ptr = SendPtr(self.rank_grads.as_mut_ptr());
+            let upd_ptr = SendPtr(self.rank_updates.as_mut_ptr());
+            let scr_ptr = SendPtr(self.scratch.as_mut_ptr());
+            let slabs = move |m: usize| {
+                if zero1 {
+                    mesh.dp
+                } else {
+                    m.min(4).max(1)
+                }
+            };
+            // SAFETY (all node bodies): each staging row has exactly
+            // one writer per disjoint row range — lane r solely writes
+            // DP row r; concurrent slab tasks of one (rank, ord) write
+            // disjoint rows of the same tensors; block copies write
+            // disjoint blocks of the shared scratch — and every
+            // read-after-write is ordered by a declared dep edge (the
+            // dag's pending-count AcqRel pair is the happens-before).
+            // Vec control blocks are never mutated, only elements.
+            let exec = |node: Node,
+                        arena: &mut crate::runtime::WorkerArena|
+             -> Result<(), StepError> {
+                match node {
+                    Node::SyncBegin { r } => {
+                        fault.maybe_straggle(attempt, r);
+                        fault.maybe_panic(attempt, r, 0);
+                        Ok(())
+                    }
+                    Node::ArSlab { r, ord, slab } => {
+                        let pidx = matrix_idx[ord];
+                        let g = &grads[pidx];
+                        let acc = unsafe { &mut *acc_ptr.0.add(r) };
+                        let ns = slabs(g.m());
+                        let (r0, r1) = shard_range(g.m(), ns, slab);
+                        let t0 = (r == 0).then(Instant::now);
+                        comm.all_reduce_mean_rows_into(
+                            r,
+                            g,
+                            &mut acc[pidx],
+                            r0,
+                            r1,
+                        )?;
+                        if let Some(t0) = t0 {
+                            sync_wall[2 * ord].fetch_add(
+                                t0.elapsed().as_nanos() as u64,
+                                Ordering::Relaxed,
+                            );
+                        }
+                        Ok(())
+                    }
+                    Node::ArVec { r, i } => {
+                        let acc = unsafe { &mut *acc_ptr.0.add(r) };
+                        // Whole-tensor round: self-charging (rank 0),
+                        // exactly as in the barrier schedule.
+                        comm.all_reduce_mean_into(r, &grads[i], &mut acc[i])
+                    }
+                    Node::RsSlice { r, ord, slice } => {
+                        let pidx = matrix_idx[ord];
+                        let g = &grads[pidx];
+                        let t0 = (r == 0).then(Instant::now);
+                        if r == slice {
+                            let gsl = unsafe { &mut *dpg_ptr.0.add(r) };
+                            comm.reduce_scatter_mean_slice_into(
+                                r,
+                                g,
+                                slice,
+                                Some(&mut gsl[ord]),
+                            )?;
+                            // The owning lane advances its staged
+                            // momentum slice the moment the reduction
+                            // lands — rebroadcast by the next round.
+                            let cur = unsafe { &*dpm_ptr.0.add(r) };
+                            let next =
+                                unsafe { &mut *dpmn_ptr.0.add(r) };
+                            momentum_update_into(
+                                &mut next[ord],
+                                &cur[ord],
+                                mu,
+                                &gsl[ord],
+                            );
+                        } else {
+                            comm.reduce_scatter_mean_slice_into(
+                                r, g, slice, None,
+                            )?;
+                        }
+                        if let Some(t0) = t0 {
+                            sync_wall[2 * ord].fetch_add(
+                                t0.elapsed().as_nanos() as u64,
+                                Ordering::Relaxed,
+                            );
+                        }
+                        Ok(())
+                    }
+                    Node::AgSlice { r, ord, slice } => {
+                        let pidx = matrix_idx[ord];
+                        let acc = unsafe { &mut *acc_ptr.0.add(r) };
+                        let t0 = (r == 0).then(Instant::now);
+                        if r == slice {
+                            let next = unsafe {
+                                &*(dpmn_ptr.0.add(r)
+                                    as *const Vec<Tensor>)
+                            };
+                            comm.all_gather_slice_into(
+                                r,
+                                slice,
+                                Some(&next[ord]),
+                                &mut acc[pidx],
+                            )?;
+                        } else {
+                            comm.all_gather_slice_into(
+                                r,
+                                slice,
+                                None,
+                                &mut acc[pidx],
+                            )?;
+                        }
+                        if let Some(t0) = t0 {
+                            sync_wall[2 * ord + 1].fetch_add(
+                                t0.elapsed().as_nanos() as u64,
+                                Ordering::Relaxed,
+                            );
+                        }
+                        Ok(())
+                    }
+                    Node::TpBegin { rank } => {
+                        fault.maybe_panic(attempt, rank, 1);
+                        Ok(())
+                    }
+                    Node::ShardSlab { rank, ord, slab } => {
+                        let pidx = matrix_idx[ord];
+                        let spec = specs[pidx].as_ref().unwrap();
+                        let nb = spec.num_blocks();
+                        let block = rank.min(nb - 1);
+                        let ns = slabs(spec.m);
+                        let (gr0, gr1) = shard_range(spec.m, ns, slab);
+                        let src: &Tensor = if use_acc_src {
+                            let acc0 = unsafe {
+                                &*(acc_ptr.0 as *const Vec<Tensor>)
+                            };
+                            &acc0[pidx]
+                        } else {
+                            &grads[pidx]
+                        };
+                        let next = unsafe { &mut *next_ptr.0.add(rank) };
+                        if zero1 {
+                            // ZeRO-1: the synced matrix IS the staged
+                            // momentum (advanced slice-locally in the
+                            // sync rounds) — load the slab's block
+                            // intersection.
+                            shard_rows_into(
+                                src,
+                                spec,
+                                block,
+                                gr0,
+                                gr1,
+                                &mut next[ord],
+                            );
+                        } else {
+                            let gbufs =
+                                unsafe { &mut *grads_ptr.0.add(rank) };
+                            if let Some((b0, b1)) = shard_rows_into(
+                                src,
+                                spec,
+                                block,
+                                gr0,
+                                gr1,
+                                &mut gbufs[ord],
+                            ) {
+                                let cur =
+                                    unsafe { &*cur_ptr.0.add(rank) };
+                                momentum_update_rows_into(
+                                    &mut next[ord],
+                                    &cur[ord],
+                                    mu,
+                                    &gbufs[ord],
+                                    b0,
+                                    b1,
+                                );
+                            }
+                        }
+                        Ok(())
+                    }
+                    Node::TpNs { rank, ord } => {
+                        let pidx = matrix_idx[ord];
+                        let next = unsafe {
+                            &*(next_ptr.0.add(rank) as *const Vec<Tensor>)
+                        };
+                        let ups = unsafe { &mut *upd_ptr.0.add(rank) };
+                        ns_calls.fetch_add(1, Ordering::Relaxed);
+                        let t0 = Instant::now();
+                        match backend {
+                            DistBackend::Host { steps, coeffs } => {
+                                arena.ns.load(&next[ord]);
+                                arena.ns.iterate_threads(
+                                    *steps, *coeffs, 1,
+                                );
+                                arena.ns.store_into(&mut ups[ord]);
+                            }
+                            DistBackend::Custom(f) => {
+                                let u = f(&next[ord]);
+                                ups[ord]
+                                    .data_mut()
+                                    .copy_from_slice(u.data());
+                            }
+                        }
+                        ns_wall.fetch_add(
+                            t0.elapsed().as_nanos() as u64,
+                            Ordering::Relaxed,
+                        );
+                        let (bm, bn) = (next[ord].m(), next[ord].n());
+                        let scale =
+                            rms_match_scale(bm, bn, rms_beta) as f32;
+                        ups[ord].scale(scale);
+                        if let Err((norm, bound)) =
+                            robust::check_ns_output(&ups[ord], scale)
+                        {
+                            return Err(StepError::NsDiverged {
+                                param: pidx,
+                                norm,
+                                bound,
+                            });
+                        }
+                        Ok(())
+                    }
+                    Node::CopyUpdate { ord, block } => {
+                        fault.maybe_panic(attempt, 0, 3);
+                        let pidx = matrix_idx[ord];
+                        let spec = specs[pidx].as_ref().unwrap();
+                        let ups = unsafe {
+                            &*(upd_ptr.0.add(block) as *const Vec<Tensor>)
+                        };
+                        let sc = unsafe {
+                            (*scr_ptr.0.add(pidx)).as_mut().unwrap()
+                        };
+                        write_shard(&mut sc.update, spec, block, &ups[ord]);
+                        Ok(())
+                    }
+                    Node::ReplicaCopy { ord, rep } => {
+                        let pidx = matrix_idx[ord];
+                        let nb =
+                            specs[pidx].as_ref().unwrap().num_blocks();
+                        let src = unsafe {
+                            &*(upd_ptr.0.add(nb - 1)
+                                as *const Vec<Tensor>)
+                        };
+                        let dst = unsafe { &mut *upd_ptr.0.add(rep) };
+                        dst[ord].data_mut().copy_from_slice(src[ord].data());
+                        Ok(())
+                    }
+                    Node::GatherSlab { ord, block } => {
+                        let pidx = matrix_idx[ord];
+                        let spec = specs[pidx].as_ref().unwrap();
+                        let t0 = Instant::now();
+                        let next = unsafe {
+                            &*(next_ptr.0.add(block) as *const Vec<Tensor>)
+                        };
+                        let sc = unsafe {
+                            (*scr_ptr.0.add(pidx)).as_mut().unwrap()
+                        };
+                        write_shard(&mut sc.full, spec, block, &next[ord]);
+                        gather_wall[ord].fetch_add(
+                            t0.elapsed().as_nanos() as u64,
+                            Ordering::Relaxed,
+                        );
+                        Ok(())
+                    }
+                }
+            };
+            let on_fail = |f: DagFailure<Node, StepError>| -> Severity {
+                let (err, is_panic) = match f {
+                    DagFailure::Err { err, .. } => (err, false),
+                    DagFailure::Panic { kind } => {
+                        // Map the node to the schedule phase the
+                        // barrier path would have reported.
+                        let (rank, phase) = match kind {
+                            Node::SyncBegin { r }
+                            | Node::ArSlab { r, .. }
+                            | Node::ArVec { r, .. }
+                            | Node::RsSlice { r, .. }
+                            | Node::AgSlice { r, .. } => (r, 0),
+                            Node::TpBegin { rank }
+                            | Node::ShardSlab { rank, .. }
+                            | Node::TpNs { rank, .. } => (rank, 1),
+                            Node::GatherSlab { .. } => (0, 2),
+                            Node::CopyUpdate { .. }
+                            | Node::ReplicaCopy { .. } => (0, 3),
+                        };
+                        (StepError::RankPanicked { rank, phase }, true)
+                    }
+                };
+                let soft = !is_panic
+                    && matches!(err, StepError::NsDiverged { .. });
+                // Slot priority: a concrete hard cause beats both the
+                // secondary Poisoned releases AND a soft NS divergence
+                // (whose escalate retry must not run on a partial
+                // sync).
+                {
+                    let mut g = err_slot.lock().unwrap();
+                    let replace = match &*g {
+                        None => true,
+                        Some(StepError::Poisoned) => {
+                            !matches!(err, StepError::Poisoned)
+                        }
+                        Some(StepError::NsDiverged { .. }) => {
+                            !soft && !matches!(err, StepError::Poisoned)
+                        }
+                        _ => false,
+                    };
+                    if replace {
+                        *g = Some(err);
+                    }
+                }
+                if soft {
+                    return Severity::Soft;
+                }
+                hard.store(true, Ordering::Relaxed);
+                if n_lanes > 0 {
+                    // Release lanes parked inside a chunk rendezvous
+                    // BEFORE the graph poison stops their workers
+                    // (PR-6 contract: poison, never deadlock). Their
+                    // secondary Poisoned failures re-enter this hook
+                    // and lose to the first concrete cause above.
+                    comm.poison();
+                }
+                Severity::Hard
+            };
+            dag.run::<StepError, _, _>(workers, exec, on_fail);
+        }
+        let err = self.err_slot.lock().unwrap().take();
+        let hard_failed = hard.load(Ordering::Relaxed);
+        if hard_failed && n_lanes > 0 {
+            // The dag joined every worker (the quiescence heal
+            // requires); poisoned lanes were already released.
+            self.dp_comm.heal();
+        }
+        // Charge each logical DP collective once, with lane 0's chunk
+        // wall-clock accumulated across its rounds — byte-for-byte the
+        // same CommStats entries as the barrier schedule's whole-tensor
+        // collectives.
+        if n_lanes > 0 && !hard_failed && self.mesh.dp > 1 {
+            for ord in 0..self.matrix_idx.len() {
+                let pidx = self.matrix_idx[ord];
+                let bytes =
+                    self.metas[pidx].shape[0] * self.metas[pidx].shape[1] * 4;
+                let rs_wall = self.sync_wall[2 * ord].load(Ordering::Relaxed)
+                    as f64
+                    / 1e9;
+                if zero1 {
+                    let ag_wall = self.sync_wall[2 * ord + 1]
+                        .load(Ordering::Relaxed)
+                        as f64
+                        / 1e9;
+                    self.dp_comm.charge_collective_timed(
+                        CollectiveKind::ReduceScatter,
+                        bytes,
+                        rs_wall,
+                    );
+                    self.dp_comm.charge_collective_timed(
+                        CollectiveKind::AllGather,
+                        bytes,
+                        ag_wall,
+                    );
+                } else {
+                    self.dp_comm.charge_collective_timed(
+                        CollectiveKind::AllReduce,
+                        bytes,
+                        rs_wall,
+                    );
+                }
+            }
+        }
+        if let Some(e) = err {
+            return Err(e);
+        }
+        if full {
+            // The full-matrix NS runs on the MAIN THREAD after the
+            // join: its GEMM/syrk row blocks fan out across the entire
+            // pool. Running it inside a graph node would inline the
+            // nested fan-out single-core — the regression the phased
+            // schedule originally fixed.
+            let res = {
+                let this = std::panic::AssertUnwindSafe(&mut *self);
+                std::panic::catch_unwind(move || {
+                    let mut this = this;
+                    this.0.finish_full(attempt)
+                })
+            };
+            return match res {
+                Ok(r) => r,
+                Err(_) => {
+                    Err(StepError::RankPanicked { rank: 0, phase: 2 })
+                }
+            };
+        }
+        Ok(())
+    }
+
+    /// Full-step leader orthogonalization after the DAG join —
+    /// identical math and charges to `leader_phases`' full branch,
+    /// except the gather reassembly already ran inside the graph
+    /// (`GatherSlab` nodes, overlapping the sync tail), so its charge
+    /// reports the accumulated overlap wall-clock.
+    fn finish_full(&mut self, attempt: u64) -> Result<(), StepError> {
+        for (ord, &pidx) in self.matrix_idx.iter().enumerate() {
+            let spec = self.specs[pidx].as_ref().unwrap();
+            let nb = spec.num_blocks();
+            let sc = self.scratch[pidx].as_mut().unwrap();
+            self.fault.maybe_panic(attempt, 0, 2);
+            let real_bytes: usize =
+                (0..nb).map(|b| spec.block_bytes(b)).sum();
+            if nb > 1 {
+                let wall = self.gather_wall[ord].load(Ordering::Relaxed)
+                    as f64
+                    / 1e9;
+                self.tp_comm.charge_collective_timed(
+                    CollectiveKind::Gather,
+                    real_bytes,
+                    wall,
+                );
+            }
+            let DistScratch { full: m_full, update } = sc;
+            self.ns_calls.fetch_add(1, Ordering::Relaxed);
+            let t0 = Instant::now();
+            match &self.backend {
+                DistBackend::Host { steps, coeffs } => {
+                    Muon::full_orth_into(
+                        &mut self.ws,
+                        m_full,
+                        *steps,
+                        *coeffs,
+                        self.cfg.rms_beta,
+                        update,
+                    );
+                }
+                DistBackend::Custom(f) => {
+                    let u = f(m_full);
+                    update.data_mut().copy_from_slice(u.data());
+                    update.scale(rms_match_scale(
+                        spec.m,
+                        spec.n,
+                        self.cfg.rms_beta,
+                    ) as f32);
+                }
+            }
+            self.ns_wall.fetch_add(
+                t0.elapsed().as_nanos() as u64,
+                Ordering::Relaxed,
+            );
+            let scale =
+                rms_match_scale(spec.m, spec.n, self.cfg.rms_beta) as f32;
+            if let Err((norm, bound)) =
+                robust::check_ns_output(update, scale)
+            {
+                return Err(StepError::NsDiverged {
+                    param: pidx,
+                    norm,
+                    bound,
+                });
+            }
+            if nb > 1 {
+                self.tp_comm.charge_collective_timed(
+                    CollectiveKind::Scatter,
+                    real_bytes,
+                    0.0,
+                );
+            }
         }
         Ok(())
     }
@@ -1055,6 +1959,24 @@ impl DistMuon {
             self.dp_momenta_next = slices(&self.metas);
             self.dp_grad_slices = slices(&self.metas);
         }
+        // The DAG schedule's slab partition follows the DP degree
+        // under ZeRO-1: re-size the node-id scratch for the shrunken
+        // group (a rebuild-time allocation, not a warm-step one).
+        let n_mat = self.matrix_idx.len();
+        self.slab_stride = self
+            .matrix_idx
+            .iter()
+            .map(|&i| {
+                if zero1 {
+                    mesh.dp
+                } else {
+                    self.metas[i].shape[0].min(4).max(1)
+                }
+            })
+            .max()
+            .unwrap_or(0);
+        self.dag_sync_ids = vec![0; n_mat * self.slab_stride];
+        self.dag_shard_ids = vec![0; mesh.tp * n_mat * self.slab_stride];
         // restore() realigns `attempts` to the snapshot's committed-step
         // count (right for a fresh process resuming from disk). Here the
         // SAME process continues, so keep the live attempt counter: the
@@ -1113,75 +2035,133 @@ impl Optimizer for DistMuon {
         // straggler plans, so an injected fault fires exactly once.
         self.arm_transport_faults(attempt);
 
-        // ---- Phase 0 (fallible): DP sync into staging (see `dp_sync`).
-        // Under `degrade-block` a sync that times out or loses a peer
-        // does NOT fail the step: block steps need no gather/scatter, so
-        // the attempt proceeds as a comm-avoiding blockwise-only step on
-        // the local gradients, committed with the blockwise stepsize —
-        // the paper's §3.2 two-stepsize rule, applied in reverse of the
-        // `escalate-full-orth` policy.
+        // ---- The attempt itself: the DAG-overlapped schedule (the
+        // default) fuses DP sync and the TP phases into one dependency
+        // graph; `--overlap off` keeps the phased barrier schedule.
+        // Both are bit-identical. Anomaly RETRIES (escalate / degrade)
+        // always rerun through the barrier `run_tp`, which rewrites
+        // every staging buffer the failed attempt touched.
         let mut degraded = false;
-        if let Err(e) = self.dp_sync(grads, attempt) {
-            let degradable = matches!(
-                e,
-                StepError::Timeout { .. } | StepError::PeerDead { .. }
-            );
-            if degradable
-                && self.cfg.on_anomaly == AnomalyPolicy::DegradeBlock
-                && self.sharding == StateSharding::Replicated
-            {
-                degraded = true;
-            } else {
-                return Err(e);
-            }
-        }
-        // A degraded attempt falls back to the raw local gradients; in
-        // the simulated cluster every DP rank holds the same `grads`, so
-        // skipping the mean is bit-identical to a completed sync. ZeRO-1
-        // cannot degrade (its momentum state lives in the DP phase), so
-        // the policy gate above requires replicated sharding.
-        let use_acc = (self.mesh.dp > 1 || zero1) && !degraded;
-        let run_full = full && !degraded;
-
-        // What the TP phases consume: mean gradients (replicated),
-        // except matrix entries under ZeRO-1, which are the gathered
-        // *staged* momenta. The dp == 1 replicated fast path feeds the
-        // input grads through untouched. The phases borrow the synced
-        // inputs while also taking &mut self, so the accumulator array
-        // is moved into a local for the duration (an allocation-free
-        // move) and restored afterwards.
-        let acc_opt = if use_acc {
-            Some(std::mem::take(&mut self.dp_acc))
-        } else {
-            None
-        };
-        let result = {
-            let synced: &[Tensor] = match &acc_opt {
-                Some(a) => &a[0],
-                None => grads,
-            };
-            // ---- Phases 1-3 (fallible), with the paper-grounded
-            // degradation: under `escalate-full-orth`, a block step
-            // whose block Newton-Schulz diverges is retried as a full-
-            // orthogonalization step and committed with the full-step
-            // stepsize. The retry is safe because the failed attempt
-            // only wrote staging buffers the retry fully rewrites.
-            match self.run_tp(run_full, synced, attempt) {
-                Ok(()) => Ok(run_full),
+        let result: Result<bool, StepError> = if self.overlap {
+            match self.run_overlapped(full, grads, attempt) {
+                Ok(()) => Ok(full),
+                Err(
+                    StepError::Timeout { .. } | StepError::PeerDead { .. },
+                ) if self.cfg.on_anomaly == AnomalyPolicy::DegradeBlock
+                    && self.sharding == StateSharding::Replicated =>
+                {
+                    // DP sync lost under `degrade-block`: commit a
+                    // comm-avoiding blockwise-only step on the raw
+                    // local gradients (bit-identical in the simulated
+                    // cluster — every rank holds the same grads).
+                    degraded = true;
+                    self.run_tp(false, grads, attempt).map(|()| false)
+                }
                 Err(StepError::NsDiverged { .. })
-                    if !run_full
+                    if !full
                         && self.cfg.on_anomaly
                             == AnomalyPolicy::EscalateFullOrth =>
                 {
+                    // NS divergence is graded soft in the graph, so
+                    // every sync lane finished its rounds and the
+                    // accumulators are complete — the same
+                    // precondition the barrier escalate runs under.
                     self.escalations += 1;
-                    self.run_tp(true, synced, attempt).map(|()| true)
+                    let use_acc = self.mesh.dp > 1 || zero1;
+                    let acc_opt = if use_acc {
+                        Some(std::mem::take(&mut self.dp_acc))
+                    } else {
+                        None
+                    };
+                    let r = {
+                        let synced: &[Tensor] = match &acc_opt {
+                            Some(a) => &a[0],
+                            None => grads,
+                        };
+                        self.run_tp(true, synced, attempt).map(|()| true)
+                    };
+                    if let Some(acc) = acc_opt {
+                        self.dp_acc = acc;
+                    }
+                    r
                 }
                 Err(e) => Err(e),
             }
+        } else {
+            // ---- Phase 0 (fallible): DP sync into staging (see
+            // `dp_sync`). Under `degrade-block` a sync that times out
+            // or loses a peer does NOT fail the step: block steps need
+            // no gather/scatter, so the attempt proceeds as a
+            // comm-avoiding blockwise-only step on the local
+            // gradients, committed with the blockwise stepsize — the
+            // paper's §3.2 two-stepsize rule, applied in reverse of
+            // the `escalate-full-orth` policy.
+            if let Err(e) = self.dp_sync(grads, attempt) {
+                let degradable = matches!(
+                    e,
+                    StepError::Timeout { .. } | StepError::PeerDead { .. }
+                );
+                if degradable
+                    && self.cfg.on_anomaly == AnomalyPolicy::DegradeBlock
+                    && self.sharding == StateSharding::Replicated
+                {
+                    degraded = true;
+                } else {
+                    return Err(e);
+                }
+            }
+            // A degraded attempt falls back to the raw local
+            // gradients; in the simulated cluster every DP rank holds
+            // the same `grads`, so skipping the mean is bit-identical
+            // to a completed sync. ZeRO-1 cannot degrade (its momentum
+            // state lives in the DP phase), so the policy gate above
+            // requires replicated sharding.
+            let use_acc = (self.mesh.dp > 1 || zero1) && !degraded;
+            let run_full = full && !degraded;
+
+            // What the TP phases consume: mean gradients (replicated),
+            // except matrix entries under ZeRO-1, which are the
+            // gathered *staged* momenta. The dp == 1 replicated fast
+            // path feeds the input grads through untouched. The phases
+            // borrow the synced inputs while also taking &mut self, so
+            // the accumulator array is moved into a local for the
+            // duration (an allocation-free move) and restored
+            // afterwards.
+            let acc_opt = if use_acc {
+                Some(std::mem::take(&mut self.dp_acc))
+            } else {
+                None
+            };
+            let result = {
+                let synced: &[Tensor] = match &acc_opt {
+                    Some(a) => &a[0],
+                    None => grads,
+                };
+                // ---- Phases 1-3 (fallible), with the paper-grounded
+                // degradation: under `escalate-full-orth`, a block
+                // step whose block Newton-Schulz diverges is retried
+                // as a full-orthogonalization step and committed with
+                // the full-step stepsize. The retry is safe because
+                // the failed attempt only wrote staging buffers the
+                // retry fully rewrites.
+                match self.run_tp(run_full, synced, attempt) {
+                    Ok(()) => Ok(run_full),
+                    Err(StepError::NsDiverged { .. })
+                        if !run_full
+                            && self.cfg.on_anomaly
+                                == AnomalyPolicy::EscalateFullOrth =>
+                    {
+                        self.escalations += 1;
+                        self.run_tp(true, synced, attempt).map(|()| true)
+                    }
+                    Err(e) => Err(e),
+                }
+            };
+            if let Some(acc) = acc_opt {
+                self.dp_acc = acc;
+            }
+            result
         };
-        if let Some(acc) = acc_opt {
-            self.dp_acc = acc;
-        }
         let committed_full = result?;
 
         // ---- Commit: infallible from here on. Staged momentum becomes
@@ -1209,6 +2189,7 @@ impl Optimizer for DistMuon {
         } else {
             lr * self.cfg.eta_block_ratio
         };
+        let use_acc = (self.mesh.dp > 1 || zero1) && !degraded;
         let synced: &[Tensor] =
             if use_acc { &self.dp_acc[0] } else { grads };
 
@@ -1360,6 +2341,48 @@ impl Optimizer for DistMuon {
 
     fn last_comm_bytes(&self) -> u64 {
         self.last_opt_bytes
+    }
+
+    /// Per-group collective accounting (modeled α–β `sim_time_s` next to
+    /// the measured `wall_time_s` the lanes recorded) plus the overlap
+    /// cost model's serial-vs-overlapped prediction fed with the measured
+    /// comm/compute split of this run.
+    fn comm_report(&self) -> Option<String> {
+        let (tp, dp) = self.comm_stats();
+        let mut out = String::new();
+        out.push_str(&format!(
+            "comm report [{}] (schedule: {})\n",
+            self.name(),
+            if self.overlap { "dag-overlap" } else { "phased-barrier" },
+        ));
+        out.push_str("DP group (gradient sync):\n");
+        out.push_str(&dp.summary());
+        out.push_str("TP group (optimizer traffic):\n");
+        out.push_str(&tp.summary());
+        // Overlap prediction from the measured split: C = DP-sync wall
+        // the lanes clocked, K = NS compute wall summed across workers
+        // scaled to an approximate parallel time. Coarse by design (see
+        // `NetModel::overlapped_step_time`) — the point is whether the
+        // DAG schedule can hide the sync, not a cycle-exact forecast.
+        let comm = dp.total_wall_time();
+        let compute = self.ns_wall.load(Ordering::Relaxed) as f64
+            / 1e9
+            / self.mesh.tp.max(1) as f64;
+        let o = self
+            .dp_net
+            .overlapped_step_time(comm, compute, self.slab_stride);
+        out.push_str(&format!(
+            "overlap model: serial {:.6}s vs overlapped {:.6}s, bubble \
+             {:.1}% (measured comm {:.6}s, compute {:.6}s, {} \
+             slabs/matrix)\n",
+            o.serial,
+            o.overlapped,
+            o.bubble_frac * 100.0,
+            comm,
+            compute,
+            self.slab_stride,
+        ));
+        Some(out)
     }
 }
 

@@ -99,6 +99,69 @@ impl NetModel {
     }
 }
 
+/// Predicted step-time split for the DAG-overlapped schedule
+/// ([`NetModel::overlapped_step_time`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OverlapModel {
+    /// Serial (barrier-schedule) step time: comm then compute, `C + K`.
+    pub serial: f64,
+    /// Overlapped step time: the longer of comm/compute hides the
+    /// shorter, up to one pipeline-fill slab of the shorter resource.
+    pub overlapped: f64,
+    /// Fraction of the overlapped step spent with one resource idle
+    /// (the pipeline bubble): `(overlapped - max(C, K)) / overlapped`,
+    /// 0 when either side is zero (nothing to hide, or nothing hidden
+    /// behind).
+    pub bubble_frac: f64,
+}
+
+impl NetModel {
+    /// Predicted wall-clock of one DAG-overlapped optimizer step whose
+    /// DP sync takes `comm_time` seconds and whose TP-side compute
+    /// (momentum + Newton–Schulz + assembly) takes `compute_time`
+    /// seconds, pipelined at `n_slabs` row-slab granularity per matrix.
+    ///
+    /// The slab pipeline lets compute on slab `s` run while slab `s+1`
+    /// is still syncing, so steady-state step time is the *max* of the
+    /// two resources; the dependent side still pays a pipeline-fill
+    /// bubble of one slab of the shorter resource before its first node
+    /// becomes ready:
+    ///
+    /// ```text
+    /// overlapped = max(C, K) + min(C, K) / n_slabs
+    /// serial     = C + K                      (the barrier schedule)
+    /// ```
+    ///
+    /// `n_slabs == 0` (or 1) means no pipelining: the schedule
+    /// degenerates to serial. The model is deliberately coarse — it
+    /// assumes slabs are uniform and both resources are fully busy in
+    /// steady state — but it brackets the measured wall-clock
+    /// (`DistMuon` records per-collective wall time next to the α–β sim
+    /// time, surfaced by `comm_report`) well enough to tell whether the
+    /// DAG executor is delivering its overlap.
+    pub fn overlapped_step_time(
+        &self,
+        comm_time: f64,
+        compute_time: f64,
+        n_slabs: usize,
+    ) -> OverlapModel {
+        let c = comm_time.max(0.0);
+        let k = compute_time.max(0.0);
+        let serial = c + k;
+        let overlapped = if n_slabs <= 1 || c == 0.0 || k == 0.0 {
+            serial
+        } else {
+            c.max(k) + c.min(k) / n_slabs as f64
+        };
+        let bubble_frac = if overlapped > 0.0 && c > 0.0 && k > 0.0 {
+            (overlapped - c.max(k)) / overlapped
+        } else {
+            0.0
+        };
+        OverlapModel { serial, overlapped, bubble_frac }
+    }
+}
+
 /// Per-rank gradient-sync bytes for one optimizer step over
 /// `payload_bytes` of matrix gradient at DP degree `dp`, under the
 /// **reduced-data-delivery convention**: count the mean-gradient bytes a
@@ -219,6 +282,42 @@ mod tests {
                 "dp={dp}: {t_ar} vs {t_z1}"
             );
         }
+    }
+
+    #[test]
+    fn overlap_hides_the_shorter_resource() {
+        let m = NetModel::ib_hdr();
+        // Comm-bound: compute hides entirely except the fill bubble.
+        let o = m.overlapped_step_time(8.0, 2.0, 4);
+        assert_eq!(o.serial, 10.0);
+        assert!((o.overlapped - (8.0 + 2.0 / 4.0)).abs() < 1e-12);
+        assert!((o.bubble_frac - 0.5 / 8.5).abs() < 1e-12);
+        assert!(o.overlapped < o.serial);
+        // Compute-bound: symmetric.
+        let o2 = m.overlapped_step_time(2.0, 8.0, 4);
+        assert_eq!(o2.overlapped, o.overlapped);
+        // More slabs shrink the bubble monotonically toward max(C, K).
+        let o8 = m.overlapped_step_time(8.0, 2.0, 8);
+        assert!(o8.overlapped < o.overlapped);
+        assert!(o8.overlapped > 8.0);
+    }
+
+    #[test]
+    fn overlap_degenerates_to_serial() {
+        let m = NetModel::a100_nvlink();
+        // No pipelining (0 or 1 slab) => barrier-equivalent.
+        for n in [0, 1] {
+            let o = m.overlapped_step_time(3.0, 5.0, n);
+            assert_eq!(o.overlapped, o.serial);
+            assert_eq!(o.bubble_frac, 0.0);
+        }
+        // One side zero: nothing to overlap, no bubble.
+        let o = m.overlapped_step_time(0.0, 5.0, 4);
+        assert_eq!(o.overlapped, 5.0);
+        assert_eq!(o.bubble_frac, 0.0);
+        let o = m.overlapped_step_time(5.0, 0.0, 4);
+        assert_eq!(o.overlapped, 5.0);
+        assert_eq!(o.bubble_frac, 0.0);
     }
 
     #[test]

@@ -38,6 +38,9 @@ const USAGE: &str = "usage: muonbp <train|throughput|info|dist-smoke> [--key val
   train options: --model tiny|bench|e2e  --optimizer adamw|muon|blockmuon|muonbp|dion
                  --steps N --lr F --period P --dp N --tp N --distributed
                  --state-sharding replicated|zero1 (ZeRO-1 momentum rows)
+                 --overlap on|off (DAG executor overlapping collectives
+                   and compute vs phased barrier schedule; default on,
+                   env MUONBP_OVERLAP=0 flips it; tcp ranks must agree)
                  --eta-block-ratio F|theory (theory = 1/sqrt(rc), paper §3.2)
                  --schedule constant|cosine|wsd --seed N --out results/run.csv
                  --config path.json (JSON file, CLI overrides win)
@@ -122,6 +125,9 @@ fn cmd_train(args: &Args) -> Result<()> {
                 c.eta_block_ratio = eta_ratio;
                 c.on_anomaly = on_anomaly;
             });
+        if let Some(on) = cfg.overlap {
+            b = b.overlap(on);
+        }
         if cfg.deadline_ms > 0 {
             b = b.collective_deadline(Duration::from_millis(cfg.deadline_ms));
         }
@@ -207,6 +213,9 @@ fn cmd_train(args: &Args) -> Result<()> {
             ppl(v.min())
         );
     }
+    if let Some(report) = opt.comm_report() {
+        print!("{report}");
+    }
     if !cfg.out.is_empty() {
         rec.save_csv(&cfg.out)?;
         println!("wrote {}", cfg.out);
@@ -288,6 +297,9 @@ fn cmd_dist_smoke(args: &Args) -> Result<()> {
                 c.eta_block_ratio = eta_ratio;
                 c.on_anomaly = on_anomaly;
             });
+    if let Some(on) = cfg.overlap {
+        b = b.overlap(on);
+    }
     if cfg.deadline_ms > 0 {
         b = b.collective_deadline(Duration::from_millis(cfg.deadline_ms));
     }

@@ -105,6 +105,14 @@ pub trait Optimizer: Send {
     fn restore(&mut self, _snap: &Snapshot) -> anyhow::Result<()> {
         anyhow::bail!("{}: checkpoint restore not supported", self.name())
     }
+
+    /// Human-readable communication report accumulated over the run:
+    /// per-collective-kind calls/bytes with modeled (α–β) *and* measured
+    /// wall-clock where available, plus the overlap cost-model comparison.
+    /// `None` (the default) means the optimizer tracks no communication.
+    fn comm_report(&self) -> Option<String> {
+        None
+    }
 }
 
 /// Build an optimizer by name (bench/CLI convenience).

@@ -105,6 +105,37 @@ pub fn momentum_update_into(
     }
 }
 
+/// Row-slab-granular form of [`momentum_update_into`]: update only rows
+/// `[r0, r1)` of `next`. The overlapped coordinator schedule runs this
+/// the moment a reduced gradient row slab lands, while later slabs are
+/// still on the wire. Each element computes the exact
+/// `alpha·cur + beta·grad` expression of the whole-matrix form, and row
+/// slabs are disjoint, so iterating a row partition is bit-identical to
+/// one whole-matrix call (pinned by `momentum_update_rows_tiles_exactly`).
+pub fn momentum_update_rows_into(
+    next: &mut Tensor,
+    cur: &Tensor,
+    mu: f64,
+    grad: &Tensor,
+    r0: usize,
+    r1: usize,
+) {
+    assert_eq!(next.shape(), cur.shape());
+    assert_eq!(cur.shape(), grad.shape());
+    assert!(r0 <= r1 && r1 <= next.m(), "row slab out of range");
+    let n = next.n();
+    let (a, b) = (r0 * n, r1 * n);
+    let alpha = mu as f32;
+    let beta = 1.0f32;
+    for ((nx, c), g) in next.data_mut()[a..b]
+        .iter_mut()
+        .zip(&cur.data()[a..b])
+        .zip(&grad.data()[a..b])
+    {
+        *nx = alpha * *c + beta * *g;
+    }
+}
+
 /// Muon-family hyperparameters.
 #[derive(Clone)]
 pub struct MuonCfg {
@@ -793,6 +824,26 @@ mod tests {
             momentum_update_into(&mut next, &cur, 0.95, &g);
             std::mem::swap(&mut cur, &mut next);
             assert_eq!(cur, in_place, "step {step} drifted");
+        }
+    }
+
+    #[test]
+    fn momentum_update_rows_tiles_exactly() {
+        // Updating disjoint row slabs must be bit-identical to one
+        // whole-matrix momentum_update_into — the overlapped schedule
+        // applies the recurrence slab by slab as reductions land.
+        let mut r = Rng::new(91);
+        let cur = Tensor::randn(&[9, 5], 1.0, &mut r);
+        let g = Tensor::randn(&[9, 5], 1.0, &mut r);
+        let mut whole = Tensor::zeros(&[9, 5]);
+        momentum_update_into(&mut whole, &cur, 0.95, &g);
+        for n_slabs in [1, 2, 4, 9] {
+            let mut tiled = Tensor::zeros(&[9, 5]);
+            for j in 0..n_slabs {
+                let (r0, r1) = crate::shard::shard_range(9, n_slabs, j);
+                momentum_update_rows_into(&mut tiled, &cur, 0.95, &g, r0, r1);
+            }
+            assert_eq!(tiled, whole, "{n_slabs} slabs drifted");
         }
     }
 

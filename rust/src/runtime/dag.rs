@@ -1,0 +1,597 @@
+//! Ready-count task-graph executor on top of [`Pool`].
+//!
+//! The phased coordinator schedule (PR 3) ran each step as whole-phase
+//! fan-outs with a full barrier between phases: the pool idled during
+//! collectives and the transport idled during compute. `TaskDag` replaces
+//! the barriers with dependency counts: a step is a graph of preallocated
+//! task records, workers pop ready nodes and decrement successor counts,
+//! and a node starts the moment its inputs exist — so a momentum
+//! row-slab's update can run while later slabs are still on the wire.
+//!
+//! # Execution model
+//!
+//! Nodes are either **lane-pinned** or **shared**:
+//!
+//! - A *lane* is a totally-ordered node sequence executed by exactly one
+//!   worker (worker `w` owns lane `w`). The coordinator pins collective
+//!   rounds to lanes — one lane per DP rank — so every lane enters the
+//!   same transport rounds in the same global order, preserving the
+//!   fixed rank/slab deposit order the bit-identity contract requires.
+//!   A lane node may block inside a transport rendezvous; its lane
+//!   worker is dedicated, so the rendezvous always completes (all lanes
+//!   are live concurrently under one `run_concurrent`).
+//! - A *shared* node (compute: shard loads, momentum updates, block NS,
+//!   reassembly copies) is pushed to a common ready queue when its
+//!   dependency count hits zero and may be claimed by any worker —
+//!   including a lane worker whose next pinned node is not ready yet, so
+//!   a stalled lane helps with compute instead of spinning.
+//!
+//! # Failure semantics (PR-6 poisonable-barrier contract)
+//!
+//! Every node body runs under `catch_unwind`; the caller's `on_fail`
+//! hook observes each failure and grades it:
+//!
+//! - [`Severity::Hard`] (every panic, and any `Err` the hook grades so)
+//!   poisons the graph: the poison flag stops every worker from
+//!   claiming further nodes, and the hook typically poisons the
+//!   transport too, releasing lanes parked inside a collective with
+//!   `Poisoned` instead of deadlocking — those secondary failures
+//!   report through `on_fail` as well, and the caller's error slot
+//!   keeps the first concrete cause.
+//! - [`Severity::Soft`] records the failure but keeps the graph
+//!   draining: the failed node's transitive dependents are *tainted*
+//!   (skipped, never executed — poison propagation along dep edges)
+//!   while every other node still runs. The coordinator grades NS
+//!   divergence soft so the DP collective lanes finish their rounds
+//!   and the synced accumulators stay complete for the
+//!   `escalate-full-orth` retry. Taint flows only through declared
+//!   `dep` edges, so pinning a dependent of a fallibly-soft node to a
+//!   lane (whose peers rendezvous by round count) is the caller's
+//!   responsibility to avoid.
+//!
+//! `run` always joins every worker before returning, which is the
+//! quiescence a subsequent transport `heal` requires.
+//!
+//! # Zero steady-state allocations
+//!
+//! All node storage lives in grow-only buffers owned by the `TaskDag`:
+//! `begin` resets lengths without dropping capacity (per-node successor
+//! lists and per-lane sequences are slot-reused, never cleared away), so
+//! rebuilding the same step graph allocates nothing once every buffer
+//! has reached its high-water size — proved end to end by
+//! `tests/ns_zero_alloc.rs` through warm overlapped `DistMuon` steps.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::runtime::pool::{Pool, WorkerArena};
+
+/// Sentinel lane id for shared (work-stealable) nodes.
+const NO_LANE: u32 = u32::MAX;
+
+/// How a node failed; handed to the `on_fail` hook so the caller can map
+/// the node kind to a structured error (e.g. `StepError::RankPanicked`
+/// with the schedule phase the node belongs to).
+pub enum DagFailure<K, E> {
+    /// The node body returned `Err`.
+    Err { kind: K, err: E },
+    /// The node body panicked (caught; the panic payload is dropped, as
+    /// in the pooled phase fan-outs).
+    Panic { kind: K },
+}
+
+/// The `on_fail` hook's verdict on a failed node (see module docs).
+/// Panicked nodes always poison the graph — their hook verdict is
+/// ignored.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Severity {
+    /// Poison the whole graph: no further nodes run.
+    Hard,
+    /// Skip the failed node's transitive dependents; drain the rest.
+    Soft,
+}
+
+/// Shared ready queue: a grow-only ring consumed front to back. One run
+/// pushes at most `n_nodes` ids, so `buf` never exceeds node-count
+/// capacity and a warm run never reallocates it.
+struct Ready {
+    buf: Vec<u32>,
+    head: usize,
+}
+
+/// A reusable dependency-graph of `K`-tagged task records (see module
+/// docs). `K` is a small `Copy` tag the caller's executor closure
+/// matches on — the dag stores no closures, which is what keeps rebuilds
+/// allocation-free.
+pub struct TaskDag<K: Copy> {
+    kinds: Vec<K>,
+    lane_of: Vec<u32>,
+    /// Static dependency count per node (set at build).
+    preds: Vec<u32>,
+    /// Successor lists, slot-reused across rebuilds.
+    succ: Vec<Vec<u32>>,
+    /// Runtime countdown of unmet dependencies.
+    pending: Vec<AtomicU32>,
+    /// Poison-propagation marks: a tainted node is skipped (its own
+    /// taint spreads to its successors) instead of executed.
+    tainted: Vec<AtomicBool>,
+    /// Per-lane node sequences (execution order).
+    lanes: Vec<Vec<u32>>,
+    n_nodes: usize,
+    n_lanes: usize,
+    ready: Mutex<Ready>,
+    done: AtomicUsize,
+    poisoned: AtomicBool,
+}
+
+impl<K: Copy + Send + Sync> TaskDag<K> {
+    pub fn new() -> TaskDag<K> {
+        TaskDag {
+            kinds: Vec::new(),
+            lane_of: Vec::new(),
+            preds: Vec::new(),
+            succ: Vec::new(),
+            pending: Vec::new(),
+            tainted: Vec::new(),
+            lanes: Vec::new(),
+            n_nodes: 0,
+            n_lanes: 0,
+            ready: Mutex::new(Ready { buf: Vec::new(), head: 0 }),
+            done: AtomicUsize::new(0),
+            poisoned: AtomicBool::new(false),
+        }
+    }
+
+    /// Start a new graph with `n_lanes` pinned lanes. Keeps every
+    /// buffer's capacity (slot reuse), so rebuilding a previously-built
+    /// shape allocates nothing.
+    pub fn begin(&mut self, n_lanes: usize) {
+        self.n_nodes = 0;
+        self.n_lanes = n_lanes;
+        while self.lanes.len() < n_lanes {
+            self.lanes.push(Vec::new());
+        }
+        for lane in &mut self.lanes {
+            lane.clear();
+        }
+    }
+
+    /// Add a node. `lane: Some(l)` pins it to lane `l` (appended to that
+    /// lane's execution order); `None` makes it shared. Returns the node
+    /// id for wiring dependencies.
+    pub fn add(&mut self, kind: K, lane: Option<usize>) -> u32 {
+        let id = self.n_nodes;
+        if id < self.kinds.len() {
+            self.kinds[id] = kind;
+            self.lane_of[id] = NO_LANE;
+            self.preds[id] = 0;
+            self.succ[id].clear();
+        } else {
+            self.kinds.push(kind);
+            self.lane_of.push(NO_LANE);
+            self.preds.push(0);
+            self.succ.push(Vec::new());
+            self.pending.push(AtomicU32::new(0));
+            self.tainted.push(AtomicBool::new(false));
+        }
+        if let Some(l) = lane {
+            debug_assert!(l < self.n_lanes);
+            self.lane_of[id] = l as u32;
+            self.lanes[l].push(id as u32);
+        }
+        self.n_nodes += 1;
+        id as u32
+    }
+
+    /// Declare that `before` must complete before `after` starts.
+    /// (Lane order is implicit within a lane; only cross-producer edges
+    /// need declaring.)
+    pub fn dep(&mut self, before: u32, after: u32) {
+        debug_assert!((before as usize) < self.n_nodes);
+        debug_assert!((after as usize) < self.n_nodes);
+        debug_assert_ne!(before, after);
+        self.succ[before as usize].push(after);
+        self.preds[after as usize] += 1;
+    }
+
+    pub fn node_count(&self) -> usize {
+        self.n_nodes
+    }
+
+    /// Execute the graph on `workers` concurrent pool workers (must be
+    /// >= the lane count; lanes are pinned to workers `0..n_lanes`).
+    /// Returns after every worker joined — either all nodes completed,
+    /// were skipped downstream of a soft failure, or the graph was
+    /// hard-poisoned. `exec` runs each node; `on_fail` observes every
+    /// failing node (first concrete failure plus any secondary
+    /// `Poisoned` releases) and grades `Err`s [`Severity::Hard`] or
+    /// [`Severity::Soft`]; panics are always hard.
+    pub fn run<E, X, P>(&mut self, workers: usize, exec: X, on_fail: P)
+    where
+        E: Send,
+        X: Fn(K, &mut WorkerArena) -> Result<(), E> + Sync,
+        P: Fn(DagFailure<K, E>) -> Severity + Sync,
+    {
+        assert!(
+            workers >= self.n_lanes,
+            "dag: {} workers < {} lanes",
+            workers,
+            self.n_lanes
+        );
+        // Seal: arm the countdowns, queue initially-ready shared nodes.
+        self.done.store(0, Ordering::Relaxed);
+        self.poisoned.store(false, Ordering::Relaxed);
+        {
+            let mut q = lock(&self.ready);
+            q.buf.clear();
+            q.head = 0;
+            for id in 0..self.n_nodes {
+                self.pending[id].store(self.preds[id], Ordering::Relaxed);
+                self.tainted[id].store(false, Ordering::Relaxed);
+                if self.preds[id] == 0 && self.lane_of[id] == NO_LANE {
+                    q.buf.push(id as u32);
+                }
+            }
+        }
+        let this = &*self;
+        Pool::global().run_concurrent(workers.max(1), |w, arena| {
+            this.worker(w, arena, &exec, &on_fail)
+        });
+    }
+
+    fn worker<E, X, P>(
+        &self,
+        w: usize,
+        arena: &mut WorkerArena,
+        exec: &X,
+        on_fail: &P,
+    ) where
+        E: Send,
+        X: Fn(K, &mut WorkerArena) -> Result<(), E> + Sync,
+        P: Fn(DagFailure<K, E>) -> Severity + Sync,
+    {
+        let lane: Option<&[u32]> =
+            (w < self.n_lanes).then(|| self.lanes[w].as_slice());
+        let mut lane_pos = 0usize;
+        loop {
+            if self.poisoned.load(Ordering::Acquire) {
+                return;
+            }
+            if self.done.load(Ordering::Acquire) == self.n_nodes {
+                return;
+            }
+            // Own lane first: pinned nodes run in sequence order.
+            if let Some(lane) = lane {
+                if let Some(&id) = lane.get(lane_pos) {
+                    if self.pending[id as usize].load(Ordering::Acquire)
+                        == 0
+                    {
+                        self.run_node(id, arena, exec, on_fail);
+                        lane_pos += 1;
+                        continue;
+                    }
+                }
+            }
+            // Otherwise steal a shared ready node (a stalled lane helps
+            // with compute instead of spinning).
+            if let Some(id) = self.pop() {
+                self.run_node(id, arena, exec, on_fail);
+                continue;
+            }
+            std::thread::yield_now();
+        }
+    }
+
+    fn run_node<E, X, P>(
+        &self,
+        id: u32,
+        arena: &mut WorkerArena,
+        exec: &X,
+        on_fail: &P,
+    ) where
+        E: Send,
+        X: Fn(K, &mut WorkerArena) -> Result<(), E> + Sync,
+        P: Fn(DagFailure<K, E>) -> Severity + Sync,
+    {
+        // A node downstream of a soft failure is skipped, and its taint
+        // spreads to its own successors. The claim path observed
+        // `pending == 0`, which synchronizes with the predecessor's
+        // decrement — so the taint mark (stored before that decrement)
+        // is visible here.
+        if self.tainted[id as usize].load(Ordering::Acquire) {
+            self.skip(id);
+            return;
+        }
+        let kind = self.kinds[id as usize];
+        match catch_unwind(AssertUnwindSafe(|| exec(kind, arena))) {
+            Ok(Ok(())) => self.complete(id),
+            Ok(Err(err)) => {
+                match on_fail(DagFailure::Err { kind, err }) {
+                    Severity::Hard => {
+                        // The hook already ran (typically poisoning the
+                        // transport to release parked lanes); now stop
+                        // every worker from claiming new nodes.
+                        self.poisoned.store(true, Ordering::Release);
+                    }
+                    Severity::Soft => self.skip(id),
+                }
+            }
+            Err(_) => {
+                // Panics are always hard: the failed node may have left
+                // shared state (an arena mid-iteration) inconsistent.
+                let _ = on_fail(DagFailure::Panic { kind });
+                self.poisoned.store(true, Ordering::Release);
+            }
+        }
+    }
+
+    fn complete(&self, id: u32) {
+        for &s in &self.succ[id as usize] {
+            let left =
+                self.pending[s as usize].fetch_sub(1, Ordering::AcqRel);
+            debug_assert!(left >= 1, "dag: successor count underflow");
+            if left == 1 && self.lane_of[s as usize] == NO_LANE {
+                lock(&self.ready).buf.push(s);
+            }
+        }
+        self.done.fetch_add(1, Ordering::AcqRel);
+    }
+
+    /// Account a failed-soft or tainted node as done without running it,
+    /// spreading its taint to every successor. Tainted shared nodes
+    /// still flow through the ready queue so a worker claims them and
+    /// propagates further; tainted lane nodes are skipped in lane order.
+    fn skip(&self, id: u32) {
+        for &s in &self.succ[id as usize] {
+            // Store the mark BEFORE the countdown: the claimer that
+            // observes pending == 0 acquires the final decrement and
+            // therefore sees the mark.
+            self.tainted[s as usize].store(true, Ordering::Release);
+            let left =
+                self.pending[s as usize].fetch_sub(1, Ordering::AcqRel);
+            debug_assert!(left >= 1, "dag: successor count underflow");
+            if left == 1 && self.lane_of[s as usize] == NO_LANE {
+                lock(&self.ready).buf.push(s);
+            }
+        }
+        self.done.fetch_add(1, Ordering::AcqRel);
+    }
+
+    fn pop(&self) -> Option<u32> {
+        let mut q = lock(&self.ready);
+        if q.head < q.buf.len() {
+            let id = q.buf[q.head];
+            q.head += 1;
+            Some(id)
+        } else {
+            None
+        }
+    }
+}
+
+/// Mutex guard that survives a poisoned std mutex: a worker panic is
+/// already reported through the dag's own poison flag, and the queue
+/// state stays consistent (push/pop are single-field updates).
+fn lock(m: &Mutex<Ready>) -> std::sync::MutexGuard<'_, Ready> {
+    match m.lock() {
+        Ok(g) => g,
+        Err(p) => p.into_inner(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    /// A -> B -> C chain must execute in order regardless of worker
+    /// count; completion order is observed via an append log.
+    #[test]
+    fn chain_respects_dependencies() {
+        let mut dag: TaskDag<usize> = TaskDag::new();
+        dag.begin(0);
+        let a = dag.add(0, None);
+        let b = dag.add(1, None);
+        let c = dag.add(2, None);
+        dag.dep(a, b);
+        dag.dep(b, c);
+        let log = Mutex::new(Vec::new());
+        dag.run::<(), _, _>(
+            4,
+            |k, _| {
+                log.lock().unwrap().push(k);
+                Ok(())
+            },
+            |_| panic!("no failures expected"),
+        );
+        assert_eq!(*log.lock().unwrap(), vec![0, 1, 2]);
+    }
+
+    /// Diamond: s -> {l, r} -> j. The join must observe both branches.
+    #[test]
+    fn diamond_joins_both_branches() {
+        for workers in [1, 2, 4] {
+            let mut dag: TaskDag<u8> = TaskDag::new();
+            dag.begin(0);
+            let s = dag.add(0, None);
+            let l = dag.add(1, None);
+            let r = dag.add(2, None);
+            let j = dag.add(3, None);
+            dag.dep(s, l);
+            dag.dep(s, r);
+            dag.dep(l, j);
+            dag.dep(r, j);
+            let seen = AtomicU64::new(0);
+            dag.run::<(), _, _>(
+                workers,
+                |k, _| {
+                    if k == 3 {
+                        assert_eq!(
+                            seen.load(Ordering::SeqCst) & 0b110,
+                            0b110,
+                            "join ran before both branches"
+                        );
+                    }
+                    seen.fetch_or(1 << k, Ordering::SeqCst);
+                    Ok(())
+                },
+                |_| panic!("no failures expected"),
+            );
+            assert_eq!(seen.load(Ordering::SeqCst), 0b1111);
+        }
+    }
+
+    /// Lane nodes run in pinned order on their lane even when shared
+    /// nodes are interleaved and available.
+    #[test]
+    fn lanes_execute_in_order() {
+        let mut dag: TaskDag<(usize, usize)> = TaskDag::new();
+        dag.begin(2);
+        for lane in 0..2 {
+            for i in 0..5 {
+                dag.add((lane, i), Some(lane));
+            }
+        }
+        for i in 0..8 {
+            dag.add((99, i), None);
+        }
+        let lane_log: [Mutex<Vec<usize>>; 2] =
+            [Mutex::new(Vec::new()), Mutex::new(Vec::new())];
+        dag.run::<(), _, _>(
+            3,
+            |(lane, i), _| {
+                if lane < 2 {
+                    lane_log[lane].lock().unwrap().push(i);
+                }
+                Ok(())
+            },
+            |_| panic!("no failures expected"),
+        );
+        for lane in 0..2 {
+            assert_eq!(*lane_log[lane].lock().unwrap(), vec![0, 1, 2, 3, 4]);
+        }
+    }
+
+    /// A panicking node poisons the graph: `run` still joins, the
+    /// failure hook sees the panic, and dependents never execute.
+    #[test]
+    fn panic_poisons_and_skips_dependents() {
+        let mut dag: TaskDag<u8> = TaskDag::new();
+        dag.begin(0);
+        let a = dag.add(0, None);
+        let b = dag.add(1, None);
+        dag.dep(a, b);
+        let failures = AtomicU64::new(0);
+        let ran_b = AtomicU64::new(0);
+        dag.run::<(), _, _>(
+            2,
+            |k, _| {
+                if k == 0 {
+                    panic!("boom");
+                }
+                ran_b.fetch_add(1, Ordering::SeqCst);
+                Ok(())
+            },
+            |f| {
+                assert!(matches!(f, DagFailure::Panic { kind: 0 }));
+                failures.fetch_add(1, Ordering::SeqCst);
+                Severity::Hard
+            },
+        );
+        assert_eq!(failures.load(Ordering::SeqCst), 1);
+        assert_eq!(ran_b.load(Ordering::SeqCst), 0, "dependent ran");
+    }
+
+    /// A soft failure skips its transitive dependents but drains the
+    /// rest of the graph — lanes included.
+    #[test]
+    fn soft_failure_skips_dependents_but_drains_the_rest() {
+        let mut dag: TaskDag<u8> = TaskDag::new();
+        dag.begin(1);
+        // Lane 0: three pinned nodes that must all still run.
+        for k in [10u8, 11, 12] {
+            dag.add(k, Some(0));
+        }
+        // Shared: a(soft-fails) -> b -> c, plus independent d.
+        let a = dag.add(0, None);
+        let b = dag.add(1, None);
+        let c = dag.add(2, None);
+        dag.add(3, None); // d
+        dag.dep(a, b);
+        dag.dep(b, c);
+        let ran = Mutex::new(Vec::new());
+        let failures = AtomicU64::new(0);
+        dag.run::<&str, _, _>(
+            2,
+            |k, _| {
+                if k == 0 {
+                    return Err("diverged");
+                }
+                ran.lock().unwrap().push(k);
+                Ok(())
+            },
+            |f| {
+                assert!(matches!(
+                    f,
+                    DagFailure::Err { kind: 0, err: "diverged" }
+                ));
+                failures.fetch_add(1, Ordering::SeqCst);
+                Severity::Soft
+            },
+        );
+        assert_eq!(failures.load(Ordering::SeqCst), 1);
+        let mut ran = ran.lock().unwrap().clone();
+        ran.sort_unstable();
+        // b and c (dependents of the failed node) skipped; lane nodes
+        // and the independent shared node all ran.
+        assert_eq!(ran, vec![3, 10, 11, 12]);
+    }
+
+    /// An `Err` node reports through the hook with its error value.
+    #[test]
+    fn error_reports_kind_and_value() {
+        let mut dag: TaskDag<u8> = TaskDag::new();
+        dag.begin(0);
+        dag.add(7, None);
+        let failures = Mutex::new(Vec::new());
+        dag.run::<i32, _, _>(
+            1,
+            |_, _| Err(41),
+            |f| {
+                match f {
+                    DagFailure::Err { kind, err } => {
+                        failures.lock().unwrap().push((kind, err))
+                    }
+                    DagFailure::Panic { .. } => panic!("not a panic"),
+                }
+                Severity::Hard
+            },
+        );
+        assert_eq!(*failures.lock().unwrap(), vec![(7u8, 41i32)]);
+    }
+
+    /// Rebuilding a smaller graph into the same dag reuses slots; both
+    /// runs complete every node exactly once.
+    #[test]
+    fn rebuild_reuses_slots() {
+        let mut dag: TaskDag<usize> = TaskDag::new();
+        for (n, lanes) in [(12usize, 2usize), (5, 1), (12, 2)] {
+            dag.begin(lanes);
+            let count = AtomicU64::new(0);
+            for i in 0..n {
+                dag.add(i, (i < lanes).then_some(i));
+            }
+            dag.run::<(), _, _>(
+                lanes.max(2),
+                |_, _| {
+                    count.fetch_add(1, Ordering::SeqCst);
+                    Ok(())
+                },
+                |_| panic!("no failures expected"),
+            );
+            assert_eq!(count.load(Ordering::SeqCst), n as u64);
+            assert_eq!(dag.node_count(), n);
+        }
+    }
+}

@@ -7,6 +7,7 @@
 //! `HloModuleProto::from_text_file` reassigns ids (see aot.py).
 
 pub mod artifact;
+pub mod dag;
 pub mod ns_builder;
 pub mod ns_engine;
 pub mod pool;
@@ -19,6 +20,7 @@ use xla::{ElementType, Literal, PjRtClient, PjRtLoadedExecutable};
 use crate::tensor::Tensor;
 
 pub use artifact::{ConfigEntry, Manifest, ParamEntry};
+pub use dag::{DagFailure, Severity, TaskDag};
 pub use ns_engine::NsEngine;
 pub use pool::{Pool, WorkerArena};
 

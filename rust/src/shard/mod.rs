@@ -180,6 +180,48 @@ pub fn write_shard(t: &mut Tensor, spec: &ShardSpec, idx: usize, block: &Tensor)
     t.set_block(r0, c0, block);
 }
 
+/// Row-slab-granular sibling of [`shard_into`]: copy only the
+/// intersection of full-matrix rows `[gr0, gr1)` with block `idx` from
+/// `t` into the matching rows of the preallocated block tensor. The
+/// overlapped coordinator schedule calls this the moment a reduced
+/// row slab lands so the shard load starts while later slabs are still
+/// on the wire; iterating a row partition of the matrix performs the
+/// exact memcpys of one whole-block [`shard_into`]. Returns the
+/// block-local row range written, or `None` when the slab misses the
+/// block entirely.
+pub fn shard_rows_into(
+    t: &Tensor,
+    spec: &ShardSpec,
+    idx: usize,
+    gr0: usize,
+    gr1: usize,
+    out: &mut Tensor,
+) -> Option<(usize, usize)> {
+    assert_eq!((t.m(), t.n()), (spec.m, spec.n), "spec/tensor mismatch");
+    assert!(gr0 <= gr1 && gr1 <= spec.m, "row slab out of range");
+    let ((r0, r1), (c0, c1)) = spec.ranges(idx);
+    assert_eq!(
+        (out.m(), out.n()),
+        (r1 - r0, c1 - c0),
+        "shard_rows_into shape"
+    );
+    let lo = gr0.max(r0);
+    let hi = gr1.min(r1);
+    if lo >= hi {
+        return None;
+    }
+    let n = t.n();
+    let w = c1 - c0;
+    let src = t.data();
+    let dst = out.data_mut();
+    for i in lo..hi {
+        let bi = i - r0;
+        dst[bi * w..(bi + 1) * w]
+            .copy_from_slice(&src[i * n + c0..i * n + c1]);
+    }
+    Some((lo - r0, hi - r0))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -309,5 +351,49 @@ mod tests {
     fn block_bytes() {
         let spec = ShardSpec::new(Layout::TpColumn, 4, 8, 16);
         assert_eq!(spec.block_bytes(0), 8 * 4 * 4);
+    }
+
+    #[test]
+    fn shard_rows_tiles_shard_into_exactly() {
+        // Iterating shard_rows_into over any row partition of the full
+        // matrix must perform the exact copies of one shard_into call,
+        // for every block of row/column/grid layouts.
+        let mut rng = Rng::new(23);
+        for (layout, tp) in [
+            (Layout::TpRow, 4),
+            (Layout::TpColumn, 3),
+            (Layout::TpGrid { rows: 2, cols: 2 }, 4),
+        ] {
+            let (m, n) = (10, 6);
+            let t = Tensor::randn(&[m, n], 1.0, &mut rng);
+            let spec = ShardSpec::new(layout, tp, m, n);
+            for idx in 0..spec.num_blocks() {
+                let (bm, bn) = spec.block_shape(idx);
+                let mut whole = Tensor::zeros(&[bm, bn]);
+                shard_into(&t, &spec, idx, &mut whole);
+                for n_slabs in [1, 3, m] {
+                    let mut tiled = Tensor::zeros(&[bm, bn]);
+                    let mut covered = 0;
+                    for j in 0..n_slabs {
+                        let (g0, g1) = shard_range(m, n_slabs, j);
+                        if let Some((b0, b1)) =
+                            shard_rows_into(&t, &spec, idx, g0, g1, &mut tiled)
+                        {
+                            assert!(b0 < b1 && b1 <= bm);
+                            covered += b1 - b0;
+                        }
+                    }
+                    assert_eq!(covered, bm, "{layout:?} block {idx} rows");
+                    assert_eq!(tiled, whole, "{layout:?} block {idx}");
+                }
+            }
+        }
+        // A slab that misses the block entirely reports None and writes
+        // nothing.
+        let t = Tensor::zeros(&[8, 4]);
+        let spec = ShardSpec::new(Layout::TpRow, 2, 8, 4);
+        let mut b = Tensor::zeros(&[4, 4]);
+        assert_eq!(shard_rows_into(&t, &spec, 1, 0, 4, &mut b), None);
+        assert_eq!(shard_rows_into(&t, &spec, 0, 4, 8, &mut b), None);
     }
 }

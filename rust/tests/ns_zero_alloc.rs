@@ -121,7 +121,11 @@ fn hot_paths_are_alloc_free_after_warmup() {
     // Sanity: the warm steps moved the parameters.
     assert!(params[0].frobenius() > 0.0);
 
-    // ---- Phase 3: whole `DistMuon::step` calls. The phased coordinator
+    // ---- Phase 3: whole `DistMuon::step` calls. Overlap defaults ON, so
+    // this now proves the *DAG-overlapped* schedule: the dependency-graph
+    // executor (preallocated node/edge/ready storage, reset-in-place per
+    // step) runs slab-granular sync lanes concurrently with TP compute.
+    // Underneath, the coordinator still
     // runs momentum + block orthogonalization as pooled rank tasks (warm
     // per-worker arenas), the full-step leader Newton–Schulz through a
     // coordinator-owned workspace on the main thread (GEMMs pooled), and
@@ -193,4 +197,56 @@ fn hot_paths_are_alloc_free_after_warmup() {
         after - before
     );
     assert!(zparams[0].frobenius() > 0.0);
+
+    // ---- Phase 5: the phased *barrier* schedule (`--overlap off`),
+    // replicated. Phases 3-4 covered the default DAG executor; this pins
+    // the legacy whole-phase fan-out path to the same zero-alloc bar so
+    // neither schedule can regress silently.
+    let mut bdist =
+        DistMuonBuilder::new(Mesh::new(2, 2).unwrap(), Period::Every(2))
+            .overlap(false)
+            .build(&dmetas);
+    let mut bparams =
+        vec![Tensor::zeros(&[16, 32]), Tensor::zeros(&[32, 16])];
+    for _ in 0..4 {
+        bdist.step(&mut bparams, &dgrads, 0.01); // warm two full periods
+    }
+    let before = allocs();
+    for _ in 0..4 {
+        bdist.step(&mut bparams, &dgrads, 0.01); // full, block, full, block
+    }
+    let after = allocs();
+    assert_eq!(
+        after - before,
+        0,
+        "barrier DistMuon::step allocated {} time(s) across 4 warm steps",
+        after - before
+    );
+    assert!(bparams[0].frobenius() > 0.0);
+
+    // ---- Phase 6: barrier schedule x ZeRO-1 — the remaining
+    // schedule/sharding corner.
+    let mut bzdist =
+        DistMuonBuilder::new(Mesh::new(2, 2).unwrap(), Period::Every(2))
+            .state_sharding(StateSharding::Zero1)
+            .overlap(false)
+            .build(&dmetas);
+    let mut bzparams =
+        vec![Tensor::zeros(&[16, 32]), Tensor::zeros(&[32, 16])];
+    for _ in 0..4 {
+        bzdist.step(&mut bzparams, &zgrads, 0.01);
+    }
+    let before = allocs();
+    for _ in 0..4 {
+        bzdist.step(&mut bzparams, &zgrads, 0.01);
+    }
+    let after = allocs();
+    assert_eq!(
+        after - before,
+        0,
+        "barrier Zero1 DistMuon::step allocated {} time(s) across 4 warm \
+         steps",
+        after - before
+    );
+    assert!(bzparams[0].frobenius() > 0.0);
 }

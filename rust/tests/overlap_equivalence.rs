@@ -1,0 +1,360 @@
+//! DAG-overlap acceptance suite (run by ci.sh): the dependency-graph
+//! executor (`--overlap on`, the default) must be **bit-identical** to
+//! the phased barrier schedule (`--overlap off`) it replaced, for every
+//! mesh / period / sharding / transport combination, and its failure
+//! semantics must match: a panicking node poisons the graph and leaves
+//! committed state untouched, exactly like a panicking phase.
+//!
+//! Pinned invariants:
+//!
+//! 1. **Schedule equivalence** — overlap-on and overlap-off runs produce
+//!    byte-identical parameters after every step and byte-identical
+//!    optimizer snapshots at the end, across layouts (row, 2×2 grid,
+//!    clamped grids), dp ∈ {1, 2, 4}, periods {1, 3, ∞} and both
+//!    state-sharding modes.
+//! 2. **Transport invariance** — the overlapped schedule over a TCP
+//!    loopback group matches the overlap-off fully-local reference.
+//!    (ZeRO-1 over multi-process transports is asserted-unsupported at
+//!    build time, so that cell is intentionally absent.)
+//! 3. **Fault atomicity** — a rank panic inside the DAG (sync lane or TP
+//!    node) surfaces as the same structured `RankPanicked { rank, phase }`
+//!    the barrier schedule reports, commits nothing, and a clean retry
+//!    continues bit-identically to a never-faulted twin.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use muonbp::comm::tcp::loopback_group;
+use muonbp::comm::TcpCfg;
+use muonbp::coordinator::DistMuonBuilder;
+use muonbp::mesh::{Layout, Mesh, StateSharding};
+use muonbp::optim::{Optimizer, ParamKind, ParamMeta, Period};
+use muonbp::robust::{FaultPlan, PhasePanic, StepError};
+use muonbp::tensor::Tensor;
+use muonbp::utils::rng::Rng;
+
+/// Quadratic toy problem (as in fault_injection.rs / transport_equivalence):
+/// grads are deterministic functions of the params, so two optimizers fed
+/// the same trajectory must stay bit-identical or visibly diverge.
+struct Quad {
+    metas: Vec<ParamMeta>,
+    targets: Vec<Tensor>,
+}
+
+impl Quad {
+    fn new(metas: Vec<ParamMeta>, seed: u64) -> Quad {
+        let mut rng = Rng::new(seed);
+        let targets = metas
+            .iter()
+            .map(|m| Tensor::randn(&m.shape, 1.0, &mut rng))
+            .collect();
+        Quad { metas, targets }
+    }
+
+    fn init(&self, seed: u64) -> Vec<Tensor> {
+        let mut rng = Rng::new(seed);
+        self.metas
+            .iter()
+            .map(|m| Tensor::randn(&m.shape, 1.0, &mut rng))
+            .collect()
+    }
+
+    fn grads(&self, params: &[Tensor]) -> Vec<Tensor> {
+        params
+            .iter()
+            .zip(&self.targets)
+            .map(|(p, t)| {
+                let mut g = p.clone();
+                g.axpy(-1.0, t);
+                g
+            })
+            .collect()
+    }
+}
+
+fn metas_even() -> Vec<ParamMeta> {
+    vec![
+        ParamMeta::new("w1", &[8, 16], ParamKind::Matrix),
+        ParamMeta::new("w2", &[16, 8], ParamKind::Matrix),
+        ParamMeta::new("g", &[8], ParamKind::Vector),
+    ]
+}
+
+/// Shapes that clamp a tp=4 block grid (dim < tp ⇒ replica ranks) and
+/// split unevenly where they don't.
+fn metas_clamped() -> Vec<ParamMeta> {
+    vec![
+        ParamMeta::new("tall", &[9, 2], ParamKind::Matrix),
+        ParamMeta::new("wide", &[2, 9], ParamKind::Matrix),
+        ParamMeta::new("g", &[6], ParamKind::Vector),
+    ]
+}
+
+/// Run `steps` steps of one configuration; returns the per-step parameter
+/// trajectory plus the final optimizer snapshot.
+fn run_local(
+    overlap: bool,
+    layout: Layout,
+    dp: usize,
+    tp: usize,
+    period: Period,
+    sharding: StateSharding,
+    quad: &Quad,
+    steps: usize,
+) -> (Vec<Vec<Tensor>>, muonbp::checkpoint::Snapshot) {
+    let mut opt = DistMuonBuilder::new(Mesh::new(dp, tp).unwrap(), period)
+        .layout(layout)
+        .state_sharding(sharding)
+        .overlap(overlap)
+        .build(&quad.metas);
+    let mut params = quad.init(5);
+    let mut traj = Vec::new();
+    for _ in 0..steps {
+        let grads = quad.grads(&params);
+        opt.try_step(&mut params, &grads, 0.02).unwrap();
+        traj.push(params.clone());
+    }
+    (traj, opt.snapshot().unwrap())
+}
+
+/// Invariant 1: the full sweep. Every cell compares the DAG schedule
+/// against the barrier schedule after *every* step (params) and at the
+/// end (optimizer state), with `assert_eq` — bitwise, no tolerance.
+#[test]
+fn overlap_matches_barrier_across_meshes_periods_shardings() {
+    let layouts: [(&str, Layout, fn() -> Vec<ParamMeta>); 3] = [
+        ("tp-row", Layout::TpRow, metas_even),
+        ("grid2x2", Layout::TpGrid { rows: 2, cols: 2 }, metas_even),
+        ("clamped", Layout::TpRow, metas_clamped),
+    ];
+    let periods =
+        [("P1", Period::Every(1)), ("P3", Period::Every(3)), ("Pinf", Period::Never)];
+    let shardings = [
+        ("replicated", StateSharding::Replicated),
+        ("zero1", StateSharding::Zero1),
+    ];
+    for (lname, layout, metas_of) in layouts {
+        for dp in [1usize, 2, 4] {
+            for (pname, period) in periods {
+                for (sname, sharding) in shardings {
+                    let quad = Quad::new(metas_of(), 47);
+                    let tag =
+                        format!("{lname} dp={dp} {pname} {sname}");
+                    let (on, snap_on) = run_local(
+                        true, layout, dp, 4, period, sharding, &quad, 6,
+                    );
+                    let (off, snap_off) = run_local(
+                        false, layout, dp, 4, period, sharding, &quad, 6,
+                    );
+                    for (step, (a, b)) in
+                        on.iter().zip(&off).enumerate()
+                    {
+                        assert_eq!(
+                            a, b,
+                            "[{tag}] params diverge at step {step}"
+                        );
+                    }
+                    assert_eq!(
+                        snap_on.entries, snap_off.entries,
+                        "[{tag}] optimizer state diverges"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Invariant 2: the overlapped schedule over a TCP loopback group (one
+/// transport per DP rank, real sockets) matches the overlap-off
+/// fully-local reference bit-for-bit. ZeRO-1 is intentionally not in
+/// this matrix: multi-process transports reject it at build time.
+#[test]
+fn overlap_over_tcp_loopback_matches_barrier_local() {
+    let quad = Quad::new(metas_even(), 47);
+    let steps = 4;
+    let (reference, ref_snap) = run_local(
+        false,
+        Layout::TpColumn,
+        2,
+        2,
+        Period::Every(2),
+        StateSharding::Replicated,
+        &quad,
+        steps,
+    );
+
+    let group = loopback_group(2, TcpCfg::default()).unwrap();
+    let quad_ref = &quad;
+    let runs: Vec<(Vec<Vec<Tensor>>, muonbp::checkpoint::Snapshot)> =
+        std::thread::scope(|s| {
+            let handles: Vec<_> = group
+                .into_iter()
+                .enumerate()
+                .map(|(r, t)| {
+                    s.spawn(move || {
+                        let mut opt = DistMuonBuilder::new(
+                            Mesh::new(2, 2).unwrap(),
+                            Period::Every(2),
+                        )
+                        .overlap(true)
+                        .collective_deadline(Duration::from_secs(30))
+                        .dp_transport(Arc::new(t), r)
+                        .build(&quad_ref.metas);
+                        let mut p = quad_ref.init(5);
+                        let mut traj = Vec::new();
+                        for _ in 0..steps {
+                            let grads = quad_ref.grads(&p);
+                            opt.try_step(&mut p, &grads, 0.02).unwrap();
+                            traj.push(p.clone());
+                        }
+                        (traj, opt.snapshot().unwrap())
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+
+    for (rank, (traj, snap)) in runs.iter().enumerate() {
+        for (step, (a, b)) in traj.iter().zip(&reference).enumerate() {
+            assert_eq!(
+                a, b,
+                "tcp rank {rank}: overlapped params diverge from the \
+                 barrier-local reference at step {step}"
+            );
+        }
+        assert_eq!(
+            snap.entries, ref_snap.entries,
+            "tcp rank {rank}: optimizer state diverges"
+        );
+    }
+}
+
+/// Invariant 3: a rank panic inside the DAG — in a sync lane (phase 0)
+/// or a TP node (phase 1) — poisons the graph instead of deadlocking,
+/// surfaces the same structured error the barrier schedule reports,
+/// commits nothing, and a clean retry continues bit-identically to a
+/// never-faulted twin.
+#[test]
+fn dag_panic_poisons_and_commits_nothing() {
+    for (phase, want_rank) in [(0u8, 1usize), (1, 1)] {
+        let quad = Quad::new(metas_even(), 21);
+        let steps = 4;
+
+        // Never-faulted twin.
+        let mut twin = DistMuonBuilder::new(
+            Mesh::new(2, 2).unwrap(),
+            Period::Every(2),
+        )
+        .overlap(true)
+        .build(&quad.metas);
+        let mut p_twin = quad.init(9);
+        for _ in 0..steps {
+            let grads = quad.grads(&p_twin);
+            twin.try_step(&mut p_twin, &grads, 0.02).unwrap();
+        }
+
+        // Faulted run: panic on attempt 2 (step 2's first attempt).
+        let mut fault = FaultPlan::default();
+        fault.panic_at =
+            Some(PhasePanic { attempt: 2, rank: want_rank, phase });
+        let mut opt = DistMuonBuilder::new(
+            Mesh::new(2, 2).unwrap(),
+            Period::Every(2),
+        )
+        .overlap(true)
+        .fault_plan(fault)
+        .build(&quad.metas);
+        let mut p = quad.init(9);
+        let g1 = quad.grads(&p);
+        opt.try_step(&mut p, &g1, 0.02).unwrap();
+
+        let before_params = p.clone();
+        let before_snap = opt.snapshot().unwrap();
+        let g2 = quad.grads(&p);
+        match opt.try_step(&mut p, &g2, 0.02) {
+            Err(StepError::RankPanicked { rank, phase: ph }) => {
+                assert_eq!(
+                    (rank, ph),
+                    (want_rank, phase),
+                    "wrong panic attribution"
+                );
+            }
+            other => panic!(
+                "phase {phase}: want RankPanicked, got {other:?}"
+            ),
+        }
+        // Atomicity: the failed attempt touched staging only.
+        assert_eq!(p, before_params, "params mutated by failed attempt");
+        assert_eq!(
+            opt.snapshot().unwrap().entries,
+            before_snap.entries,
+            "optimizer state mutated by failed attempt"
+        );
+
+        // Clean retry (the fault keys off attempt 2 and stays inert) and
+        // the rest of the run must match the never-faulted twin exactly.
+        opt.try_step(&mut p, &g2, 0.02).unwrap();
+        for _ in 2..steps {
+            let grads = quad.grads(&p);
+            opt.try_step(&mut p, &grads, 0.02).unwrap();
+        }
+        assert_eq!(
+            p, p_twin,
+            "phase {phase}: post-retry trajectory diverges from twin"
+        );
+    }
+}
+
+/// Escalate-full-orth under the DAG schedule: a block NS divergence
+/// (soft failure — dependents are taint-skipped, the sync still
+/// completes) is retried as a full-orthogonalization step over the
+/// already-synced gradients, bit-identical to the barrier schedule
+/// doing the same. The orth callback blows up on TP-block shapes
+/// (n == 8 under the 2-way column split of 8×16) but behaves on the
+/// full matrix, as in fault_injection.rs.
+#[test]
+fn overlap_escalation_matches_barrier() {
+    use muonbp::linalg::newton_schulz::{newton_schulz, NsCoeffs};
+    use muonbp::optim::muon::OrthFn;
+    use muonbp::robust::AnomalyPolicy;
+
+    let block_diverging: fn() -> OrthFn = || {
+        Arc::new(|t: &Tensor| {
+            if t.n() == 8 {
+                let mut u = t.clone();
+                u.data_mut().fill(1e6);
+                u
+            } else {
+                newton_schulz(t, 5, NsCoeffs::jordan())
+            }
+        })
+    };
+    let metas = vec![ParamMeta::new("w", &[8, 16], ParamKind::Matrix)];
+    let quad = Quad::new(metas.clone(), 33);
+    let steps = 4;
+    let mut trajs = Vec::new();
+    for overlap in [true, false] {
+        let mut opt = DistMuonBuilder::new(
+            Mesh::new(2, 2).unwrap(),
+            Period::Never,
+        )
+        .overlap(overlap)
+        .orth_fn(block_diverging())
+        .cfg(|c| {
+            c.on_anomaly = AnomalyPolicy::EscalateFullOrth;
+            c.eta_block_ratio = 0.5;
+        })
+        .build(&metas);
+        let mut p = quad.init(3);
+        for _ in 0..steps {
+            let grads = quad.grads(&p);
+            opt.try_step(&mut p, &grads, 0.02).unwrap();
+        }
+        assert_eq!(opt.escalations(), steps as u64, "overlap={overlap}");
+        trajs.push(p);
+    }
+    assert_eq!(
+        trajs[0], trajs[1],
+        "escalated trajectories diverge between schedules"
+    );
+}
