@@ -1,6 +1,6 @@
 # Convenience targets; tier-1 verify is `make verify` (== ROADMAP.md).
 
-.PHONY: build test verify ci ci-env perf pool-stress zero1 fault transport overlap soak artifacts clean
+.PHONY: build test verify ci ci-env perf pool-stress zero1 zero2 fault transport overlap soak artifacts clean
 
 build:
 	cargo build --release
@@ -41,6 +41,13 @@ perf:
 # ZeRO-1 equivalence suite under contention (see ci.sh tier-1).
 zero1:
 	RUST_TEST_THREADS=16 cargo test --test zero1_equivalence -- --nocapture
+
+# ZeRO-2 shard-native data path suite: zero2 == zero1 == replicated
+# bit-identity, reduce-scatter-only byte accounting, grouped topology,
+# tcp loopback, elastic checkpoints, DAG lane folding (see ci.sh tier-1,
+# which also reruns it under MUONBP_POOL_THREADS=2 for the real shrink).
+zero2:
+	RUST_TEST_THREADS=16 cargo test --test zero2_equivalence -- --nocapture
 
 # Worker-pool stress tests (concurrent submitters, rendezvous growth,
 # drop ordering) with the libtest thread count forced high so the test

@@ -79,6 +79,22 @@ step "tier-1: ZeRO-1 equivalence suite (RUST_TEST_THREADS=16)"
 # whose rendezvous must stay bit-identical while tests fight for workers.
 with_timeout 600 env RUST_TEST_THREADS=16 cargo test -q --test zero1_equivalence || exit 1
 
+step "tier-1: ZeRO-2 equivalence suite (RUST_TEST_THREADS=16)"
+# The shard-native data path: zero2 == zero1 == replicated bit-identity
+# across layouts/dp/periods/schedules, reduce-scatter-only byte
+# accounting (exact gap to zero1), grouped-topology shard-sized charges,
+# tcp loopback (the cell zero1 cannot fill), elastic checkpoints, and
+# DAG lane folding via max_lanes.
+with_timeout 900 env RUST_TEST_THREADS=16 cargo test -q --test zero2_equivalence || exit 1
+
+step "tier-1: ZeRO-2 lane shrink (MUONBP_POOL_THREADS=2)"
+# With the pool pinned to 2 compute workers the DAG lane count really
+# shrinks to min(dp, 2) — dp=4 cells fold ranks onto lanes round-robin
+# through the merged multi-rank collective rounds. Bit-identity must
+# survive the real shrink, not just the max_lanes cap above.
+with_timeout 900 env MUONBP_POOL_THREADS=2 RUST_TEST_THREADS=16 \
+    cargo test -q --test zero2_equivalence || exit 1
+
 step "tier-1: fault-injection suite (RUST_TEST_THREADS=16)"
 # Panics injected into every phase of the distributed step schedule: the
 # suite pins step atomicity (failed attempts leave params/momentum

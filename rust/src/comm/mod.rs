@@ -126,6 +126,52 @@ impl PhaseBarrier {
         Ok(())
     }
 
+    /// [`PhaseBarrier::wait_deadline`] arriving on behalf of `k`
+    /// participants at once: one thread representing `k` group members
+    /// (the DAG schedule's merged lanes on many-rank-few-core hosts)
+    /// counts all of them into the current round, then waits exactly
+    /// like a single arriver. The caller must guarantee the `k`
+    /// represented members are distinct and arrive nowhere else this
+    /// round — lane partitions of the DP group provide exactly that.
+    pub fn wait_deadline_many(
+        &self,
+        k: usize,
+        deadline: Deadline,
+    ) -> Result<(), WaitFail> {
+        assert!(k >= 1 && k <= self.n, "wait_deadline_many arity");
+        if k == 1 {
+            return self.wait_deadline(deadline);
+        }
+        if self.poisoned.load(Ordering::Acquire) {
+            return Err(WaitFail::Poisoned);
+        }
+        let round = self.generation.load(Ordering::Acquire);
+        if self.arrived.fetch_add(k, Ordering::AcqRel) + k == self.n {
+            self.arrived.store(0, Ordering::Relaxed);
+            self.generation.fetch_add(1, Ordering::Release);
+        } else {
+            let mut spins = 0u32;
+            while self.generation.load(Ordering::Acquire) == round {
+                if self.poisoned.load(Ordering::Acquire) {
+                    return Err(WaitFail::Poisoned);
+                }
+                spins = spins.wrapping_add(1);
+                if spins < 128 {
+                    std::hint::spin_loop();
+                } else {
+                    if deadline.expired() {
+                        return Err(WaitFail::TimedOut);
+                    }
+                    std::thread::yield_now();
+                }
+            }
+        }
+        if self.poisoned.load(Ordering::Acquire) {
+            return Err(WaitFail::Poisoned);
+        }
+        Ok(())
+    }
+
     /// Release every current and future waiter with
     /// `Err(StepError::Poisoned)`. Callable from any rank (including a
     /// panic handler); idempotent.
@@ -362,6 +408,26 @@ impl Communicator {
     /// [`transport::ArmedFault`]).
     pub fn arm_fault(&self, fault: ArmedFault) {
         self.transport.arm_fault(fault);
+    }
+
+    /// A group-scoped sub-communicator (dp-groups-per-shard topology):
+    /// same world size, routed over [`Transport::split_group`]'s
+    /// per-group sub-transport, with **fresh, independent
+    /// [`CommStats`]** so per-group traffic is accounted separately.
+    /// Calling `split` with the same `group` id on clones of one
+    /// communicator yields handles that share the sub-transport (the
+    /// group members rendezvous with each other), while different
+    /// `group` ids never rendezvous together. The per-collective
+    /// deadline value is inherited; the schedule phase tag starts at 0.
+    pub fn split(&self, group: usize) -> Communicator {
+        let sub =
+            Communicator::with_transport(
+                Arc::clone(&self.transport).split_group(group),
+                self.net,
+            );
+        sub.deadline_ms
+            .store(self.deadline_ms.load(Ordering::Acquire), Ordering::Release);
+        sub
     }
 
     // -- pool-native phase primitives ----------------------------------------
@@ -745,6 +811,205 @@ impl Communicator {
         let d = dst.data_mut();
         self.transport
             .gather_map(rank, send, self.deadline(), &mut |r, s| {
+                if r == slice {
+                    d[r0 * n_cols..r1 * n_cols].copy_from_slice(s);
+                }
+            })
+            .map_err(|e| self.lift(e))?;
+        Ok(())
+    }
+
+    // -- merged-lane (multi-rank) sub-collectives ----------------------------
+    //
+    // On many-rank-few-core hosts the DAG schedule runs fewer lanes
+    // than DP ranks (`n_lanes = min(dp, compute_width)`); one lane
+    // thread then arrives at each collective *on behalf of every rank
+    // it represents*, via [`Transport::gather_map_multi`]. Each
+    // `_lanes` variant delegates to its single-rank twin when the lane
+    // represents exactly one rank (the common case — preserving the
+    // zero-allocation warm-step contract bit for bit); merged rounds
+    // build one small deposit vector per call. Reduction order is
+    // rank order either way, so results are bit-identical to the
+    // one-lane-per-rank schedule.
+
+    /// [`Communicator::all_reduce_mean_rows_into`] arriving for every
+    /// rank in `ranks` at once. All represented ranks deposit the same
+    /// `src` rows (the fully-local simulator's DP ranks share one
+    /// gradient tensor); the reduction lands once in `dst`. Not
+    /// charged.
+    pub fn all_reduce_mean_rows_into_lanes(
+        &self,
+        ranks: &[usize],
+        src: &Tensor,
+        dst: &mut Tensor,
+        r0: usize,
+        r1: usize,
+    ) -> Result<(), StepError> {
+        if ranks.len() == 1 {
+            return self.all_reduce_mean_rows_into(ranks[0], src, dst, r0, r1);
+        }
+        assert!(!ranks.is_empty());
+        assert_eq!(src.shape(), dst.shape(), "all_reduce_mean_rows_into");
+        assert!(r0 <= r1 && r1 <= src.m(), "row slab out of range");
+        let n_cols = src.n();
+        let off = r0 * n_cols;
+        let len = (r1 - r0) * n_cols;
+        {
+            let sends: Vec<&[f32]> =
+                ranks.iter().map(|_| &src.data()[off..off + len]).collect();
+            let d = &mut dst.data_mut()[off..off + len];
+            d.fill(0.0);
+            self.transport
+                .gather_map_multi(ranks, &sends, self.deadline(), &mut |_r, s| {
+                    for (di, si) in d.iter_mut().zip(s) {
+                        *di += *si;
+                    }
+                })
+                .map_err(|e| self.lift(e))?;
+            let inv = 1.0 / self.n as f32;
+            for v in d.iter_mut() {
+                *v *= inv;
+            }
+        }
+        Ok(())
+    }
+
+    /// [`Communicator::all_reduce_mean_into`] arriving for every rank
+    /// in `ranks` at once (the DAG's non-matrix `ArVec` nodes under
+    /// merged lanes). Self-charging like its twin: charged once when
+    /// the lane represents rank 0.
+    pub fn all_reduce_mean_into_lanes(
+        &self,
+        ranks: &[usize],
+        src: &Tensor,
+        dst: &mut Tensor,
+    ) -> Result<(), StepError> {
+        if ranks.len() == 1 {
+            return self.all_reduce_mean_into(ranks[0], src, dst);
+        }
+        assert!(!ranks.is_empty());
+        assert_eq!(src.shape(), dst.shape(), "all_reduce_mean_into shape");
+        let bytes = src.numel() * 4;
+        let started = Instant::now();
+        {
+            let sends: Vec<&[f32]> =
+                ranks.iter().map(|_| src.data()).collect();
+            let d = dst.data_mut();
+            d.fill(0.0);
+            self.transport
+                .gather_map_multi(ranks, &sends, self.deadline(), &mut |_r, s| {
+                    for (di, si) in d.iter_mut().zip(s) {
+                        *di += *si;
+                    }
+                })
+                .map_err(|e| self.lift(e))?;
+        }
+        dst.scale(1.0 / self.n as f32);
+        if self.n > 1 && ranks.contains(&0) {
+            self.charge_timed(0, CollectiveKind::AllReduce, bytes, started);
+        }
+        Ok(())
+    }
+
+    /// [`Communicator::reduce_scatter_mean_slice_into`] arriving for
+    /// every rank in `ranks` at once. `dst` must be `Some` iff the lane
+    /// represents the owning rank (`ranks.contains(&slice)`). Not
+    /// charged.
+    pub fn reduce_scatter_mean_slice_into_lanes(
+        &self,
+        ranks: &[usize],
+        src: &Tensor,
+        slice: usize,
+        dst: Option<&mut Tensor>,
+    ) -> Result<(), StepError> {
+        if ranks.len() == 1 {
+            return self
+                .reduce_scatter_mean_slice_into(ranks[0], src, slice, dst);
+        }
+        assert!(!ranks.is_empty() && slice < self.n);
+        let n_cols = src.n();
+        let (r0, r1) = crate::shard::shard_range(src.m(), self.n, slice);
+        let off = r0 * n_cols;
+        let len = (r1 - r0) * n_cols;
+        let owns = ranks.contains(&slice);
+        let mut owned = match dst {
+            Some(d) => {
+                assert!(owns, "only the slice owner's lane reduces");
+                assert_eq!(
+                    (d.m(), d.n()),
+                    (r1 - r0, n_cols),
+                    "reduce_scatter_mean_slice_into shape"
+                );
+                Some(d)
+            }
+            None => {
+                assert!(!owns, "the slice owner's lane must pass dst");
+                None
+            }
+        };
+        let inv = 1.0 / self.n as f32;
+        if let Some(d) = owned.as_deref_mut() {
+            d.data_mut().fill(0.0);
+        }
+        let sends: Vec<&[f32]> =
+            ranks.iter().map(|_| &src.data()[off..off + len]).collect();
+        self.transport
+            .gather_map_multi(ranks, &sends, self.deadline(), &mut |_r, s| {
+                if let Some(d) = owned.as_deref_mut() {
+                    for (di, si) in d.data_mut().iter_mut().zip(s) {
+                        *di += *si;
+                    }
+                }
+            })
+            .map_err(|e| self.lift(e))?;
+        if let Some(d) = owned {
+            for v in d.data_mut().iter_mut() {
+                *v *= inv;
+            }
+        }
+        Ok(())
+    }
+
+    /// [`Communicator::all_gather_slice_into`] arriving for every rank
+    /// in `ranks` at once. `src` must be `Some` iff the lane represents
+    /// the owning rank; non-owning represented ranks deposit empty. Not
+    /// charged.
+    pub fn all_gather_slice_into_lanes(
+        &self,
+        ranks: &[usize],
+        slice: usize,
+        src: Option<&Tensor>,
+        dst: &mut Tensor,
+    ) -> Result<(), StepError> {
+        if ranks.len() == 1 {
+            return self.all_gather_slice_into(ranks[0], slice, src, dst);
+        }
+        assert!(!ranks.is_empty() && slice < self.n);
+        let n_cols = dst.n();
+        let (r0, r1) = crate::shard::shard_range(dst.m(), self.n, slice);
+        let owns = ranks.contains(&slice);
+        let owner_send: &[f32] = match src {
+            Some(t) => {
+                assert!(owns, "only the slice owner's lane deposits");
+                assert_eq!(
+                    (t.m(), t.n()),
+                    (r1 - r0, n_cols),
+                    "all_gather_slice_into shape"
+                );
+                t.data()
+            }
+            None => {
+                assert!(!owns, "the slice owner's lane must pass src");
+                &[]
+            }
+        };
+        let sends: Vec<&[f32]> = ranks
+            .iter()
+            .map(|&r| if r == slice { owner_send } else { &[] as &[f32] })
+            .collect();
+        let d = dst.data_mut();
+        self.transport
+            .gather_map_multi(ranks, &sends, self.deadline(), &mut |r, s| {
                 if r == slice {
                     d[r0 * n_cols..r1 * n_cols].copy_from_slice(s);
                 }
@@ -1491,5 +1756,166 @@ mod tests {
         let out = unpack(&packed);
         assert_eq!(out[0], a);
         assert_eq!(out[1], b);
+    }
+
+    #[test]
+    fn split_groups_are_independent_with_separate_stats() {
+        let comm = Communicator::new(2, NetModel::a100_nvlink());
+        let g0 = comm.split(0);
+        let g0b = comm.split(0); // cached: same rendezvous space
+        let g1 = comm.split(1);
+        let src0 = Tensor::from_vec(&[2], vec![2.0, 4.0]).unwrap();
+        let src1 = Tensor::from_vec(&[2], vec![10.0, 30.0]).unwrap();
+        let mut d00 = Tensor::zeros(&[2]);
+        let mut d01 = Tensor::zeros(&[2]);
+        let mut d10 = Tensor::zeros(&[2]);
+        let mut d11 = Tensor::zeros(&[2]);
+        thread::scope(|s| {
+            let (g0, g0b, g1) = (&g0, &g0b, &g1);
+            let (src0, src1) = (&src0, &src1);
+            let (d00, d01) = (&mut d00, &mut d01);
+            let (d10, d11) = (&mut d10, &mut d11);
+            // Group 0 and group 1 run their rounds concurrently; the
+            // groups must pair with themselves, never with each other.
+            s.spawn(move |_| g0.all_reduce_mean_into(0, src0, d00).unwrap());
+            s.spawn(move |_| g0b.all_reduce_mean_into(1, src0, d01).unwrap());
+            s.spawn(move |_| g1.all_reduce_mean_into(0, src1, d10).unwrap());
+            s.spawn(move |_| g1.all_reduce_mean_into(1, src1, d11).unwrap());
+        })
+        .unwrap();
+        assert_eq!(d00.data(), &[2.0, 4.0]);
+        assert_eq!(d01.data(), &[2.0, 4.0]);
+        assert_eq!(d10.data(), &[10.0, 30.0]);
+        assert_eq!(d11.data(), &[10.0, 30.0]);
+        // Per-group accounting: each split's stats saw its own round;
+        // the parent communicator saw nothing. The split(0) pair share
+        // a rendezvous space but NOT stats (rank 0's handle charged).
+        let ar = CollectiveKind::AllReduce;
+        assert_eq!(comm.stats().calls(ar), 0);
+        assert_eq!(g0.stats().calls(ar), 1);
+        assert_eq!(g1.stats().calls(ar), 1);
+        assert_eq!(g0b.stats().calls(ar), 0);
+    }
+
+    #[test]
+    fn lanes_collectives_match_single_rank_twins() {
+        // A 4-rank group run by 2 merged lanes ({0,2} and {1,3}) must
+        // produce bit-identical reductions to 4 one-rank-per-thread
+        // arrivals, for every `_lanes` variant the DAG schedule uses.
+        let m = 6;
+        let n_cols = 3;
+        let src = Tensor::from_vec(
+            &[m, n_cols],
+            (0..m * n_cols).map(|i| (i as f32).sin()).collect(),
+        )
+        .unwrap();
+        // Reference: plain single-rank collectives.
+        let reference = {
+            let comm = Communicator::new(4, NetModel::a100_nvlink());
+            let src = &src;
+            let outs = thread::scope(|s| {
+                let hs: Vec<_> = (0..4)
+                    .map(|r| {
+                        let c = comm.clone();
+                        s.spawn(move |_| {
+                            let mut d = Tensor::zeros(&[m, n_cols]);
+                            c.all_reduce_mean_rows_into(r, src, &mut d, 0, m)
+                                .unwrap();
+                            d
+                        })
+                    })
+                    .collect();
+                hs.into_iter().map(|h| h.join().unwrap()).collect::<Vec<_>>()
+            })
+            .unwrap();
+            outs
+        };
+        // Merged lanes: one thread arrives for two ranks at once.
+        let comm = Communicator::new(4, NetModel::a100_nvlink());
+        let src_ref = &src;
+        let merged = thread::scope(|s| {
+            let hs: Vec<_> = (0..2)
+                .map(|lane| {
+                    let c = comm.clone();
+                    s.spawn(move |_| {
+                        let ranks = [lane, lane + 2];
+                        let mut d = Tensor::zeros(&[m, n_cols]);
+                        c.all_reduce_mean_rows_into_lanes(
+                            &ranks, src_ref, &mut d, 0, m,
+                        )
+                        .unwrap();
+                        // Reduce-scatter round for the slice lane 0
+                        // owns (slice 0 lives on rank 0 = lane 0).
+                        let (r0, r1) = crate::shard::shard_range(m, 4, 0);
+                        let mut sl = Tensor::zeros(&[r1 - r0, n_cols]);
+                        c.reduce_scatter_mean_slice_into_lanes(
+                            &ranks,
+                            src_ref,
+                            0,
+                            if lane == 0 { Some(&mut sl) } else { None },
+                        )
+                        .unwrap();
+                        // All-gather of that slice back into a full
+                        // matrix on every lane.
+                        let mut full = Tensor::zeros(&[m, n_cols]);
+                        c.all_gather_slice_into_lanes(
+                            &ranks,
+                            0,
+                            if lane == 0 { Some(&sl) } else { None },
+                            &mut full,
+                        )
+                        .unwrap();
+                        (d, sl, full)
+                    })
+                })
+                .collect();
+            hs.into_iter().map(|h| h.join().unwrap()).collect::<Vec<_>>()
+        })
+        .unwrap();
+        let (r0, r1) = crate::shard::shard_range(m, 4, 0);
+        for (lane, (d, _sl, full)) in merged.iter().enumerate() {
+            assert_eq!(
+                d.data(),
+                reference[lane].data(),
+                "lane {lane} all-reduce diverged from per-rank arrival"
+            );
+            // The gathered slice rows equal the reduced rows.
+            assert_eq!(
+                &full.data()[r0 * n_cols..r1 * n_cols],
+                &reference[0].data()[r0 * n_cols..r1 * n_cols],
+            );
+        }
+        // Fully-merged vector all-reduce: a single thread arrives for
+        // the whole group and still charges exactly one AllReduce.
+        let comm1 = Communicator::new(4, NetModel::a100_nvlink());
+        let v = Tensor::from_vec(&[4], vec![3.0, 6.0, 9.0, 12.0]).unwrap();
+        let mut dv = Tensor::zeros(&[4]);
+        comm1.all_reduce_mean_into_lanes(&[0, 1, 2, 3], &v, &mut dv).unwrap();
+        assert_eq!(dv.data(), v.data());
+        let st = comm1.stats();
+        assert_eq!(st.calls(CollectiveKind::AllReduce), 1);
+        assert_eq!(st.bytes(CollectiveKind::AllReduce), 16);
+    }
+
+    #[test]
+    fn wait_deadline_many_completes_rounds() {
+        // One thread arriving 3-of-4 plus one thread arriving 1-of-4,
+        // over several rounds, with the sense-reversing generation
+        // advancing each time.
+        let b = PhaseBarrier::new(4);
+        thread::scope(|s| {
+            let b = &b;
+            s.spawn(move |_| {
+                for _ in 0..100 {
+                    b.wait_deadline_many(3, Deadline::none()).unwrap();
+                }
+            });
+            s.spawn(move |_| {
+                for _ in 0..100 {
+                    b.wait_deadline_many(1, Deadline::none()).unwrap();
+                }
+            });
+        })
+        .unwrap();
     }
 }

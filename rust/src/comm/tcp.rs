@@ -650,6 +650,17 @@ impl Transport for TcpTransport {
         Ok(())
     }
 
+    fn split_group(self: Arc<Self>, _group: usize) -> Arc<dyn Transport> {
+        // One TCP process hosts exactly one rank, and the world of a DP
+        // communicator under `dp_transport` IS the DP group, so every
+        // sub-group has identical membership. Sharing the socket mesh
+        // (and the monotonic `send_round` counter) is sound because the
+        // deterministic schedule issues group collectives in the same
+        // program order on every rank — per-stream frames stay aligned
+        // exactly as they do for the parent communicator.
+        self
+    }
+
     fn rendezvous(&self, deadline: Deadline) -> Result<(), TransportError> {
         self.gather_map(self.rank, &[], deadline, &mut |_, _| {})
     }

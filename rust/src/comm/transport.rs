@@ -24,8 +24,9 @@
 //! [`Transport::arm_fault`] lets the fault-injection plan drop a rank or
 //! slow a link *inside* the transport, where a deadline can catch it.
 
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use super::PhaseBarrier;
@@ -145,6 +146,44 @@ pub trait Transport: Send + Sync {
         f: &mut dyn FnMut(usize, &[f32]),
     ) -> Result<(), TransportError>;
 
+    /// [`Transport::gather_map`] arriving on behalf of *several* ranks
+    /// at once: one caller thread deposits `sends[i]` for `ranks[i]`,
+    /// counts all of them into the round, and the callback still fires
+    /// exactly once per rank `r` in rank order 0..world(). This is the
+    /// merged-lane primitive for schedules that run fewer lanes than
+    /// ranks (many-rank-few-core hosts): one lane thread cannot make
+    /// `k` sequential blocking `gather_map` calls (the first would
+    /// deadlock waiting for the lane's own later arrivals), so it must
+    /// arrive for all `k` in a single call.
+    ///
+    /// The default implementation only supports the degenerate
+    /// one-rank case and delegates to [`Transport::gather_map`];
+    /// backends where one OS process genuinely hosts several ranks'
+    /// lanes ([`LocalTransport`]) override it.
+    fn gather_map_multi(
+        &self,
+        ranks: &[usize],
+        sends: &[&[f32]],
+        deadline: Deadline,
+        f: &mut dyn FnMut(usize, &[f32]),
+    ) -> Result<(), TransportError> {
+        assert_eq!(
+            ranks.len(),
+            1,
+            "this transport cannot merge lanes (one rank per arrival)"
+        );
+        assert_eq!(sends.len(), 1, "gather_map_multi arity");
+        self.gather_map(ranks[0], sends[0], deadline, f)
+    }
+
+    /// A group-scoped sub-transport for group id `group` (the
+    /// dp-groups-per-shard topology): same world size, but an
+    /// independent rendezvous space — collectives in different groups
+    /// never synchronize with each other. Calling with the same
+    /// `group` id on the same transport must return a handle to the
+    /// same rendezvous space, so all members of a group meet.
+    fn split_group(self: Arc<Self>, group: usize) -> Arc<dyn Transport>;
+
     /// Pure group synchronization: no payload, no callback.
     fn rendezvous(&self, deadline: Deadline) -> Result<(), TransportError>;
 
@@ -205,6 +244,11 @@ pub struct LocalTransport {
     /// a fault is actually armed, so the inert case stays lock-free.
     fault_armed: AtomicBool,
     fault: Mutex<ArmedFault>,
+    /// Lazily-built sub-transports for [`Transport::split_group`]: one
+    /// independent same-world transport per group id, cached so every
+    /// member of a group lands on the same rendezvous space. Only the
+    /// split path takes this lock — warm collectives never touch it.
+    groups: Mutex<HashMap<usize, Arc<LocalTransport>>>,
 }
 
 impl LocalTransport {
@@ -223,6 +267,7 @@ impl LocalTransport {
             dead: (0..n).map(|_| AtomicBool::new(false)).collect(),
             fault_armed: AtomicBool::new(false),
             fault: Mutex::new(ArmedFault::default()),
+            groups: Mutex::new(HashMap::new()),
         }
     }
 
@@ -345,6 +390,62 @@ impl Transport for LocalTransport {
             .wait_deadline(deadline)
             .map_err(|e| self.lift_wait(e, start))?;
         Ok(())
+    }
+
+    fn gather_map_multi(
+        &self,
+        ranks: &[usize],
+        sends: &[&[f32]],
+        deadline: Deadline,
+        f: &mut dyn FnMut(usize, &[f32]),
+    ) -> Result<(), TransportError> {
+        assert_eq!(ranks.len(), sends.len(), "gather_map_multi arity");
+        assert!(!ranks.is_empty(), "gather_map_multi needs >= 1 rank");
+        if ranks.len() == 1 {
+            return self.gather_map(ranks[0], sends[0], deadline, f);
+        }
+        for &rank in ranks {
+            assert!(rank < self.n, "gather_map_multi rank {rank} of {}", self.n);
+        }
+        self.check_dead()?;
+        for &rank in ranks {
+            self.maybe_fault(rank)?;
+        }
+        let start = if deadline.is_none() { None } else { Some(Instant::now()) };
+        for (&rank, send) in ranks.iter().zip(sends) {
+            self.rounds[rank].fetch_add(1, Ordering::AcqRel);
+            self.slots[rank].ptr.store(send.as_ptr() as usize, Ordering::Relaxed);
+            self.slots[rank].len.store(send.len(), Ordering::Release);
+        }
+        self.barrier
+            .wait_deadline_many(ranks.len(), deadline)
+            .map_err(|e| self.lift_wait(e, start))?;
+        for r in 0..self.n {
+            let len = self.slots[r].len.load(Ordering::Acquire);
+            let ptr = self.slots[r].ptr.load(Ordering::Relaxed) as *const f32;
+            if len == 0 {
+                f(r, &[]);
+            } else {
+                // SAFETY: same contract as `gather_map` — an Ok from the
+                // opening wait means all n arrivals (counting this call
+                // as `ranks.len()` of them) deposited this round, and
+                // every published slice stays live until the closing
+                // wait below.
+                f(r, unsafe { std::slice::from_raw_parts(ptr, len) });
+            }
+        }
+        self.barrier
+            .wait_deadline_many(ranks.len(), deadline)
+            .map_err(|e| self.lift_wait(e, start))?;
+        Ok(())
+    }
+
+    fn split_group(self: Arc<Self>, group: usize) -> Arc<dyn Transport> {
+        let mut groups = self.groups.lock().unwrap();
+        let sub = groups
+            .entry(group)
+            .or_insert_with(|| Arc::new(LocalTransport::new(self.n)));
+        Arc::clone(sub) as Arc<dyn Transport>
     }
 
     fn rendezvous(&self, deadline: Deadline) -> Result<(), TransportError> {
@@ -546,5 +647,97 @@ mod tests {
         assert_eq!(got, Err(TransportError::Poisoned));
         t.heal();
         assert!(!t.is_poisoned());
+    }
+
+    #[test]
+    fn gather_map_multi_matches_per_rank_arrivals() {
+        // Two lane threads over a 4-rank world: lane 0 arrives for
+        // ranks {0, 2}, lane 1 for ranks {1, 3}. Every rank's payload
+        // must be delivered exactly once, in rank order, to both lanes
+        // — the merged arrivals are indistinguishable from four
+        // threads.
+        let t = LocalTransport::new(4);
+        let payload = |r: usize| vec![r as f32 + 1.0; r + 1];
+        thread::scope(|s| {
+            for lane in 0..2usize {
+                let t = &t;
+                s.spawn(move |_| {
+                    let ranks = [lane, lane + 2];
+                    let p0 = payload(ranks[0]);
+                    let p1 = payload(ranks[1]);
+                    let sends: Vec<&[f32]> = vec![&p0, &p1];
+                    for _ in 0..50 {
+                        let mut seen: Vec<(usize, Vec<f32>)> = Vec::new();
+                        t.gather_map_multi(
+                            &ranks,
+                            &sends,
+                            Deadline::none(),
+                            &mut |peer, s| seen.push((peer, s.to_vec())),
+                        )
+                        .unwrap();
+                        assert_eq!(
+                            seen.iter().map(|(p, _)| *p).collect::<Vec<_>>(),
+                            vec![0, 1, 2, 3],
+                            "lane {lane}: callbacks out of rank order"
+                        );
+                        for (peer, got) in &seen {
+                            assert_eq!(got, &payload(*peer));
+                        }
+                    }
+                });
+            }
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn gather_map_multi_single_rank_delegates() {
+        let t = LocalTransport::new(1);
+        let send = [7.0f32];
+        let sends: Vec<&[f32]> = vec![&send];
+        let mut got = 0.0;
+        t.gather_map_multi(&[0], &sends, Deadline::none(), &mut |_, p| {
+            got = p[0];
+        })
+        .unwrap();
+        assert_eq!(got, 7.0);
+    }
+
+    #[test]
+    fn split_group_isolates_rendezvous_spaces() {
+        let t = Arc::new(LocalTransport::new(2));
+        let g0 = Arc::clone(&t).split_group(0);
+        let g0_again = Arc::clone(&t).split_group(0);
+        let g1 = Arc::clone(&t).split_group(1);
+        // Same id -> same rendezvous space: rank 0 on one handle and
+        // rank 1 on the cached handle must complete a round together,
+        // while group 1 and the parent run their own rounds untouched.
+        thread::scope(|s| {
+            let (g0, g0b) = (&g0, &g0_again);
+            s.spawn(move |_| {
+                let send = [1.0f32];
+                let mut sum = 0.0;
+                g0.gather_map(0, &send, Deadline::none(), &mut |_, p| {
+                    sum += p[0];
+                })
+                .unwrap();
+                assert_eq!(sum, 3.0);
+            });
+            s.spawn(move |_| {
+                let send = [2.0f32];
+                let mut sum = 0.0;
+                g0b.gather_map(1, &send, Deadline::none(), &mut |_, p| {
+                    sum += p[0];
+                })
+                .unwrap();
+                assert_eq!(sum, 3.0);
+            });
+        })
+        .unwrap();
+        // Group 1 never saw an arrival: a deadline-bounded rendezvous
+        // on one rank times out instead of pairing with group 0.
+        let got = g1.rendezvous(Deadline::after(Duration::from_millis(30)));
+        assert!(matches!(got, Err(TransportError::Timeout { .. })));
+        g1.heal();
     }
 }

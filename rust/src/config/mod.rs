@@ -5,7 +5,7 @@ use std::path::Path;
 
 use anyhow::Result;
 
-use crate::mesh::{Layout, StateSharding};
+use crate::mesh::{Layout, StateSharding, Topology};
 use crate::optim::{MuonCfg, Schedule};
 use crate::robust::{
     AnomalyPolicy, DropRank, FaultPlan, PhasePanic, SlowLink, Straggler,
@@ -35,9 +35,13 @@ pub struct RunConfig {
     pub dp: usize,
     pub tp: usize,
     pub layout: Layout,
-    /// Optimizer-state residency across the DP group (ZeRO-1 vs
-    /// replicated momentum).
+    /// Optimizer-state residency across the DP group (replicated
+    /// momentum vs ZeRO-1/2 row slices).
     pub state_sharding: StateSharding,
+    /// DP communicator topology: `full-replica` (one flat DP group
+    /// syncing whole matrices) or `grouped` (one DP sub-group per TP
+    /// shard, each moving only its block's bytes).
+    pub topology: Topology,
     /// Run the real thread-per-rank cluster instead of the single-process
     /// reference optimizer.
     pub distributed: bool,
@@ -90,6 +94,7 @@ impl Default for RunConfig {
             tp: 4,
             layout: Layout::TpColumn,
             state_sharding: StateSharding::Replicated,
+            topology: Topology::FullReplica,
             distributed: false,
             seed: 0,
             eval_every: 20,
@@ -156,6 +161,9 @@ impl RunConfig {
         }
         if let Some(v) = j.get("state_sharding") {
             c.state_sharding = StateSharding::parse(v.as_str()?)?;
+        }
+        if let Some(v) = j.get("topology") {
+            c.topology = Topology::parse(v.as_str()?)?;
         }
         if let Some(v) = j.get("distributed") {
             c.distributed = v.as_bool()?;
@@ -252,6 +260,9 @@ impl RunConfig {
         if let Some(v) = args.get("state-sharding") {
             self.state_sharding = StateSharding::parse(v)?;
         }
+        if let Some(v) = args.get("topology") {
+            self.topology = Topology::parse(v)?;
+        }
         if args.flag("distributed") {
             self.distributed = true;
         }
@@ -300,6 +311,54 @@ impl RunConfig {
         }
         if let Some(v) = args.get("overlap") {
             self.overlap = Some(parse_overlap(v)?);
+        }
+        Ok(())
+    }
+
+    /// Cross-flag validation, run by the launcher after all overrides
+    /// are applied (so JSON + CLI combinations are judged as a whole).
+    /// Catches combinations the coordinator would otherwise reject
+    /// mid-launch with an assert, and gives each a clear actionable
+    /// message.
+    pub fn validate(&self) -> Result<()> {
+        if self.state_sharding.is_sliced()
+            && self.on_anomaly == AnomalyPolicy::DegradeBlock
+        {
+            anyhow::bail!(
+                "--state-sharding {} is incompatible with --on-anomaly \
+                 degrade-block: a degraded step skips the DP sync, but \
+                 sliced momentum state is advanced inside that sync, so \
+                 the step could not be committed. Use --on-anomaly \
+                 abort | skip-step | escalate-full-orth instead.",
+                self.state_sharding.name()
+            );
+        }
+        if self.state_sharding == StateSharding::Zero1
+            && self.transport == "tcp"
+        {
+            anyhow::bail!(
+                "--state-sharding zero1 requires --transport local (its \
+                 interleaved gather schedule is wired for the in-process \
+                 group); use --state-sharding zero2 for sharded \
+                 multi-process runs"
+            );
+        }
+        if self.topology == Topology::GroupedPerShard {
+            if self.overlap == Some(false) {
+                anyhow::bail!(
+                    "--topology grouped requires the DAG schedule: drop \
+                     --overlap off (per-group charging reroutes the DAG \
+                     executor's post-join charge; the barrier schedule's \
+                     collectives self-charge full-replica bytes)"
+                );
+            }
+            if self.transport == "tcp" {
+                anyhow::bail!(
+                    "--topology grouped requires --transport local (the \
+                     per-shard DP sub-groups split the in-process \
+                     transport)"
+                );
+            }
         }
         Ok(())
     }
@@ -504,6 +563,65 @@ mod tests {
         )
         .unwrap();
         assert!(c.apply_args(&bad).is_err());
+    }
+
+    #[test]
+    fn topology_plumbing() {
+        assert_eq!(RunConfig::default().topology, Topology::FullReplica);
+        let j = Json::parse(r#"{"topology":"grouped"}"#).unwrap();
+        let mut c = RunConfig::from_json(&j).unwrap();
+        assert_eq!(c.topology, Topology::GroupedPerShard);
+        let args = Args::parse(
+            ["--topology", "full-replica"].iter().map(|s| s.to_string()),
+        )
+        .unwrap();
+        c.apply_args(&args).unwrap();
+        assert_eq!(c.topology, Topology::FullReplica);
+        let bad = Args::parse(
+            ["--topology", "ring"].iter().map(|s| s.to_string()),
+        )
+        .unwrap();
+        assert!(c.apply_args(&bad).is_err());
+        let j = Json::parse(r#"{"topology":"torus"}"#).unwrap();
+        assert!(RunConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn validate_rejects_incoherent_combinations() {
+        // The defaults are coherent.
+        assert!(RunConfig::default().validate().is_ok());
+        // Sliced sharding cannot degrade to a sync-skipping step.
+        for mode in [StateSharding::Zero1, StateSharding::Zero2] {
+            let mut c = RunConfig::default();
+            c.state_sharding = mode;
+            c.on_anomaly = AnomalyPolicy::DegradeBlock;
+            let err = c.validate().unwrap_err().to_string();
+            assert!(err.contains("degrade-block"), "{err}");
+            // The other policies stay legal.
+            c.on_anomaly = AnomalyPolicy::EscalateFullOrth;
+            assert!(c.validate().is_ok());
+        }
+        // ZeRO-1 is local-transport only; ZeRO-2 is the multi-process
+        // sharded mode.
+        let mut c = RunConfig::default();
+        c.state_sharding = StateSharding::Zero1;
+        c.transport = "tcp".into();
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("zero2"), "{err}");
+        c.state_sharding = StateSharding::Zero2;
+        assert!(c.validate().is_ok());
+        // Grouped topology needs the DAG schedule and local transport.
+        let mut c = RunConfig::default();
+        c.topology = Topology::GroupedPerShard;
+        assert!(c.validate().is_ok());
+        c.overlap = Some(false);
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("--overlap off"), "{err}");
+        c.overlap = Some(true);
+        assert!(c.validate().is_ok());
+        c.transport = "tcp".into();
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("local"), "{err}");
     }
 
     #[test]

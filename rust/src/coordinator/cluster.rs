@@ -98,6 +98,37 @@
 //! stay pool-native and allocation-free, so warm `Zero1` steps allocate
 //! nothing, same as replicated ones.
 //!
+//! # State sharding (ZeRO-2)
+//!
+//! `StateSharding::Zero2` goes one step further: a DP rank never holds
+//! more than its `1/dp` row-slice of any *gradient* either. Phase 0 is
+//! reduce-scatter-only — no full-matrix momentum staging and no
+//! all-gather — and the TP phase assembles each block's momentum
+//! directly from the staged slices (`shard_rows_from_slice`). The
+//! reduction order and the slice-local recurrence are exactly ZeRO-1's,
+//! so results stay bit-identical to both other modes
+//! (`tests/zero2_equivalence.rs` pins all three against each other),
+//! while per-rank DP traffic drops from ZeRO-1's `s·(2dp-1)/dp` to
+//! `s·(dp-1)/dp` — the all-gather disappears entirely. Over the TCP
+//! transport each process genuinely lacks its peers' rows, so the
+//! gather is physically unavoidable there: the inline path runs
+//! RS → slice update → all-gather and then re-slices the gathered
+//! matrix so every DP slice is locally maintained (snapshot/restore
+//! and the TP phase stay uniform); parameters are bit-identical to the
+//! pooled path either way.
+//!
+//! # Topology: dp-groups-per-shard
+//!
+//! `Topology::GroupedPerShard` gives every TP block its own DP
+//! sub-communicator ([`Communicator::split`]): the DP sync of a
+//! TP-sharded matrix is charged per group at that block's shard size
+//! (`s/tp` per group for an even grid) instead of the full matrix on
+//! the flat DP world — the bytes a per-TP-group DP communicator
+//! topology would actually move. Accounting-only: the data path is
+//! unchanged, so results stay bit-identical. Requires the DAG
+//! schedule (the barrier path's collectives self-charge full-replica
+//! bytes) and the fully-local DP transport.
+//!
 //! # Byte accounting
 //!
 //! Payloads move through shared arenas, but `CommStats` still records what
@@ -132,7 +163,7 @@ use crate::comm::{
 };
 use crate::costmodel::netmodel::NetModel;
 use crate::linalg::newton_schulz::{NsCoeffs, NsWorkspace};
-use crate::mesh::{Layout, Mesh, StateSharding};
+use crate::mesh::{Layout, Mesh, StateSharding, Topology};
 use crate::optim::adamw::AdamW;
 use crate::optim::muon::{
     momentum_update_into, momentum_update_rows_into, Muon, MuonCfg,
@@ -142,11 +173,11 @@ use crate::optim::scaling::rms_match_scale;
 use crate::optim::{Optimizer, ParamKind, ParamMeta};
 use crate::robust::{self, AnomalyPolicy, FaultPlan, StepError};
 use crate::runtime::pool::{Pool, SendPtr};
-use crate::runtime::{DagFailure, NsEngine, Severity, TaskDag};
+use crate::runtime::{lane_ranks, DagFailure, NsEngine, Severity, TaskDag};
 use crate::shard::{
     row_slice_into, row_slice_zeros, shard_into, shard_range,
-    shard_rows_into, unshard_from, write_row_slice, write_shard,
-    ShardSpec,
+    shard_rows_from_slice, shard_rows_into, unshard_from,
+    write_row_slice, write_shard, ShardSpec,
 };
 use crate::tensor::Tensor;
 
@@ -170,6 +201,15 @@ pub struct DistMuonBuilder {
     /// executor that overlaps collectives and compute; `false` keeps
     /// the phased barrier schedule. Both are bit-identical.
     pub overlap: bool,
+    /// DP communicator topology: `FullReplica` (default) charges DP
+    /// collectives at the full matrix payload on the flat DP world;
+    /// `GroupedPerShard` charges each TP block's rows on that block's
+    /// own DP sub-communicator at shard size. Accounting-only.
+    pub topology: Topology,
+    /// Cap on the DAG lane count (test/bench knob): lanes are
+    /// `min(dp, pool compute width, max_lanes)`. `None` (default)
+    /// leaves only the pool width in charge.
+    pub max_lanes: Option<usize>,
 }
 
 /// Default for [`DistMuonBuilder::overlap`]: the DAG schedule, unless
@@ -200,6 +240,8 @@ impl DistMuonBuilder {
             collective_deadline: None,
             dp_transport: None,
             overlap: overlap_default(),
+            topology: Topology::FullReplica,
+            max_lanes: None,
         }
     }
 
@@ -225,6 +267,27 @@ impl DistMuonBuilder {
     /// collectives the gradient sync uses.
     pub fn state_sharding(mut self, sharding: StateSharding) -> Self {
         self.sharding = sharding;
+        self
+    }
+
+    /// DP communicator topology (see [`Topology`]): under
+    /// `GroupedPerShard` every TP block gets its own DP sub-group and
+    /// the DP sync of a TP-sharded matrix is charged shard-sized bytes
+    /// per group. The data path — and therefore the math — is
+    /// identical; only the `CommStats` routing changes. Requires the
+    /// DAG schedule and the fully-local DP transport (asserted at
+    /// build).
+    pub fn topology(mut self, t: Topology) -> Self {
+        self.topology = t;
+        self
+    }
+
+    /// Cap the DAG lane count below the DP degree (tests/benches): the
+    /// schedule then folds ranks onto lanes round-robin and lanes enter
+    /// merged multi-rank rounds. Results are bit-identical at every
+    /// lane count.
+    pub fn max_lanes(mut self, cap: usize) -> Self {
+        self.max_lanes = Some(cap);
         self
     }
 
@@ -313,23 +376,26 @@ impl DistMuonBuilder {
                 })
                 .collect()
         };
-        let zero1 = self.sharding == StateSharding::Zero1;
+        let sliced = self.sharding.is_sliced();
         let rank_momenta: Vec<Vec<Tensor>> =
             (0..self.mesh.tp).map(rank_blocks).collect();
-        // Grad-shard staging exists only in replicated mode: under ZeRO-1
-        // the momentum is updated slice-locally in the DP phase and the TP
-        // ranks load their blocks from the gathered matrix instead.
-        let rank_grads: Vec<Vec<Tensor>> = if zero1 {
+        // Grad-shard staging exists only in replicated mode: under the
+        // row-sliced modes (ZeRO-1/2) the momentum is updated
+        // slice-locally in the DP phase and the TP ranks load their
+        // blocks from the gathered matrix (ZeRO-1) or straight from the
+        // staged slices (ZeRO-2) instead.
+        let rank_grads: Vec<Vec<Tensor>> = if sliced {
             (0..self.mesh.tp).map(|_| Vec::new()).collect()
         } else {
             rank_momenta.clone()
         };
         let rank_updates = rank_momenta.clone();
-        // ZeRO-1 arenas: each DP rank owns the 1/dp row-slice of every
-        // momentum matrix (the authoritative optimizer state in that
-        // mode) plus a same-shape staging slice for the reduce-scattered
-        // mean gradient. Empty slices (dp > m) still rendezvous.
-        let zero1_slices = || -> Vec<Vec<Tensor>> {
+        // Row-slice arenas (ZeRO-1/2): each DP rank owns the 1/dp
+        // row-slice of every momentum matrix (the authoritative
+        // optimizer state in those modes) plus a same-shape staging
+        // slice for the reduce-scattered mean gradient. Empty slices
+        // (dp > m) still rendezvous.
+        let dp_slices = || -> Vec<Vec<Tensor>> {
             (0..self.mesh.dp)
                 .map(|r| {
                     metas
@@ -347,8 +413,8 @@ impl DistMuonBuilder {
                 })
                 .collect()
         };
-        let (dp_momenta, dp_momenta_next, dp_grad_slices) = if zero1 {
-            (zero1_slices(), zero1_slices(), zero1_slices())
+        let (dp_momenta, dp_momenta_next, dp_grad_slices) = if sliced {
+            (dp_slices(), dp_slices(), dp_slices())
         } else {
             (Vec::new(), Vec::new(), Vec::new())
         };
@@ -373,19 +439,36 @@ impl DistMuonBuilder {
         // in the DP phase even at dp = 1.
         let dp_local = self.dp_transport.as_ref().map(|(_, r)| *r);
         if dp_local.is_some() {
-            // ZeRO-1's reduce-scatter/all-gather schedule is wired for
-            // the pooled simulated group; momentum-sharded multi-process
-            // runs are out of scope for the TCP backend.
+            // ZeRO-1's interleaved reduce-scatter/all-gather lane
+            // schedule is wired for the pooled simulated group; ZeRO-2
+            // has a dedicated inline path (RS → slice update → physical
+            // all-gather, see `dp_local_sync`) and is supported.
             assert!(
-                !zero1,
+                self.sharding != StateSharding::Zero1,
                 "ZeRO-1 state sharding requires the fully-local DP \
-                 transport"
+                 transport (use --state-sharding zero2 for sharded \
+                 multi-process runs)"
+            );
+        }
+        let grouped = self.topology == Topology::GroupedPerShard;
+        if grouped {
+            // The barrier path's collectives self-charge full-replica
+            // bytes as they run; only the DAG schedule's post-join
+            // charge can be rerouted per group.
+            assert!(
+                self.overlap,
+                "grouped topology requires the DAG schedule \
+                 (--overlap on)"
+            );
+            assert!(
+                dp_local.is_none(),
+                "grouped topology requires the fully-local DP transport"
             );
         }
         // Over a non-local transport this process hosts exactly one DP
         // rank, so one accumulator row suffices (row 0 = local rank).
         let acc_rows = if dp_local.is_some() { 1 } else { self.mesh.dp };
-        let dp_acc: Vec<Vec<Tensor>> = if self.mesh.dp > 1 || zero1 {
+        let dp_acc: Vec<Vec<Tensor>> = if self.mesh.dp > 1 || sliced {
             (0..acc_rows)
                 .map(|_| {
                     metas.iter().map(|p| Tensor::zeros(&p.shape)).collect()
@@ -415,15 +498,37 @@ impl DistMuonBuilder {
             None => Communicator::new(self.mesh.dp, self.dp_net),
         };
         dp_comm.set_deadline(self.collective_deadline);
+        // Per-TP-block DP sub-communicators (grouped topology): group g
+        // charges block g's shard-sized DP traffic on its own fresh
+        // CommStats; the flat dp_comm keeps the non-matrix (AdamW)
+        // traffic.
+        let dp_groups: Vec<Communicator> = if grouped && self.mesh.dp > 1
+        {
+            (0..self.mesh.tp).map(|g| dp_comm.split(g)).collect()
+        } else {
+            Vec::new()
+        };
+        // DAG lane count: one lane per DP rank, shrunk to the pool's
+        // compute width (and the test cap) when the machine has fewer
+        // workers than ranks — lane L then carries ranks
+        // {L, L+lanes, …} round-robin and enters merged multi-rank
+        // rounds. Computed ONCE here: a growable pool's width must not
+        // re-shape the graph between steps.
+        let mut lanes = self.mesh.dp.min(Pool::global_compute_width().max(1));
+        if let Some(cap) = self.max_lanes {
+            lanes = lanes.min(cap.max(1));
+        }
+        let lane_tbl = lane_ranks(self.mesh.dp, lanes);
         let n_mat = matrix_idx.len();
-        // Row-slab granularity for the DAG schedule: ZeRO-1 chunks at
-        // the DP slice partition (the sync's natural unit); replicated
-        // mode splits each matrix into up to four row slabs. The stride
-        // sizes the flat node-id scratch the graph build writes into.
+        // Row-slab granularity for the DAG schedule: the sliced modes
+        // (ZeRO-1/2) chunk at the DP slice partition (the sync's
+        // natural unit); replicated mode splits each matrix into up to
+        // four row slabs. The stride sizes the flat node-id scratch the
+        // graph build writes into.
         let slab_stride = matrix_idx
             .iter()
             .map(|&i| {
-                if zero1 {
+                if sliced {
                     self.mesh.dp
                 } else {
                     metas[i].shape[0].min(4).max(1)
@@ -445,6 +550,11 @@ impl DistMuonBuilder {
             mesh: self.mesh,
             tp_comm: Communicator::new(self.mesh.tp, self.tp_net),
             dp_comm,
+            dp_groups,
+            topology: self.topology,
+            lanes,
+            lane_tbl,
+            max_lanes: self.max_lanes,
             dp_net: self.dp_net,
             dp_local,
             collective_deadline: self.collective_deadline,
@@ -500,8 +610,10 @@ fn record_err(slot: &Mutex<Option<StepError>>, e: StepError) {
 /// claimed by any worker the moment its inputs exist.
 #[derive(Debug, Clone, Copy)]
 enum Node {
-    /// Lane `r` entry: straggler / phase-0 panic injection before the
-    /// first collective round.
+    /// Lane `r` entry: straggler / phase-0 panic injection (run once
+    /// per rank the lane carries) before the first collective round.
+    /// `r` is a LANE id throughout this enum — equal to the DP rank
+    /// when `lanes == dp`, a round-robin group of ranks otherwise.
     SyncBegin { r: usize },
     /// Replicated sync: all-reduce-mean of one row slab of matrix
     /// ordinal `ord` (uncharged chunk round; the logical all-reduce is
@@ -510,9 +622,10 @@ enum Node {
     /// Whole-tensor all-reduce-mean for non-matrix param `i` (AdamW
     /// inputs) — the self-charging collective, as in the barrier path.
     ArVec { r: usize, i: usize },
-    /// ZeRO-1 sync: reduce-scatter round for DP slice `slice`; the
-    /// owning lane (`r == slice`) also advances its staged momentum
-    /// slice right after the reduction lands.
+    /// ZeRO-1/2 sync: reduce-scatter round for DP slice `slice`; the
+    /// lane carrying the owning rank also advances its staged momentum
+    /// slice right after the reduction lands. Under ZeRO-2 this is the
+    /// ONLY sync round per slice — no gather follows.
     RsSlice { r: usize, ord: usize, slice: usize },
     /// ZeRO-1 sync: all-gather round rebroadcasting slice `slice`'s
     /// staged momentum into every lane's accumulator.
@@ -579,8 +692,12 @@ pub struct DistMuon {
     /// comparison in [`Optimizer::comm_report`]. DAG path only; the
     /// barrier reference path is kept untouched.
     ns_wall: AtomicU64,
-    /// Graph-build scratch: lane 0's sync node id per (ord, slab),
-    /// `ord * slab_stride + slab`.
+    /// Graph-build scratch: the sync node id a `ShardSlab` waits on,
+    /// per (ord, slab), `ord * slab_stride + slab` — lane 0's
+    /// all-reduce / all-gather round (replicated / ZeRO-1, which write
+    /// lane 0's accumulator), or the slice-owning lane's reduce-scatter
+    /// round (ZeRO-2, whose owner stages the slice update inside that
+    /// round).
     dag_sync_ids: Vec<u32>,
     /// Graph-build scratch: `ShardSlab` node id per (rank, ord, slab),
     /// `(rank * n_mat + ord) * slab_stride + slab`; `u32::MAX` = no
@@ -595,6 +712,19 @@ pub struct DistMuon {
     mesh: Mesh,
     tp_comm: Communicator,
     dp_comm: Communicator,
+    /// Per-TP-block DP sub-communicators (grouped topology; empty
+    /// under `FullReplica` or dp == 1). `dp_groups[g]` charges TP
+    /// block g's shard-sized DP traffic on its own `CommStats`.
+    dp_groups: Vec<Communicator>,
+    /// DP communicator topology (kept for elastic rebuilds).
+    topology: Topology,
+    /// DAG lane count: `min(dp, pool compute width, max_lanes)`,
+    /// fixed at build so a growable pool cannot re-shape the graph.
+    lanes: usize,
+    /// Round-robin rank assignment per lane (`lane_ranks(dp, lanes)`).
+    lane_tbl: Vec<Vec<usize>>,
+    /// Builder's lane cap, kept for elastic rebuilds.
+    max_lanes: Option<usize>,
     /// DP net model, kept for elastic rebuilds ([`DistMuon::shrink_dp`]).
     dp_net: NetModel,
     /// Local DP rank when the DP group runs over a non-local transport
@@ -699,6 +829,12 @@ impl DistMuon {
         (self.tp_comm.stats(), self.dp_comm.stats())
     }
 
+    /// Per-TP-group DP communicator stats, indexed by shard group id.
+    /// Empty unless the coordinator was built with the grouped topology.
+    pub fn dp_group_stats(&self) -> Vec<CommStats> {
+        self.dp_groups.iter().map(|c| c.stats()).collect()
+    }
+
     /// Newton–Schulz orthogonalizations issued so far — one per distinct
     /// block on block steps (the clamped-grid dedup regression target:
     /// replica ranks must NOT add calls), one per matrix on full steps.
@@ -750,13 +886,116 @@ impl DistMuon {
         }
     }
 
+    /// Inline DP sync for the one-process-per-rank transport: run the
+    /// local rank's collective schedule; every peer process runs the
+    /// identical schedule, and the transport is the rendezvous.
+    /// `chunked_ar` selects the DAG schedule's chunked all-reduce
+    /// rounds for replicated matrices (charged once per matrix after
+    /// its rounds); the barrier schedule passes `false` and uses
+    /// whole-tensor rounds. Under ZeRO-2 a matrix runs reduce-scatter
+    /// → slice-local staged momentum update → a *physical* all-gather
+    /// of the staged slices (this process genuinely lacks its peers'
+    /// rows, so the gather is unavoidable over a real transport and is
+    /// charged as moved); every rank's slice is then copied back out
+    /// of the gathered matrix so all dp slices stay locally
+    /// maintained — snapshot/restore and the TP phase see exactly the
+    /// state the pooled path holds, and parameters are bit-identical.
+    fn dp_local_sync(
+        &mut self,
+        grads: &[Tensor],
+        attempt: u64,
+        local: usize,
+        chunked_ar: bool,
+    ) -> Result<(), StepError> {
+        let zero2 = self.sharding == StateSharding::Zero2;
+        let comm = &self.dp_comm;
+        let fault = &self.fault;
+        let specs = &self.specs;
+        let dp = self.mesh.dp;
+        let mu = self.cfg.momentum;
+        let acc = &mut self.dp_acc[0];
+        let dpm = &self.dp_momenta;
+        let dpmn = &mut self.dp_momenta_next;
+        let dpg = &mut self.dp_grad_slices;
+        let res = comm.run_fallible(local, 0, || {
+            fault.maybe_straggle(attempt, local);
+            fault.maybe_panic(attempt, local, 0);
+            let mut ord = 0;
+            for (i, g) in grads.iter().enumerate() {
+                if specs[i].is_none() {
+                    comm.all_reduce_mean_into(local, g, &mut acc[i])?;
+                    continue;
+                }
+                if zero2 {
+                    comm.reduce_scatter_mean_into(
+                        local,
+                        g,
+                        &mut dpg[local][ord],
+                    )?;
+                    momentum_update_into(
+                        &mut dpmn[local][ord],
+                        &dpm[local][ord],
+                        mu,
+                        &dpg[local][ord],
+                    );
+                    comm.all_gather_into(
+                        local,
+                        &dpmn[local][ord],
+                        &mut acc[i],
+                    )?;
+                    for r in 0..dp {
+                        if r != local {
+                            row_slice_into(
+                                &acc[i],
+                                dp,
+                                r,
+                                &mut dpmn[r][ord],
+                            );
+                        }
+                    }
+                } else if chunked_ar {
+                    let dst = &mut acc[i];
+                    let started = Instant::now();
+                    let ns = g.m().min(4).max(1);
+                    for j in 0..ns {
+                        let (r0, r1) = shard_range(g.m(), ns, j);
+                        comm.all_reduce_mean_rows_into(
+                            local, g, dst, r0, r1,
+                        )?;
+                    }
+                    // One logical all-reduce per matrix, measured
+                    // across its chunk rounds; rank 0 records, as in
+                    // the whole-tensor collective.
+                    if local == 0 && dp > 1 {
+                        comm.charge_collective_timed(
+                            CollectiveKind::AllReduce,
+                            g.numel() * 4,
+                            started.elapsed().as_secs_f64(),
+                        );
+                    }
+                } else {
+                    comm.all_reduce_mean_into(local, g, &mut acc[i])?;
+                }
+                ord += 1;
+            }
+            Ok(())
+        });
+        if let Err(e) = res {
+            self.dp_comm.heal();
+            return Err(e);
+        }
+        Ok(())
+    }
+
     /// Phase 0 — fallible DP gradient sync into the staging arenas.
     ///
     /// Replicated: one all-reduce-mean per param into `dp_acc`.
     /// ZeRO-1: per matrix, reduce-scatter-mean into the grad slice, a
     /// *staged* slice momentum update (`dp_momenta_next` from the
     /// committed `dp_momenta`), and an all-gather of the staged momentum
-    /// into `dp_acc`. Rank closures run under
+    /// into `dp_acc`. ZeRO-2: the same reduce-scatter and staged slice
+    /// update, with NO all-gather — the TP phase reads the slices
+    /// directly. Rank closures run under
     /// [`Communicator::run_fallible`], so a panicking rank poisons the
     /// phase barrier (releasing every parked peer with
     /// [`StepError::Poisoned`]) instead of deadlocking; on any failure
@@ -766,32 +1005,14 @@ impl DistMuon {
         grads: &[Tensor],
         attempt: u64,
     ) -> Result<(), StepError> {
-        let zero1 = self.sharding == StateSharding::Zero1;
-        if self.mesh.dp <= 1 && !zero1 {
+        let sliced = self.sharding.is_sliced();
+        let zero2 = self.sharding == StateSharding::Zero2;
+        if self.mesh.dp <= 1 && !sliced {
             return Ok(());
         }
         self.dp_comm.set_phase(0);
         if let Some(local) = self.dp_local {
-            // One OS process per DP rank: run the local rank's
-            // collective schedule inline — its peers execute the same
-            // schedule in their own processes, and the transport is the
-            // rendezvous. Replicated-only (asserted at build).
-            let comm = &self.dp_comm;
-            let fault = &self.fault;
-            let acc = &mut self.dp_acc[0];
-            let res = comm.run_fallible(local, 0, || {
-                fault.maybe_straggle(attempt, local);
-                fault.maybe_panic(attempt, local, 0);
-                for (g, dst) in grads.iter().zip(acc.iter_mut()) {
-                    comm.all_reduce_mean_into(local, g, dst)?;
-                }
-                Ok(())
-            });
-            if let Err(e) = res {
-                self.dp_comm.heal();
-                return Err(e);
-            }
-            return Ok(());
+            return self.dp_local_sync(grads, attempt, local, false);
         }
         {
             let comm = &self.dp_comm;
@@ -815,7 +1036,7 @@ impl DistMuon {
                     // any row is touched again.
                     let acc: &mut Vec<Tensor> =
                         unsafe { &mut *acc_ptr.0.add(r) };
-                    if zero1 {
+                    if sliced {
                         let cur: &Vec<Tensor> =
                             unsafe { &*dpm_ptr.0.add(r) };
                         let next: &mut Vec<Tensor> =
@@ -836,11 +1057,16 @@ impl DistMuon {
                                     mu,
                                     &gsl[ord],
                                 );
-                                comm.all_gather_into(
-                                    r,
-                                    &next[ord],
-                                    &mut acc[i],
-                                )?;
+                                // ZeRO-2 stops here: the TP phase
+                                // assembles blocks from the slices,
+                                // so the gather never happens.
+                                if !zero2 {
+                                    comm.all_gather_into(
+                                        r,
+                                        &next[ord],
+                                        &mut acc[i],
+                                    )?;
+                                }
                                 ord += 1;
                             } else {
                                 comm.all_reduce_mean_into(
@@ -878,13 +1104,42 @@ impl DistMuon {
     }
 
     /// Row-slab count for a matrix with `m` rows in the DAG schedule:
-    /// ZeRO-1 chunks at the DP slice partition (the sync's natural
-    /// unit), replicated mode at up to four row slabs per matrix.
+    /// the sliced modes (ZeRO-1/2) chunk at the DP slice partition
+    /// (the sync's natural unit), replicated mode at up to four row
+    /// slabs per matrix.
     fn n_slabs(&self, m: usize) -> usize {
-        if self.sharding == StateSharding::Zero1 {
+        if self.sharding.is_sliced() {
             self.mesh.dp
         } else {
             m.min(4).max(1)
+        }
+    }
+
+    /// Charge one logical DP collective for matrix ordinal `ord`.
+    /// Full-replica topology: the whole matrix payload on the flat DP
+    /// communicator (every rank syncs every row). Grouped topology:
+    /// each TP block's DP sub-group moves only that block's rows, so
+    /// the charge lands on `dp_groups[g]` at `block_bytes(g)` —
+    /// replica blocks of a clamped grid (`g >= num_blocks`) move
+    /// nothing and are excluded, mirroring the TP gather/scatter
+    /// accounting. The measured wall is the same logical round either
+    /// way.
+    fn charge_dp_matrix(&self, ord: usize, kind: CollectiveKind, wall: f64) {
+        let pidx = self.matrix_idx[ord];
+        if self.dp_groups.is_empty() {
+            let bytes =
+                self.metas[pidx].shape[0] * self.metas[pidx].shape[1] * 4;
+            self.dp_comm.charge_collective_timed(kind, bytes, wall);
+            return;
+        }
+        let spec = self.specs[pidx].as_ref().unwrap();
+        let nb = spec.num_blocks();
+        for g in 0..self.dp_groups.len().min(nb) {
+            self.dp_groups[g].charge_collective_timed(
+                kind,
+                spec.block_bytes(g),
+                wall,
+            );
         }
     }
 
@@ -902,7 +1157,8 @@ impl DistMuon {
     /// (full, n_lanes, shapes), so warm rebuilds allocate nothing.
     fn build_graph(&mut self, full: bool, n_lanes: usize) {
         const NO_ID: u32 = u32::MAX;
-        let zero1 = self.sharding == StateSharding::Zero1;
+        let sliced = self.sharding.is_sliced();
+        let zero2 = self.sharding == StateSharding::Zero2;
         let tp = self.mesh.tp;
         let n_mat = self.matrix_idx.len();
         let stride = self.slab_stride;
@@ -914,7 +1170,19 @@ impl DistMuon {
                 if self.specs[i].is_some() {
                     let ns = self.n_slabs(self.metas[i].shape[0]);
                     for s in 0..ns {
-                        if zero1 {
+                        if zero2 {
+                            // Reduce-scatter only. The lane carrying
+                            // the owning rank stages the slice update
+                            // inside its round — that node id is what
+                            // `ShardSlab` consumers must wait on.
+                            let id = self.dag.add(
+                                Node::RsSlice { r, ord, slice: s },
+                                Some(r),
+                            );
+                            if r == s % n_lanes {
+                                self.dag_sync_ids[ord * stride + s] = id;
+                            }
+                        } else if sliced {
                             self.dag.add(
                                 Node::RsSlice { r, ord, slice: s },
                                 Some(r),
@@ -1047,59 +1315,28 @@ impl DistMuon {
         grads: &[Tensor],
         attempt: u64,
     ) -> Result<(), StepError> {
-        let zero1 = self.sharding == StateSharding::Zero1;
-        let sync = self.mesh.dp > 1 || zero1;
+        let sliced = self.sharding.is_sliced();
+        let zero2 = self.sharding == StateSharding::Zero2;
+        let sync = self.mesh.dp > 1 || sliced;
         if sync {
             self.dp_comm.set_phase(0);
         }
         if let Some(local) = self.dp_local {
-            // One OS process per DP rank (replicated-only, asserted at
-            // build): run the local rank's chunked schedule inline —
-            // every peer process runs the identical round sequence,
-            // each chunk round under a fresh per-chunk deadline — then
-            // feed the graph below with zero lanes.
-            let comm = &self.dp_comm;
-            let fault = &self.fault;
-            let specs = &self.specs;
-            let dp = self.mesh.dp;
-            let acc = &mut self.dp_acc[0];
-            let res = comm.run_fallible(local, 0, || {
-                fault.maybe_straggle(attempt, local);
-                fault.maybe_panic(attempt, local, 0);
-                for (i, g) in grads.iter().enumerate() {
-                    let dst = &mut acc[i];
-                    if specs[i].is_some() {
-                        let started = Instant::now();
-                        let ns = g.m().min(4).max(1);
-                        for j in 0..ns {
-                            let (r0, r1) = shard_range(g.m(), ns, j);
-                            comm.all_reduce_mean_rows_into(
-                                local, g, dst, r0, r1,
-                            )?;
-                        }
-                        // One logical all-reduce per matrix, measured
-                        // across its chunk rounds; rank 0 records, as
-                        // in the whole-tensor collective.
-                        if local == 0 && dp > 1 {
-                            comm.charge_collective_timed(
-                                CollectiveKind::AllReduce,
-                                g.numel() * 4,
-                                started.elapsed().as_secs_f64(),
-                            );
-                        }
-                    } else {
-                        comm.all_reduce_mean_into(local, g, dst)?;
-                    }
-                }
-                Ok(())
-            });
-            if let Err(e) = res {
-                self.dp_comm.heal();
-                return Err(e);
-            }
+            // One OS process per DP rank: run the local rank's chunked
+            // schedule inline (see `dp_local_sync`) — every peer
+            // process runs the identical round sequence — then feed
+            // the graph below with zero lanes.
+            self.dp_local_sync(grads, attempt, local, true)?;
         }
+        // Lane count: `self.lanes` (= min(dp, pool compute width),
+        // fixed at build). When lanes < dp each lane enters merged
+        // multi-rank rounds via the `*_lanes` collectives — one
+        // arrival covering all the ranks it carries — which is
+        // bit-identical to dp dedicated lanes because the rank-ordered
+        // callback delivery (and so the f32 reduction order) is
+        // unchanged.
         let n_lanes = if sync && self.dp_local.is_none() {
-            self.mesh.dp
+            self.lanes
         } else {
             0
         };
@@ -1143,18 +1380,22 @@ impl DistMuon {
             let grads_ptr = SendPtr(self.rank_grads.as_mut_ptr());
             let upd_ptr = SendPtr(self.rank_updates.as_mut_ptr());
             let scr_ptr = SendPtr(self.scratch.as_mut_ptr());
+            let lane_tbl = &self.lane_tbl;
             let slabs = move |m: usize| {
-                if zero1 {
+                if sliced {
                     mesh.dp
                 } else {
                     m.min(4).max(1)
                 }
             };
             // SAFETY (all node bodies): each staging row has exactly
-            // one writer per disjoint row range — lane r solely writes
-            // DP row r; concurrent slab tasks of one (rank, ord) write
-            // disjoint rows of the same tensors; block copies write
-            // disjoint blocks of the shared scratch — and every
+            // one writer per disjoint row range — lane L solely writes
+            // accumulator row L and the DP slice rows of the ranks it
+            // carries (`lane_tbl[L]`, a round-robin partition, so
+            // disjoint across lanes; the committed `dp_momenta` rows
+            // are only read); concurrent slab tasks of one (rank, ord)
+            // write disjoint rows of the same tensors; block copies
+            // write disjoint blocks of the shared scratch — and every
             // read-after-write is ordered by a declared dep edge (the
             // dag's pending-count AcqRel pair is the happens-before).
             // Vec control blocks are never mutated, only elements.
@@ -1163,8 +1404,13 @@ impl DistMuon {
              -> Result<(), StepError> {
                 match node {
                     Node::SyncBegin { r } => {
-                        fault.maybe_straggle(attempt, r);
-                        fault.maybe_panic(attempt, r, 0);
+                        // Fault hooks fire once per rank the lane
+                        // carries, so injection plans keyed on ranks
+                        // behave identically at every lane count.
+                        for &rank in &lane_tbl[r] {
+                            fault.maybe_straggle(attempt, rank);
+                            fault.maybe_panic(attempt, rank, 0);
+                        }
                         Ok(())
                     }
                     Node::ArSlab { r, ord, slab } => {
@@ -1174,8 +1420,8 @@ impl DistMuon {
                         let ns = slabs(g.m());
                         let (r0, r1) = shard_range(g.m(), ns, slab);
                         let t0 = (r == 0).then(Instant::now);
-                        comm.all_reduce_mean_rows_into(
-                            r,
+                        comm.all_reduce_mean_rows_into_lanes(
+                            &lane_tbl[r],
                             g,
                             &mut acc[pidx],
                             r0,
@@ -1191,28 +1437,38 @@ impl DistMuon {
                     }
                     Node::ArVec { r, i } => {
                         let acc = unsafe { &mut *acc_ptr.0.add(r) };
-                        // Whole-tensor round: self-charging (rank 0),
-                        // exactly as in the barrier schedule.
-                        comm.all_reduce_mean_into(r, &grads[i], &mut acc[i])
+                        // Whole-tensor round: self-charging (rank 0,
+                        // carried by lane 0), exactly as in the
+                        // barrier schedule.
+                        comm.all_reduce_mean_into_lanes(
+                            &lane_tbl[r],
+                            &grads[i],
+                            &mut acc[i],
+                        )
                     }
                     Node::RsSlice { r, ord, slice } => {
                         let pidx = matrix_idx[ord];
                         let g = &grads[pidx];
                         let t0 = (r == 0).then(Instant::now);
-                        if r == slice {
-                            let gsl = unsafe { &mut *dpg_ptr.0.add(r) };
-                            comm.reduce_scatter_mean_slice_into(
-                                r,
+                        if lane_tbl[r].contains(&slice) {
+                            // This lane carries the owning rank:
+                            // receive the reduction into the owner's
+                            // grad slice and advance its staged
+                            // momentum slice the moment the round
+                            // lands — consumed by the next round
+                            // (ZeRO-1 gather) or by `ShardSlab`
+                            // nodes directly (ZeRO-2).
+                            let gsl =
+                                unsafe { &mut *dpg_ptr.0.add(slice) };
+                            comm.reduce_scatter_mean_slice_into_lanes(
+                                &lane_tbl[r],
                                 g,
                                 slice,
                                 Some(&mut gsl[ord]),
                             )?;
-                            // The owning lane advances its staged
-                            // momentum slice the moment the reduction
-                            // lands — rebroadcast by the next round.
-                            let cur = unsafe { &*dpm_ptr.0.add(r) };
+                            let cur = unsafe { &*dpm_ptr.0.add(slice) };
                             let next =
-                                unsafe { &mut *dpmn_ptr.0.add(r) };
+                                unsafe { &mut *dpmn_ptr.0.add(slice) };
                             momentum_update_into(
                                 &mut next[ord],
                                 &cur[ord],
@@ -1220,8 +1476,11 @@ impl DistMuon {
                                 &gsl[ord],
                             );
                         } else {
-                            comm.reduce_scatter_mean_slice_into(
-                                r, g, slice, None,
+                            comm.reduce_scatter_mean_slice_into_lanes(
+                                &lane_tbl[r],
+                                g,
+                                slice,
+                                None,
                             )?;
                         }
                         if let Some(t0) = t0 {
@@ -1236,20 +1495,20 @@ impl DistMuon {
                         let pidx = matrix_idx[ord];
                         let acc = unsafe { &mut *acc_ptr.0.add(r) };
                         let t0 = (r == 0).then(Instant::now);
-                        if r == slice {
+                        if lane_tbl[r].contains(&slice) {
                             let next = unsafe {
-                                &*(dpmn_ptr.0.add(r)
+                                &*(dpmn_ptr.0.add(slice)
                                     as *const Vec<Tensor>)
                             };
-                            comm.all_gather_slice_into(
-                                r,
+                            comm.all_gather_slice_into_lanes(
+                                &lane_tbl[r],
                                 slice,
                                 Some(&next[ord]),
                                 &mut acc[pidx],
                             )?;
                         } else {
-                            comm.all_gather_slice_into(
-                                r,
+                            comm.all_gather_slice_into_lanes(
+                                &lane_tbl[r],
                                 slice,
                                 None,
                                 &mut acc[pidx],
@@ -1283,7 +1542,25 @@ impl DistMuon {
                             &grads[pidx]
                         };
                         let next = unsafe { &mut *next_ptr.0.add(rank) };
-                        if zero1 {
+                        if zero2 {
+                            // ZeRO-2: no gathered full matrix exists.
+                            // The slab IS a DP slice; assemble the
+                            // block's intersecting rows straight from
+                            // that slice's staged momentum (advanced
+                            // in its RS round — the dep edge on the
+                            // owner lane's `RsSlice` orders the read).
+                            let sl = unsafe {
+                                &*(dpmn_ptr.0.add(slab)
+                                    as *const Vec<Tensor>)
+                            };
+                            shard_rows_from_slice(
+                                &sl[ord],
+                                gr0,
+                                spec,
+                                block,
+                                &mut next[ord],
+                            );
+                        } else if sliced {
                             // ZeRO-1: the synced matrix IS the staged
                             // momentum (advanced slice-locally in the
                             // sync rounds) — load the slab's block
@@ -1480,31 +1757,36 @@ impl DistMuon {
         // collectives.
         if n_lanes > 0 && !hard_failed && self.mesh.dp > 1 {
             for ord in 0..self.matrix_idx.len() {
-                let pidx = self.matrix_idx[ord];
-                let bytes =
-                    self.metas[pidx].shape[0] * self.metas[pidx].shape[1] * 4;
                 let rs_wall = self.sync_wall[2 * ord].load(Ordering::Relaxed)
                     as f64
                     / 1e9;
-                if zero1 {
+                if zero2 {
+                    // ZeRO-2: reduce-scatter is the whole sync — no
+                    // gather round exists to charge.
+                    self.charge_dp_matrix(
+                        ord,
+                        CollectiveKind::ReduceScatter,
+                        rs_wall,
+                    );
+                } else if sliced {
                     let ag_wall = self.sync_wall[2 * ord + 1]
                         .load(Ordering::Relaxed)
                         as f64
                         / 1e9;
-                    self.dp_comm.charge_collective_timed(
+                    self.charge_dp_matrix(
+                        ord,
                         CollectiveKind::ReduceScatter,
-                        bytes,
                         rs_wall,
                     );
-                    self.dp_comm.charge_collective_timed(
+                    self.charge_dp_matrix(
+                        ord,
                         CollectiveKind::AllGather,
-                        bytes,
                         ag_wall,
                     );
                 } else {
-                    self.dp_comm.charge_collective_timed(
+                    self.charge_dp_matrix(
+                        ord,
                         CollectiveKind::AllReduce,
-                        bytes,
                         rs_wall,
                     );
                 }
@@ -1621,7 +1903,8 @@ impl DistMuon {
         synced: &[Tensor],
         attempt: u64,
     ) -> Result<(), StepError> {
-        let zero1 = self.sharding == StateSharding::Zero1;
+        let sliced = self.sharding.is_sliced();
+        let zero2 = self.sharding == StateSharding::Zero2;
         // ---- Phase 1: pooled TP rank tasks. Panics inside a rank task
         // are caught per task (the pool's own panic flag never trips) and
         // surface as a structured error after the join — there is no
@@ -1640,6 +1923,9 @@ impl DistMuon {
             let next_ptr = SendPtr(self.rank_momenta_next.as_mut_ptr());
             let grads_ptr = SendPtr(self.rank_grads.as_mut_ptr());
             let upd_ptr = SendPtr(self.rank_updates.as_mut_ptr());
+            let dpmn_ptr =
+                SendPtr(self.dp_momenta_next.as_ptr() as *mut Vec<Tensor>);
+            let dp = self.mesh.dp;
             Pool::global().fanout(self.mesh.tp, |rank, arena| {
                 let res = std::panic::catch_unwind(
                     std::panic::AssertUnwindSafe(
@@ -1663,7 +1949,34 @@ impl DistMuon {
                                 let spec = specs[pidx].as_ref().unwrap();
                                 let nb = spec.num_blocks();
                                 let block_id = rank.min(nb - 1);
-                                if zero1 {
+                                if zero2 {
+                                    // ZeRO-2: the staged momentum only
+                                    // exists as per-DP-rank row slices
+                                    // (advanced in phase 0's RS-only
+                                    // sync) — assemble this rank's TP
+                                    // block from every slice it
+                                    // intersects. No gathered matrix
+                                    // is ever materialized.
+                                    for s in 0..dp {
+                                        let (sr0, _) = shard_range(
+                                            spec.m, dp, s,
+                                        );
+                                        // SAFETY: read-only; phase 0
+                                        // finished staging before the
+                                        // fan-out started.
+                                        let sl = unsafe {
+                                            &*(dpmn_ptr.0.add(s)
+                                                as *const Vec<Tensor>)
+                                        };
+                                        shard_rows_from_slice(
+                                            &sl[ord],
+                                            sr0,
+                                            spec,
+                                            block_id,
+                                            &mut next[ord],
+                                        );
+                                    }
+                                } else if sliced {
                                     // ZeRO-1: `synced[pidx]` is the
                                     // momentum already staged in phase 0
                                     // (M_t = μ M_{t-1} + G_t on disjoint
@@ -1896,7 +2209,7 @@ impl DistMuon {
     /// of a checkpoint/restart without leaving the process. TP arenas,
     /// the step counter, and the anomaly counters carry over; DP comm
     /// stats reset with the rebuilt communicator; `dead_rank` is
-    /// validation only (replicated state is rank-symmetric, and ZeRO-1
+    /// validation only (replicated state is rank-symmetric, and ZeRO-1/2
     /// slices pass through the canonical full-matrix snapshot).
     ///
     /// Only supported on the fully-local transport, where every
@@ -1926,8 +2239,22 @@ impl DistMuon {
         let dp_comm = Communicator::new(mesh.dp, self.dp_net);
         dp_comm.set_deadline(self.collective_deadline);
         self.dp_comm = dp_comm;
-        let zero1 = self.sharding == StateSharding::Zero1;
-        self.dp_acc = if mesh.dp > 1 || zero1 {
+        // Per-TP-group communicators and the lane table follow the DP
+        // degree: rebuild both against the shrunken group (per-group
+        // stats reset with their parent communicator, as documented).
+        self.dp_groups =
+            if self.topology == Topology::GroupedPerShard && mesh.dp > 1 {
+                (0..mesh.tp).map(|g| self.dp_comm.split(g)).collect()
+            } else {
+                Vec::new()
+            };
+        self.lanes = mesh.dp.min(Pool::global_compute_width().max(1));
+        if let Some(cap) = self.max_lanes {
+            self.lanes = self.lanes.min(cap.max(1));
+        }
+        self.lane_tbl = lane_ranks(mesh.dp, self.lanes);
+        let sliced = self.sharding.is_sliced();
+        self.dp_acc = if mesh.dp > 1 || sliced {
             (0..mesh.dp)
                 .map(|_| {
                     self.metas
@@ -1939,7 +2266,7 @@ impl DistMuon {
         } else {
             Vec::new()
         };
-        if zero1 {
+        if sliced {
             let slices = |metas: &[ParamMeta]| -> Vec<Vec<Tensor>> {
                 (0..mesh.dp)
                     .map(|r| {
@@ -1960,14 +2287,14 @@ impl DistMuon {
             self.dp_grad_slices = slices(&self.metas);
         }
         // The DAG schedule's slab partition follows the DP degree
-        // under ZeRO-1: re-size the node-id scratch for the shrunken
+        // under ZeRO-1/2: re-size the node-id scratch for the shrunken
         // group (a rebuild-time allocation, not a warm-step one).
         let n_mat = self.matrix_idx.len();
         self.slab_stride = self
             .matrix_idx
             .iter()
             .map(|&i| {
-                if zero1 {
+                if sliced {
                     mesh.dp
                 } else {
                     self.metas[i].shape[0].min(4).max(1)
@@ -1998,7 +2325,7 @@ impl Optimizer for DistMuon {
     }
 
     /// Fault-tolerant step. On `Err`, parameters, momentum (replicated
-    /// shards or ZeRO-1 slices), AdamW moments and the step counter are
+    /// shards or ZeRO-1/2 slices), AdamW moments and the step counter are
     /// bit-identical to their pre-call values: every fallible phase reads
     /// committed state and writes staging arenas only; the commit
     /// (swap + apply) is infallible and runs after the last fallible
@@ -2028,7 +2355,7 @@ impl Optimizer for DistMuon {
             self.cfg.period.is_full_step(t_next - 1) || self.pending_makeup;
         let tp_before = self.tp_comm.stats().total_bytes();
 
-        let zero1 = self.sharding == StateSharding::Zero1;
+        let sliced = self.sharding.is_sliced();
 
         // Transport-level faults (--fault-drop-rank / --fault-slow-link)
         // key off the same 1-based attempt space as the panic and
@@ -2067,7 +2394,7 @@ impl Optimizer for DistMuon {
                     // accumulators are complete — the same
                     // precondition the barrier escalate runs under.
                     self.escalations += 1;
-                    let use_acc = self.mesh.dp > 1 || zero1;
+                    let use_acc = self.mesh.dp > 1 || sliced;
                     let acc_opt = if use_acc {
                         Some(std::mem::take(&mut self.dp_acc))
                     } else {
@@ -2113,10 +2440,10 @@ impl Optimizer for DistMuon {
             // A degraded attempt falls back to the raw local
             // gradients; in the simulated cluster every DP rank holds
             // the same `grads`, so skipping the mean is bit-identical
-            // to a completed sync. ZeRO-1 cannot degrade (its momentum
-            // state lives in the DP phase), so the policy gate above
-            // requires replicated sharding.
-            let use_acc = (self.mesh.dp > 1 || zero1) && !degraded;
+            // to a completed sync. Sliced modes (ZeRO-1/2) cannot
+            // degrade (their momentum state lives in the DP phase), so
+            // the policy gate above requires replicated sharding.
+            let use_acc = (self.mesh.dp > 1 || sliced) && !degraded;
             let run_full = full && !degraded;
 
             // What the TP phases consume: mean gradients (replicated),
@@ -2170,7 +2497,7 @@ impl Optimizer for DistMuon {
         // recurrence); then params and AdamW advance. This is the
         // step-atomicity boundary.
         std::mem::swap(&mut self.rank_momenta, &mut self.rank_momenta_next);
-        if zero1 {
+        if sliced {
             std::mem::swap(&mut self.dp_momenta, &mut self.dp_momenta_next);
         }
         self.t = t_next;
@@ -2189,7 +2516,7 @@ impl Optimizer for DistMuon {
         } else {
             lr * self.cfg.eta_block_ratio
         };
-        let use_acc = (self.mesh.dp > 1 || zero1) && !degraded;
+        let use_acc = (self.mesh.dp > 1 || sliced) && !degraded;
         let synced: &[Tensor] =
             if use_acc { &self.dp_acc[0] } else { grads };
 
@@ -2236,8 +2563,8 @@ impl Optimizer for DistMuon {
                         &self.rank_momenta[b][ord]
                     });
                 }
-                StateSharding::Zero1 => {
-                    // DP row slices are authoritative under ZeRO-1.
+                StateSharding::Zero1 | StateSharding::Zero2 => {
+                    // DP row slices are authoritative under ZeRO-1/2.
                     for r in 0..self.mesh.dp {
                         write_row_slice(
                             &mut m_full,
@@ -2295,7 +2622,7 @@ impl Optimizer for DistMuon {
                     &mut self.rank_momenta[j][ord],
                 );
             }
-            if self.sharding == StateSharding::Zero1 {
+            if self.sharding.is_sliced() {
                 for r in 0..self.mesh.dp {
                     row_slice_into(
                         m_full,
@@ -2332,6 +2659,7 @@ impl Optimizer for DistMuon {
         let sharding = match self.sharding {
             StateSharding::Replicated => "",
             StateSharding::Zero1 => ",zero1",
+            StateSharding::Zero2 => ",zero2",
         };
         format!(
             "Dist{base}[dp={},tp={}{}]",
@@ -2357,6 +2685,13 @@ impl Optimizer for DistMuon {
         ));
         out.push_str("DP group (gradient sync):\n");
         out.push_str(&dp.summary());
+        for (g, c) in self.dp_groups.iter().enumerate() {
+            // Grouped topology: the DP sync of a TP-sharded matrix is
+            // charged per shard group — each group moves only its
+            // block's bytes, not the full matrix.
+            out.push_str(&format!("DP group[shard {g}] (grouped):\n"));
+            out.push_str(&c.stats().summary());
+        }
         out.push_str("TP group (optimizer traffic):\n");
         out.push_str(&tp.summary());
         // Overlap prediction from the measured split: C = DP-sync wall

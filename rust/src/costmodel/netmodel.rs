@@ -95,7 +95,32 @@ impl NetModel {
                     dp,
                 )
             }
+            // ZeRO-2: the gather round disappears entirely — the TP
+            // phase consumes the reduce-scattered slices in place, so
+            // the sync is the reduce-scatter alone: (n-1) steps and
+            // s(n-1)/n wire, strictly half the ring all-reduce.
+            StateSharding::Zero2 => self.collective_time(
+                CollectiveKind::ReduceScatter,
+                payload_bytes,
+                dp,
+            ),
         }
+    }
+
+    /// [`NetModel::grad_sync_time`] under the grouped
+    /// (dp-groups-per-shard) topology: each TP block's DP sub-group
+    /// syncs only that block's rows, so with `tp` equal shards the
+    /// per-group payload is `payload_bytes / tp` and the groups run
+    /// concurrently on disjoint links — predicted wall-clock is one
+    /// group's time, exactly the full-replica time at `1/tp` payload.
+    pub fn grad_sync_time_grouped(
+        &self,
+        mode: StateSharding,
+        payload_bytes: usize,
+        dp: usize,
+        tp: usize,
+    ) -> f64 {
+        self.grad_sync_time(mode, payload_bytes / tp.max(1), dp)
     }
 }
 
@@ -185,6 +210,12 @@ impl NetModel {
 ///   every `dp ≥ 2` with the gap exactly the `s/dp` of reduced gradient
 ///   the rank no longer ingests — while the per-rank momentum footprint
 ///   shrinks as `1/dp`.
+/// * `Zero2` (reduce-scatter only): the all-gather disappears — the TP
+///   phase consumes the owned slice in place — leaving the ring
+///   exchange of the `dp-1` slice contributions the rank does not keep:
+///   `s·(dp-1)/dp`. The gap to ZeRO-1 is exactly the `s` of gathered
+///   momentum the rank no longer re-ingests, so ZeRO-2 is below half
+///   the replicated all-reduce at every `dp ≥ 2`.
 pub fn grad_sync_bytes_per_rank(
     mode: StateSharding,
     payload_bytes: usize,
@@ -198,7 +229,22 @@ pub fn grad_sync_bytes_per_rank(
     match mode {
         StateSharding::Replicated => 2.0 * s,
         StateSharding::Zero1 => s * (1.0 / d + 2.0 * (d - 1.0) / d),
+        StateSharding::Zero2 => s * (d - 1.0) / d,
     }
+}
+
+/// [`grad_sync_bytes_per_rank`] under the grouped (dp-groups-per-shard)
+/// topology: a rank participates in exactly one TP block's DP sub-group
+/// and syncs only that block's `payload_bytes / tp` rows — per-rank
+/// bytes are exactly the full-replica figure divided by the shard
+/// count, in every sharding mode.
+pub fn grad_sync_bytes_per_rank_grouped(
+    mode: StateSharding,
+    payload_bytes: usize,
+    dp: usize,
+    tp: usize,
+) -> f64 {
+    grad_sync_bytes_per_rank(mode, payload_bytes / tp.max(1), dp)
 }
 
 #[cfg(test)]
@@ -264,6 +310,87 @@ mod tests {
         // dp=1: nothing moves in either mode.
         for mode in [StateSharding::Replicated, StateSharding::Zero1] {
             assert_eq!(grad_sync_bytes_per_rank(mode, s, 1), 0.0);
+        }
+    }
+
+    #[test]
+    fn zero2_gap_to_zero1_is_exactly_the_gather() {
+        // ZeRO-2 drops the all-gather round: per-rank bytes fall from
+        // s(2dp-1)/dp to s(dp-1)/dp — the gap is exactly s (the full
+        // gathered momentum the rank no longer re-ingests), at every
+        // dp >= 2 and payload size.
+        for s in [1usize << 10, 1 << 20, 3 * 1024 * 1024] {
+            for dp in [2, 4, 8, 64] {
+                let z1 =
+                    grad_sync_bytes_per_rank(StateSharding::Zero1, s, dp);
+                let z2 =
+                    grad_sync_bytes_per_rank(StateSharding::Zero2, s, dp);
+                assert!(
+                    (z1 - z2 - s as f64).abs() < 1e-6,
+                    "dp={dp} s={s}: z1 {z1} - z2 {z2} != s"
+                );
+                let want = s as f64 * (dp as f64 - 1.0) / dp as f64;
+                assert!((z2 - want).abs() < 1e-6, "dp={dp}: {z2} vs {want}");
+                // Strictly below half the replicated all-reduce.
+                let ar = grad_sync_bytes_per_rank(
+                    StateSharding::Replicated,
+                    s,
+                    dp,
+                );
+                assert!(z2 < ar / 2.0, "dp={dp}: {z2} !< {ar}/2");
+            }
+            assert_eq!(
+                grad_sync_bytes_per_rank(StateSharding::Zero2, s, 1),
+                0.0
+            );
+        }
+    }
+
+    #[test]
+    fn zero2_sync_time_is_half_the_ring() {
+        // RS-only: exactly half the ring all-reduce's steps and wire.
+        let m = NetModel::ib_hdr();
+        for dp in [2, 4, 8] {
+            let t_ar =
+                m.grad_sync_time(StateSharding::Replicated, 1 << 24, dp);
+            let t_z2 = m.grad_sync_time(StateSharding::Zero2, 1 << 24, dp);
+            assert!(
+                (t_ar - 2.0 * t_z2).abs() < 1e-12 * t_ar.max(1.0),
+                "dp={dp}: {t_ar} vs 2*{t_z2}"
+            );
+        }
+    }
+
+    #[test]
+    fn grouped_topology_divides_by_shard_count() {
+        // Per-TP-group DP sync charges exactly 1/tp of the full-replica
+        // figure — bytes and predicted time — in every sharding mode.
+        let m = NetModel::ib_hdr();
+        let s = 1 << 24;
+        for mode in [
+            StateSharding::Replicated,
+            StateSharding::Zero1,
+            StateSharding::Zero2,
+        ] {
+            for tp in [1, 2, 4] {
+                for dp in [2, 8] {
+                    let full = grad_sync_bytes_per_rank(mode, s, dp);
+                    let grouped =
+                        grad_sync_bytes_per_rank_grouped(mode, s, dp, tp);
+                    assert!(
+                        (grouped - full / tp as f64).abs() < 1e-6,
+                        "{mode:?} tp={tp} dp={dp}: {grouped} vs {full}/{tp}"
+                    );
+                    let tf = m.grad_sync_time(mode, s, dp);
+                    let tg = m.grad_sync_time_grouped(mode, s, dp, tp);
+                    let tw = m.grad_sync_time(mode, s / tp, dp);
+                    assert!(
+                        (tg - tw).abs() < 1e-15,
+                        "{mode:?}: {tg} vs {tw}"
+                    );
+                    assert!(tg <= tf, "{mode:?}: grouped {tg} > full {tf}");
+                }
+            }
         }
     }
 

@@ -37,7 +37,12 @@ use muonbp::utils::rng::Rng;
 const USAGE: &str = "usage: muonbp <train|throughput|info|dist-smoke> [--key value ...]
   train options: --model tiny|bench|e2e  --optimizer adamw|muon|blockmuon|muonbp|dion
                  --steps N --lr F --period P --dp N --tp N --distributed
-                 --state-sharding replicated|zero1 (ZeRO-1 momentum rows)
+                 --state-sharding replicated|zero1|zero2 (momentum rows:
+                   zero1 = slices + gather, zero2 = slices end-to-end,
+                   reduce-scatter only; zero2 works over tcp)
+                 --topology full-replica|grouped (grouped = one DP
+                   sub-group per TP shard, shard-sized sync charges;
+                   requires --overlap on and --transport local)
                  --overlap on|off (DAG executor overlapping collectives
                    and compute vs phased barrier schedule; default on,
                    env MUONBP_OVERLAP=0 flips it; tcp ranks must agree)
@@ -85,6 +90,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         None => RunConfig::default(),
     };
     cfg.apply_args(args)?;
+    cfg.validate()?;
 
     let runtime = Arc::new(Runtime::open_default()?);
     let entry = runtime.manifest.config(&cfg.model)?.clone();
@@ -119,6 +125,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         let mut b = DistMuonBuilder::new(Mesh::new(cfg.dp, cfg.tp)?, period)
             .layout(cfg.layout)
             .state_sharding(cfg.state_sharding)
+            .topology(cfg.topology)
             .ns_engine(ns)
             .fault_plan(cfg.fault)
             .cfg(move |c| {
@@ -136,14 +143,15 @@ fn cmd_train(args: &Args) -> Result<()> {
         }
         Box::new(b.build(&metas))
     } else {
-        // Single-process path: ZeRO-1 shards optimizer state across the
-        // DP group, which only exists under --distributed — accepting
-        // the flag silently here would misreport the run.
-        if cfg.state_sharding == StateSharding::Zero1 {
+        // Single-process path: the sliced modes shard optimizer state
+        // across the DP group, which only exists under --distributed —
+        // accepting the flag silently here would misreport the run.
+        if cfg.state_sharding != StateSharding::Replicated {
             eprintln!(
-                "warning: --state-sharding zero1 applies to the \
+                "warning: --state-sharding {} applies to the \
                  distributed coordinator; this single-process run \
-                 ignores it (add --distributed)"
+                 ignores it (add --distributed)",
+                cfg.state_sharding.name()
             );
         }
         // Muon-family runs must honor --period / --layout /
@@ -263,6 +271,7 @@ fn cmd_dist_smoke(args: &Args) -> Result<()> {
     cfg.steps = 6;
     cfg.period = 2;
     cfg.apply_args(args)?;
+    cfg.validate()?;
 
     let metas = vec![
         ParamMeta::new("w1", &[8, 16], ParamKind::Matrix),
@@ -292,6 +301,7 @@ fn cmd_dist_smoke(args: &Args) -> Result<()> {
         DistMuonBuilder::new(Mesh::new(cfg.dp, cfg.tp)?, Period::Every(cfg.period))
             .layout(cfg.layout)
             .state_sharding(cfg.state_sharding)
+            .topology(cfg.topology)
             .fault_plan(cfg.fault)
             .cfg(move |c| {
                 c.eta_block_ratio = eta_ratio;

@@ -76,6 +76,16 @@ pub enum StateSharding {
     /// *bit-identical* to the replicated one — only residency and the
     /// collective schedule change.
     Zero1,
+    /// ZeRO-2: gradient *and* momentum row-slices end-to-end. Like
+    /// `Zero1`, each DP rank owns its `1/dp` row-slice of every momentum
+    /// matrix, but the gradient sync stops at the reduce-scatter — no
+    /// rank stages a full synced matrix, and no all-gather of the
+    /// updated momentum runs; the TP phase assembles each block directly
+    /// from the slice-resident accumulators it intersects. Same math on
+    /// the same disjoint rows, so trajectories stay *bit-identical* to
+    /// `Zero1` and `Replicated`; what changes is residency (grad slices
+    /// too) and per-rank wire bytes (`s·(dp-1)/dp`, reduce-scatter only).
+    Zero2,
 }
 
 impl StateSharding {
@@ -83,8 +93,10 @@ impl StateSharding {
         Ok(match s {
             "replicated" => StateSharding::Replicated,
             "zero1" => StateSharding::Zero1,
+            "zero2" => StateSharding::Zero2,
             other => bail!(
-                "unknown state sharding '{other}' (want replicated|zero1)"
+                "unknown state sharding '{other}' (want \
+                 replicated|zero1|zero2)"
             ),
         })
     }
@@ -93,6 +105,50 @@ impl StateSharding {
         match self {
             StateSharding::Replicated => "replicated",
             StateSharding::Zero1 => "zero1",
+            StateSharding::Zero2 => "zero2",
+        }
+    }
+
+    /// Does this mode keep momentum as DP row-slices (ZeRO-1/2)?
+    pub fn is_sliced(&self) -> bool {
+        matches!(self, StateSharding::Zero1 | StateSharding::Zero2)
+    }
+}
+
+/// DP communicator topology: how the gradient sync's collectives map
+/// onto the physical mesh. Orthogonal to [`StateSharding`] (who *owns*
+/// which momentum rows) — topology decides which wires those bytes
+/// cross.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Topology {
+    /// One flat DP group; every DP collective moves full-replica
+    /// payloads (the historical accounting).
+    #[default]
+    FullReplica,
+    /// dp-groups-per-shard: one DP sub-group per TP index. A TP-sharded
+    /// matrix's gradient sync runs inside the group that owns that
+    /// shard, so each collective is charged *shard-sized* bytes
+    /// (`full / tp`), not full-replica payloads. Results are
+    /// bit-identical — grouping reroutes the accounting and the
+    /// sub-communicator plumbing, not the math.
+    GroupedPerShard,
+}
+
+impl Topology {
+    pub fn parse(s: &str) -> Result<Topology> {
+        Ok(match s {
+            "full-replica" => Topology::FullReplica,
+            "grouped" => Topology::GroupedPerShard,
+            other => bail!(
+                "unknown topology '{other}' (want full-replica|grouped)"
+            ),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Topology::FullReplica => "full-replica",
+            Topology::GroupedPerShard => "grouped",
         }
     }
 }
@@ -212,9 +268,32 @@ mod tests {
             StateSharding::parse("zero1").unwrap(),
             StateSharding::Zero1
         );
+        assert_eq!(
+            StateSharding::parse("zero2").unwrap(),
+            StateSharding::Zero2
+        );
         assert!(StateSharding::parse("zero3").is_err());
         assert_eq!(StateSharding::default(), StateSharding::Replicated);
         assert_eq!(StateSharding::Zero1.name(), "zero1");
+        assert_eq!(StateSharding::Zero2.name(), "zero2");
+        assert!(StateSharding::Zero1.is_sliced());
+        assert!(StateSharding::Zero2.is_sliced());
+        assert!(!StateSharding::Replicated.is_sliced());
+    }
+
+    #[test]
+    fn parse_topology() {
+        assert_eq!(
+            Topology::parse("full-replica").unwrap(),
+            Topology::FullReplica
+        );
+        assert_eq!(
+            Topology::parse("grouped").unwrap(),
+            Topology::GroupedPerShard
+        );
+        assert!(Topology::parse("ring").is_err());
+        assert_eq!(Topology::default(), Topology::FullReplica);
+        assert_eq!(Topology::GroupedPerShard.name(), "grouped");
     }
 
     #[test]

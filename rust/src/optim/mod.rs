@@ -17,6 +17,7 @@ pub mod sgdm;
 
 use crate::checkpoint::Snapshot;
 use crate::robust::StepError;
+use crate::shard::GradSource;
 use crate::tensor::Tensor;
 
 pub use adamw::AdamW;
@@ -90,6 +91,21 @@ pub trait Optimizer: Send {
     ) -> Result<(), StepError> {
         self.step(params, grads, lr);
         Ok(())
+    }
+
+    /// [`Optimizer::try_step`] over a [`GradSource`] view instead of a
+    /// bare tensor slice — the ZeRO-2 seam. A shard-native optimizer
+    /// (`DistMuon` under `--state-sharding zero2`) overrides this to
+    /// consume per-rank row-slices without ever staging full gradient
+    /// matrices; everything else inherits this adapter, which hands the
+    /// backing tensors through unchanged (zero-copy, zero-allocation).
+    fn try_step_src(
+        &mut self,
+        params: &mut [Tensor],
+        src: &GradSource<'_>,
+        lr: f64,
+    ) -> Result<(), StepError> {
+        self.try_step(params, src.tensors(), lr)
     }
 
     /// Serialize the optimizer state (momentum etc.) for checkpointing, as

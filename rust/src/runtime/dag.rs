@@ -70,6 +70,28 @@ use crate::runtime::pool::{Pool, WorkerArena};
 /// Sentinel lane id for shared (work-stealable) nodes.
 const NO_LANE: u32 = u32::MAX;
 
+/// Lane that simulated rank `rank` rides when a `world`-rank schedule is
+/// folded onto `n_lanes < world` lanes: round-robin, so lane `L` carries
+/// ranks `{L, L + n_lanes, L + 2·n_lanes, …}`. Round-robin (rather than
+/// contiguous chunks) keeps rank 0 on lane 0 for every lane count, which
+/// the coordinator's "lane 0 charges/times the collective" convention
+/// relies on.
+pub fn lane_of_rank(rank: usize, n_lanes: usize) -> usize {
+    debug_assert!(n_lanes >= 1);
+    rank % n_lanes
+}
+
+/// The full round-robin assignment: `lane_ranks(world, n_lanes)[L]` is
+/// the ordered rank list lane `L` represents. With `n_lanes == world`
+/// every lane carries exactly its own rank — the degenerate case in
+/// which a folded schedule is byte-for-byte the unfolded one.
+pub fn lane_ranks(world: usize, n_lanes: usize) -> Vec<Vec<usize>> {
+    debug_assert!(n_lanes >= 1 && n_lanes <= world);
+    (0..n_lanes)
+        .map(|l| (l..world).step_by(n_lanes).collect())
+        .collect()
+}
+
 /// How a node failed; handed to the `on_fail` hook so the caller can map
 /// the node kind to a structured error (e.g. `StepError::RankPanicked`
 /// with the schedule phase the node belongs to).
@@ -569,6 +591,32 @@ mod tests {
             },
         );
         assert_eq!(*failures.lock().unwrap(), vec![(7u8, 41i32)]);
+    }
+
+    /// Round-robin lane folding: every rank lands on exactly one lane,
+    /// rank 0 always on lane 0, and `n_lanes == world` degenerates to
+    /// the identity assignment.
+    #[test]
+    fn lane_folding_is_round_robin() {
+        assert_eq!(lane_ranks(4, 4), vec![vec![0], vec![1], vec![2], vec![3]]);
+        assert_eq!(lane_ranks(4, 2), vec![vec![0, 2], vec![1, 3]]);
+        assert_eq!(lane_ranks(5, 2), vec![vec![0, 2, 4], vec![1, 3]]);
+        assert_eq!(lane_ranks(3, 1), vec![vec![0, 1, 2]]);
+        for world in 1..=8 {
+            for n_lanes in 1..=world {
+                let tbl = lane_ranks(world, n_lanes);
+                let mut seen = vec![false; world];
+                for (l, ranks) in tbl.iter().enumerate() {
+                    for &r in ranks {
+                        assert_eq!(lane_of_rank(r, n_lanes), l);
+                        assert!(!seen[r], "rank {r} on two lanes");
+                        seen[r] = true;
+                    }
+                }
+                assert!(seen.into_iter().all(|s| s), "rank dropped");
+                assert_eq!(tbl[0][0], 0, "rank 0 must ride lane 0");
+            }
+        }
     }
 
     /// Rebuilding a smaller graph into the same dag reuses slots; both

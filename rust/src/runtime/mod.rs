@@ -20,7 +20,7 @@ use xla::{ElementType, Literal, PjRtClient, PjRtLoadedExecutable};
 use crate::tensor::Tensor;
 
 pub use artifact::{ConfigEntry, Manifest, ParamEntry};
-pub use dag::{DagFailure, Severity, TaskDag};
+pub use dag::{lane_of_rank, lane_ranks, DagFailure, Severity, TaskDag};
 pub use ns_engine::NsEngine;
 pub use pool::{Pool, WorkerArena};
 

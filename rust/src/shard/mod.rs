@@ -222,6 +222,96 @@ pub fn shard_rows_into(
     Some((lo - r0, hi - r0))
 }
 
+/// Slice-resident sibling of [`shard_rows_into`]: copy the intersection
+/// of a row slice (full-matrix rows `[sr0, sr0 + slice.m())`, all `n`
+/// columns — e.g. a ZeRO-2 reduce-scattered accumulator) with block
+/// `idx` of the full matrix into the matching rows of the preallocated
+/// block tensor. The ZeRO-2 data path assembles TP blocks directly from
+/// the DP ranks' slice arenas — no full synced matrix ever exists — and
+/// iterating a row partition's slices performs the exact memcpys of one
+/// whole-block [`shard_into`] on the assembled matrix (bit-identity).
+/// Returns the block-local row range written, or `None` when the slice
+/// misses the block entirely.
+pub fn shard_rows_from_slice(
+    slice: &Tensor,
+    sr0: usize,
+    spec: &ShardSpec,
+    idx: usize,
+    out: &mut Tensor,
+) -> Option<(usize, usize)> {
+    assert_eq!(slice.n(), spec.n, "slice/spec column mismatch");
+    let (sr1, n) = (sr0 + slice.m(), spec.n);
+    assert!(sr1 <= spec.m, "slice rows out of range");
+    let ((r0, r1), (c0, c1)) = spec.ranges(idx);
+    assert_eq!(
+        (out.m(), out.n()),
+        (r1 - r0, c1 - c0),
+        "shard_rows_from_slice shape"
+    );
+    let lo = sr0.max(r0);
+    let hi = sr1.min(r1);
+    if lo >= hi {
+        return None;
+    }
+    let w = c1 - c0;
+    let src = slice.data();
+    let dst = out.data_mut();
+    for i in lo..hi {
+        let si = i - sr0;
+        let bi = i - r0;
+        dst[bi * w..(bi + 1) * w]
+            .copy_from_slice(&src[si * n + c0..si * n + c1]);
+    }
+    Some((lo - r0, hi - r0))
+}
+
+// -- GradSource --------------------------------------------------------------
+
+/// The trainer-to-coordinator gradient seam. A `GradSource` is a view
+/// over the step's gradients that the optimizer consumes either as full
+/// tensors (replicated/ZeRO-1) or as row-slab views (the ZeRO-2 data
+/// path, where a DP rank's collectives only ever read its `1/dp`
+/// row-slice of each matrix). Borrowed, never owning: building one
+/// allocates nothing, so the trainer's hot loop stays zero-alloc.
+pub struct GradSource<'a> {
+    grads: &'a [Tensor],
+}
+
+impl<'a> GradSource<'a> {
+    pub fn new(grads: &'a [Tensor]) -> GradSource<'a> {
+        GradSource { grads }
+    }
+
+    /// The underlying gradient tensors, for optimizers that consume
+    /// whole matrices.
+    pub fn tensors(&self) -> &'a [Tensor] {
+        self.grads
+    }
+
+    pub fn len(&self) -> usize {
+        self.grads.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.grads.is_empty()
+    }
+
+    /// Full gradient tensor for param `i`.
+    pub fn full(&self, i: usize) -> &'a Tensor {
+        &self.grads[i]
+    }
+
+    /// Rows `[r0, r1)` of param `i` as a contiguous element slice (row
+    /// slices of a row-major tensor are contiguous) — what a ZeRO-2
+    /// rank's reduce-scatter deposit reads.
+    pub fn rows(&self, i: usize, r0: usize, r1: usize) -> &'a [f32] {
+        let t = &self.grads[i];
+        let n = t.n();
+        assert!(r0 <= r1 && r1 <= t.m(), "GradSource::rows out of range");
+        &t.data()[r0 * n..r1 * n]
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -395,5 +485,61 @@ mod tests {
         let mut b = Tensor::zeros(&[4, 4]);
         assert_eq!(shard_rows_into(&t, &spec, 1, 0, 4, &mut b), None);
         assert_eq!(shard_rows_into(&t, &spec, 0, 4, 8, &mut b), None);
+    }
+
+    #[test]
+    fn shard_rows_from_slice_matches_assembled_matrix() {
+        // Assembling a block from a DP row-slice partition must equal
+        // shard_into on the full matrix, for every block and every dp
+        // degree (including clamped dp > m with empty slices).
+        let mut rng = Rng::new(31);
+        for (layout, tp) in [
+            (Layout::TpRow, 4),
+            (Layout::TpColumn, 3),
+            (Layout::TpGrid { rows: 2, cols: 2 }, 4),
+        ] {
+            let (m, n) = (9, 6);
+            let t = Tensor::randn(&[m, n], 1.0, &mut rng);
+            let spec = ShardSpec::new(layout, tp, m, n);
+            for dp in [1, 2, 4, 12] {
+                for idx in 0..spec.num_blocks() {
+                    let (bm, bn) = spec.block_shape(idx);
+                    let mut whole = Tensor::zeros(&[bm, bn]);
+                    shard_into(&t, &spec, idx, &mut whole);
+                    let mut tiled = Tensor::zeros(&[bm, bn]);
+                    let mut covered = 0;
+                    for r in 0..dp {
+                        let (s0, _) = row_slice_range(m, dp, r);
+                        let mut slice = row_slice_zeros(m, n, dp, r);
+                        row_slice_into(&t, dp, r, &mut slice);
+                        if let Some((b0, b1)) = shard_rows_from_slice(
+                            &slice, s0, &spec, idx, &mut tiled,
+                        ) {
+                            assert!(b0 < b1 && b1 <= bm);
+                            covered += b1 - b0;
+                        }
+                    }
+                    assert_eq!(covered, bm, "{layout:?} dp={dp} blk {idx}");
+                    assert_eq!(tiled, whole, "{layout:?} dp={dp} blk {idx}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn grad_source_views_match_tensors() {
+        let mut rng = Rng::new(41);
+        let grads =
+            vec![Tensor::randn(&[6, 4], 1.0, &mut rng), Tensor::zeros(&[3])];
+        let src = GradSource::new(&grads);
+        assert_eq!(src.len(), 2);
+        assert!(!src.is_empty());
+        assert_eq!(src.full(0), &grads[0]);
+        assert_eq!(src.tensors().len(), 2);
+        // Row views are exactly the matching contiguous element range.
+        let (r0, r1) = row_slice_range(6, 2, 1);
+        assert_eq!(src.rows(0, r0, r1), &grads[0].data()[r0 * 4..r1 * 4]);
+        assert_eq!(src.rows(0, 0, 6), grads[0].data());
+        assert!(src.rows(0, 2, 2).is_empty());
     }
 }

@@ -263,8 +263,12 @@ impl Trainer {
                 clip_global_norm(&mut adam_grads, cfg.grad_clip);
             }
             let lr = cfg.lr * cfg.schedule.at(step, cfg.steps);
+            // The ZeRO-2 seam: the trainer hands the optimizer a view,
+            // not bare tensors — a shard-native optimizer consumes only
+            // the row-slices each DP rank owns.
+            let src = crate::shard::GradSource::new(&grads);
             if let Err(e) =
-                opt.try_step(&mut self.state.params, &grads, lr)
+                opt.try_step_src(&mut self.state.params, &src, lr)
             {
                 // try_step's atomicity contract: params/momentum are
                 // untouched here, so skipping is safe.

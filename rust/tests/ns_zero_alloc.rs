@@ -249,4 +249,62 @@ fn hot_paths_are_alloc_free_after_warmup() {
         after - before
     );
     assert!(bzparams[0].frobenius() > 0.0);
+
+    // ---- Phase 7: ZeRO-2 under the DAG schedule. The shard-native path
+    // drops the gather entirely: reduce_scatter into preallocated
+    // per-rank slices, slice-local momentum update, and the TP phase
+    // reads block inputs straight out of the slice accumulators
+    // (`shard_rows_from_slice` into the staged block buffers) — no full
+    // matrix is ever staged. At dp=2 with >= 2 compute workers the lane
+    // count equals dp, so every merged `_lanes` collective delegates to
+    // its single-rank twin and the whole warm step must allocate
+    // NOTHING, same bar as zero1.
+    let mut z2dist =
+        DistMuonBuilder::new(Mesh::new(2, 2).unwrap(), Period::Every(2))
+            .state_sharding(StateSharding::Zero2)
+            .build(&dmetas);
+    let mut z2params =
+        vec![Tensor::zeros(&[16, 32]), Tensor::zeros(&[32, 16])];
+    for _ in 0..4 {
+        z2dist.step(&mut z2params, &zgrads, 0.01); // warm two full periods
+    }
+    let before = allocs();
+    for _ in 0..4 {
+        z2dist.step(&mut z2params, &zgrads, 0.01); // full, block, full, block
+    }
+    let after = allocs();
+    assert_eq!(
+        after - before,
+        0,
+        "Zero2 DistMuon::step allocated {} time(s) across 4 warm steps",
+        after - before
+    );
+    assert!(z2params[0].frobenius() > 0.0);
+
+    // ---- Phase 8: barrier schedule x ZeRO-2 — the last
+    // schedule/sharding corner (pooled reduce_scatter_mean_into, no
+    // all-gather leg at all).
+    let mut bz2dist =
+        DistMuonBuilder::new(Mesh::new(2, 2).unwrap(), Period::Every(2))
+            .state_sharding(StateSharding::Zero2)
+            .overlap(false)
+            .build(&dmetas);
+    let mut bz2params =
+        vec![Tensor::zeros(&[16, 32]), Tensor::zeros(&[32, 16])];
+    for _ in 0..4 {
+        bz2dist.step(&mut bz2params, &zgrads, 0.01);
+    }
+    let before = allocs();
+    for _ in 0..4 {
+        bz2dist.step(&mut bz2params, &zgrads, 0.01);
+    }
+    let after = allocs();
+    assert_eq!(
+        after - before,
+        0,
+        "barrier Zero2 DistMuon::step allocated {} time(s) across 4 warm \
+         steps",
+        after - before
+    );
+    assert!(bz2params[0].frobenius() > 0.0);
 }
