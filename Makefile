@@ -1,6 +1,6 @@
 # Convenience targets; tier-1 verify is `make verify` (== ROADMAP.md).
 
-.PHONY: build test verify ci ci-env perf pool-stress zero1 zero2 fault transport overlap soak artifacts clean
+.PHONY: build test verify ci ci-env perf pool-stress zero1 zero2 fault transport overlap sim sweep soak artifacts clean
 
 build:
 	cargo build --release
@@ -73,6 +73,18 @@ transport:
 # (see ci.sh tier-1).
 overlap:
 	RUST_TEST_THREADS=16 cargo test --test overlap_equivalence -- --nocapture
+
+# Simulator equivalence suite: sim vs closed-form agreement, bit
+# reproducibility, fault monotonicity, calibration round-trip (see
+# ci.sh tier-1).
+sim:
+	RUST_TEST_THREADS=16 cargo test --test sim_equivalence -- --nocapture
+
+# Full tp x dp x period x sharding projection grid through the
+# discrete-event simulator -> results/SIM_projection.json. The dp=1024
+# cells replay millions of ring transfers; release mode is mandatory.
+sweep:
+	cargo run --release -- sim --sim-sweep --sim-out results/SIM_projection.json
 
 # Randomized fault soak: repeated dist-smoke runs under degrade-block
 # with a randomly seeded slow-link fault. Every iteration prints its

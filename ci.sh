@@ -129,6 +129,15 @@ step "tier-1: transport-equivalence suite (local vs tcp, multi-process)"
 # wedged rendezvous shows up here as a 124, not an eaten CI budget.
 with_timeout 600 cargo test -q --test transport_equivalence || exit 1
 
+step "tier-1: simulator equivalence suite (sim vs closed-form)"
+# The discrete-event simulator's external contract: contention-free ring
+# collectives and StepSchedule sync makespans match the alpha-beta closed
+# form within 1e-3 across sharding x topology, identical inputs give
+# bit-identical SimResults (full event log), injected slow links and
+# stragglers increase step time strictly and deterministically, and a
+# comm-report calibration round-trips through the JSON serialization.
+with_timeout 600 env RUST_TEST_THREADS=16 cargo test -q --test sim_equivalence || exit 1
+
 step "tier-1: cargo bench --no-run (benches must keep compiling)"
 with_timeout 1800 cargo bench --no-run || exit 1
 

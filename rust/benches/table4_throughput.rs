@@ -12,9 +12,9 @@ use muonbp::bench_util::banner;
 use muonbp::comm::CollectiveKind;
 use muonbp::coordinator::DistMuonBuilder;
 use muonbp::costmodel::throughput::{
-    step_breakdown, throughput_tflops, HwPreset, Method,
+    step_breakdown, step_breakdown_with, throughput_tflops, HwPreset, Method,
 };
-use muonbp::costmodel::ModelDims;
+use muonbp::costmodel::{ClosedForm, ModelDims, Simulated};
 use muonbp::mesh::Mesh;
 use muonbp::metrics::render_table;
 use muonbp::optim::muon::Period;
@@ -79,6 +79,25 @@ fn main() {
             b.compute * 1e3,
             b.opt_comm * 1e3,
             b.orth_compute * 1e3
+        );
+    }
+
+    // Cost-model cross-check: the same breakdown priced twice through the
+    // CostModel trait — closed-form α–β vs the discrete-event simulator.
+    // The two pricers legitimately differ on gather/scatter latency
+    // charging, so this prints both columns rather than asserting equality.
+    let cf = ClosedForm(hw.tp_net);
+    let sim = Simulated::uniform(hw.tp_net);
+    println!("\nopt_comm per step, closed-form vs simulated (Muon):");
+    for d in &dims {
+        let c = step_breakdown_with(d, Method::Muon, &hw, &cf);
+        let s = step_breakdown_with(d, Method::Muon, &hw, &sim);
+        println!(
+            "{:>5}: closed-form {:.2} ms   sim {:.2} ms   ratio {:.3}",
+            d.name,
+            c.opt_comm * 1e3,
+            s.opt_comm * 1e3,
+            s.opt_comm / c.opt_comm.max(1e-12)
         );
     }
 

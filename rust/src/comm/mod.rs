@@ -27,14 +27,17 @@ use std::sync::atomic::{
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
+use crate::costmodel::api::{ClosedForm, CostModel};
 use crate::costmodel::netmodel::NetModel;
 use crate::robust::StepError;
 use crate::tensor::Tensor;
 
+pub mod report;
 pub mod stats;
 pub mod tcp;
 pub mod transport;
 
+pub use report::{CommEntry, CommReport, GroupReport, OverlapReport};
 pub use stats::{CollectiveKind, CommStats};
 pub use tcp::{TcpCfg, TcpTransport};
 pub use transport::{
@@ -215,7 +218,11 @@ pub struct Communicator {
     n: usize,
     tensors: Arc<Inner<Tensor>>,
     stats: Arc<Mutex<CommStats>>,
-    net: NetModel,
+    /// Collective pricing: the α–β closed form by default
+    /// ([`ClosedForm`]), or the discrete-event simulator when built via
+    /// [`Communicator::with_cost_model`] — every `charge*` site goes
+    /// through this trait object.
+    cost: Arc<dyn CostModel>,
     /// The wire: pointer deposits in-process ([`LocalTransport`]) or a
     /// socket mesh across processes ([`tcp::TcpTransport`]).
     transport: Arc<dyn Transport>,
@@ -234,7 +241,7 @@ impl Clone for Communicator {
             n: self.n,
             tensors: Arc::clone(&self.tensors),
             stats: Arc::clone(&self.stats),
-            net: self.net,
+            cost: Arc::clone(&self.cost),
             transport: Arc::clone(&self.transport),
             phase_tag: Arc::clone(&self.phase_tag),
             deadline_ms: Arc::clone(&self.deadline_ms),
@@ -256,6 +263,16 @@ impl Communicator {
         transport: Arc<dyn Transport>,
         net: NetModel,
     ) -> Communicator {
+        Communicator::with_cost_model(transport, Arc::new(ClosedForm(net)))
+    }
+
+    /// A communicator with an explicit collective pricer — e.g.
+    /// [`Simulated`](crate::costmodel::sim::Simulated) to charge
+    /// event-level times instead of the α–β closed form.
+    pub fn with_cost_model(
+        transport: Arc<dyn Transport>,
+        cost: Arc<dyn CostModel>,
+    ) -> Communicator {
         let n = transport.world();
         assert!(n >= 1);
         Communicator {
@@ -271,7 +288,7 @@ impl Communicator {
                 cond: Condvar::new(),
             }),
             stats: Arc::new(Mutex::new(CommStats::default())),
-            net,
+            cost,
             transport,
             phase_tag: Arc::new(AtomicU8::new(0)),
             deadline_ms: Arc::new(AtomicU64::new(0)),
@@ -336,7 +353,7 @@ impl Communicator {
     fn charge(&self, rank: usize, kind: CollectiveKind, payload_bytes: usize) {
         // Account once per collective (rank 0 reports for the group).
         if rank == 0 {
-            let time = self.net.collective_time(kind, payload_bytes, self.n);
+            let time = self.cost.collective_time(kind, payload_bytes, self.n);
             self.stats.lock().unwrap().record(kind, payload_bytes, time);
         }
     }
@@ -351,7 +368,7 @@ impl Communicator {
         started: Instant,
     ) {
         if rank == 0 {
-            let sim = self.net.collective_time(kind, payload_bytes, self.n);
+            let sim = self.cost.collective_time(kind, payload_bytes, self.n);
             let wall = started.elapsed().as_secs_f64();
             self.stats
                 .lock()
@@ -420,11 +437,10 @@ impl Communicator {
     /// `group` ids never rendezvous together. The per-collective
     /// deadline value is inherited; the schedule phase tag starts at 0.
     pub fn split(&self, group: usize) -> Communicator {
-        let sub =
-            Communicator::with_transport(
-                Arc::clone(&self.transport).split_group(group),
-                self.net,
-            );
+        let sub = Communicator::with_cost_model(
+            Arc::clone(&self.transport).split_group(group),
+            Arc::clone(&self.cost),
+        );
         sub.deadline_ms
             .store(self.deadline_ms.load(Ordering::Acquire), Ordering::Release);
         sub
@@ -1039,7 +1055,7 @@ impl Communicator {
         payload_bytes: usize,
         wall_secs: f64,
     ) {
-        let sim = self.net.collective_time(kind, payload_bytes, self.n);
+        let sim = self.cost.collective_time(kind, payload_bytes, self.n);
         self.stats
             .lock()
             .unwrap()

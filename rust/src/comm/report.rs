@@ -1,0 +1,348 @@
+//! Structured communication report: the typed replacement for the old
+//! print-only `Optimizer::comm_report()` string.
+//!
+//! [`CommReport`] carries per-group, per-collective-kind entries (calls,
+//! bytes, modeled α–β seconds, measured wall seconds), the mesh/sharding
+//! context, and the overlap model's serial-vs-overlapped prediction.
+//! Its `Display` reproduces the historical text format byte for byte
+//! (the CLI keeps printing it), its JSON round-trips through
+//! `utils/json`, and `muonbp sim --sim-calibrate <file>` consumes the
+//! JSON to fit per-link α–β parameters
+//! ([`calibrate`](crate::costmodel::sim::calibrate)).
+
+use std::fmt;
+
+use crate::comm::stats::{CollectiveKind, CommStats, ALL_KINDS};
+use crate::utils::json::Json;
+
+/// One collective kind's ledger within a group.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CommEntry {
+    pub kind: CollectiveKind,
+    pub calls: u64,
+    pub bytes: u64,
+    /// Modeled α–β seconds accumulated over all calls.
+    pub modeled_secs: f64,
+    /// Measured wall-clock seconds (0 when recorded untimed).
+    pub measured_secs: f64,
+}
+
+/// One communicator group's ledger. `name` is the stable key
+/// (`"dp"`, `"shard N"` for grouped sub-groups, `"tp"`); `ranks` is the
+/// group's world size — calibration needs it to reconstruct ring step
+/// counts.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GroupReport {
+    pub name: String,
+    pub ranks: usize,
+    pub entries: Vec<CommEntry>,
+}
+
+impl GroupReport {
+    /// Snapshot a [`CommStats`] ledger (kinds with zero calls elided,
+    /// matching `CommStats::summary`).
+    pub fn from_stats(
+        name: &str,
+        ranks: usize,
+        stats: &CommStats,
+    ) -> GroupReport {
+        let entries = ALL_KINDS
+            .iter()
+            .filter(|&&k| stats.calls(k) > 0)
+            .map(|&k| CommEntry {
+                kind: k,
+                calls: stats.calls(k),
+                bytes: stats.bytes(k),
+                modeled_secs: stats.sim_time(k),
+                measured_secs: stats.wall_time(k),
+            })
+            .collect();
+        GroupReport { name: name.to_string(), ranks, entries }
+    }
+
+    /// The display heading the old string report used for this group.
+    fn title(&self) -> String {
+        match self.name.as_str() {
+            "dp" => "DP group (gradient sync)".to_string(),
+            "tp" => "TP group (optimizer traffic)".to_string(),
+            other => format!("DP group[{other}] (grouped)"),
+        }
+    }
+
+    /// The `CommStats::summary`-format table for this group's entries.
+    fn summary(&self) -> String {
+        let mut out = String::from(
+            "collective        calls        bytes     sim_time_s    \
+             wall_time_s\n",
+        );
+        for e in &self.entries {
+            out.push_str(&format!(
+                "{:<16} {:>6} {:>12} {:>14.6} {:>14.6}\n",
+                e.kind.name(),
+                e.calls,
+                e.bytes,
+                e.modeled_secs,
+                e.measured_secs
+            ));
+        }
+        out
+    }
+}
+
+/// The overlap cost model's verdict on this run, fed with the measured
+/// comm/compute split.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OverlapReport {
+    /// Measured DP-sync wall seconds (C).
+    pub comm_secs: f64,
+    /// Approximate parallel NS compute seconds (K).
+    pub compute_secs: f64,
+    /// Row-slab granularity the DAG schedule pipelined at.
+    pub slab_stride: usize,
+    /// Predicted serial (barrier) step time, C + K.
+    pub serial_secs: f64,
+    /// Predicted overlapped step time.
+    pub overlapped_secs: f64,
+    /// Pipeline-bubble fraction of the overlapped step.
+    pub bubble_frac: f64,
+}
+
+/// The full structured report [`Optimizer::comm_report`] returns.
+///
+/// [`Optimizer::comm_report`]: crate::optim::Optimizer::comm_report
+#[derive(Debug, Clone, PartialEq)]
+pub struct CommReport {
+    /// Coordinator display name, e.g. `DistMuonBP(P=5)[dp=4,tp=2]`.
+    pub optimizer: String,
+    /// `dag-overlap` or `phased-barrier`.
+    pub schedule: String,
+    pub dp: usize,
+    pub tp: usize,
+    /// `StateSharding::name()` of the run.
+    pub sharding: String,
+    pub groups: Vec<GroupReport>,
+    pub overlap: OverlapReport,
+}
+
+impl CommReport {
+    pub fn to_json(&self) -> Json {
+        let groups = self
+            .groups
+            .iter()
+            .map(|g| {
+                let entries = g
+                    .entries
+                    .iter()
+                    .map(|e| {
+                        Json::obj(vec![
+                            ("kind", Json::str(e.kind.name())),
+                            ("calls", Json::num(e.calls as f64)),
+                            ("bytes", Json::num(e.bytes as f64)),
+                            ("modeled_secs", Json::num(e.modeled_secs)),
+                            ("measured_secs", Json::num(e.measured_secs)),
+                        ])
+                    })
+                    .collect();
+                Json::obj(vec![
+                    ("name", Json::str(&g.name)),
+                    ("ranks", Json::num(g.ranks as f64)),
+                    ("entries", Json::Arr(entries)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("schema", Json::str("muonbp.comm_report.v1")),
+            ("optimizer", Json::str(&self.optimizer)),
+            ("schedule", Json::str(&self.schedule)),
+            ("dp", Json::num(self.dp as f64)),
+            ("tp", Json::num(self.tp as f64)),
+            ("sharding", Json::str(&self.sharding)),
+            ("groups", Json::Arr(groups)),
+            (
+                "overlap",
+                Json::obj(vec![
+                    ("comm_secs", Json::num(self.overlap.comm_secs)),
+                    ("compute_secs", Json::num(self.overlap.compute_secs)),
+                    (
+                        "slab_stride",
+                        Json::num(self.overlap.slab_stride as f64),
+                    ),
+                    ("serial_secs", Json::num(self.overlap.serial_secs)),
+                    (
+                        "overlapped_secs",
+                        Json::num(self.overlap.overlapped_secs),
+                    ),
+                    ("bubble_frac", Json::num(self.overlap.bubble_frac)),
+                ]),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<CommReport> {
+        let kind_by_name = |s: &str| -> anyhow::Result<CollectiveKind> {
+            ALL_KINDS
+                .iter()
+                .copied()
+                .find(|k| k.name() == s)
+                .ok_or_else(|| {
+                    anyhow::anyhow!("comm report: unknown collective '{s}'")
+                })
+        };
+        let mut groups = Vec::new();
+        for g in j.req("groups")?.as_arr()? {
+            let mut entries = Vec::new();
+            for e in g.req("entries")?.as_arr()? {
+                entries.push(CommEntry {
+                    kind: kind_by_name(e.req("kind")?.as_str()?)?,
+                    calls: e.req("calls")?.as_f64()? as u64,
+                    bytes: e.req("bytes")?.as_f64()? as u64,
+                    modeled_secs: e.req("modeled_secs")?.as_f64()?,
+                    measured_secs: e.req("measured_secs")?.as_f64()?,
+                });
+            }
+            groups.push(GroupReport {
+                name: g.req("name")?.as_str()?.to_string(),
+                ranks: g.req("ranks")?.as_usize()?,
+                entries,
+            });
+        }
+        let o = j.req("overlap")?;
+        Ok(CommReport {
+            optimizer: j.req("optimizer")?.as_str()?.to_string(),
+            schedule: j.req("schedule")?.as_str()?.to_string(),
+            dp: j.req("dp")?.as_usize()?,
+            tp: j.req("tp")?.as_usize()?,
+            sharding: j.req("sharding")?.as_str()?.to_string(),
+            groups,
+            overlap: OverlapReport {
+                comm_secs: o.req("comm_secs")?.as_f64()?,
+                compute_secs: o.req("compute_secs")?.as_f64()?,
+                slab_stride: o.req("slab_stride")?.as_usize()?,
+                serial_secs: o.req("serial_secs")?.as_f64()?,
+                overlapped_secs: o.req("overlapped_secs")?.as_f64()?,
+                bubble_frac: o.req("bubble_frac")?.as_f64()?,
+            },
+        })
+    }
+}
+
+impl fmt::Display for CommReport {
+    /// Byte-for-byte the historical string format: header, per-group
+    /// `CommStats::summary` tables, overlap line.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "comm report [{}] (schedule: {})\n",
+            self.optimizer, self.schedule
+        )?;
+        for g in &self.groups {
+            write!(f, "{}:\n{}", g.title(), g.summary())?;
+        }
+        write!(
+            f,
+            "overlap model: serial {:.6}s vs overlapped {:.6}s, bubble \
+             {:.1}% (measured comm {:.6}s, compute {:.6}s, {} \
+             slabs/matrix)\n",
+            self.overlap.serial_secs,
+            self.overlap.overlapped_secs,
+            self.overlap.bubble_frac * 100.0,
+            self.overlap.comm_secs,
+            self.overlap.compute_secs,
+            self.overlap.slab_stride,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> CommReport {
+        let mut dp = CommStats::default();
+        dp.record_timed(CollectiveKind::AllReduce, 1 << 20, 0.004, 0.0031);
+        dp.record_timed(CollectiveKind::AllReduce, 1 << 20, 0.004, 0.0029);
+        dp.record(CollectiveKind::Barrier, 0, 0.0001);
+        let mut tp = CommStats::default();
+        tp.record(CollectiveKind::Gather, 1 << 22, 0.009);
+        tp.record(CollectiveKind::Scatter, 1 << 22, 0.009);
+        CommReport {
+            optimizer: "DistMuonBP(P=5)[dp=4,tp=2]".to_string(),
+            schedule: "dag-overlap".to_string(),
+            dp: 4,
+            tp: 2,
+            sharding: "zero1".to_string(),
+            groups: vec![
+                GroupReport::from_stats("dp", 4, &dp),
+                GroupReport::from_stats("tp", 2, &tp),
+            ],
+            overlap: OverlapReport {
+                comm_secs: 0.006,
+                compute_secs: 0.010,
+                slab_stride: 4,
+                serial_secs: 0.016,
+                overlapped_secs: 0.0115,
+                bubble_frac: 0.1304,
+            },
+        }
+    }
+
+    #[test]
+    fn from_stats_elides_idle_kinds() {
+        let r = sample();
+        let dp = &r.groups[0];
+        assert_eq!(dp.entries.len(), 2); // barrier + all_reduce only
+        let ar = dp
+            .entries
+            .iter()
+            .find(|e| e.kind == CollectiveKind::AllReduce)
+            .unwrap();
+        assert_eq!(ar.calls, 2);
+        assert_eq!(ar.bytes, 2 << 20);
+        assert!((ar.modeled_secs - 0.008).abs() < 1e-12);
+        assert!((ar.measured_secs - 0.006).abs() < 1e-12);
+    }
+
+    #[test]
+    fn display_reproduces_the_legacy_format() {
+        let text = sample().to_string();
+        assert!(text.starts_with(
+            "comm report [DistMuonBP(P=5)[dp=4,tp=2]] (schedule: \
+             dag-overlap)\n"
+        ));
+        assert!(text.contains("DP group (gradient sync):\n"));
+        assert!(text.contains("TP group (optimizer traffic):\n"));
+        assert!(text.contains(
+            "collective        calls        bytes     sim_time_s    \
+             wall_time_s\n"
+        ));
+        assert!(text.contains("all_reduce"));
+        assert!(
+            text.ends_with("slabs/matrix)\n"),
+            "overlap line must close the report"
+        );
+        // One table row, formatted exactly like CommStats::summary.
+        let mut st = CommStats::default();
+        st.record_timed(CollectiveKind::AllReduce, 1 << 20, 0.004, 0.0031);
+        st.record_timed(CollectiveKind::AllReduce, 1 << 20, 0.004, 0.0029);
+        st.record(CollectiveKind::Barrier, 0, 0.0001);
+        assert!(text.contains(&st.summary()));
+    }
+
+    #[test]
+    fn json_round_trips() {
+        let r = sample();
+        let j = r.to_json().to_string_pretty();
+        let back = CommReport::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(back, r);
+    }
+
+    #[test]
+    fn grouped_sub_groups_title_as_shards() {
+        let g = GroupReport {
+            name: "shard 3".to_string(),
+            ranks: 4,
+            entries: Vec::new(),
+        };
+        assert_eq!(g.title(), "DP group[shard 3] (grouped)");
+    }
+}

@@ -77,6 +77,32 @@ pub struct RunConfig {
     /// (`MUONBP_OVERLAP`, overlap on when unset). Over the tcp transport
     /// every rank must resolve to the same value.
     pub overlap: Option<bool>,
+    /// Collective pricer: `closed-form` (α–β formulas) | `sim`
+    /// (discrete-event replay). Selects the [`CostModel`] the distributed
+    /// coordinator charges through and the `muonbp sim` backend.
+    ///
+    /// [`CostModel`]: crate::costmodel::CostModel
+    pub costmodel: String,
+    /// `muonbp sim`: run the tp × dp × period × sharding projection grid
+    /// and write `sim_out` instead of a single-point projection.
+    pub sim_sweep: bool,
+    /// `muonbp sim`: slabs per matrix in the simulated overlap pipeline.
+    pub sim_slabs: usize,
+    /// `muonbp sim`: broadcast pipeline chunk, bytes.
+    pub sim_chunk: usize,
+    /// `muonbp sim --sim-sweep` output path.
+    pub sim_out: String,
+    /// `muonbp sim`: calibrate link α–β from this recorded CommReport
+    /// JSON (`""` = use the hardware preset as-is).
+    pub sim_calibrate: String,
+    /// `muonbp sim`: model preset (8b | 1.2b | 960m | 160m).
+    pub sim_model: String,
+    /// `muonbp sim`: injected slow links, `attempt:rank:delay_ms` each
+    /// (attempt is ignored by the simulator — the fault is persistent —
+    /// but the spelling matches `--fault-slow-link`).
+    pub sim_slow_links: Vec<SlowLink>,
+    /// `muonbp sim`: injected stragglers, `attempt:rank:delay_ms` each.
+    pub sim_stragglers: Vec<Straggler>,
 }
 
 impl Default for RunConfig {
@@ -110,6 +136,15 @@ impl Default for RunConfig {
             checkpoint_every: 0,
             resume: false,
             overlap: None,
+            costmodel: "closed-form".into(),
+            sim_sweep: false,
+            sim_slabs: 4,
+            sim_chunk: 1 << 20,
+            sim_out: "results/SIM_projection.json".into(),
+            sim_calibrate: String::new(),
+            sim_model: "8b".into(),
+            sim_slow_links: Vec::new(),
+            sim_stragglers: Vec::new(),
         }
     }
 }
@@ -226,6 +261,33 @@ impl RunConfig {
                 Err(_) => parse_overlap(v.as_str()?)?,
             });
         }
+        if let Some(v) = j.get("costmodel") {
+            c.costmodel = parse_costmodel(v.as_str()?)?;
+        }
+        if let Some(v) = j.get("sim_sweep") {
+            c.sim_sweep = v.as_bool()?;
+        }
+        if let Some(v) = j.get("sim_slabs") {
+            c.sim_slabs = v.as_usize()?;
+        }
+        if let Some(v) = j.get("sim_chunk") {
+            c.sim_chunk = v.as_usize()?;
+        }
+        if let Some(v) = j.get("sim_out") {
+            c.sim_out = v.as_str()?.to_string();
+        }
+        if let Some(v) = j.get("sim_calibrate") {
+            c.sim_calibrate = v.as_str()?.to_string();
+        }
+        if let Some(v) = j.get("sim_model") {
+            c.sim_model = v.as_str()?.to_string();
+        }
+        if let Some(v) = j.get("sim_slow_link") {
+            c.sim_slow_links = parse_spec_list(v.as_str()?, SlowLink::parse)?;
+        }
+        if let Some(v) = j.get("sim_straggle") {
+            c.sim_stragglers = parse_spec_list(v.as_str()?, Straggler::parse)?;
+        }
         Ok(c)
     }
 
@@ -312,6 +374,29 @@ impl RunConfig {
         if let Some(v) = args.get("overlap") {
             self.overlap = Some(parse_overlap(v)?);
         }
+        if let Some(v) = args.get("costmodel") {
+            self.costmodel = parse_costmodel(v)?;
+        }
+        if args.flag("sim-sweep") {
+            self.sim_sweep = true;
+        }
+        self.sim_slabs = args.get_usize("sim-slabs", self.sim_slabs)?;
+        self.sim_chunk = args.get_usize("sim-chunk", self.sim_chunk)?;
+        if let Some(v) = args.get("sim-out") {
+            self.sim_out = v.to_string();
+        }
+        if let Some(v) = args.get("sim-calibrate") {
+            self.sim_calibrate = v.to_string();
+        }
+        if let Some(v) = args.get("sim-model") {
+            self.sim_model = v.to_string();
+        }
+        if let Some(v) = args.get("sim-slow-link") {
+            self.sim_slow_links = parse_spec_list(v, SlowLink::parse)?;
+        }
+        if let Some(v) = args.get("sim-straggle") {
+            self.sim_stragglers = parse_spec_list(v, Straggler::parse)?;
+        }
         Ok(())
     }
 
@@ -321,6 +406,20 @@ impl RunConfig {
     /// mid-launch with an assert, and gives each a clear actionable
     /// message.
     pub fn validate(&self) -> Result<()> {
+        if self.dp == 0 || self.tp == 0 {
+            anyhow::bail!(
+                "zero ranks: --dp and --tp must both be >= 1 \
+                 (got dp={} tp={})",
+                self.dp,
+                self.tp
+            );
+        }
+        if self.sim_slabs == 0 {
+            anyhow::bail!("--sim-slabs must be >= 1");
+        }
+        if self.sim_chunk == 0 {
+            anyhow::bail!("--sim-chunk must be >= 1 byte");
+        }
         if self.state_sharding.is_sliced()
             && self.on_anomaly == AnomalyPolicy::DegradeBlock
         {
@@ -398,6 +497,32 @@ fn parse_transport(s: &str) -> Result<String> {
             "unknown transport {other:?} (expected local | tcp)"
         )),
     }
+}
+
+/// Validate a `--costmodel` value. Like `--transport`, kept as a string
+/// in the config (the launcher builds the actual pricer) but rejected at
+/// parse time so typos fail before any run starts.
+fn parse_costmodel(s: &str) -> Result<String> {
+    match s {
+        "closed-form" | "sim" => Ok(s.to_string()),
+        other => Err(anyhow::anyhow!(
+            "unknown costmodel {other:?} (expected closed-form | sim)"
+        )),
+    }
+}
+
+/// Parse a comma-separated list of `attempt:rank:delay_ms` fault specs
+/// (`--sim-slow-link` / `--sim-straggle`). Empty segments from trailing
+/// commas are dropped; malformed segments fail loudly.
+fn parse_spec_list<T>(
+    s: &str,
+    parse: impl Fn(&str) -> Result<T>,
+) -> Result<Vec<T>> {
+    s.split(',')
+        .map(|p| p.trim())
+        .filter(|p| !p.is_empty())
+        .map(parse)
+        .collect()
 }
 
 /// Parse a `--overlap` value: `on` selects the DAG-overlapped schedule,
@@ -622,6 +747,96 @@ mod tests {
         c.transport = "tcp".into();
         let err = c.validate().unwrap_err().to_string();
         assert!(err.contains("local"), "{err}");
+    }
+
+    #[test]
+    fn sim_plumbing() {
+        let c = RunConfig::default();
+        assert_eq!(c.costmodel, "closed-form");
+        assert!(!c.sim_sweep);
+        assert_eq!(c.sim_slabs, 4);
+        assert_eq!(c.sim_chunk, 1 << 20);
+        assert_eq!(c.sim_out, "results/SIM_projection.json");
+        assert_eq!(c.sim_model, "8b");
+        // JSON spelling.
+        let j = Json::parse(
+            r#"{"costmodel":"sim","sim_sweep":true,"sim_slabs":8,
+                "sim_chunk":65536,"sim_out":"results/x.json",
+                "sim_calibrate":"results/report.json","sim_model":"1.2b",
+                "sim_slow_link":"0:1:50, 0:3:200,",
+                "sim_straggle":"0:2:10"}"#,
+        )
+        .unwrap();
+        let c = RunConfig::from_json(&j).unwrap();
+        assert_eq!(c.costmodel, "sim");
+        assert!(c.sim_sweep);
+        assert_eq!(c.sim_slabs, 8);
+        assert_eq!(c.sim_chunk, 65536);
+        assert_eq!(c.sim_out, "results/x.json");
+        assert_eq!(c.sim_calibrate, "results/report.json");
+        assert_eq!(c.sim_model, "1.2b");
+        assert_eq!(c.sim_slow_links.len(), 2);
+        assert_eq!(
+            (c.sim_slow_links[1].rank, c.sim_slow_links[1].delay_ms),
+            (3, 200)
+        );
+        assert_eq!(c.sim_stragglers[0].delay_ms, 10);
+        // CLI overrides win.
+        let mut c = RunConfig::default();
+        let args = Args::parse(
+            [
+                "--costmodel",
+                "sim",
+                "--sim-sweep",
+                "--sim-slow-link",
+                "0:0:25,0:1:75",
+            ]
+            .iter()
+            .map(|s| s.to_string()),
+        )
+        .unwrap();
+        c.apply_args(&args).unwrap();
+        assert_eq!(c.costmodel, "sim");
+        assert!(c.sim_sweep);
+        assert_eq!(c.sim_slow_links.len(), 2);
+    }
+
+    #[test]
+    fn sim_bad_values_rejected() {
+        // Unknown pricer.
+        let j = Json::parse(r#"{"costmodel":"tea-leaves"}"#).unwrap();
+        assert!(RunConfig::from_json(&j).is_err());
+        let mut c = RunConfig::default();
+        let bad = Args::parse(
+            ["--costmodel", "oracle"].iter().map(|s| s.to_string()),
+        )
+        .unwrap();
+        assert!(c.apply_args(&bad).is_err());
+        // Malformed fault specs fail loudly, not silently drop.
+        let bad = Args::parse(
+            ["--sim-slow-link", "1:zebra:50"].iter().map(|s| s.to_string()),
+        )
+        .unwrap();
+        assert!(c.apply_args(&bad).is_err());
+        let bad = Args::parse(
+            ["--sim-straggle", "0:1"].iter().map(|s| s.to_string()),
+        )
+        .unwrap();
+        assert!(c.apply_args(&bad).is_err());
+        // Zero ranks / degenerate sim knobs are a validation error.
+        let mut c = RunConfig::default();
+        c.dp = 0;
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("zero ranks"), "{err}");
+        let mut c = RunConfig::default();
+        c.tp = 0;
+        assert!(c.validate().is_err());
+        let mut c = RunConfig::default();
+        c.sim_slabs = 0;
+        assert!(c.validate().is_err());
+        let mut c = RunConfig::default();
+        c.sim_chunk = 0;
+        assert!(c.validate().is_err());
     }
 
     #[test]

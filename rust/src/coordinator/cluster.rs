@@ -157,10 +157,12 @@ use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::checkpoint::Snapshot;
+use crate::comm::report::{CommReport, GroupReport, OverlapReport};
 use crate::comm::{
-    ArmedFault, CollectiveKind, CommStats, Communicator, RankHealth,
-    Transport,
+    ArmedFault, CollectiveKind, CommStats, Communicator, LocalTransport,
+    RankHealth, Transport,
 };
+use crate::costmodel::api::{ClosedForm, CostModel};
 use crate::costmodel::netmodel::NetModel;
 use crate::linalg::newton_schulz::{NsCoeffs, NsWorkspace};
 use crate::mesh::{Layout, Mesh, StateSharding, Topology};
@@ -210,6 +212,11 @@ pub struct DistMuonBuilder {
     /// `min(dp, pool compute width, max_lanes)`. `None` (default)
     /// leaves only the pool width in charge.
     pub max_lanes: Option<usize>,
+    /// Collective pricer for the DP group's accounting and the
+    /// `comm_report` overlap prediction. `None` (default) uses the α–β
+    /// closed form over `dp_net`; `--costmodel sim` injects the
+    /// discrete-event simulator.
+    pub cost_model: Option<Arc<dyn CostModel>>,
 }
 
 /// Default for [`DistMuonBuilder::overlap`]: the DAG schedule, unless
@@ -242,7 +249,16 @@ impl DistMuonBuilder {
             overlap: overlap_default(),
             topology: Topology::FullReplica,
             max_lanes: None,
+            cost_model: None,
         }
+    }
+
+    /// Inject a collective pricer for the DP group (see
+    /// [`DistMuonBuilder::cost_model`]'s field docs). The per-TP-group
+    /// sub-communicators inherit it via `split`.
+    pub fn cost_model(mut self, cost: Arc<dyn CostModel>) -> Self {
+        self.cost_model = Some(cost);
+        self
     }
 
     /// Select the step schedule: `true` = dependency-graph executor
@@ -485,6 +501,10 @@ impl DistMuonBuilder {
                 coeffs: self.cfg.coeffs,
             },
         };
+        let cost: Arc<dyn CostModel> = match &self.cost_model {
+            Some(c) => Arc::clone(c),
+            None => Arc::new(ClosedForm(self.dp_net)),
+        };
         let dp_comm = match &self.dp_transport {
             Some((t, local)) => {
                 assert_eq!(
@@ -493,9 +513,15 @@ impl DistMuonBuilder {
                     "dp_transport world must match mesh.dp"
                 );
                 assert!(*local < self.mesh.dp, "dp_transport local rank");
-                Communicator::with_transport(Arc::clone(t), self.dp_net)
+                Communicator::with_cost_model(
+                    Arc::clone(t),
+                    Arc::clone(&cost),
+                )
             }
-            None => Communicator::new(self.mesh.dp, self.dp_net),
+            None => Communicator::with_cost_model(
+                Arc::new(LocalTransport::new(self.mesh.dp)),
+                Arc::clone(&cost),
+            ),
         };
         dp_comm.set_deadline(self.collective_deadline);
         // Per-TP-block DP sub-communicators (grouped topology): group g
@@ -555,7 +581,7 @@ impl DistMuonBuilder {
             lanes,
             lane_tbl,
             max_lanes: self.max_lanes,
-            dp_net: self.dp_net,
+            cost,
             dp_local,
             collective_deadline: self.collective_deadline,
             cfg: self.cfg,
@@ -725,8 +751,10 @@ pub struct DistMuon {
     lane_tbl: Vec<Vec<usize>>,
     /// Builder's lane cap, kept for elastic rebuilds.
     max_lanes: Option<usize>,
-    /// DP net model, kept for elastic rebuilds ([`DistMuon::shrink_dp`]).
-    dp_net: NetModel,
+    /// Collective pricer for DP accounting and the `comm_report`
+    /// overlap prediction; kept for elastic rebuilds
+    /// ([`DistMuon::shrink_dp`]).
+    cost: Arc<dyn CostModel>,
     /// Local DP rank when the DP group runs over a non-local transport
     /// (one process per rank); `None` for the fully-local simulated
     /// group, whose collectives fan every rank across the pool.
@@ -2236,7 +2264,10 @@ impl DistMuon {
             .expect("DistMuon::snapshot is always available");
         let mesh = Mesh::new(self.mesh.dp - 1, self.mesh.tp)?;
         self.mesh = mesh;
-        let dp_comm = Communicator::new(mesh.dp, self.dp_net);
+        let dp_comm = Communicator::with_cost_model(
+            Arc::new(LocalTransport::new(mesh.dp)),
+            Arc::clone(&self.cost),
+        );
         dp_comm.set_deadline(self.collective_deadline);
         self.dp_comm = dp_comm;
         // Per-TP-group communicators and the lane table follow the DP
@@ -2675,25 +2706,21 @@ impl Optimizer for DistMuon {
     /// the measured `wall_time_s` the lanes recorded) plus the overlap
     /// cost model's serial-vs-overlapped prediction fed with the measured
     /// comm/compute split of this run.
-    fn comm_report(&self) -> Option<String> {
+    fn comm_report(&self) -> Option<CommReport> {
         let (tp, dp) = self.comm_stats();
-        let mut out = String::new();
-        out.push_str(&format!(
-            "comm report [{}] (schedule: {})\n",
-            self.name(),
-            if self.overlap { "dag-overlap" } else { "phased-barrier" },
-        ));
-        out.push_str("DP group (gradient sync):\n");
-        out.push_str(&dp.summary());
+        let mut groups =
+            vec![GroupReport::from_stats("dp", self.mesh.dp, &dp)];
         for (g, c) in self.dp_groups.iter().enumerate() {
             // Grouped topology: the DP sync of a TP-sharded matrix is
             // charged per shard group — each group moves only its
             // block's bytes, not the full matrix.
-            out.push_str(&format!("DP group[shard {g}] (grouped):\n"));
-            out.push_str(&c.stats().summary());
+            groups.push(GroupReport::from_stats(
+                &format!("shard {g}"),
+                self.mesh.dp,
+                &c.stats(),
+            ));
         }
-        out.push_str("TP group (optimizer traffic):\n");
-        out.push_str(&tp.summary());
+        groups.push(GroupReport::from_stats("tp", self.mesh.tp, &tp));
         // Overlap prediction from the measured split: C = DP-sync wall
         // the lanes clocked, K = NS compute wall summed across workers
         // scaled to an approximate parallel time. Coarse by design (see
@@ -2704,20 +2731,28 @@ impl Optimizer for DistMuon {
             / 1e9
             / self.mesh.tp.max(1) as f64;
         let o = self
-            .dp_net
+            .cost
             .overlapped_step_time(comm, compute, self.slab_stride);
-        out.push_str(&format!(
-            "overlap model: serial {:.6}s vs overlapped {:.6}s, bubble \
-             {:.1}% (measured comm {:.6}s, compute {:.6}s, {} \
-             slabs/matrix)\n",
-            o.serial,
-            o.overlapped,
-            o.bubble_frac * 100.0,
-            comm,
-            compute,
-            self.slab_stride,
-        ));
-        Some(out)
+        Some(CommReport {
+            optimizer: self.name(),
+            schedule: if self.overlap {
+                "dag-overlap".to_string()
+            } else {
+                "phased-barrier".to_string()
+            },
+            dp: self.mesh.dp,
+            tp: self.mesh.tp,
+            sharding: self.sharding.name().to_string(),
+            groups,
+            overlap: OverlapReport {
+                comm_secs: comm,
+                compute_secs: compute,
+                slab_stride: self.slab_stride,
+                serial_secs: o.serial,
+                overlapped_secs: o.overlapped,
+                bubble_frac: o.bubble_frac,
+            },
+        })
     }
 }
 

@@ -1,0 +1,251 @@
+//! The unified cost-model surface: everything that prices a collective —
+//! `Communicator` charging, `comm_report`'s overlap prediction, the
+//! throughput model, the `muonbp sim` projections — goes through the
+//! object-safe [`CostModel`] trait, selected on the CLI with
+//! `--costmodel {closed-form,sim}`.
+//!
+//! Two implementations ship:
+//! - [`ClosedForm`]: the α–β ring formulas from [`netmodel`] — free to
+//!   evaluate, exact in the contention-free uniform-link regime.
+//! - [`Simulated`](crate::costmodel::sim::Simulated): every query runs
+//!   the discrete-event cluster simulator (`costmodel/sim`) and reads the
+//!   virtual clock — identical numbers where the closed form is exact
+//!   (ring all-reduce / reduce-scatter / all-gather on uniform links, see
+//!   `tests/sim_equivalence.rs`), *different* numbers as soon as NIC
+//!   serialization, contention or fault injection matter.
+//!
+//! [`netmodel`]: crate::costmodel::netmodel
+
+use std::sync::Arc;
+
+use crate::comm::stats::CollectiveKind;
+use crate::costmodel::netmodel::{overlap_pipeline, NetModel, OverlapModel};
+use crate::mesh::StateSharding;
+
+/// Object-safe collective pricing. The composite predictions
+/// (`grad_sync_time*`, `overlapped_step_time`) have default
+/// implementations in terms of [`CostModel::collective_time`], so an
+/// impl only has to price a single collective; impls may override the
+/// composites when they can do better (the simulator replays the slab
+/// pipeline event by event instead of using the closed-form bound).
+pub trait CostModel: Send + Sync {
+    /// CLI selector name (`closed-form`, `sim`).
+    fn name(&self) -> &'static str;
+
+    /// Time for one collective moving `payload_bytes` logical payload
+    /// over `n` ranks.
+    fn collective_time(
+        &self,
+        kind: CollectiveKind,
+        payload_bytes: usize,
+        n: usize,
+    ) -> f64;
+
+    /// One step's DP gradient sync over `payload_bytes` of matrix
+    /// gradient at DP degree `dp`, per state-sharding mode — the same
+    /// collective composition the coordinator issues (all-reduce /
+    /// reduce-scatter + all-gather / reduce-scatter only).
+    fn grad_sync_time(
+        &self,
+        mode: StateSharding,
+        payload_bytes: usize,
+        dp: usize,
+    ) -> f64 {
+        match mode {
+            StateSharding::Replicated => self.collective_time(
+                CollectiveKind::AllReduce,
+                payload_bytes,
+                dp,
+            ),
+            StateSharding::Zero1 => {
+                self.collective_time(
+                    CollectiveKind::ReduceScatter,
+                    payload_bytes,
+                    dp,
+                ) + self.collective_time(
+                    CollectiveKind::AllGather,
+                    payload_bytes,
+                    dp,
+                )
+            }
+            StateSharding::Zero2 => self.collective_time(
+                CollectiveKind::ReduceScatter,
+                payload_bytes,
+                dp,
+            ),
+        }
+    }
+
+    /// [`CostModel::grad_sync_time`] under the grouped
+    /// (dp-groups-per-shard) topology: each TP block's DP sub-group
+    /// syncs only its `payload_bytes / tp` rows on disjoint links.
+    fn grad_sync_time_grouped(
+        &self,
+        mode: StateSharding,
+        payload_bytes: usize,
+        dp: usize,
+        tp: usize,
+    ) -> f64 {
+        self.grad_sync_time(mode, payload_bytes / tp.max(1), dp)
+    }
+
+    /// Slab-pipeline overlap prediction for one optimizer step (see
+    /// [`overlap_pipeline`] for the closed-form default).
+    fn overlapped_step_time(
+        &self,
+        comm_time: f64,
+        compute_time: f64,
+        n_slabs: usize,
+    ) -> OverlapModel {
+        overlap_pipeline(comm_time, compute_time, n_slabs)
+    }
+}
+
+/// The α–β ring closed form ([`NetModel`]) behind the trait. Delegates
+/// every composite to the original `NetModel` methods so the trait
+/// surface is provably identical to the pre-trait free functions.
+#[derive(Debug, Clone, Copy)]
+pub struct ClosedForm(pub NetModel);
+
+impl CostModel for ClosedForm {
+    fn name(&self) -> &'static str {
+        "closed-form"
+    }
+
+    fn collective_time(
+        &self,
+        kind: CollectiveKind,
+        payload_bytes: usize,
+        n: usize,
+    ) -> f64 {
+        self.0.collective_time(kind, payload_bytes, n)
+    }
+
+    fn grad_sync_time(
+        &self,
+        mode: StateSharding,
+        payload_bytes: usize,
+        dp: usize,
+    ) -> f64 {
+        self.0.grad_sync_time(mode, payload_bytes, dp)
+    }
+
+    fn grad_sync_time_grouped(
+        &self,
+        mode: StateSharding,
+        payload_bytes: usize,
+        dp: usize,
+        tp: usize,
+    ) -> f64 {
+        self.0.grad_sync_time_grouped(mode, payload_bytes, dp, tp)
+    }
+
+    fn overlapped_step_time(
+        &self,
+        comm_time: f64,
+        compute_time: f64,
+        n_slabs: usize,
+    ) -> OverlapModel {
+        self.0.overlapped_step_time(comm_time, compute_time, n_slabs)
+    }
+}
+
+/// Build the CLI-selected cost model over `net`'s link parameters.
+pub fn by_name(
+    name: &str,
+    net: NetModel,
+) -> anyhow::Result<Arc<dyn CostModel>> {
+    Ok(match name {
+        "closed-form" => Arc::new(ClosedForm(net)),
+        "sim" => Arc::new(crate::costmodel::sim::Simulated::uniform(net)),
+        other => anyhow::bail!(
+            "unknown cost model '{other}' (expected 'closed-form' or 'sim')"
+        ),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn closed_form_matches_netmodel_exactly() {
+        let net = NetModel::ib_hdr();
+        let cf = ClosedForm(net);
+        for kind in crate::comm::stats::ALL_KINDS {
+            for n in [1, 2, 8] {
+                assert_eq!(
+                    cf.collective_time(kind, 1 << 22, n),
+                    net.collective_time(kind, 1 << 22, n),
+                    "{kind:?} n={n}"
+                );
+            }
+        }
+        for mode in [
+            StateSharding::Replicated,
+            StateSharding::Zero1,
+            StateSharding::Zero2,
+        ] {
+            assert_eq!(
+                cf.grad_sync_time(mode, 1 << 24, 8),
+                net.grad_sync_time(mode, 1 << 24, 8)
+            );
+            assert_eq!(
+                cf.grad_sync_time_grouped(mode, 1 << 24, 8, 4),
+                net.grad_sync_time_grouped(mode, 1 << 24, 8, 4)
+            );
+        }
+        let a = cf.overlapped_step_time(3.0, 5.0, 4);
+        let b = net.overlapped_step_time(3.0, 5.0, 4);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn default_composites_match_the_delegating_overrides() {
+        // A minimal impl that only prices collectives must produce the
+        // same composite predictions as ClosedForm's explicit
+        // delegation — the default-method contract of the trait.
+        struct Minimal(NetModel);
+        impl CostModel for Minimal {
+            fn name(&self) -> &'static str {
+                "minimal"
+            }
+            fn collective_time(
+                &self,
+                kind: CollectiveKind,
+                payload_bytes: usize,
+                n: usize,
+            ) -> f64 {
+                self.0.collective_time(kind, payload_bytes, n)
+            }
+        }
+        let net = NetModel::a100_nvlink();
+        let min = Minimal(net);
+        let cf = ClosedForm(net);
+        for mode in [
+            StateSharding::Replicated,
+            StateSharding::Zero1,
+            StateSharding::Zero2,
+        ] {
+            for dp in [2, 4, 8] {
+                let a = min.grad_sync_time(mode, 1 << 24, dp);
+                let b = cf.grad_sync_time(mode, 1 << 24, dp);
+                assert!((a - b).abs() < 1e-15, "{mode:?} dp={dp}");
+                let a = min.grad_sync_time_grouped(mode, 1 << 24, dp, 4);
+                let b = cf.grad_sync_time_grouped(mode, 1 << 24, dp, 4);
+                assert!((a - b).abs() < 1e-15, "{mode:?} dp={dp} grouped");
+            }
+        }
+        let a = min.overlapped_step_time(8.0, 2.0, 4);
+        let b = cf.overlapped_step_time(8.0, 2.0, 4);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn by_name_selects_and_rejects() {
+        let net = NetModel::ib_hdr();
+        assert_eq!(by_name("closed-form", net).unwrap().name(), "closed-form");
+        assert_eq!(by_name("sim", net).unwrap().name(), "sim");
+        assert!(by_name("magic", net).is_err());
+    }
+}

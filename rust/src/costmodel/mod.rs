@@ -1,14 +1,28 @@
 //! Analytic cost model: FLOP counts (paper §2.2/§3 formulas), α–β network
-//! model, and the per-method throughput estimator behind Table 4 / Fig 3.
+//! model, the per-method throughput estimator behind Table 4 / Fig 3, and
+//! the discrete-event cluster simulator.
 //!
 //! The paper's testbed (A100 nodes) is unavailable; throughput claims are
 //! *ratios* between methods, which derive from communication volume and
 //! overlap structure — exactly what this model captures (DESIGN.md §1).
+//!
+//! Two interchangeable pricers live behind the [`CostModel`] trait:
+//! [`ClosedForm`] (the α–β formulas of [`netmodel`]) and [`Simulated`]
+//! (event-level replay via [`sim`]). On uniform contention-free links
+//! they agree to nanosecond rounding; the simulator additionally models
+//! FIFO link contention, slab-pipeline overlap, and fail-slow faults.
 
+pub mod api;
 pub mod flops;
 pub mod netmodel;
+pub mod sim;
 pub mod throughput;
 
+pub use api::{ClosedForm, CostModel};
 pub use flops::{adam_flops, block_ns_flops, train_flops_per_step, ModelDims};
 pub use netmodel::NetModel;
-pub use throughput::{step_breakdown, throughput_tflops, Method, StepBreakdown};
+pub use sim::Simulated;
+pub use throughput::{
+    step_breakdown, step_breakdown_with, throughput_tflops,
+    throughput_tflops_with, Method, StepBreakdown,
+};

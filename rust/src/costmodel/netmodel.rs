@@ -170,21 +170,37 @@ impl NetModel {
         compute_time: f64,
         n_slabs: usize,
     ) -> OverlapModel {
-        let c = comm_time.max(0.0);
-        let k = compute_time.max(0.0);
-        let serial = c + k;
-        let overlapped = if n_slabs <= 1 || c == 0.0 || k == 0.0 {
-            serial
-        } else {
-            c.max(k) + c.min(k) / n_slabs as f64
-        };
-        let bubble_frac = if overlapped > 0.0 && c > 0.0 && k > 0.0 {
-            (overlapped - c.max(k)) / overlapped
-        } else {
-            0.0
-        };
-        OverlapModel { serial, overlapped, bubble_frac }
+        overlap_pipeline(comm_time, compute_time, n_slabs)
     }
+}
+
+/// The slab-pipeline overlap formula behind
+/// [`NetModel::overlapped_step_time`] and the [`CostModel`] trait's
+/// default — a free function because it depends on no link parameters.
+/// The discrete-event simulator reproduces it exactly with uniform
+/// slabs (`Simulated::overlapped_step_time` replays the pipeline event
+/// by event), making this the degenerate special case of the simulator.
+///
+/// [`CostModel`]: crate::costmodel::api::CostModel
+pub fn overlap_pipeline(
+    comm_time: f64,
+    compute_time: f64,
+    n_slabs: usize,
+) -> OverlapModel {
+    let c = comm_time.max(0.0);
+    let k = compute_time.max(0.0);
+    let serial = c + k;
+    let overlapped = if n_slabs <= 1 || c == 0.0 || k == 0.0 {
+        serial
+    } else {
+        c.max(k) + c.min(k) / n_slabs as f64
+    };
+    let bubble_frac = if overlapped > 0.0 && c > 0.0 && k > 0.0 {
+        (overlapped - c.max(k)) / overlapped
+    } else {
+        0.0
+    };
+    OverlapModel { serial, overlapped, bubble_frac }
 }
 
 /// Per-rank gradient-sync bytes for one optimizer step over

@@ -1,0 +1,253 @@
+//! Fit α–β link parameters from a recorded [`CommReport`].
+//!
+//! Every DP-group ledger entry is one observation: over `calls`
+//! collectives of mean payload `bytes / calls` at group size `ranks`,
+//! the ring-algorithm analysis (the same table as
+//! [`NetModel::collective_time`]) gives total latency steps `S` and
+//! total wire bytes `W`, and the report gives total measured seconds
+//! `T` (falling back to the modeled seconds when the run recorded
+//! untimed). The model `T = α·S + W/β` is linear in `(α, 1/β)`, so the
+//! fit is a 2×2 least-squares normal-equation solve — degenerate
+//! designs (all-latency, all-bandwidth, or a single effective
+//! direction) fall back to the corresponding one-parameter fit.
+//!
+//! TP-group entries are excluded: they ride a different fabric
+//! (NVLink vs the DP InfiniBand plane), so mixing them would fit one
+//! α–β to two links.
+
+use crate::comm::report::CommReport;
+use crate::comm::stats::CollectiveKind;
+use crate::costmodel::netmodel::NetModel;
+
+/// `(latency steps, wire bytes)` for one collective call of `bytes`
+/// logical payload over `n` ranks — the ring table
+/// [`NetModel::collective_time`] charges.
+fn design_row(kind: CollectiveKind, bytes: f64, n: usize) -> (f64, f64) {
+    if n <= 1 {
+        return (0.0, 0.0);
+    }
+    let s = bytes;
+    let nf = n as f64;
+    match kind {
+        CollectiveKind::Barrier => (nf - 1.0, 0.0),
+        CollectiveKind::AllReduce => {
+            (2.0 * (nf - 1.0), 2.0 * s * (nf - 1.0) / nf)
+        }
+        CollectiveKind::AllGather
+        | CollectiveKind::ReduceScatter
+        | CollectiveKind::Gather
+        | CollectiveKind::Scatter
+        | CollectiveKind::AllToAll => ((nf - 1.0), s * (nf - 1.0) / nf),
+        CollectiveKind::Broadcast => (nf.log2().ceil(), s),
+    }
+}
+
+/// Fit a [`NetModel`] for the DP fabric from `report`'s DP-group
+/// ledgers (`"dp"` and the grouped `"shard N"` sub-groups; `"tp"` is a
+/// different fabric and is skipped). Errors if the report holds no
+/// usable DP observations.
+pub fn calibrate(report: &CommReport) -> anyhow::Result<NetModel> {
+    // (steps, wire_bytes, secs) per observation.
+    let mut rows: Vec<(f64, f64, f64)> = Vec::new();
+    for g in &report.groups {
+        if g.name == "tp" {
+            continue;
+        }
+        for e in &g.entries {
+            if e.calls == 0 {
+                continue;
+            }
+            let calls = e.calls as f64;
+            let mean_bytes = e.bytes as f64 / calls;
+            let (s1, w1) = design_row(e.kind, mean_bytes, g.ranks);
+            let t = if e.measured_secs > 0.0 {
+                e.measured_secs
+            } else {
+                e.modeled_secs
+            };
+            if s1 <= 0.0 && w1 <= 0.0 {
+                continue; // n <= 1: the call was free, nothing to fit
+            }
+            rows.push((s1 * calls, w1 * calls, t));
+        }
+    }
+    anyhow::ensure!(
+        !rows.is_empty(),
+        "calibrate: report has no DP-group collective calls to fit"
+    );
+
+    // Normal equations for T = α·S + inv·W, unknowns (α, inv = 1/β).
+    let (mut ss, mut sw, mut ww, mut st, mut wt) =
+        (0.0f64, 0.0f64, 0.0f64, 0.0f64, 0.0f64);
+    for &(s, w, t) in &rows {
+        ss += s * s;
+        sw += s * w;
+        ww += w * w;
+        st += s * t;
+        wt += w * t;
+    }
+    let det = ss * ww - sw * sw;
+    let (alpha, inv_bw) = if det.abs() > 1e-9 * ss.max(1e-30) * ww.max(1e-30)
+    {
+        (
+            (st * ww - wt * sw) / det,
+            (wt * ss - st * sw) / det,
+        )
+    } else if ww > 0.0 {
+        // Rank-deficient design with bandwidth signal (e.g. one
+        // collective kind at one size): attribute everything to β.
+        (0.0, wt / ww)
+    } else {
+        // Pure-latency traffic (barriers only): fit α alone.
+        (st / ss, 0.0)
+    };
+    let alpha = alpha.max(0.0);
+    let beta_bw = if inv_bw > 0.0 { 1.0 / inv_bw } else { f64::INFINITY };
+    Ok(NetModel { alpha, beta_bw })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::report::{
+        CommEntry, GroupReport, OverlapReport,
+    };
+
+    fn report_from(groups: Vec<GroupReport>) -> CommReport {
+        CommReport {
+            optimizer: "test".to_string(),
+            schedule: "phased-barrier".to_string(),
+            dp: 8,
+            tp: 2,
+            sharding: "replicated".to_string(),
+            groups,
+            overlap: OverlapReport {
+                comm_secs: 0.0,
+                compute_secs: 0.0,
+                slab_stride: 1,
+                serial_secs: 0.0,
+                overlapped_secs: 0.0,
+                bubble_frac: 0.0,
+            },
+        }
+    }
+
+    /// Synthesize a DP ledger from a known NetModel and check the fit
+    /// recovers it.
+    fn entry(
+        net: &NetModel,
+        kind: CollectiveKind,
+        bytes: usize,
+        calls: u64,
+        n: usize,
+    ) -> CommEntry {
+        let t = net.collective_time(kind, bytes, n) * calls as f64;
+        CommEntry {
+            kind,
+            calls,
+            bytes: bytes as u64 * calls,
+            modeled_secs: t,
+            measured_secs: t,
+        }
+    }
+
+    #[test]
+    fn recovers_alpha_beta_from_mixed_traffic() {
+        let truth = NetModel { alpha: 7e-6, beta_bw: 40e9 };
+        let n = 8;
+        let g = GroupReport {
+            name: "dp".to_string(),
+            ranks: n,
+            entries: vec![
+                entry(&truth, CollectiveKind::AllReduce, 1 << 26, 20, n),
+                entry(&truth, CollectiveKind::ReduceScatter, 1 << 14, 20, n),
+                entry(&truth, CollectiveKind::Barrier, 0, 5, n),
+            ],
+        };
+        let fit = calibrate(&report_from(vec![g])).unwrap();
+        assert!(
+            (fit.alpha - truth.alpha).abs() < 1e-9,
+            "alpha {} vs {}",
+            fit.alpha,
+            truth.alpha
+        );
+        assert!(
+            (fit.beta_bw - truth.beta_bw).abs() < 1e-3 * truth.beta_bw,
+            "beta {} vs {}",
+            fit.beta_bw,
+            truth.beta_bw
+        );
+    }
+
+    #[test]
+    fn tp_group_is_excluded_from_the_fit() {
+        let truth = NetModel { alpha: 10e-6, beta_bw: 25e9 };
+        let wrong = NetModel { alpha: 1e-6, beta_bw: 300e9 };
+        let dp = GroupReport {
+            name: "dp".to_string(),
+            ranks: 4,
+            entries: vec![
+                entry(&truth, CollectiveKind::AllReduce, 1 << 26, 10, 4),
+                entry(&truth, CollectiveKind::Barrier, 0, 10, 4),
+            ],
+        };
+        let tp = GroupReport {
+            name: "tp".to_string(),
+            ranks: 2,
+            entries: vec![entry(
+                &wrong,
+                CollectiveKind::Gather,
+                1 << 26,
+                10,
+                2,
+            )],
+        };
+        let fit = calibrate(&report_from(vec![dp, tp])).unwrap();
+        assert!((fit.alpha - truth.alpha).abs() < 1e-9);
+        assert!((fit.beta_bw - truth.beta_bw).abs() < 1e-3 * truth.beta_bw);
+    }
+
+    #[test]
+    fn single_size_falls_back_to_bandwidth_only() {
+        // One kind at one size is rank-deficient: the fit attributes
+        // everything to bandwidth, which still reproduces the observed
+        // time at that size.
+        let truth = NetModel { alpha: 10e-6, beta_bw: 25e9 };
+        let n = 8;
+        let g = GroupReport {
+            name: "dp".to_string(),
+            ranks: n,
+            entries: vec![entry(
+                &truth,
+                CollectiveKind::AllReduce,
+                1 << 26,
+                10,
+                n,
+            )],
+        };
+        let fit = calibrate(&report_from(vec![g])).unwrap();
+        assert_eq!(fit.alpha, 0.0);
+        let want = truth.collective_time(CollectiveKind::AllReduce, 1 << 26, n);
+        let got = fit.collective_time(CollectiveKind::AllReduce, 1 << 26, n);
+        assert!((got - want).abs() < 1e-6 * want, "{got} vs {want}");
+    }
+
+    #[test]
+    fn barrier_only_traffic_fits_latency_only() {
+        let truth = NetModel { alpha: 5e-6, beta_bw: 25e9 };
+        let g = GroupReport {
+            name: "dp".to_string(),
+            ranks: 8,
+            entries: vec![entry(&truth, CollectiveKind::Barrier, 0, 100, 8)],
+        };
+        let fit = calibrate(&report_from(vec![g])).unwrap();
+        assert!((fit.alpha - truth.alpha).abs() < 1e-12);
+        assert!(fit.beta_bw.is_infinite());
+    }
+
+    #[test]
+    fn empty_report_errors() {
+        let err = calibrate(&report_from(Vec::new())).unwrap_err();
+        assert!(err.to_string().contains("no DP-group collective calls"));
+    }
+}

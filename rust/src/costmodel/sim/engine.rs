@@ -1,0 +1,509 @@
+//! Deterministic discrete-event engine: ranks as op-list processes,
+//! links as FIFO α–β resources, a binary-heap event queue over an
+//! integer-nanosecond virtual clock.
+//!
+//! # Determinism contract
+//!
+//! Same inputs → bit-identical [`SimResult`], on every host, every run:
+//!
+//! - the virtual clock is **integer nanoseconds** — floats appear only
+//!   when a payload size is converted to a serialization duration, and
+//!   are immediately `ceil`ed to whole ns, so no float accumulation can
+//!   reorder events;
+//! - heap ties are broken by a monotone sequence number assigned at
+//!   push, making event order a total order independent of allocator or
+//!   hash state (no `HashMap` anywhere — `BTreeMap` only);
+//! - there is no wall-clock read and no RNG.
+//!
+//! # Transfer model (cut-through)
+//!
+//! One `Send` of `b` bytes from `src` to `dst` claims three FIFO
+//! resources in order, each for the serialization time `b/β`:
+//!
+//! 1. the sender's **egress NIC** (serializes that rank's outgoing
+//!    transfers),
+//! 2. the directed `(src, dst)` **wire**,
+//! 3. the receiver's **ingress NIC** (serializes fan-in — the resource
+//!    the closed form cannot see).
+//!
+//! The first byte then needs `α` of link latency, so the matching
+//! `Recv` completes at `ingress_start + b/β + α`; the sender resumes
+//! once the payload is fully on the wire. With a single transfer in
+//! flight this is exactly the α–β closed form (`α + b/β`), which is why
+//! contention-free ring collectives agree with
+//! [`NetModel::collective_time`] to ns rounding
+//! (`tests/sim_equivalence.rs`); under fan-in the ingress NIC
+//! serializes rounds the closed form counts once — the contention this
+//! simulator exists to expose.
+//!
+//! [`NetModel::collective_time`]: crate::costmodel::netmodel::NetModel::collective_time
+
+use std::cmp::Reverse;
+use std::collections::{BTreeMap, BinaryHeap, VecDeque};
+
+use crate::costmodel::netmodel::NetModel;
+
+/// Virtual time in integer nanoseconds.
+pub type Ns = u64;
+
+/// Seconds → virtual ns (saturating at 0 for negative inputs).
+pub fn secs_to_ns(s: f64) -> Ns {
+    if s <= 0.0 {
+        0
+    } else {
+        (s * 1e9).round() as Ns
+    }
+}
+
+/// Virtual ns → seconds.
+pub fn ns_to_secs(ns: Ns) -> f64 {
+    ns as f64 / 1e9
+}
+
+/// α–β parameters of one directed link.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkParams {
+    /// First-byte latency (α), ns.
+    pub latency_ns: Ns,
+    /// Serialization bandwidth (β), bytes/second.
+    pub bytes_per_sec: f64,
+}
+
+impl LinkParams {
+    pub fn from_net(net: NetModel) -> LinkParams {
+        LinkParams {
+            latency_ns: secs_to_ns(net.alpha),
+            bytes_per_sec: net.beta_bw,
+        }
+    }
+
+    /// Time to put `bytes` on the wire, rounded **up** to whole ns —
+    /// the only float→clock conversion in the engine (≤ 1 ns error per
+    /// transfer, which bounds the sim-vs-closed-form divergence stated
+    /// in `tests/sim_equivalence.rs`).
+    pub fn serialize_ns(&self, bytes: f64) -> Ns {
+        if bytes <= 0.0
+            || !self.bytes_per_sec.is_finite()
+            || self.bytes_per_sec <= 0.0
+        {
+            return 0;
+        }
+        (bytes / self.bytes_per_sec * 1e9).ceil() as Ns
+    }
+}
+
+/// The cluster fabric: a default link plus per-pair overrides (for
+/// heterogeneous fabrics — e.g. a reduced world whose DP ranks run on
+/// IB while the TP ranks run on NVLink) and per-source extra latency
+/// (the `--sim-slow-link` fail-slow vocabulary, `robust::SlowLink`).
+#[derive(Debug, Clone)]
+pub struct SimNet {
+    pub default: LinkParams,
+    /// Directed per-pair overrides.
+    pub overrides: BTreeMap<(usize, usize), LinkParams>,
+    /// Extra latency added to every transfer *sent by* this rank.
+    pub extra_send_latency: BTreeMap<usize, Ns>,
+}
+
+impl SimNet {
+    pub fn uniform(net: NetModel) -> SimNet {
+        SimNet {
+            default: LinkParams::from_net(net),
+            overrides: BTreeMap::new(),
+            extra_send_latency: BTreeMap::new(),
+        }
+    }
+
+    fn params(&self, src: usize, dst: usize) -> LinkParams {
+        *self.overrides.get(&(src, dst)).unwrap_or(&self.default)
+    }
+
+    fn latency_ns(&self, src: usize, dst: usize) -> Ns {
+        self.params(src, dst).latency_ns
+            + self.extra_send_latency.get(&src).copied().unwrap_or(0)
+    }
+}
+
+/// One instruction of a rank process.
+#[derive(Debug, Clone, Copy)]
+pub enum Op {
+    /// Occupy the local compute resource for this many virtual ns.
+    Compute(Ns),
+    /// Inject `bytes` toward rank `to`; the process resumes once the
+    /// payload is fully on the wire. Bytes are `f64` so ring slices
+    /// (`payload / n`) carry no integer-division drift against the
+    /// closed form.
+    Send { to: usize, bytes: f64 },
+    /// Block until the next message from rank `from` (FIFO per
+    /// directed pair).
+    Recv { from: usize },
+    /// Block until signal `sig` has fired (no-op if already fired).
+    Wait { sig: usize },
+    /// Fire signal `sig` at the current local time (idempotent —
+    /// the earliest firing wins; waiters wake at the fire time).
+    Fire { sig: usize },
+}
+
+/// A rank process: `rank` names the NIC/link endpoints its transfers
+/// use. Several processes may share a rank only if they never race on
+/// the same peer's message FIFO.
+#[derive(Debug, Clone)]
+pub struct Proc {
+    pub rank: usize,
+    pub ops: Vec<Op>,
+}
+
+/// Everything a run produces — `PartialEq` so bit-reproducibility is a
+/// one-line assertion.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SimResult {
+    /// Last event time (virtual ns): the makespan.
+    pub makespan: Ns,
+    /// Per-process finish times, in process order.
+    pub finish: Vec<Ns>,
+    /// Heap events processed (scale telemetry).
+    pub events: u64,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+enum Ev {
+    /// Re-enter process `p` at its current program counter.
+    Resume(usize),
+    /// A message from rank `src` lands at rank `dst`.
+    Arrive { src: usize, dst: usize },
+}
+
+struct Queue {
+    heap: BinaryHeap<Reverse<(Ns, u64, Ev)>>,
+    seq: u64,
+    events: u64,
+}
+
+impl Queue {
+    fn push(&mut self, t: Ns, ev: Ev) {
+        self.heap.push(Reverse((t, self.seq, ev)));
+        self.seq += 1;
+    }
+
+    fn pop(&mut self) -> Option<(Ns, Ev)> {
+        self.heap.pop().map(|Reverse((t, _, ev))| {
+            self.events += 1;
+            (t, ev)
+        })
+    }
+}
+
+struct Engine<'a> {
+    net: &'a SimNet,
+    procs: &'a [Proc],
+    q: Queue,
+    pc: Vec<usize>,
+    finish: Vec<Ns>,
+    done: Vec<bool>,
+    /// Next free time of each rank's egress NIC.
+    egress_free: BTreeMap<usize, Ns>,
+    /// Next free time of each rank's ingress NIC.
+    ingress_free: BTreeMap<usize, Ns>,
+    /// Next free time of each directed wire.
+    wire_free: BTreeMap<(usize, usize), Ns>,
+    /// Arrived-but-unconsumed messages per directed pair (arrival ns).
+    mailbox: BTreeMap<(usize, usize), VecDeque<Ns>>,
+    /// Processes blocked on `Recv` per directed pair, FIFO.
+    recv_wait: BTreeMap<(usize, usize), VecDeque<usize>>,
+    /// Fired signals → fire time.
+    sig_fired: BTreeMap<usize, Ns>,
+    /// Processes blocked on `Wait`.
+    sig_wait: BTreeMap<usize, Vec<usize>>,
+    makespan: Ns,
+}
+
+impl Engine<'_> {
+    /// Execute process `p` from its program counter at virtual time
+    /// `now` until it blocks, yields to the heap, or finishes.
+    fn advance(&mut self, p: usize, now: Ns) {
+        loop {
+            let Some(&op) = self.procs[p].ops.get(self.pc[p]) else {
+                self.done[p] = true;
+                self.finish[p] = now;
+                self.makespan = self.makespan.max(now);
+                return;
+            };
+            match op {
+                Op::Compute(d) => {
+                    self.pc[p] += 1;
+                    self.q.push(now + d, Ev::Resume(p));
+                    return;
+                }
+                Op::Send { to, bytes } => {
+                    let src = self.procs[p].rank;
+                    let pars = self.net.params(src, to);
+                    let ser = pars.serialize_ns(bytes);
+                    let lat = self.net.latency_ns(src, to);
+                    // FIFO acquisition in event order (the heap pops in
+                    // time order, so sends are globally serialized the
+                    // way a real NIC queue would see them).
+                    let eg = self.egress_free.get(&src).copied().unwrap_or(0);
+                    let t_eg = now.max(eg);
+                    self.egress_free.insert(src, t_eg + ser);
+                    let wf =
+                        self.wire_free.get(&(src, to)).copied().unwrap_or(0);
+                    let t_wire = t_eg.max(wf);
+                    self.wire_free.insert((src, to), t_wire + ser);
+                    let inf = self.ingress_free.get(&to).copied().unwrap_or(0);
+                    let t_in = t_wire.max(inf);
+                    self.ingress_free.insert(to, t_in + ser);
+                    self.q.push(t_in + ser + lat, Ev::Arrive { src, dst: to });
+                    self.pc[p] += 1;
+                    let injected = t_wire + ser;
+                    if injected > now {
+                        self.q.push(injected, Ev::Resume(p));
+                        return;
+                    }
+                    // Zero-cost injection (0 bytes, idle wire): continue
+                    // inline at the same virtual time.
+                }
+                Op::Recv { from } => {
+                    let dst = self.procs[p].rank;
+                    let key = (from, dst);
+                    let hit = self
+                        .mailbox
+                        .get_mut(&key)
+                        .and_then(|q| q.pop_front());
+                    match hit {
+                        // The message already arrived (arrival ≤ now,
+                        // since Arrive events are processed in time
+                        // order): consume and continue at `now`.
+                        Some(_arrived) => self.pc[p] += 1,
+                        None => {
+                            self.recv_wait
+                                .entry(key)
+                                .or_default()
+                                .push_back(p);
+                            return;
+                        }
+                    }
+                }
+                Op::Wait { sig } => {
+                    if self.sig_fired.contains_key(&sig) {
+                        self.pc[p] += 1;
+                    } else {
+                        self.sig_wait.entry(sig).or_default().push(p);
+                        return;
+                    }
+                }
+                Op::Fire { sig } => {
+                    self.sig_fired.entry(sig).or_insert(now);
+                    if let Some(ws) = self.sig_wait.remove(&sig) {
+                        for w in ws {
+                            self.pc[w] += 1;
+                            self.q.push(now, Ev::Resume(w));
+                        }
+                    }
+                    self.pc[p] += 1;
+                }
+            }
+        }
+    }
+
+    fn handle_arrive(&mut self, src: usize, dst: usize, t: Ns) {
+        let key = (src, dst);
+        let waiter = self
+            .recv_wait
+            .get_mut(&key)
+            .and_then(|q| q.pop_front());
+        match waiter {
+            Some(w) => {
+                self.pc[w] += 1;
+                self.q.push(t, Ev::Resume(w));
+            }
+            None => self.mailbox.entry(key).or_default().push_back(t),
+        }
+    }
+}
+
+/// Run the processes to completion and return the virtual makespan.
+///
+/// Panics on deadlock (a process still blocked on `Recv`/`Wait` when
+/// the event queue drains) — a program-construction bug must fail
+/// loudly rather than return a bogus makespan.
+pub fn run(net: &SimNet, procs: &[Proc]) -> SimResult {
+    let np = procs.len();
+    let mut eng = Engine {
+        net,
+        procs,
+        q: Queue { heap: BinaryHeap::new(), seq: 0, events: 0 },
+        pc: vec![0; np],
+        finish: vec![0; np],
+        done: vec![false; np],
+        egress_free: BTreeMap::new(),
+        ingress_free: BTreeMap::new(),
+        wire_free: BTreeMap::new(),
+        mailbox: BTreeMap::new(),
+        recv_wait: BTreeMap::new(),
+        sig_fired: BTreeMap::new(),
+        sig_wait: BTreeMap::new(),
+        makespan: 0,
+    };
+    for p in 0..np {
+        eng.q.push(0, Ev::Resume(p));
+    }
+    while let Some((t, ev)) = eng.q.pop() {
+        eng.makespan = eng.makespan.max(t);
+        match ev {
+            Ev::Resume(p) => {
+                if !eng.done[p] {
+                    eng.advance(p, t);
+                }
+            }
+            Ev::Arrive { src, dst } => eng.handle_arrive(src, dst, t),
+        }
+    }
+    assert!(
+        eng.done.iter().all(|&d| d),
+        "sim deadlock: {} process(es) still blocked when the event \
+         queue drained",
+        eng.done.iter().filter(|&&d| !d).count()
+    );
+    SimResult {
+        makespan: eng.makespan,
+        finish: eng.finish,
+        events: eng.q.events,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn net(alpha: f64, bw: f64) -> SimNet {
+        SimNet::uniform(NetModel { alpha, beta_bw: bw })
+    }
+
+    #[test]
+    fn single_transfer_is_alpha_plus_beta() {
+        // One 1 MiB send over a 1 GB/s, 10 µs link: receiver finishes at
+        // exactly α + b/β; sender resumes at b/β.
+        let n = net(10e-6, 1e9);
+        let b = (1u64 << 20) as f64;
+        let procs = [
+            Proc { rank: 0, ops: vec![Op::Send { to: 1, bytes: b }] },
+            Proc { rank: 1, ops: vec![Op::Recv { from: 0 }] },
+        ];
+        let r = run(&n, &procs);
+        let ser = (b / 1e9 * 1e9).ceil() as Ns;
+        assert_eq!(r.finish[0], ser);
+        assert_eq!(r.finish[1], ser + 10_000);
+        assert_eq!(r.makespan, ser + 10_000);
+    }
+
+    #[test]
+    fn egress_nic_serializes_back_to_back_sends() {
+        // Two sends from rank 0 to different peers share one egress
+        // NIC: program order already serializes them (the sender only
+        // resumes after injection), and each receiver sees its own α.
+        let n = net(5e-6, 1e9);
+        let b = 1e6;
+        let procs = [
+            Proc {
+                rank: 0,
+                ops: vec![
+                    Op::Send { to: 1, bytes: b },
+                    Op::Send { to: 2, bytes: b },
+                ],
+            },
+            Proc { rank: 1, ops: vec![Op::Recv { from: 0 }] },
+            Proc { rank: 2, ops: vec![Op::Recv { from: 0 }] },
+        ];
+        let r = run(&n, &procs);
+        let ser = 1_000_000; // 1e6 B / 1e9 B/s = 1 ms
+        assert_eq!(r.finish[1], ser + 5_000);
+        assert_eq!(r.finish[2], 2 * ser + 5_000);
+    }
+
+    #[test]
+    fn ingress_nic_serializes_fan_in() {
+        // Two senders into one receiver: the wire legs run in parallel
+        // but the ingress NIC takes them one at a time.
+        let n = net(0.0, 1e9);
+        let b = 1e6;
+        let procs = [
+            Proc { rank: 0, ops: vec![Op::Send { to: 2, bytes: b }] },
+            Proc { rank: 1, ops: vec![Op::Send { to: 2, bytes: b }] },
+            Proc {
+                rank: 2,
+                ops: vec![Op::Recv { from: 0 }, Op::Recv { from: 1 }],
+            },
+        ];
+        let r = run(&n, &procs);
+        // First arrival at ser, second serialized behind it at 2·ser.
+        assert_eq!(r.finish[2], 2_000_000);
+    }
+
+    #[test]
+    fn slow_link_latency_is_per_source() {
+        let mut n = net(1e-6, 1e9);
+        n.extra_send_latency.insert(0, 500_000); // +0.5 ms from rank 0
+        let procs = [
+            Proc { rank: 0, ops: vec![Op::Send { to: 1, bytes: 0.0 }] },
+            Proc { rank: 1, ops: vec![Op::Recv { from: 0 }] },
+        ];
+        let r = run(&n, &procs);
+        assert_eq!(r.finish[1], 1_000 + 500_000);
+    }
+
+    #[test]
+    fn signals_build_the_slab_pipeline() {
+        // Producer computes 4 slabs of 8 units; consumer computes 4
+        // slabs of 2 units gated per slab: finish = 32 + 2 (the
+        // overlap_pipeline closed form max(C,K) + min/S with C=32 K=8
+        // S=4).
+        let n = net(0.0, f64::INFINITY);
+        let mut prod = Vec::new();
+        let mut cons = Vec::new();
+        for s in 0..4 {
+            prod.push(Op::Compute(8));
+            prod.push(Op::Fire { sig: s });
+            cons.push(Op::Wait { sig: s });
+            cons.push(Op::Compute(2));
+        }
+        let r = run(
+            &n,
+            &[Proc { rank: 0, ops: prod }, Proc { rank: 1, ops: cons }],
+        );
+        assert_eq!(r.makespan, 34);
+    }
+
+    #[test]
+    fn runs_are_bit_reproducible() {
+        // Same program twice → identical SimResult, including the event
+        // count (the determinism contract in the module docs).
+        let n = net(2e-6, 5e8);
+        let mk = || {
+            let mut ops: Vec<Vec<Op>> = vec![Vec::new(); 4];
+            for r in 0..4usize {
+                for k in 0..6 {
+                    let to = (r + 1) % 4;
+                    let from = (r + 3) % 4;
+                    ops[r].push(Op::Send { to, bytes: 1e5 * (k + 1) as f64 });
+                    ops[r].push(Op::Recv { from });
+                    ops[r].push(Op::Compute(777));
+                }
+            }
+            ops.into_iter()
+                .enumerate()
+                .map(|(r, ops)| Proc { rank: r, ops })
+                .collect::<Vec<_>>()
+        };
+        let a = run(&n, &mk());
+        let b = run(&n, &mk());
+        assert_eq!(a, b);
+        assert!(a.events > 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "sim deadlock")]
+    fn deadlock_panics_loudly() {
+        let n = net(0.0, 1e9);
+        run(&n, &[Proc { rank: 0, ops: vec![Op::Recv { from: 1 }] }]);
+    }
+}

@@ -1,0 +1,210 @@
+//! Discrete-event cluster simulator.
+//!
+//! A deterministic event-driven model of the training fabric: ranks are
+//! processes, links are per-pair latency/bandwidth resources with FIFO
+//! contention (egress NIC → directed wire → ingress NIC), collectives
+//! are the ring/grouped algorithms of `comm/` lowered to per-rank
+//! `Send`/`Recv` chains, and compute segments come from
+//! `costmodel/flops`. The clock is integer nanoseconds, ties break on a
+//! monotone sequence number, and nothing reads the wall clock or an
+//! unseeded RNG — runs are bit-reproducible
+//! (`tests/sim_equivalence.rs` pins `SimResult == SimResult` across
+//! runs).
+//!
+//! Layers, bottom up:
+//!
+//! - [`engine`] — the event queue, link resources, and op interpreter;
+//! - [`collectives`] — collective → op-program lowering;
+//! - [`schedule`] — [`StepSchedule`]: one MuonBP optimizer step (DP
+//!   sync, slab-pipelined overlap, full/block TP phases, fault
+//!   injection via `robust`'s `SlowLink`/`Straggler` vocabulary);
+//! - [`calibrate`] — fit α–β link parameters from a recorded
+//!   [`CommReport`](crate::comm::report::CommReport);
+//! - [`sweep`] — tp × dp × period × sharding projection grids
+//!   (`results/SIM_projection.json`).
+//!
+//! [`Simulated`] packages the simulator behind the
+//! [`CostModel`](crate::costmodel::api::CostModel) trait, so every
+//! closed-form charging site can swap in event-level pricing with
+//! `--costmodel sim`. On uniform contention-free links the simulated
+//! ring collectives reproduce the α–β closed form to nanosecond
+//! rounding, and the simulated slab pipeline reproduces
+//! [`overlap_pipeline`](crate::costmodel::netmodel::overlap_pipeline)
+//! exactly — the closed form is the simulator's degenerate special
+//! case.
+
+pub mod calibrate;
+pub mod collectives;
+pub mod engine;
+pub mod schedule;
+pub mod sweep;
+
+pub use calibrate::calibrate;
+pub use engine::{
+    ns_to_secs, secs_to_ns, LinkParams, Ns, Op, Proc, SimNet, SimResult,
+};
+pub use schedule::{
+    ComputeModel, FabricLinks, ScheduleCfg, SimFaults, StepKind,
+    StepSchedule, StepTimes,
+};
+pub use sweep::{run_sweep, SweepCfg};
+
+use crate::comm::stats::CollectiveKind;
+use crate::costmodel::api::CostModel;
+use crate::costmodel::netmodel::{
+    overlap_pipeline, NetModel, OverlapModel,
+};
+
+/// Event-level [`CostModel`]: collectives priced by replaying the ring
+/// program through the engine, the overlapped step by replaying the
+/// slab pipeline. Uniform links by default; `calibrate` feeds a fitted
+/// [`NetModel`] in.
+#[derive(Debug, Clone, Copy)]
+pub struct Simulated {
+    pub net: NetModel,
+    /// Broadcast pipeline chunk, bytes.
+    pub chunk_bytes: usize,
+}
+
+impl Simulated {
+    pub fn uniform(net: NetModel) -> Simulated {
+        Simulated { net, chunk_bytes: 1 << 20 }
+    }
+}
+
+impl CostModel for Simulated {
+    fn name(&self) -> &'static str {
+        "sim"
+    }
+
+    fn collective_time(
+        &self,
+        kind: CollectiveKind,
+        payload_bytes: usize,
+        n: usize,
+    ) -> f64 {
+        if n <= 1 {
+            return 0.0;
+        }
+        let mut ops: Vec<Vec<Op>> = vec![Vec::new(); n];
+        let group: Vec<usize> = (0..n).collect();
+        collectives::collective(
+            &mut ops,
+            &group,
+            kind,
+            payload_bytes as f64,
+            self.chunk_bytes as f64,
+        );
+        let procs: Vec<Proc> = ops
+            .into_iter()
+            .enumerate()
+            .map(|(r, ops)| Proc { rank: r, ops })
+            .collect();
+        ns_to_secs(engine::run(&SimNet::uniform(self.net), &procs).makespan)
+    }
+
+    fn overlapped_step_time(
+        &self,
+        comm_time: f64,
+        compute_time: f64,
+        n_slabs: usize,
+    ) -> OverlapModel {
+        let c = comm_time.max(0.0);
+        let k = compute_time.max(0.0);
+        if n_slabs <= 1 || c == 0.0 || k == 0.0 {
+            return overlap_pipeline(c, k, n_slabs);
+        }
+        // Replay the slab pipeline: a comm lane fires a signal per slab,
+        // a compute lane consumes one segment per signal. Uniform slabs
+        // reproduce the closed form max(C, K) + min(C, K)/S exactly.
+        let cs = secs_to_ns(c / n_slabs as f64);
+        let ks = secs_to_ns(k / n_slabs as f64);
+        let mut comm_ops = Vec::with_capacity(2 * n_slabs);
+        let mut compute_ops = Vec::with_capacity(2 * n_slabs);
+        for s in 0..n_slabs {
+            comm_ops.push(Op::Compute(cs));
+            comm_ops.push(Op::Fire { sig: s });
+            compute_ops.push(Op::Wait { sig: s });
+            compute_ops.push(Op::Compute(ks));
+        }
+        let procs = vec![
+            Proc { rank: 0, ops: comm_ops },
+            Proc { rank: 1, ops: compute_ops },
+        ];
+        let overlapped = ns_to_secs(
+            engine::run(&SimNet::uniform(self.net), &procs).makespan,
+        );
+        let serial = c + k;
+        let bubble_frac = if overlapped > 0.0 {
+            (overlapped - c.max(k)).max(0.0) / overlapped
+        } else {
+            0.0
+        };
+        OverlapModel { serial, overlapped, bubble_frac }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::costmodel::api::ClosedForm;
+    use crate::mesh::StateSharding;
+
+    #[test]
+    fn simulated_matches_closed_form_on_grad_sync_kinds() {
+        let net = NetModel::ib_hdr();
+        let sim = Simulated::uniform(net);
+        let cf = ClosedForm(net);
+        for kind in [
+            CollectiveKind::Barrier,
+            CollectiveKind::AllReduce,
+            CollectiveKind::ReduceScatter,
+            CollectiveKind::AllGather,
+        ] {
+            for n in [2, 4, 8] {
+                for bytes in [1usize << 12, 1 << 24] {
+                    let s = sim.collective_time(kind, bytes, n);
+                    let c = cf.collective_time(kind, bytes, n);
+                    assert!(
+                        (s - c).abs() <= 1e-3 * c.max(1e-9),
+                        "{kind:?} n={n} b={bytes}: sim {s} vs cf {c}"
+                    );
+                }
+            }
+        }
+        // And through the composite default methods too.
+        for mode in [
+            StateSharding::Replicated,
+            StateSharding::Zero1,
+            StateSharding::Zero2,
+        ] {
+            let s = sim.grad_sync_time(mode, 1 << 24, 8);
+            let c = cf.grad_sync_time(mode, 1 << 24, 8);
+            assert!((s - c).abs() <= 1e-3 * c, "{mode:?}: {s} vs {c}");
+        }
+    }
+
+    #[test]
+    fn simulated_overlap_reproduces_the_pipeline_formula() {
+        let sim = Simulated::uniform(NetModel::ib_hdr());
+        for (c, k, s) in [
+            (0.008, 0.002, 4),
+            (0.002, 0.008, 4),
+            (0.005, 0.005, 8),
+            (0.0, 0.005, 4),
+            (0.005, 0.0, 4),
+            (0.003, 0.007, 1),
+        ] {
+            let got = sim.overlapped_step_time(c, k, s);
+            let want = overlap_pipeline(c, k, s);
+            assert!(
+                (got.overlapped - want.overlapped).abs() < 1e-6,
+                "C={c} K={k} S={s}: {} vs {}",
+                got.overlapped,
+                want.overlapped
+            );
+            assert!((got.serial - want.serial).abs() < 1e-12);
+            assert!((got.bubble_frac - want.bubble_frac).abs() < 1e-3);
+        }
+    }
+}

@@ -1,0 +1,437 @@
+//! `StepSchedule`: replay one MuonBP optimizer step — DP gradient sync,
+//! TP gather/NS/scatter on full steps, blockwise NS on block steps —
+//! as an event program, derived from the same `ShardSpec` /
+//! `StateSharding` / `Topology` / period configuration the real
+//! coordinator builds from.
+//!
+//! # Reduced world
+//!
+//! The simulated world is **one DP group** (ranks `0..dp`, on the DP
+//! fabric) plus **one TP group** (ranks `dp..dp+tp`, on the TP fabric
+//! via per-pair link overrides). Under both topologies the other
+//! replica groups are symmetric and run on disjoint links, so one
+//! representative of each is exact — and it keeps a
+//! tp=8 × dp=1024 cell at ~1k processes instead of 8k.
+//!
+//! - The DP sync payload is the **fused** sum of every hidden matrix
+//!   (the coordinator syncs them back-to-back on the same
+//!   communicator), divided by `tp` under the grouped topology —
+//!   exactly the coordinator's shard-sized `block_bytes(g)` charging.
+//! - The DAG executor's slab pipeline appears as `n_slabs` signals: the
+//!   rank-0 sync lane fires signal `s` when slab `s`'s rounds complete,
+//!   and the compute process consumes one block-NS segment per signal.
+//!   With uniform slabs this reproduces
+//!   [`overlap_pipeline`](crate::costmodel::netmodel::overlap_pipeline)
+//!   exactly — the closed form is the degenerate special case.
+//! - Compute durations mirror `costmodel/throughput`: full-step NS is
+//!   `ns_flops / (opt_flops · dp)` per matrix on the TP leader; block
+//!   steps run every block's NS at `Σ block_flops / (opt_flops · dp·tp)`.
+//!
+//! # Fault injection
+//!
+//! Shares `robust`'s vocabulary: a [`SlowLink`] adds `delay_ms` of
+//! latency to every transfer the target DP rank *sends* (fail-slow, not
+//! fail-stop); a [`Straggler`] delays the rank's entry into the sync by
+//! `delay_ms`. Attempts are 1-based and map onto the representative
+//! step of their period slot: attempt `a` lands on the full step iff
+//! `a % period == 1 % period`, else on the block step.
+
+use std::collections::BTreeMap;
+
+use super::collectives;
+use super::engine::{
+    ns_to_secs, run, secs_to_ns, LinkParams, Ns, Op, Proc, SimNet,
+};
+use crate::comm::stats::CollectiveKind;
+use crate::costmodel::netmodel::NetModel;
+use crate::linalg::newton_schulz::ns_flops;
+use crate::mesh::{Layout, StateSharding, Topology};
+use crate::robust::{SlowLink, Straggler};
+use crate::shard::ShardSpec;
+
+/// The coordinator-equivalent step configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct ScheduleCfg {
+    pub dp: usize,
+    pub tp: usize,
+    pub layout: Layout,
+    pub sharding: StateSharding,
+    pub topology: Topology,
+    /// Orthogonalization period P (1 = Muon, every step full).
+    pub period: usize,
+    /// DP-sync slab granularity (the DAG executor's row slabs).
+    pub n_slabs: usize,
+    /// `false` degenerates to the serial barrier schedule (compute
+    /// starts only after the last slab lands).
+    pub overlap: bool,
+    /// Broadcast pipeline chunk, bytes.
+    pub chunk_bytes: usize,
+}
+
+/// Per-rank compute rates, from the HW preset (`peak·opt_eff`).
+#[derive(Debug, Clone, Copy)]
+pub struct ComputeModel {
+    /// FLOP/s available to optimizer GEMMs per rank.
+    pub opt_flops_per_sec: f64,
+    /// Newton–Schulz iteration count.
+    pub ns_steps: usize,
+}
+
+/// The two fabrics of the reduced world.
+#[derive(Debug, Clone, Copy)]
+pub struct FabricLinks {
+    pub dp: LinkParams,
+    pub tp: LinkParams,
+}
+
+impl FabricLinks {
+    pub fn from_nets(dp_net: NetModel, tp_net: NetModel) -> FabricLinks {
+        FabricLinks {
+            dp: LinkParams::from_net(dp_net),
+            tp: LinkParams::from_net(tp_net),
+        }
+    }
+}
+
+/// Fail-slow injection for a simulated run ([`SlowLink`] /
+/// [`Straggler`] are `robust`'s CLI-parsed vocabulary).
+#[derive(Debug, Clone, Default)]
+pub struct SimFaults {
+    pub slow_links: Vec<SlowLink>,
+    pub stragglers: Vec<Straggler>,
+}
+
+/// Which representative step to replay.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StepKind {
+    /// Every-P-th step: DP sync, then TP gather → full NS → scatter.
+    Full,
+    /// The other P−1 steps: DP sync overlapped with blockwise NS.
+    Block,
+}
+
+/// Wall-clock projections for one step configuration.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StepTimes {
+    pub full_secs: f64,
+    pub block_secs: f64,
+    /// Period-weighted optimizer step time:
+    /// `(full + (P−1)·block) / P`.
+    pub avg_secs: f64,
+}
+
+/// A priced, replayable optimizer step.
+#[derive(Debug, Clone)]
+pub struct StepSchedule {
+    pub cfg: ScheduleCfg,
+    /// Fused DP-sync payload in bytes (all hidden matrices; divided by
+    /// `tp` under the grouped topology).
+    pub sync_bytes: f64,
+    /// Full-matrix bytes per matrix (TP gather/scatter payloads).
+    pub matrix_bytes: Vec<f64>,
+    /// Full-step NS duration per matrix on the leader, virtual ns.
+    pub full_ns: Vec<Ns>,
+    /// Whole-model block-step NS duration per compute lane, virtual ns.
+    pub block_ns_total: Ns,
+}
+
+fn sync_kinds(sharding: StateSharding) -> &'static [CollectiveKind] {
+    match sharding {
+        StateSharding::Replicated => &[CollectiveKind::AllReduce],
+        StateSharding::Zero1 => {
+            &[CollectiveKind::ReduceScatter, CollectiveKind::AllGather]
+        }
+        StateSharding::Zero2 => &[CollectiveKind::ReduceScatter],
+    }
+}
+
+impl StepSchedule {
+    /// Derive the schedule from matrix shapes (e.g.
+    /// `ModelDims::all_matrix_shapes`) the way `DistMuonBuilder::build`
+    /// derives its specs: one `ShardSpec` per matrix under the given
+    /// layout/tp, sync payload summed over all matrices.
+    pub fn new(
+        cfg: ScheduleCfg,
+        shapes: &[(usize, usize)],
+        cm: &ComputeModel,
+    ) -> anyhow::Result<StepSchedule> {
+        anyhow::ensure!(
+            cfg.dp >= 1 && cfg.tp >= 1,
+            "sim: zero ranks (dp={}, tp={})",
+            cfg.dp,
+            cfg.tp
+        );
+        anyhow::ensure!(cfg.period >= 1, "sim: period must be >= 1");
+        anyhow::ensure!(cfg.n_slabs >= 1, "sim: n_slabs must be >= 1");
+        anyhow::ensure!(!shapes.is_empty(), "sim: no matrix shapes");
+        anyhow::ensure!(
+            cm.opt_flops_per_sec > 0.0,
+            "sim: opt_flops_per_sec must be positive"
+        );
+        let opt = cm.opt_flops_per_sec;
+        let mut total_bytes = 0.0;
+        let mut matrix_bytes = Vec::with_capacity(shapes.len());
+        let mut full_ns = Vec::with_capacity(shapes.len());
+        let mut block_flops = 0.0;
+        for &(m, n) in shapes {
+            let spec = ShardSpec::new(cfg.layout, cfg.tp, m, n);
+            let bytes = (m * n * 4) as f64;
+            total_bytes += bytes;
+            matrix_bytes.push(bytes);
+            full_ns.push(secs_to_ns(
+                ns_flops(m, n, cm.ns_steps) / (opt * cfg.dp as f64),
+            ));
+            for b in 0..spec.num_blocks() {
+                let (bm, bn) = spec.block_shape(b);
+                block_flops += ns_flops(bm.max(1), bn.max(1), cm.ns_steps);
+            }
+        }
+        let div = if cfg.topology == Topology::GroupedPerShard {
+            cfg.tp.max(1) as f64
+        } else {
+            1.0
+        };
+        Ok(StepSchedule {
+            cfg,
+            sync_bytes: total_bytes / div,
+            matrix_bytes,
+            full_ns,
+            block_ns_total: secs_to_ns(
+                block_flops / (opt * (cfg.dp * cfg.tp) as f64),
+            ),
+        })
+    }
+
+    /// Build the reduced-world fabric: DP links as the default,
+    /// per-pair overrides for the TP group, fail-slow latency from
+    /// `faults`.
+    fn fabric(&self, links: FabricLinks, faults: &SimFaults) -> SimNet {
+        let (dp, tp) = (self.cfg.dp, self.cfg.tp);
+        let mut overrides = BTreeMap::new();
+        for i in 0..tp {
+            for j in 0..tp {
+                if i != j {
+                    overrides.insert((dp + i, dp + j), links.tp);
+                }
+            }
+        }
+        let mut extra_send_latency: BTreeMap<usize, Ns> = BTreeMap::new();
+        for sl in &faults.slow_links {
+            if sl.rank < dp {
+                *extra_send_latency.entry(sl.rank).or_insert(0) +=
+                    sl.delay_ms * 1_000_000;
+            }
+        }
+        SimNet { default: links.dp, overrides, extra_send_latency }
+    }
+
+    /// Replay one step of `kind`; returns the virtual-ns makespan.
+    pub fn step_time_ns(
+        &self,
+        kind: StepKind,
+        links: FabricLinks,
+        faults: &SimFaults,
+    ) -> Ns {
+        let (dp, tp) = (self.cfg.dp, self.cfg.tp);
+        let n_slabs = self.cfg.n_slabs;
+        let net = self.fabric(links, faults);
+        let mut ops: Vec<Vec<Op>> = vec![Vec::new(); dp + tp];
+        // Stragglers delay the rank's entry into the sync.
+        for st in &faults.stragglers {
+            if st.rank < dp {
+                ops[st.rank].push(Op::Compute(st.delay_ms * 1_000_000));
+            }
+        }
+        // DP sync, slab-pipelined: the rank-0 lane fires signal s when
+        // its rounds for slab s are done (in a contention-free ring all
+        // lanes finish a slab simultaneously; under faults the ring's
+        // round coupling propagates the slowdown to lane 0 within one
+        // ring traversal).
+        let group: Vec<usize> = (0..dp).collect();
+        let slab_bytes = self.sync_bytes / n_slabs as f64;
+        let chunk = self.cfg.chunk_bytes as f64;
+        for s in 0..n_slabs {
+            if dp > 1 {
+                for &k in sync_kinds(self.cfg.sharding) {
+                    collectives::collective(
+                        &mut ops, &group, k, slab_bytes, chunk,
+                    );
+                }
+            }
+            ops[0].push(Op::Fire { sig: s });
+        }
+        match kind {
+            StepKind::Full => {
+                // TP phase: gather each matrix to the leader, full NS,
+                // scatter the update — serial per matrix, mirroring the
+                // coordinator (full-step TP comm is not yet
+                // slab-overlapped; see ROADMAP PR-8 notes).
+                let leader = dp;
+                for r in 0..tp {
+                    ops[dp + r].push(Op::Wait { sig: n_slabs - 1 });
+                }
+                for (i, &mb) in self.matrix_bytes.iter().enumerate() {
+                    let slice = mb / tp as f64;
+                    for p in 1..tp {
+                        ops[dp + p].push(Op::Send { to: leader, bytes: slice });
+                        ops[leader].push(Op::Recv { from: dp + p });
+                    }
+                    ops[leader].push(Op::Compute(self.full_ns[i]));
+                    for p in 1..tp {
+                        ops[leader].push(Op::Send { to: dp + p, bytes: slice });
+                        ops[dp + p].push(Op::Recv { from: leader });
+                    }
+                }
+            }
+            StepKind::Block => {
+                // Blockwise NS on the TP ranks (identical per rank —
+                // one representative process), slab-gated when the DAG
+                // overlap is on.
+                let c = &mut ops[dp];
+                if self.cfg.overlap && n_slabs > 1 {
+                    let per = self.block_ns_total / n_slabs as u64;
+                    let last =
+                        self.block_ns_total - per * (n_slabs as u64 - 1);
+                    for s in 0..n_slabs {
+                        c.push(Op::Wait { sig: s });
+                        c.push(Op::Compute(if s + 1 == n_slabs {
+                            last
+                        } else {
+                            per
+                        }));
+                    }
+                } else {
+                    c.push(Op::Wait { sig: n_slabs - 1 });
+                    c.push(Op::Compute(self.block_ns_total));
+                }
+            }
+        }
+        let procs: Vec<Proc> = ops
+            .into_iter()
+            .enumerate()
+            .map(|(r, ops)| Proc { rank: r, ops })
+            .collect();
+        run(&net, &procs).makespan
+    }
+
+    /// Period-weighted step projection. With faults present, the
+    /// representative full/block step absorbs every fault whose attempt
+    /// maps to it, and the average assumes the fault recurs each period
+    /// — the pessimistic steady state (the single-projection CLI mode
+    /// prints full/block separately for the one-shot reading).
+    pub fn avg_step(
+        &self,
+        links: FabricLinks,
+        faults: &SimFaults,
+    ) -> StepTimes {
+        let p = self.cfg.period.max(1) as u64;
+        let mut on_full = SimFaults::default();
+        let mut on_block = SimFaults::default();
+        for sl in &faults.slow_links {
+            if sl.attempt % p == 1 % p {
+                on_full.slow_links.push(*sl);
+            } else {
+                on_block.slow_links.push(*sl);
+            }
+        }
+        for st in &faults.stragglers {
+            if st.attempt % p == 1 % p {
+                on_full.stragglers.push(*st);
+            } else {
+                on_block.stragglers.push(*st);
+            }
+        }
+        let full = self.step_time_ns(StepKind::Full, links, &on_full);
+        let block = if p > 1 {
+            self.step_time_ns(StepKind::Block, links, &on_block)
+        } else {
+            0
+        };
+        StepTimes {
+            full_secs: ns_to_secs(full),
+            block_secs: ns_to_secs(block),
+            avg_secs: (full as f64 + (p - 1) as f64 * block as f64)
+                / p as f64
+                / 1e9,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::costmodel::netmodel::NetModel;
+
+    fn cfg(dp: usize, tp: usize, period: usize) -> ScheduleCfg {
+        ScheduleCfg {
+            dp,
+            tp,
+            layout: Layout::TpColumn,
+            sharding: StateSharding::Replicated,
+            topology: Topology::FullReplica,
+            period,
+            n_slabs: 4,
+            overlap: true,
+            chunk_bytes: 1 << 20,
+        }
+    }
+
+    fn cm() -> ComputeModel {
+        ComputeModel { opt_flops_per_sec: 312e12 * 0.18, ns_steps: 5 }
+    }
+
+    fn links() -> FabricLinks {
+        FabricLinks::from_nets(NetModel::ib_hdr(), NetModel::a100_nvlink())
+    }
+
+    #[test]
+    fn rejects_degenerate_configs() {
+        let shapes = [(256usize, 256usize)];
+        assert!(StepSchedule::new(cfg(0, 1, 1), &shapes, &cm()).is_err());
+        assert!(StepSchedule::new(cfg(2, 0, 1), &shapes, &cm()).is_err());
+        let mut c = cfg(2, 1, 1);
+        c.period = 0;
+        assert!(StepSchedule::new(c, &shapes, &cm()).is_err());
+        let mut c = cfg(2, 1, 1);
+        c.n_slabs = 0;
+        assert!(StepSchedule::new(c, &shapes, &cm()).is_err());
+        assert!(StepSchedule::new(cfg(2, 1, 1), &[], &cm()).is_err());
+    }
+
+    #[test]
+    fn longer_periods_shrink_the_average_step() {
+        // The MuonBP claim in miniature: the full step pays TP
+        // gather/scatter + full NS, block steps don't — so the
+        // period-weighted average falls as P grows.
+        let shapes = [(2048usize, 2048usize), (2048, 8192)];
+        let t1 = StepSchedule::new(cfg(4, 4, 1), &shapes, &cm())
+            .unwrap()
+            .avg_step(links(), &SimFaults::default());
+        let t4 = StepSchedule::new(cfg(4, 4, 4), &shapes, &cm())
+            .unwrap()
+            .avg_step(links(), &SimFaults::default());
+        assert!(
+            t4.avg_secs < t1.avg_secs,
+            "P=4 {} !< P=1 {}",
+            t4.avg_secs,
+            t1.avg_secs
+        );
+        // And the block step is strictly cheaper than the full step.
+        assert!(t4.block_secs < t4.full_secs);
+    }
+
+    #[test]
+    fn grouped_topology_syncs_the_shard_payload() {
+        let shapes = [(1024usize, 1024usize)];
+        let full = StepSchedule::new(cfg(4, 4, 1), &shapes, &cm()).unwrap();
+        let mut gc = cfg(4, 4, 1);
+        gc.topology = Topology::GroupedPerShard;
+        let grouped = StepSchedule::new(gc, &shapes, &cm()).unwrap();
+        assert!(
+            (grouped.sync_bytes - full.sync_bytes / 4.0).abs() < 1e-9,
+            "{} vs {}/4",
+            grouped.sync_bytes,
+            full.sync_bytes
+        );
+    }
+}

@@ -12,6 +12,7 @@
 //!   matrices across the DP group; TP blocks split within the TP group).
 
 use crate::comm::stats::CollectiveKind;
+use crate::costmodel::api::{ClosedForm, CostModel};
 use crate::costmodel::flops::{
     adam_flops, block_ns_flops, full_ns_flops, train_flops_per_step, ModelDims,
 };
@@ -93,7 +94,10 @@ impl StepBreakdown {
 
 /// Optimizer-specific TP communication for one *full* orthogonalization
 /// pass: gather momentum shards + scatter updates for every hidden matrix.
-fn full_orth_comm_time(dims: &ModelDims, hw: &HwPreset) -> f64 {
+fn full_orth_comm_time(
+    dims: &ModelDims,
+    cost: &dyn CostModel,
+) -> f64 {
     let tp = dims.tp;
     if tp <= 1 {
         return 0.0;
@@ -101,17 +105,20 @@ fn full_orth_comm_time(dims: &ModelDims, hw: &HwPreset) -> f64 {
     let mut t = 0.0;
     for (m, n) in dims.all_matrix_shapes() {
         let bytes = m * n * 4;
-        t += hw.tp_net.collective_time(CollectiveKind::Gather, bytes, tp);
-        t += hw.tp_net.collective_time(CollectiveKind::Scatter, bytes, tp);
+        t += cost.collective_time(CollectiveKind::Gather, bytes, tp);
+        t += cost.collective_time(CollectiveKind::Scatter, bytes, tp);
     }
     t
 }
 
-/// Step-time decomposition for a method on a model preset.
-pub fn step_breakdown(
+/// Step-time decomposition for a method on a model preset, pricing the
+/// TP-fabric optimizer collectives through `cost` (closed-form α–β or
+/// the discrete-event simulator — `--costmodel {closed-form,sim}`).
+pub fn step_breakdown_with(
     dims: &ModelDims,
     method: Method,
     hw: &HwPreset,
+    cost: &dyn CostModel,
 ) -> StepBreakdown {
     let world = dims.world() as f64;
     let effective = hw.peak_tflops * 1e12 * hw.mfu;
@@ -124,7 +131,7 @@ pub fn step_breakdown(
     let (opt_comm, orth_flops) = match method {
         Method::Adam => (0.0, adam_flops(dims.n_params())),
         Method::Muon => {
-            (full_orth_comm_time(dims, hw), full_ns_flops(dims, hw.ns_steps))
+            (full_orth_comm_time(dims, cost), full_ns_flops(dims, hw.ns_steps))
         }
         Method::BlockMuon => {
             // Block NS splits within the TP group too: each rank
@@ -133,7 +140,7 @@ pub fn step_breakdown(
         }
         Method::MuonBP { period } => {
             let p = period.max(1) as f64;
-            let comm = full_orth_comm_time(dims, hw) / p;
+            let comm = full_orth_comm_time(dims, cost) / p;
             let flops = full_ns_flops(dims, hw.ns_steps) / p
                 + (1.0 - 1.0 / p)
                     * block_ns_flops(dims, grid, hw.ns_steps)
@@ -147,11 +154,11 @@ pub fn step_breakdown(
             let mut flops = 0.0;
             for (m, n) in dims.all_matrix_shapes() {
                 let bytes = (m + n) * rank * 4;
-                comm += hw.tp_net.collective_time(
+                comm += cost.collective_time(
                     CollectiveKind::AllGather,
                     bytes,
                     dims.tp,
-                ) + hw.tp_net.collective_time(
+                ) + cost.collective_time(
                     CollectiveKind::AllGather,
                     rank * rank * 4,
                     dims.tp,
@@ -172,6 +179,28 @@ pub fn step_breakdown(
     StepBreakdown { compute, opt_comm, orth_compute }
 }
 
+/// [`step_breakdown_with`] priced by the closed-form α–β model on the
+/// preset's TP fabric (the historical default).
+pub fn step_breakdown(
+    dims: &ModelDims,
+    method: Method,
+    hw: &HwPreset,
+) -> StepBreakdown {
+    step_breakdown_with(dims, method, hw, &ClosedForm(hw.tp_net))
+}
+
+/// [`throughput_tflops`] with an explicit [`CostModel`] pricing the
+/// optimizer collectives.
+pub fn throughput_tflops_with(
+    dims: &ModelDims,
+    method: Method,
+    hw: &HwPreset,
+    cost: &dyn CostModel,
+) -> f64 {
+    let b = step_breakdown_with(dims, method, hw, cost);
+    train_flops_per_step(dims) / (b.total() * dims.world() as f64) / 1e12
+}
+
 /// Average realized throughput in TFLOP/s/GPU (the paper's Table 4 metric:
 /// model FLOPs divided by wall time and GPU count).
 pub fn throughput_tflops(
@@ -179,8 +208,7 @@ pub fn throughput_tflops(
     method: Method,
     hw: &HwPreset,
 ) -> f64 {
-    let b = step_breakdown(dims, method, hw);
-    train_flops_per_step(dims) / (b.total() * dims.world() as f64) / 1e12
+    throughput_tflops_with(dims, method, hw, &ClosedForm(hw.tp_net))
 }
 
 #[cfg(test)]
@@ -253,5 +281,44 @@ mod tests {
         let dims = ModelDims::paper_1_2b();
         let adam = throughput_tflops(&dims, Method::Adam, &hw());
         assert!(adam > 90.0 && adam < 140.0, "{adam}");
+    }
+
+    #[test]
+    fn simulated_cost_model_tracks_the_closed_form() {
+        // Gather/Scatter differ legitimately between the two pricers (the
+        // sim's root-rooted transfers pay latency once, the closed form
+        // charges (n-1)·α), so this pins scale agreement and method
+        // ordering rather than exact equality.
+        use crate::costmodel::Simulated;
+        let hw = hw();
+        let sim = Simulated::uniform(hw.tp_net);
+        let cf = ClosedForm(hw.tp_net);
+        let dims = ModelDims::paper_8b();
+        for method in
+            [Method::Muon, Method::MuonBP { period: 5 }, Method::Adam]
+        {
+            let s = step_breakdown_with(&dims, method, &hw, &sim);
+            let c = step_breakdown_with(&dims, method, &hw, &cf);
+            // Compute / orth columns don't touch the cost model at all.
+            assert_eq!(s.compute, c.compute);
+            assert_eq!(s.orth_compute, c.orth_compute);
+            assert!(
+                s.opt_comm <= c.opt_comm * 1.5 + 1e-12
+                    && c.opt_comm <= s.opt_comm * 3.0 + 1e-12,
+                "{}: sim {} vs cf {}",
+                method.name(),
+                s.opt_comm,
+                c.opt_comm
+            );
+        }
+        let muon = throughput_tflops_with(&dims, Method::Muon, &hw, &sim);
+        let bp = throughput_tflops_with(
+            &dims,
+            Method::MuonBP { period: 5 },
+            &hw,
+            &sim,
+        );
+        let adam = throughput_tflops_with(&dims, Method::Adam, &hw, &sim);
+        assert!(adam > bp && bp > muon, "{adam} {bp} {muon}");
     }
 }

@@ -3,6 +3,8 @@
 //! Subcommands:
 //!   train        run a training job (see --help text below)
 //!   throughput   print the Table-4-style analytic throughput matrix
+//!   sim          discrete-event cluster projection: one step config, or
+//!                --sim-sweep for the tp × dp × period × sharding grid
 //!   info         print artifact manifest / environment summary
 //!   dist-smoke   tiny fixed-shape DistMuon run on synthetic gradients
 //!                (multi-process transport test harness; no artifacts)
@@ -11,6 +13,8 @@
 //!   muonbp train --model bench --optimizer muonbp --period 5 --steps 200 \
 //!                --distributed --dp 2 --tp 4 --out results/run.csv
 //!   muonbp throughput
+//!   muonbp sim --sim-sweep --sim-out results/SIM_projection.json
+//!   muonbp sim --dp 64 --tp 8 --period 5 --sim-slow-link 0:1:50
 //!   muonbp info
 
 use std::sync::Arc;
@@ -18,11 +22,18 @@ use std::time::Duration;
 
 use anyhow::Result;
 use muonbp::checkpoint;
+use muonbp::comm::report::CommReport;
 use muonbp::comm::{TcpCfg, TcpTransport, Transport};
 use muonbp::config::RunConfig;
 use muonbp::coordinator::DistMuonBuilder;
+use muonbp::costmodel::api::by_name as costmodel_by_name;
+use muonbp::costmodel::sim::{
+    calibrate, run_sweep, ComputeModel, FabricLinks, ScheduleCfg, SimFaults,
+    StepSchedule, SweepCfg,
+};
 use muonbp::costmodel::throughput::{throughput_tflops, HwPreset, Method};
-use muonbp::costmodel::ModelDims;
+use muonbp::costmodel::{ModelDims, NetModel};
+use muonbp::utils::json::Json;
 use muonbp::data::CorpusCfg;
 use muonbp::mesh::{Mesh, StateSharding};
 use muonbp::metrics::{ppl, render_table};
@@ -34,7 +45,7 @@ use muonbp::train::{TrainCfg, Trainer};
 use muonbp::utils::cli::Args;
 use muonbp::utils::rng::Rng;
 
-const USAGE: &str = "usage: muonbp <train|throughput|info|dist-smoke> [--key value ...]
+const USAGE: &str = "usage: muonbp <train|throughput|sim|info|dist-smoke> [--key value ...]
   train options: --model tiny|bench|e2e  --optimizer adamw|muon|blockmuon|muonbp|dion
                  --steps N --lr F --period P --dp N --tp N --distributed
                  --state-sharding replicated|zero1|zero2 (momentum rows:
@@ -53,6 +64,20 @@ const USAGE: &str = "usage: muonbp <train|throughput|info|dist-smoke> [--key val
                  --transport local|tcp --rank N --peers host:port,host:port,...
                  --deadline-ms MS (per-collective deadline, 0 = wait forever)
                  --heartbeat-ms MS (tcp liveness probe interval)
+  cost model:    --costmodel closed-form|sim (collective pricer behind the
+                   coordinator's accounting and comm report; sim = every
+                   charge replays the discrete-event cluster simulator)
+  sim options:   --sim-model 8b|1.2b|960m|160m (paper model preset)
+                 --dp N --tp N --period P --state-sharding M --topology T
+                 --overlap on|off (single-point projection step config)
+                 --sim-slabs N --sim-chunk BYTES (slab pipeline / broadcast
+                   chunk granularity of the simulated schedule)
+                 --sim-sweep (replay the tp x dp x period x sharding grid;
+                   writes --sim-out, default results/SIM_projection.json)
+                 --sim-calibrate report.json (fit DP-link alpha-beta from a
+                   recorded comm report: train ... then feed the JSON here)
+                 --sim-slow-link a:r:ms,... (fail-slow DP rank r sends)
+                 --sim-straggle a:r:ms,... (rank r enters the sync late)
   fault tolerance:
                  --on-anomaly abort|skip-step|escalate-full-orth|degrade-block
                  --checkpoint-dir DIR --checkpoint-every N --resume
@@ -75,6 +100,7 @@ fn main() -> Result<()> {
     match args.positional.first().map(|s| s.as_str()) {
         Some("train") => cmd_train(&args),
         Some("throughput") => cmd_throughput(),
+        Some("sim") => cmd_sim(&args),
         Some("info") => cmd_info(),
         Some("dist-smoke") => cmd_dist_smoke(&args),
         _ => {
@@ -141,6 +167,10 @@ fn cmd_train(args: &Args) -> Result<()> {
         if cfg.transport == "tcp" {
             b = b.dp_transport(tcp_transport(&cfg)?, cfg.rank);
         }
+        // --costmodel routes the coordinator's collective accounting
+        // through the selected pricer (ib_hdr is the builder's own DP
+        // fabric default, so closed-form here is a no-op).
+        b = b.cost_model(costmodel_by_name(&cfg.costmodel, NetModel::ib_hdr())?);
         Box::new(b.build(&metas))
     } else {
         // Single-process path: the sliced modes shard optimizer state
@@ -353,6 +383,114 @@ fn cmd_dist_smoke(args: &Args) -> Result<()> {
         let path = checkpoint::save(&cfg.out, &snap)?;
         println!("wrote {}", path.display());
     }
+    Ok(())
+}
+
+/// Resolve a `--sim-model` preset name.
+fn sim_dims(name: &str) -> Result<ModelDims> {
+    Ok(match name {
+        "8b" => ModelDims::paper_8b(),
+        "1.2b" => ModelDims::paper_1_2b(),
+        "960m" => ModelDims::paper_960m(),
+        "160m" => ModelDims::paper_160m(),
+        other => anyhow::bail!(
+            "unknown --sim-model '{other}' (expected 8b | 1.2b | 960m | 160m)"
+        ),
+    })
+}
+
+/// `muonbp sim`: price one optimizer step configuration through the
+/// discrete-event cluster simulator, or (`--sim-sweep`) replay the whole
+/// tp × dp × period × sharding grid into a JSON artifact. Link α–β come
+/// from the A100 preset unless `--sim-calibrate` fits them from a
+/// recorded comm report.
+fn cmd_sim(args: &Args) -> Result<()> {
+    let mut cfg = match args.get("config") {
+        Some(path) => RunConfig::from_json_file(path)?,
+        None => RunConfig::default(),
+    };
+    cfg.apply_args(args)?;
+    cfg.validate()?;
+
+    let mut hw = HwPreset::a100();
+    if !cfg.sim_calibrate.is_empty() {
+        let text = std::fs::read_to_string(&cfg.sim_calibrate)?;
+        let report = CommReport::from_json(&Json::parse(&text)?)?;
+        let fitted = calibrate(&report)?;
+        println!(
+            "calibrated DP fabric from {}: alpha {:.3e} s  beta {:.3e} B/s",
+            cfg.sim_calibrate, fitted.alpha, fitted.beta_bw
+        );
+        hw.dp_net = fitted;
+    }
+    let dims = sim_dims(&cfg.sim_model)?;
+
+    if cfg.sim_sweep {
+        if !cfg.sim_slow_links.is_empty() || !cfg.sim_stragglers.is_empty() {
+            eprintln!(
+                "warning: --sim-slow-link/--sim-straggle apply to the \
+                 single-point projection; the sweep replays fault-free cells"
+            );
+        }
+        let mut sw = SweepCfg::paper_8b_default();
+        sw.dims = dims;
+        sw.hw = hw;
+        sw.n_slabs = cfg.sim_slabs;
+        sw.chunk_bytes = cfg.sim_chunk;
+        let artifact = run_sweep(&sw)?;
+        if let Some(dir) = std::path::Path::new(&cfg.sim_out).parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(&cfg.sim_out, artifact.to_string_pretty())?;
+        let n = artifact.req("cells")?.as_arr()?.len();
+        println!("wrote {} ({} cells)", cfg.sim_out, n);
+        return Ok(());
+    }
+
+    let mut d = dims.clone();
+    d.dp = cfg.dp;
+    d.tp = cfg.tp;
+    let shapes = d.all_matrix_shapes();
+    let scfg = ScheduleCfg {
+        dp: cfg.dp,
+        tp: cfg.tp,
+        layout: cfg.layout,
+        sharding: cfg.state_sharding,
+        topology: cfg.topology,
+        period: cfg.period,
+        n_slabs: cfg.sim_slabs,
+        overlap: cfg.overlap.unwrap_or(true),
+        chunk_bytes: cfg.sim_chunk,
+    };
+    let cm = ComputeModel {
+        opt_flops_per_sec: hw.peak_tflops * 1e12 * hw.opt_eff,
+        ns_steps: hw.ns_steps,
+    };
+    let links = FabricLinks::from_nets(hw.dp_net, hw.tp_net);
+    let faults = SimFaults {
+        slow_links: cfg.sim_slow_links.clone(),
+        stragglers: cfg.sim_stragglers.clone(),
+    };
+    let sched = StepSchedule::new(scfg, &shapes, &cm)?;
+    let t = sched.avg_step(links, &faults);
+    println!(
+        "sim: model={} dp={} tp={} period={} sharding={} topology={} \
+         slabs={}",
+        dims.name,
+        cfg.dp,
+        cfg.tp,
+        cfg.period,
+        cfg.state_sharding.name(),
+        cfg.topology.name(),
+        cfg.sim_slabs
+    );
+    println!("  full step   {:.6} s", t.full_secs);
+    if cfg.period > 1 {
+        println!("  block step  {:.6} s", t.block_secs);
+    }
+    println!("  avg step    {:.6} s  (period-weighted optimizer cost)", t.avg_secs);
     Ok(())
 }
 

@@ -16,6 +16,7 @@ pub mod scaling;
 pub mod sgdm;
 
 use crate::checkpoint::Snapshot;
+use crate::comm::report::CommReport;
 use crate::robust::StepError;
 use crate::shard::GradSource;
 use crate::tensor::Tensor;
@@ -122,12 +123,19 @@ pub trait Optimizer: Send {
         anyhow::bail!("{}: checkpoint restore not supported", self.name())
     }
 
-    /// Human-readable communication report accumulated over the run:
-    /// per-collective-kind calls/bytes with modeled (α–β) *and* measured
-    /// wall-clock where available, plus the overlap cost-model comparison.
-    /// `None` (the default) means the optimizer tracks no communication.
-    fn comm_report(&self) -> Option<String> {
+    /// Structured communication report accumulated over the run:
+    /// per-group, per-collective-kind calls/bytes with modeled (α–β)
+    /// *and* measured wall-clock where available, plus the overlap
+    /// cost-model comparison. `Display` renders the historical text
+    /// format; `to_json` feeds `muonbp sim --sim-calibrate`. `None`
+    /// (the default) means the optimizer tracks no communication.
+    fn comm_report(&self) -> Option<CommReport> {
         None
+    }
+
+    /// [`Optimizer::comm_report`] rendered to the legacy text format.
+    fn comm_report_text(&self) -> Option<String> {
+        self.comm_report().map(|r| r.to_string())
     }
 }
 

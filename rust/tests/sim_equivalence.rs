@@ -1,0 +1,286 @@
+//! Tier-1: the discrete-event simulator's external contract.
+//!
+//! 1. **Closed-form equivalence** — on uniform contention-free links the
+//!    simulated ring collectives and the `StepSchedule` sync makespan
+//!    reproduce the α–β closed form within `REL_TOL` (the ≤ 1 ns/transfer
+//!    ceil-rounding bound of `engine::LinkParams::serialize_ns`), across
+//!    every sharding mode × topology.
+//! 2. **Bit-reproducibility** — identical inputs give identical
+//!    `SimResult`s (full event log, not just the makespan), even with
+//!    heterogeneous links and fault injection.
+//! 3. **Fault monotonicity** — injected slow links / stragglers strictly
+//!    increase the simulated step time, deterministically, and land on
+//!    the period slot their attempt maps to.
+//! 4. **Calibration round-trip** — a comm report synthesized from a known
+//!    α–β fabric fits back to the same parameters (through the JSON
+//!    serialization), and the re-simulated times match the originals.
+
+use muonbp::comm::report::{CommEntry, CommReport, GroupReport, OverlapReport};
+use muonbp::comm::stats::CollectiveKind;
+use muonbp::costmodel::api::{ClosedForm, CostModel};
+use muonbp::costmodel::sim::{
+    calibrate, collectives, engine, ComputeModel, FabricLinks, Op, Proc,
+    ScheduleCfg, SimFaults, SimNet, StepKind, StepSchedule,
+};
+use muonbp::costmodel::{NetModel, Simulated};
+use muonbp::mesh::{Layout, StateSharding, Topology};
+use muonbp::robust::{SlowLink, Straggler};
+use muonbp::utils::json::Json;
+
+/// Sim-vs-closed-form tolerance: ceil-rounding costs at most 1 ns per
+/// transfer, collectives here run ≲ 10³ transfers over ≥ µs timescales.
+const REL_TOL: f64 = 1e-3;
+
+const SHARDINGS: [StateSharding; 3] =
+    [StateSharding::Replicated, StateSharding::Zero1, StateSharding::Zero2];
+
+fn close(sim: f64, cf: f64) -> bool {
+    (sim - cf).abs() <= REL_TOL * cf.max(1e-9)
+}
+
+#[test]
+fn contention_free_collectives_match_the_closed_form() {
+    let net = NetModel::ib_hdr();
+    let sim = Simulated::uniform(net);
+    let cf = ClosedForm(net);
+    for kind in [
+        CollectiveKind::Barrier,
+        CollectiveKind::AllReduce,
+        CollectiveKind::ReduceScatter,
+        CollectiveKind::AllGather,
+        CollectiveKind::AllToAll,
+    ] {
+        for n in [2usize, 3, 4, 8, 16] {
+            for bytes in [1usize << 10, 1 << 20, 1 << 26] {
+                let s = sim.collective_time(kind, bytes, n);
+                let c = cf.collective_time(kind, bytes, n);
+                assert!(
+                    close(s, c),
+                    "{kind:?} n={n} bytes={bytes}: sim {s} vs closed {c}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn step_schedule_sync_matches_the_closed_form_across_modes() {
+    // Make compute free so the block-step makespan is pure DP sync, then
+    // compare against the trait's composite prediction for every
+    // sharding × topology combination.
+    let dp_net = NetModel::ib_hdr();
+    let tp_net = NetModel { alpha: 6e-6, beta_bw: 120e9 };
+    let cf = ClosedForm(dp_net);
+    let links = FabricLinks::from_nets(dp_net, tp_net);
+    let cm = ComputeModel { opt_flops_per_sec: 1e30, ns_steps: 5 };
+    let shapes = [(512usize, 256usize), (384, 512)];
+    let total_bytes: usize = shapes.iter().map(|&(m, n)| m * n * 4).sum();
+    for topology in [Topology::FullReplica, Topology::GroupedPerShard] {
+        for sharding in SHARDINGS {
+            for dp in [2usize, 4, 8] {
+                let tp = 4;
+                let cfg = ScheduleCfg {
+                    dp,
+                    tp,
+                    layout: Layout::TpColumn,
+                    sharding,
+                    topology,
+                    period: 2,
+                    n_slabs: 1,
+                    overlap: false,
+                    chunk_bytes: 1 << 20,
+                };
+                let sched = StepSchedule::new(cfg, &shapes, &cm).unwrap();
+                let got = engine::ns_to_secs(sched.step_time_ns(
+                    StepKind::Block,
+                    links,
+                    &SimFaults::default(),
+                ));
+                let want = match topology {
+                    Topology::FullReplica => {
+                        cf.grad_sync_time(sharding, total_bytes, dp)
+                    }
+                    Topology::GroupedPerShard => cf
+                        .grad_sync_time_grouped(sharding, total_bytes, dp, tp),
+                };
+                assert!(
+                    close(got, want),
+                    "{topology:?}/{sharding:?} dp={dp}: sim {got} vs \
+                     closed {want}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn identical_inputs_give_bit_identical_results() {
+    // A deliberately messy world: ring all-reduce over 8 ranks on
+    // heterogeneous links with a slowed sender — the full SimResult
+    // (event log included) must be identical run to run.
+    let build = || {
+        let mut ops: Vec<Vec<Op>> = vec![Vec::new(); 8];
+        let group: Vec<usize> = (0..8).collect();
+        collectives::collective(
+            &mut ops,
+            &group,
+            CollectiveKind::AllReduce,
+            (1usize << 22) as f64,
+            (1usize << 20) as f64,
+        );
+        collectives::collective(
+            &mut ops,
+            &group,
+            CollectiveKind::AllToAll,
+            (1usize << 18) as f64,
+            (1usize << 20) as f64,
+        );
+        let mut net = SimNet::uniform(NetModel::ib_hdr());
+        net.overrides.insert(
+            (2, 3),
+            engine::LinkParams {
+                latency_ns: 50_000,
+                bytes_per_sec: 5e9,
+            },
+        );
+        net.extra_send_latency.insert(5, 2_000_000);
+        let procs: Vec<Proc> = ops
+            .into_iter()
+            .enumerate()
+            .map(|(r, ops)| Proc { rank: r, ops })
+            .collect();
+        engine::run(&net, &procs)
+    };
+    let first = build();
+    assert!(first.makespan > 0);
+    for _ in 0..3 {
+        assert_eq!(build(), first, "simulation is not reproducible");
+    }
+}
+
+#[test]
+fn slow_links_strictly_increase_time_and_stay_deterministic() {
+    let links =
+        FabricLinks::from_nets(NetModel::ib_hdr(), NetModel::a100_nvlink());
+    let cm = ComputeModel { opt_flops_per_sec: 312e12 * 0.18, ns_steps: 5 };
+    let shapes = [(1024usize, 1024usize), (1024, 4096)];
+    let cfg = ScheduleCfg {
+        dp: 4,
+        tp: 2,
+        layout: Layout::TpColumn,
+        sharding: StateSharding::Replicated,
+        topology: Topology::FullReplica,
+        period: 4,
+        n_slabs: 2,
+        overlap: true,
+        chunk_bytes: 1 << 20,
+    };
+    let sched = StepSchedule::new(cfg, &shapes, &cm).unwrap();
+    let clean = sched.avg_step(links, &SimFaults::default());
+
+    // Attempt 1 maps to the full step (1 % 4 == 1 % 4): the full step
+    // slows down, the block step is untouched.
+    let slow_full = SimFaults {
+        slow_links: vec![SlowLink { attempt: 1, rank: 1, delay_ms: 5 }],
+        stragglers: Vec::new(),
+    };
+    let t = sched.avg_step(links, &slow_full);
+    assert!(
+        t.full_secs > clean.full_secs,
+        "slow link did not slow the full step: {} vs {}",
+        t.full_secs,
+        clean.full_secs
+    );
+    assert_eq!(t.block_secs, clean.block_secs);
+    assert!(t.avg_secs > clean.avg_secs);
+
+    // Attempt 2 maps to a block step.
+    let slow_block = SimFaults {
+        slow_links: vec![SlowLink { attempt: 2, rank: 1, delay_ms: 5 }],
+        stragglers: Vec::new(),
+    };
+    let t2 = sched.avg_step(links, &slow_block);
+    assert_eq!(t2.full_secs, clean.full_secs);
+    assert!(t2.block_secs > clean.block_secs);
+
+    // Stragglers delay the sync entry and therefore the whole step.
+    let straggle = SimFaults {
+        slow_links: Vec::new(),
+        stragglers: vec![Straggler { attempt: 1, rank: 2, delay_ms: 10 }],
+    };
+    let t3 = sched.avg_step(links, &straggle);
+    assert!(t3.full_secs >= clean.full_secs + 0.009, "{}", t3.full_secs);
+
+    // Determinism: every projection above replays identically.
+    assert_eq!(sched.avg_step(links, &SimFaults::default()), clean);
+    assert_eq!(sched.avg_step(links, &slow_full), t);
+    assert_eq!(sched.avg_step(links, &straggle), t3);
+}
+
+#[test]
+fn calibration_round_trips_through_the_report_json() {
+    let truth = NetModel { alpha: 12e-6, beta_bw: 18e9 };
+    let n = 8;
+    let entry = |kind: CollectiveKind, bytes: usize, calls: u64| {
+        let t = truth.collective_time(kind, bytes, n) * calls as f64;
+        CommEntry {
+            kind,
+            calls,
+            bytes: bytes as u64 * calls,
+            modeled_secs: t,
+            measured_secs: t,
+        }
+    };
+    let report = CommReport {
+        optimizer: "DistMuon(P=5)".to_string(),
+        schedule: "dag-overlap".to_string(),
+        dp: n,
+        tp: 1,
+        sharding: "replicated".to_string(),
+        groups: vec![GroupReport {
+            name: "dp".to_string(),
+            ranks: n,
+            entries: vec![
+                entry(CollectiveKind::AllReduce, 1 << 26, 40),
+                entry(CollectiveKind::ReduceScatter, 1 << 13, 40),
+                entry(CollectiveKind::Barrier, 0, 10),
+            ],
+        }],
+        overlap: OverlapReport {
+            comm_secs: 0.1,
+            compute_secs: 0.2,
+            slab_stride: 4,
+            serial_secs: 0.3,
+            overlapped_secs: 0.225,
+            bubble_frac: 0.1,
+        },
+    };
+    // Fit through the JSON serialization, exactly as `muonbp sim
+    // --sim-calibrate` consumes a recorded report file.
+    let parsed =
+        CommReport::from_json(&Json::parse(&report.to_json().to_string_pretty()).unwrap())
+            .unwrap();
+    let fit = calibrate(&parsed).unwrap();
+    assert!(
+        (fit.alpha - truth.alpha).abs() <= REL_TOL * truth.alpha,
+        "alpha {} vs {}",
+        fit.alpha,
+        truth.alpha
+    );
+    assert!(
+        (fit.beta_bw - truth.beta_bw).abs() <= REL_TOL * truth.beta_bw,
+        "beta {} vs {}",
+        fit.beta_bw,
+        truth.beta_bw
+    );
+    // And a simulator on the fitted fabric reproduces the recorded times.
+    let sim = Simulated::uniform(fit);
+    for (kind, bytes) in [
+        (CollectiveKind::AllReduce, 1usize << 26),
+        (CollectiveKind::ReduceScatter, 1 << 13),
+    ] {
+        let got = sim.collective_time(kind, bytes, n);
+        let want = truth.collective_time(kind, bytes, n);
+        assert!(close(got, want), "{kind:?}: {got} vs {want}");
+    }
+}
